@@ -1,0 +1,93 @@
+//! The paper's evaluation workload end-to-end on real AOT artifacts:
+//! random-matrix generation + multiplication (Layer-1 Pallas matmul via
+//! PJRT), scheduled by the distributed engine, checked against the host
+//! oracle, and compared across engines.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example matrix_pipeline
+//! ```
+
+use std::sync::Arc;
+
+use parhask::config::RunConfig;
+use parhask::metrics::Table;
+use parhask::runtime::RuntimeService;
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::{HostExecutor, PjrtExecutor};
+use parhask::workload::matrix_program;
+
+fn main() -> anyhow::Result<()> {
+    let rounds = 6;
+    let size = 128;
+
+    // --- real run on PJRT artifacts through the cluster engine -------------
+    let svc = RuntimeService::start_default()
+        .map_err(|e| anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first"))?;
+    let manifest = svc.handle().manifest().clone();
+    let program = matrix_program(rounds, size, true, Some(&manifest));
+    println!(
+        "workload: {rounds} rounds of gen+gen+mul+sum @ {size}x{size} = {} tasks",
+        program.len()
+    );
+
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "cluster:2")?;
+    let r = parhask::engine::run(&program, &cfg, PjrtExecutor::new(svc.handle()))?;
+    r.trace.validate(&program)?;
+    let pjrt_checksum = r.outputs[0].as_tensor()?.scalar()?;
+    println!(
+        "cluster:2 on PJRT artifacts: checksum {pjrt_checksum:.3}, {:.1} ms, {} bytes moved",
+        r.trace.makespan_ns() as f64 / 1e6,
+        r.trace.bytes_transferred
+    );
+
+    // --- correctness: host oracle must agree --------------------------------
+    let host_program = matrix_program(rounds, size, false, None);
+    let mut single = RunConfig::default();
+    single.set("engine", "single")?;
+    single.set("artifacts", "false")?;
+    let h = parhask::engine::run(&host_program, &single, Arc::new(HostExecutor))?;
+    let host_checksum = h.outputs[0].as_tensor()?.scalar()?;
+    // Different PRNGs (threefry vs xoshiro) → same distribution, different
+    // draws: checksums agree in magnitude, not bits. The *artifact* path is
+    // bit-checked against jnp in python/tests; here we sanity-check scale.
+    let ratio = pjrt_checksum / host_checksum;
+    println!("host oracle checksum {host_checksum:.3} (ratio {ratio:.3} — same scale)");
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "artifact and host checksums should be the same order of magnitude"
+    );
+
+    // --- engine comparison via the calibrated simulator ---------------------
+    let cm = CostModel::load_or_default(&parhask::runtime::default_artifact_dir());
+    let mut table = Table::new(
+        &format!("simulated makespan, {rounds} rounds @ {size}x{size} (calibrated)"),
+        &["engine", "makespan (ms)", "bytes moved", "utilization"],
+    );
+    let single_t = simulate(&program, &cm, &SimConfig::smp(1))?;
+    table.row(vec![
+        "single".into(),
+        format!("{:.2}", single_t.makespan_ns as f64 / 1e6),
+        "0".into(),
+        format!("{:.0}%", single_t.utilization * 100.0),
+    ]);
+    for w in [2usize, 4, 8] {
+        let smp = simulate(&program, &cm, &SimConfig::smp(w))?;
+        table.row(vec![
+            format!("smp:{w}"),
+            format!("{:.2}", smp.makespan_ns as f64 / 1e6),
+            "0".into(),
+            format!("{:.0}%", smp.utilization * 100.0),
+        ]);
+        let dist = simulate(&program, &cm, &SimConfig::cluster(w))?;
+        table.row(vec![
+            format!("dist:{w}"),
+            format!("{:.2}", dist.makespan_ns as f64 / 1e6),
+            format!("{}", dist.bytes_transferred),
+            format!("{:.0}%", dist.utilization * 100.0),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("(run `parhask calibrate` to anchor these to measured kernel times)");
+    Ok(())
+}

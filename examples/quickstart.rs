@@ -1,0 +1,89 @@
+//! Quickstart: the full auto-parallelizer pipeline in ~60 lines.
+//!
+//! Takes the paper's §2 NLP program (as HaskLite source), parses it,
+//! infers purity from the type signatures, builds the dependency graph,
+//! lowers to tasks, and runs it on an in-process message-passing cluster —
+//! then shows the schedule.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use parhask::config::RunConfig;
+use parhask::depgraph::{analyze, build_depgraph};
+use parhask::frontend::parse_program;
+use parhask::ir::lower::lower;
+use parhask::tasks::{FunctionRegistry, SyntheticExecutor};
+use parhask::types::check_program;
+
+const PROGRAM: &str = r#"
+data Summary = Opaque
+
+clean_files :: IO Summary
+clean_files = primitive
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = primitive
+
+semantic_analysis :: IO Int
+semantic_analysis = primitive
+
+primitive :: Int
+primitive = 0
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  z <- semantic_analysis
+  print (y, z)
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Parse.
+    let ast = parse_program(PROGRAM).map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
+    println!("parsed {} declarations", ast.decls.len());
+
+    // 2. Check types + purity (clean_files/semantic_analysis are IO;
+    //    complex_evaluation is pure — straight off the signatures).
+    let checked = check_program(&ast, "main").map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
+    for f in ["clean_files", "complex_evaluation", "semantic_analysis"] {
+        println!(
+            "  {f}: {}",
+            if checked.purity.is_io(f) { "IO (ordered)" } else { "pure (parallel)" }
+        );
+    }
+
+    // 3. Dependency graph (paper Figure 1).
+    let graph = build_depgraph(&checked).map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
+    let stats = analyze::analyze(&graph, |_| 1.0);
+    println!(
+        "graph: {} nodes, {} edges, max parallel width {}",
+        stats.nodes, stats.edges, stats.max_width
+    );
+
+    // 4. Bind names to executable ops (synthetic latencies here; see
+    //    matrix_pipeline.rs for real PJRT artifacts) and lower.
+    let registry = FunctionRegistry::nlp_demo(40_000, 80_000, 60_000); // µs
+    let lowered = lower(&checked, &registry).map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
+
+    // 5. Run on an in-proc message-passing cluster with 2 workers.
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "cluster:2")?;
+    let result = parhask::engine::run(&lowered.program, &cfg, Arc::new(SyntheticExecutor))?;
+    result.trace.validate(&lowered.program)?;
+
+    println!(
+        "ran {} tasks on 2 workers in {:.2} ms (utilization {:.0}%)",
+        result.trace.events.len(),
+        result.trace.makespan_ns() as f64 / 1e6,
+        result.trace.utilization() * 100.0
+    );
+    println!("schedule:\n{}", result.trace.gantt(64));
+    println!("\nthe key effect: complex_evaluation and semantic_analysis ran");
+    println!("concurrently once clean_files finished — found automatically");
+    println!("from the types, exactly the paper's pitch.");
+    Ok(())
+}

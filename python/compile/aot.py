@@ -1,0 +1,199 @@
+"""AOT pipeline: lower every Layer-2 computation to HLO *text* + manifest.
+
+Run once at build time (``make artifacts``); Python never touches the
+request path. The Rust runtime loads ``artifacts/<name>.hlo.txt`` with
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.
+
+``manifest.json`` describes every artifact (file, input/output
+shapes+dtypes, analytic FLOP and byte counts) so the Rust side can
+type-check task wiring at graph-lowering time and seed the simulator's
+cost model before calibration.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import pick_block, vmem_footprint_bytes, mxu_utilization
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io_desc(avals):
+    out = []
+    for a in avals:
+        dt = {"float32": "f32", "int32": "i32"}[str(a.dtype)]
+        out.append({"shape": list(a.shape), "dtype": dt})
+    return out
+
+
+def _nbytes(descs):
+    return sum(
+        4 * functools.reduce(lambda p, q: p * q, d["shape"], 1) for d in descs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (callable, example args, analytic flops, kind)
+# ---------------------------------------------------------------------------
+
+def build_registry():
+    reg = {}
+
+    for n in model.MAT_SIZES:
+        reg[f"matgen_{n}"] = dict(
+            fn=functools.partial(lambda seed, n=n: model.matgen(seed, n)),
+            args=[spec((), I32)],
+            flops=8 * n * n,  # threefry rounds approx per element
+            kind="jax",
+            desc=f"seed -> uniform(-1,1) f32[{n},{n}] (threefry)",
+        )
+        reg[f"matmul_{n}"] = dict(
+            fn=model.matmul_task,
+            args=[spec((n, n)), spec((n, n))],
+            flops=2 * n * n * n,
+            kind="pallas_matmul",
+            desc=f"A@B via tiled Pallas kernel, f32[{n},{n}]",
+        )
+        reg[f"matsum_{n}"] = dict(
+            fn=model.matsum,
+            args=[spec((n, n))],
+            flops=2 * n * n,
+            kind="pallas_reduce",
+            desc=f"squared Frobenius norm via tiled Pallas reduction, f32[{n},{n}]",
+        )
+        reg[f"matround_{n}"] = dict(
+            fn=functools.partial(lambda sa, sb, n=n: model.matround(sa, sb, n)),
+            args=[spec((), I32), spec((), I32)],
+            flops=2 * n * n * n + 18 * n * n,
+            kind="fused_round",
+            desc=f"fused gen+gen+mul+sum at N={n} (granularity ablation)",
+        )
+
+    pshapes = model.PARAM_SHAPES
+    pspecs = [spec(s) for s in pshapes]
+    gspecs = [spec(s) for s in pshapes]
+    B, D, H, C = model.BATCH, model.D_IN, model.D_HID, model.N_CLASSES
+    mlp_flops_fwd = 2 * B * (D * H + H * H + H * C)
+
+    reg["mlp_init"] = dict(
+        fn=lambda seed: model.mlp_init(seed),
+        args=[spec((), I32)],
+        flops=4 * (D * H + H * H + H * C),
+        kind="jax",
+        desc="seed -> MLP params (768-256-256-10)",
+    )
+    reg["mlp_grad"] = dict(
+        fn=model.mlp_grad,
+        args=pspecs + [spec((B, D)), spec((B,), I32)],
+        flops=3 * mlp_flops_fwd,  # fwd + 2 bwd matmul families
+        kind="pallas_mlp",
+        desc="per-shard value_and_grad of softmax-xent MLP (Pallas matmuls fwd+bwd)",
+    )
+    reg["mlp_apply"] = dict(
+        fn=model.mlp_apply,
+        args=pspecs + gspecs + [spec(())],
+        flops=2 * sum(functools.reduce(lambda p, q: p * q, s, 1) for s in pshapes),
+        kind="jax",
+        desc="SGD apply with averaged grads",
+    )
+    reg["mlp_datagen"] = dict(
+        fn=model.mlp_datagen,
+        args=[spec((), I32)],
+        flops=2 * B * D * C + 10 * B * D,
+        kind="jax",
+        desc="seed -> synthetic teacher-labelled shard (x, y)",
+    )
+    return reg
+
+
+def kernel_report():
+    """Structural L1 perf estimates recorded alongside the manifest."""
+    rep = []
+    for n in model.MAT_SIZES:
+        bm = bk = bn = pick_block(n)
+        rep.append(
+            dict(
+                kernel=f"matmul_{n}",
+                block=[bm, bk, bn],
+                grid=[n // bm, n // bn, n // bk],
+                vmem_bytes=vmem_footprint_bytes(bm, bk, bn),
+                mxu_utilization=mxu_utilization(bm, bk, bn),
+            )
+        )
+    return rep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    reg = build_registry()
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"version": 1, "artifacts": [], "kernel_report": kernel_report()}
+    for name, ent in sorted(reg.items()):
+        if only and name not in only:
+            continue
+        fname = f"{name}.hlo.txt"
+        text = to_hlo_text(ent["fn"], ent["args"])
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(ent["fn"], *ent["args"])
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        ins = _io_desc(ent["args"])
+        outs_d = _io_desc(outs)
+        manifest["artifacts"].append(
+            dict(
+                name=name,
+                file=fname,
+                inputs=ins,
+                outputs=outs_d,
+                flops=ent["flops"],
+                bytes_in=_nbytes(ins),
+                bytes_out=_nbytes(outs_d),
+                kind=ent["kind"],
+                desc=ent["desc"],
+            )
+        )
+        print(f"  aot: {name:<16} {len(text):>8} chars  "
+              f"in={len(ins)} out={len(outs_d)}", file=sys.stderr)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.outdir}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels.
+
+Every kernel here is authored TPU-shaped (BlockSpec grids, VMEM/SMEM
+scratch, MXU-friendly tiles) but lowered with ``interpret=True`` so the
+resulting HLO runs on the CPU PJRT plugin — real-TPU lowering would emit
+Mosaic custom-calls the CPU client cannot execute (see DESIGN.md
+§Hardware-Adaptation).
+
+Correctness for every kernel is pinned against the pure-jnp oracles in
+:mod:`compile.kernels.ref` by the pytest suite.
+"""
+
+from .matmul import matmul, pick_block, vmem_footprint_bytes, mxu_utilization
+from .reduce import sumsq
+from .elementwise import bias_act
+
+__all__ = [
+    "matmul",
+    "pick_block",
+    "vmem_footprint_bytes",
+    "mxu_utilization",
+    "sumsq",
+    "bias_act",
+]

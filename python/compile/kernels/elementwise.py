@@ -1,0 +1,78 @@
+"""Fused bias + activation kernel for the MLP hidden layers.
+
+On real hardware, fusing the bias add and nonlinearity into one VMEM pass
+after the matmul avoids a round trip to HBM per hidden layer. Authored as
+its own kernel (rather than trusting XLA fusion) so the AOT'd MLP step
+exercises a second elementwise-style Pallas kernel alongside the matmul.
+
+Differentiable via custom VJP (relu/tanh masks recomputed in the backward
+pass — recompute-over-store, the cheaper choice for elementwise ops).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+_ACTS = ("relu", "tanh", "none")
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, act: str):
+    z = x_ref[...] + b_ref[...]
+    if act == "relu":
+        z = jnp.maximum(z, 0.0)
+    elif act == "tanh":
+        z = jnp.tanh(z)
+    o_ref[...] = z
+
+
+def _bias_act_raw(x, b, act: str):
+    m, n = x.shape
+    bm = pick_block(m)
+    if m % bm != 0:
+        pad = (m + bm - 1) // bm * bm - m
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        out = _bias_act_raw(x, b, act)
+        return out[: m, :]
+    return pl.pallas_call(
+        functools.partial(_bias_act_kernel, act=act),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, b.reshape(1, n))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def bias_act(x, b, act: str = "relu"):
+    """``act(x + b)`` fused in one VMEM pass; act ∈ {relu, tanh, none}."""
+    if act not in _ACTS:
+        raise ValueError(f"unknown activation {act!r}")
+    return _bias_act_raw(x, b, act)
+
+
+def _fwd(x, b, act):
+    out = _bias_act_raw(x, b, act)
+    return out, (x, b, out)
+
+
+def _bwd(act, res, g):
+    x, b, out = res
+    if act == "relu":
+        mask = (x + b.reshape(1, -1)) > 0.0
+        gz = g * mask
+    elif act == "tanh":
+        gz = g * (1.0 - out * out)
+    else:
+        gz = g
+    return gz, jnp.sum(gz, axis=0)
+
+
+bias_act.defvjp(_fwd, _bwd)

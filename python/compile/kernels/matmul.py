@@ -1,0 +1,155 @@
+"""Block-tiled Pallas matmul — the compute hot-spot of the paper's workload.
+
+The paper evaluates its auto-parallelizer on "generation and multiplication
+of large random matrices"; the multiply is the FLOP hot-spot, so it lives
+here as a Layer-1 kernel.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation):
+
+* 3-D grid ``(M/bm, N/bn, K/bk)`` — the K axis is innermost so one output
+  tile's partial products accumulate in a VMEM scratch buffer and HBM sees
+  each output element exactly once.
+* ``BlockSpec`` index maps express the HBM↔VMEM schedule a CUDA
+  formulation would express with threadblocks + shared-memory staging.
+* ``jnp.dot(..., preferred_element_type=float32)`` targets the MXU
+  systolic array on real hardware.
+* Default 128×128 tiles match the MXU native shape; :func:`pick_block`
+  degrades gracefully for small or odd operands.
+
+The kernel supports arbitrary ``(m, k) @ (k, n)`` with zero-padding to the
+block grid when a dimension is not divisible (pad → kernel → slice); the
+pytest/hypothesis suite sweeps non-divisible shapes through that path.
+
+A custom VJP makes the kernel differentiable: both backward matmuls
+(``dx = g @ y^T``, ``dy = x^T @ g``) are themselves routed through the
+Pallas kernel, so the MLP training-step artifact exercises it in forward
+*and* backward passes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU native tile edge on current TPUs.
+MXU_TILE = 128
+# Per-core VMEM budget we tile for (v4/v5p ballpark, bytes).
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def pick_block(dim: int, preferred: int = MXU_TILE) -> int:
+    """Largest power-of-two block ≤ ``preferred`` that divides ``dim``.
+
+    Falls back to ``dim`` itself for small primes (the whole axis becomes
+    one block — still correct, just less reuse).
+    """
+    b = preferred
+    while b > 1:
+        if dim % b == 0:
+            return b
+        b //= 2
+    return 1 if dim == 0 else (dim if dim < preferred else 1)
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
+    """Bytes of VMEM resident per grid step: x-tile + y-tile + accumulator."""
+    return itemsize * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bk: int, bn: int) -> float:
+    """Fraction of MXU systolic slots a (bm, bk)x(bk, bn) tile keeps busy.
+
+    The MXU multiplies 128x128 tiles; a smaller block wastes the
+    remainder of each systolic pass. This is the *structural* utilization
+    estimate recorded in EXPERIMENTS.md §Perf (interpret=True gives no
+    hardware timing).
+    """
+    eff = 1.0
+    for b in (bm, bk, bn):
+        eff *= min(b, MXU_TILE) / MXU_TILE
+    return eff
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    """One (i, j, kk) grid step: acc += x_tile @ y_tile; flush on last kk."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _matmul_blocked(x, y, bm: int, bk: int, bn: int):
+    """Pallas call for block-divisible operands."""
+    m, k = x.shape
+    _, n = y.shape
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _pad_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """``x @ y`` through the tiled Pallas kernel, any f32 2-D shapes.
+
+    Non-block-divisible operands are zero-padded to the tile grid and the
+    result sliced back — zero padding is exact for matmul.
+    """
+    return _matmul_padded(x, y)
+
+
+def _matmul_padded(x, y):
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"matmul inner dims mismatch: {x.shape} @ {y.shape}")
+    bm, bk, bn = pick_block(m), pick_block(k), pick_block(n)
+    # For tiny/prime axes pick_block may return the axis itself (>MXU) or 1;
+    # clamp to something sane, then pad.
+    bm, bk, bn = (min(b, MXU_TILE) if b > 0 else 1 for b in (bm, bk, bn))
+    mp, kp, np_ = _pad_to(m, bm), _pad_to(k, bk), _pad_to(n, bn)
+    if (mp, kp, np_) != (m, k, n):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+        y = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = _matmul_blocked(x, y, bm, bk, bn)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def _matmul_fwd(x, y):
+    return _matmul_padded(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # Both backward products run through the Pallas kernel too.
+    dx = _matmul_padded(g, y.T)
+    dy = _matmul_padded(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,53 @@
+"""Tiled reduction kernel: sum of squares (squared Frobenius norm).
+
+The paper's workload checks/consumes each product matrix with a cheap
+aggregate (`complex_evaluation :: Summary -> Int` in §2's sketch); we model
+that as a Frobenius-norm² reduction so the task emits a scalar the
+coordinator can ship back over the wire cheaply.
+
+TPU shaping: 1-D grid over row tiles; the running scalar lives in SMEM
+scratch (scalars belong in SMEM, not VMEM, on TPU); each grid step reduces
+one (bm, n) VMEM-resident slab. Sequential-grid accumulation relies on
+TPU's ``arbitrary``-semantics grid ordering, which ``interpret=True``
+preserves.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import pick_block
+
+
+def _sumsq_kernel(x_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[0, 0] = 0.0
+
+    blk = x_ref[...]
+    acc_ref[0, 0] += jnp.sum(blk * blk)
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[0, 0]
+
+
+def sumsq(x):
+    """Σ xᵢⱼ² over an f32 matrix, returned as a scalar."""
+    m, n = x.shape
+    bm = pick_block(m)
+    if m % bm != 0:  # pad rows with zeros — exact for sum of squares
+        pad = (m + bm - 1) // bm * bm - m
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        m = m + pad
+    out = pl.pallas_call(
+        _sumsq_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[0, 0]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the CORE correctness signal of the build path: pytest asserts
+``assert_allclose(kernel(x), ref(x))`` across shape/dtype sweeps
+(hypothesis) before any artifact ships to the Rust runtime.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain jnp matmul in f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def sumsq(x):
+    """Squared Frobenius norm."""
+    return jnp.sum(x * x)
+
+
+def bias_act(x, b, act: str = "relu"):
+    z = x + b.reshape(1, -1)
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "tanh":
+        return jnp.tanh(z)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown activation {act!r}")

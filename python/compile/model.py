@@ -1,0 +1,145 @@
+"""Layer-2: the JAX computations the Rust coordinator schedules as tasks.
+
+Everything here is a *pure* function of its inputs — that purity is
+exactly what the paper exploits to parallelize: pure tasks can be
+dispatched to any worker, in any order consistent with data
+dependencies, and re-executed idempotently after a worker failure.
+
+Computation families (mirroring the paper's evaluation + §2 motivation):
+
+* ``matgen_N``  — seed → N×N uniform matrix (threefry; the paper's
+  "generation of large random matrices").
+* ``matmul_N``  — A, B → A·B via the Layer-1 Pallas kernel.
+* ``matsum_N``  — A → ‖A‖²_F via the Layer-1 reduction kernel
+  (the cheap scalar "summary" a coordinator ships back).
+* ``matround_N`` — fused gen+gen+mul+sum in one artifact (granularity
+  ablation: one coarse task vs. four fine tasks).
+* ``mlp_*``     — the "deep learning project" from §2: a 3-layer MLP
+  (768-256-256-10) with hidden matmuls through the Pallas kernel;
+  init / per-shard gradient / apply-update / synthetic data generation.
+  The gradient+apply split lets the Rust coordinator run data-parallel
+  rounds: shard grads in parallel, average on the leader, apply once.
+
+All functions return tuples (lowered with ``return_tuple=True``) so the
+Rust side can unwrap uniformly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, sumsq, bias_act
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Matrix workload (paper Figure 2)
+# ---------------------------------------------------------------------------
+
+MAT_SIZES = (64, 128, 256)
+
+
+def matgen(seed, n: int):
+    """Uniform(-1, 1) N×N matrix from an int32 seed (threefry)."""
+    key = jax.random.key(seed)
+    return (jax.random.uniform(key, (n, n), jnp.float32, minval=-1.0, maxval=1.0),)
+
+
+def matmul_task(a, b):
+    """A·B through the Layer-1 Pallas kernel."""
+    return (matmul(a, b),)
+
+
+def matsum(a):
+    """Squared Frobenius norm through the Layer-1 reduction kernel."""
+    return (sumsq(a),)
+
+
+def matround(seed_a, seed_b, n: int):
+    """Fused round: ‖gen(a) · gen(b)‖²_F in one artifact (granularity ablation)."""
+    (a,) = matgen(seed_a, n)
+    (b,) = matgen(seed_b, n)
+    return (sumsq(matmul(a, b)),)
+
+
+# ---------------------------------------------------------------------------
+# MLP training step (paper §2 "deep learning project"; e2e driver)
+# ---------------------------------------------------------------------------
+
+# Sized for the 1-core CPU testbed; dims chosen MXU-tile-divisible where
+# they feed the Pallas kernel (768, 256 divisible by 128; batch 128).
+BATCH = 128
+D_IN = 768
+D_HID = 256
+N_CLASSES = 10
+
+PARAM_SHAPES = (
+    (D_IN, D_HID),  # w1
+    (D_HID,),       # b1
+    (D_HID, D_HID), # w2
+    (D_HID,),       # b2
+    (D_HID, N_CLASSES),  # w3
+    (N_CLASSES,),   # b3
+)
+
+
+def mlp_init(seed):
+    """He-ish init of the 6 parameter tensors from an int32 seed."""
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 3)
+    w1 = jax.random.normal(ks[0], (D_IN, D_HID), jnp.float32) * (2.0 / D_IN) ** 0.5
+    w2 = jax.random.normal(ks[1], (D_HID, D_HID), jnp.float32) * (2.0 / D_HID) ** 0.5
+    w3 = jax.random.normal(ks[2], (D_HID, N_CLASSES), jnp.float32) * (2.0 / D_HID) ** 0.5
+    b1 = jnp.zeros((D_HID,), jnp.float32)
+    b2 = jnp.zeros((D_HID,), jnp.float32)
+    b3 = jnp.zeros((N_CLASSES,), jnp.float32)
+    return (w1, b1, w2, b2, w3, b3)
+
+
+def _mlp_logits(params, x, *, use_pallas: bool = True):
+    w1, b1, w2, b2, w3, b3 = params
+    mm = matmul if use_pallas else kref.matmul
+    ba = bias_act if use_pallas else kref.bias_act
+    h1 = ba(mm(x, w1), b1, "relu")
+    h2 = ba(mm(h1, w2), b2, "relu")
+    # Final projection has n=10 (not tile-divisible); plain dot is the
+    # right call — a 10-wide MXU pass would waste >90% of the array.
+    return h2 @ w3 + b3
+
+
+def _softmax_xent(logits, y):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def mlp_loss(params, x, y, *, use_pallas: bool = True):
+    return _softmax_xent(_mlp_logits(params, x, use_pallas=use_pallas), y)
+
+
+def mlp_grad(w1, b1, w2, b2, w3, b3, x, y):
+    """Per-shard gradients + loss. Pure → shards run on any worker."""
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y)
+    return (*grads, loss)
+
+
+def mlp_apply(w1, b1, w2, b2, w3, b3, g1, g2, g3, g4, g5, g6, lr):
+    """SGD update with (already averaged) gradients."""
+    params = (w1, b1, w2, b2, w3, b3)
+    grads = (g1, g2, g3, g4, g5, g6)
+    return tuple(p - lr * g for p, g in zip(params, grads))
+
+
+def mlp_datagen(seed):
+    """Synthetic learnable classification shard.
+
+    x ~ N(0, 1); labels come from a fixed random teacher projection (key
+    0xteacher, identical across shards) so the loss curve actually
+    descends — the e2e driver's headline signal.
+    """
+    key = jax.random.key(seed)
+    kx, knoise = jax.random.split(key)
+    x = jax.random.normal(kx, (BATCH, D_IN), jnp.float32)
+    teacher = jax.random.normal(jax.random.key(0x7EAC), (D_IN, N_CLASSES), jnp.float32)
+    scores = x @ teacher + 0.1 * jax.random.normal(knoise, (BATCH, N_CLASSES))
+    y = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    return (x, y)

@@ -1,0 +1,75 @@
+"""AOT pipeline tests: lowering round-trips, manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTDIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_registry_covers_expected_families():
+    reg = aot.build_registry()
+    for n in model.MAT_SIZES:
+        for fam in ("matgen", "matmul", "matsum", "matround"):
+            assert f"{fam}_{n}" in reg
+    for name in ("mlp_init", "mlp_grad", "mlp_apply", "mlp_datagen"):
+        assert name in reg
+
+
+def test_hlo_text_parseable_and_entry_named():
+    reg = aot.build_registry()
+    ent = reg["matmul_64"]
+    text = aot.to_hlo_text(ent["fn"], ent["args"])
+    assert "ENTRY" in text and "f32[64,64]" in text
+    # return_tuple=True → entry layout returns a 1-tuple
+    assert "->(f32[64,64]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTDIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_files_and_shapes():
+    with open(os.path.join(ARTDIR, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    names = set()
+    for ent in man["artifacts"]:
+        names.add(ent["name"])
+        path = os.path.join(ARTDIR, ent["file"])
+        assert os.path.exists(path), ent["file"]
+        assert ent["flops"] > 0 and ent["bytes_in"] >= 4 and ent["bytes_out"] >= 4
+        for d in ent["inputs"] + ent["outputs"]:
+            assert d["dtype"] in ("f32", "i32")
+    assert "matmul_256" in names and "mlp_grad" in names
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTDIR, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_kernel_report_structural_sanity():
+    with open(os.path.join(ARTDIR, "manifest.json")) as f:
+        man = json.load(f)
+    rep = {r["kernel"]: r for r in man["kernel_report"]}
+    r256 = rep["matmul_256"]
+    assert r256["block"] == [128, 128, 128]
+    assert r256["vmem_bytes"] < 16 * 1024 * 1024
+    assert r256["mxu_utilization"] == 1.0
+
+
+def test_lowered_matgen_executes_like_eager():
+    """Execute the lowered HLO via jax's own CPU client and compare."""
+    reg = aot.build_registry()
+    ent = reg["matgen_64"]
+    lowered = jax.jit(ent["fn"]).lower(*ent["args"])
+    compiled = lowered.compile()
+    (out,) = compiled(jnp.int32(5))
+    (ref_out,) = model.matgen(5, 64)
+    np.testing.assert_allclose(out, ref_out, rtol=1e-6)

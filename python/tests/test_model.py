@@ -1,0 +1,86 @@
+"""L2 model-level tests: shapes, purity/determinism, learnability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def test_matgen_deterministic_and_bounded():
+    (a1,) = model.matgen(42, 64)
+    (a2,) = model.matgen(42, 64)
+    (a3,) = model.matgen(43, 64)
+    np.testing.assert_array_equal(a1, a2)  # purity: same seed, same matrix
+    assert not np.allclose(a1, a3)
+    assert float(jnp.max(a1)) <= 1.0 and float(jnp.min(a1)) >= -1.0
+    assert a1.shape == (64, 64) and a1.dtype == jnp.float32
+
+
+def test_matround_equals_unfused_pipeline():
+    n = 64
+    (a,) = model.matgen(1, n)
+    (b,) = model.matgen(2, n)
+    (c,) = model.matmul_task(a, b)
+    (s_unfused,) = model.matsum(c)
+    (s_fused,) = model.matround(1, 2, n)
+    np.testing.assert_allclose(float(s_fused), float(s_unfused), rtol=1e-5)
+
+
+def test_mlp_init_shapes():
+    params = model.mlp_init(0)
+    assert tuple(p.shape for p in params) == model.PARAM_SHAPES
+    assert all(p.dtype == jnp.float32 for p in params)
+
+
+def test_mlp_grad_shapes_and_loss_positive():
+    params = model.mlp_init(0)
+    x, y = model.mlp_datagen(7)
+    out = model.mlp_grad(*params, x, y)
+    grads, loss = out[:-1], out[-1]
+    assert tuple(g.shape for g in grads) == model.PARAM_SHAPES
+    assert float(loss) > 0.0
+
+
+def test_mlp_grad_matches_ref_path():
+    """Pallas-kernel MLP grads == pure-jnp MLP grads."""
+    params = model.mlp_init(1)
+    x, y = model.mlp_datagen(3)
+    loss_k, grads_k = jax.value_and_grad(model.mlp_loss)(params, x, y)
+    loss_r, grads_r = jax.value_and_grad(
+        lambda p, x, y: model.mlp_loss(p, x, y, use_pallas=False)
+    )(params, x, y)
+    np.testing.assert_allclose(float(loss_k), float(loss_r), rtol=1e-5)
+    for gk, gr in zip(grads_k, grads_r):
+        np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=2e-5)
+
+
+def test_mlp_apply_is_sgd():
+    params = model.mlp_init(0)
+    grads = tuple(jnp.ones_like(p) for p in params)
+    new = model.mlp_apply(*params, *grads, jnp.float32(0.1))
+    for p, q in zip(params, new):
+        np.testing.assert_allclose(q, p - 0.1, rtol=1e-6, atol=1e-6)
+
+
+def test_mlp_datagen_labels_learnable():
+    x, y = model.mlp_datagen(11)
+    assert x.shape == (model.BATCH, model.D_IN)
+    assert y.shape == (model.BATCH,) and y.dtype == jnp.int32
+    assert int(jnp.min(y)) >= 0 and int(jnp.max(y)) < model.N_CLASSES
+    # teacher labels must not be constant
+    assert len(np.unique(np.asarray(y))) > 1
+
+
+def test_short_training_descends():
+    """Five SGD steps must reduce loss — the e2e driver's core signal."""
+    params = model.mlp_init(0)
+    losses = []
+    for step in range(5):
+        x, y = model.mlp_datagen(step)
+        out = model.mlp_grad(*params, x, y)
+        grads, loss = out[:-1], out[-1]
+        losses.append(float(loss))
+        params = model.mlp_apply(*params, *grads, jnp.float32(0.05))
+    assert losses[-1] < losses[0], losses

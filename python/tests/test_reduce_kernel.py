@@ -1,0 +1,50 @@
+"""L1 reduction kernel (sum of squares) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sumsq
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return jax.random.normal(jax.random.key(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("n", [64, 128, 256])
+def test_square_matches_ref(n):
+    x = _rand((n, n), n)
+    np.testing.assert_allclose(sumsq(x), ref.sumsq(x), rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,n", [(100, 64), (1, 128), (257, 31), (64, 1)])
+def test_padding_path(m, n):
+    x = _rand((m, n), m * 1000 + n)
+    np.testing.assert_allclose(sumsq(x), ref.sumsq(x), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 300), n=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_sweep(m, n, seed):
+    x = _rand((m, n), seed)
+    np.testing.assert_allclose(sumsq(x), ref.sumsq(x), rtol=2e-4, atol=1e-5)
+
+
+def test_zeros_and_ones():
+    assert float(sumsq(jnp.zeros((64, 64)))) == 0.0
+    np.testing.assert_allclose(float(sumsq(jnp.ones((64, 64)))), 64.0 * 64.0)
+
+
+def test_scale_quadratic():
+    x = _rand((128, 128), 5)
+    np.testing.assert_allclose(
+        float(sumsq(2.0 * x)), 4.0 * float(sumsq(x)), rtol=1e-4
+    )
+
+
+def test_jit_compatible():
+    x = _rand((128, 128), 6)
+    np.testing.assert_allclose(jax.jit(sumsq)(x), ref.sumsq(x), rtol=1e-4)

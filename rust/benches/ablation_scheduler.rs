@@ -1,0 +1,179 @@
+//! Scheduler ablations (DESIGN.md experiment index, Ablations A–C):
+//!
+//! * **A — steal policy**: none / random-victim / richest-victim on an
+//!   imbalanced synthetic workload, real in-proc cluster;
+//! * **B — placement policy**: round-robin / least-loaded / locality-aware
+//!   on the matrix pipeline in the simulator (bytes + makespan);
+//! * **C — granularity**: fused single-task rounds vs 4-task rounds at
+//!   equal FLOPs, sweeping matrix size in the simulator.
+//!
+//! ```sh
+//! cargo bench --bench ablation_scheduler
+//! ```
+
+use std::sync::Arc;
+
+use parhask::cluster::{run_cluster_inproc, ClusterConfig};
+use parhask::ir::task::{CostEst, OpKind};
+use parhask::ir::{ProgramBuilder, TaskProgram};
+use parhask::metrics::{Summary, Table};
+use parhask::scheduler::{PlacementPolicy, StealPolicy};
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::SyntheticExecutor;
+use parhask::util::rng::Rng;
+use parhask::workload::{matrix_program, matrix_program_fused};
+
+fn main() -> anyhow::Result<()> {
+    ablation_a_steal()?;
+    ablation_b_placement()?;
+    ablation_c_granularity()?;
+    ablation_d_pipeline_depth()?;
+    Ok(())
+}
+
+/// Imbalanced workload: a few heavy tasks + many light ones, all
+/// independent — the shape where stealing matters.
+fn imbalanced_program(heavy: usize, light: usize, rng: &mut Rng) -> TaskProgram {
+    let mut b = ProgramBuilder::new();
+    for i in 0..heavy {
+        b.push(
+            OpKind::Synthetic { compute_us: 8_000 },
+            vec![],
+            1,
+            CostEst { flops: 8_000, bytes_in: 0, bytes_out: 8 },
+            format!("heavy{i}"),
+        );
+    }
+    for i in 0..light {
+        let us = 200 + rng.below(400);
+        b.push(
+            OpKind::Synthetic { compute_us: us },
+            vec![],
+            1,
+            CostEst { flops: us, bytes_in: 0, bytes_out: 8 },
+            format!("light{i}"),
+        );
+    }
+    b.build().unwrap()
+}
+
+fn ablation_a_steal() -> anyhow::Result<()> {
+    println!("=== Ablation A: steal policy (real in-proc cluster, 2 workers) ===\n");
+    let mut table = Table::new(
+        "imbalanced workload (4 heavy + 24 light tasks), 5 reps",
+        &["steal policy", "mean ms", "p95 ms", "min ms"],
+    );
+    for steal in [StealPolicy::None, StealPolicy::RandomVictim, StealPolicy::RichestVictim] {
+        let mut times = Vec::new();
+        for rep in 0..5 {
+            let mut rng = Rng::new(rep);
+            let p = imbalanced_program(4, 24, &mut rng);
+            let cfg = ClusterConfig {
+                steal,
+                // deep pipelines so queues form and stealing has targets
+                pipeline_depth: 8,
+                placement: PlacementPolicy::RoundRobin,
+                ..Default::default()
+            };
+            let r = run_cluster_inproc(&p, Arc::new(SyntheticExecutor), 2, cfg, None)?;
+            r.trace.validate(&p)?;
+            times.push(r.trace.wall_ns as f64 / 1e6);
+        }
+        let s = Summary::of(&times);
+        table.row(vec![
+            steal.name().into(),
+            format!("{:.2}", s.mean),
+            format!("{:.2}", s.p95),
+            format!("{:.2}", s.min),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn ablation_b_placement() -> anyhow::Result<()> {
+    println!("=== Ablation B: placement policy (simulator, calibrated costs) ===\n");
+    let cm = CostModel::load_or_default(&parhask::runtime::default_artifact_dir());
+    let p = matrix_program(16, 256, true, None);
+    let mut table = Table::new(
+        "16 rounds @ 256x256, 4 distributed workers",
+        &["placement", "makespan ms", "bytes moved", "utilization"],
+    );
+    for placement in [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastLoaded,
+        PlacementPolicy::LocalityAware,
+    ] {
+        let cfg = SimConfig {
+            placement,
+            ..SimConfig::cluster(4)
+        };
+        let r = simulate(&p, &cm, &cfg)?;
+        table.row(vec![
+            placement.name().into(),
+            format!("{:.2}", r.makespan_ns as f64 / 1e6),
+            r.bytes_transferred.to_string(),
+            format!("{:.0}%", r.utilization * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn ablation_c_granularity() -> anyhow::Result<()> {
+    println!("=== Ablation C: task granularity at fixed FLOPs (simulator) ===\n");
+    let cm = CostModel::load_or_default(&parhask::runtime::default_artifact_dir());
+    let mut table = Table::new(
+        "16 rounds, 4 workers: 4 fine tasks/round vs 1 fused task/round",
+        &["N", "fine ms", "fine bytes", "fused ms", "fused bytes"],
+    );
+    for n in [64usize, 128, 256] {
+        let fine = simulate(
+            &matrix_program(16, n, true, None),
+            &cm,
+            &SimConfig::cluster(4),
+        )?;
+        let fused = simulate(
+            &matrix_program_fused(16, n, None),
+            &cm,
+            &SimConfig::cluster(4),
+        )?;
+        table.row(vec![
+            n.to_string(),
+            format!("{:.2}", fine.makespan_ns as f64 / 1e6),
+            fine.bytes_transferred.to_string(),
+            format!("{:.2}", fused.makespan_ns as f64 / 1e6),
+            fused.bytes_transferred.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(fused rounds ship seeds + one scalar instead of three matrices —");
+    println!(" the granularity/communication trade-off the paper's §2 gestures at)");
+    Ok(())
+}
+
+fn ablation_d_pipeline_depth() -> anyhow::Result<()> {
+    println!("=== Ablation D: pipeline depth (simulator, calibrated costs) ===\n");
+    let cm = CostModel::load_or_default(&parhask::runtime::default_artifact_dir());
+    let p = matrix_program(16, 256, true, None);
+    let mut table = Table::new(
+        "16 rounds @ 256x256, 4 distributed workers",
+        &["depth", "makespan ms", "utilization"],
+    );
+    for depth in [1usize, 2, 4, 8] {
+        let cfg = SimConfig {
+            pipeline_depth: depth,
+            ..SimConfig::cluster(4)
+        };
+        let r = simulate(&p, &cm, &cfg)?;
+        table.row(vec![
+            depth.to_string(),
+            format!("{:.2}", r.makespan_ns as f64 / 1e6),
+            format!("{:.0}%", r.utilization * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(depth 1 leaves workers idle during the result round trip;");
+    println!(" deeper pipelines hide the latency until load imbalance bites)");
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! **Figure 2 reproduction**: wallclock vs task size for single-thread,
+//! SMP, and N distributed workers on the random-matrix workload.
+//!
+//! Two modes, both printed:
+//!
+//! 1. **real** — actually execute the AOT artifacts through each engine on
+//!    this machine (1 CPU core: parallel engines pay overhead with no
+//!    speedup; reported honestly and used to calibrate);
+//! 2. **simulated** — the discrete-event simulator with calibrated per-op
+//!    costs sweeps worker counts the way the paper's testbed did. This is
+//!    the Figure-2 *shape* reproduction: who wins, by what factor, where
+//!    the crossover falls.
+//!
+//! ```sh
+//! cargo bench --bench fig2_matmul               # both modes
+//! PARHASK_BENCH_FAST=1 cargo bench --bench fig2_matmul   # sim only
+//! ```
+
+
+use parhask::baselines::{run_single, run_smp};
+use parhask::cluster::{run_cluster_inproc, ClusterConfig};
+use parhask::metrics::Table;
+use parhask::runtime::RuntimeService;
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::PjrtExecutor;
+use parhask::workload::matrix_program;
+
+const SIZE: usize = 256;
+const SIM_TASK_SIZES: &[usize] = &[1, 2, 4, 8, 16, 32];
+const REAL_TASK_SIZES: &[usize] = &[1, 2, 4, 8];
+const WORKERS: &[usize] = &[1, 2, 4, 8];
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("PARHASK_BENCH_FAST").is_ok();
+    println!("=== Figure 2: matrix workload, N={SIZE} (task size = rounds of gen+gen+mul+sum) ===\n");
+
+    // ----- simulated sweep (the paper's worker-count axis) ------------------
+    let cm = CostModel::load_or_default(&parhask::runtime::default_artifact_dir());
+    let calibrated = cm.measured(&format!("matmul_{SIZE}")).is_some();
+    println!(
+        "cost model: {} (run `parhask calibrate` to refresh)\n",
+        if calibrated { "calibrated from PJRT measurements" } else { "analytic defaults" }
+    );
+
+    let mut table = Table::new(
+        "Figure 2 (simulated, calibrated costs) — seconds",
+        &["task size", "single", "smp:4", "dist:1", "dist:2", "dist:4", "dist:8"],
+    );
+    let mut speedups = Vec::new();
+    for &t in SIM_TASK_SIZES {
+        let p = matrix_program(t, SIZE, true, None);
+        let single = simulate(&p, &cm, &SimConfig::single())?.makespan_ns;
+        let smp4 = simulate(&p, &cm, &SimConfig::smp(4))?.makespan_ns;
+        let mut row = vec![
+            t.to_string(),
+            fmt_s(single),
+            fmt_s(smp4),
+        ];
+        let mut dist = Vec::new();
+        for &w in WORKERS {
+            let d = simulate(&p, &cm, &SimConfig::cluster(w))?.makespan_ns;
+            dist.push(d);
+            row.push(fmt_s(d));
+        }
+        speedups.push((t, single as f64 / dist[2] as f64)); // vs dist:4
+        table.row(row);
+    }
+    println!("{}", table.render());
+
+    let mut sp = Table::new(
+        "speedup of dist:4 over single-thread (paper: near-linear at large sizes)",
+        &["task size", "speedup"],
+    );
+    for (t, s) in &speedups {
+        sp.row(vec![t.to_string(), format!("{s:.2}x")]);
+    }
+    println!("{}", sp.render());
+
+    // ----- real execution (1 core; calibration + honesty check) -------------
+    if !fast {
+        match RuntimeService::start_default() {
+            Ok(svc) => {
+                let manifest = svc.handle().manifest().clone();
+                // warm compile cache so the first row isn't charged for XLA compiles
+                for fam in ["matgen", "matmul", "matsum"] {
+                    svc.handle().precompile(&format!("{fam}_{SIZE}"))?;
+                }
+                let mut rt = Table::new(
+                    "real execution on this machine (1 CPU core) — seconds",
+                    &["task size", "single", "smp:2", "cluster:2", "cluster bytes"],
+                );
+                for &t in REAL_TASK_SIZES {
+                    let p = matrix_program(t, SIZE, true, Some(&manifest));
+                    let ex = PjrtExecutor::new(svc.handle());
+                    let r1 = run_single(&p, ex.as_ref())?;
+                    let r2 = run_smp(&p, ex.clone(), 2)?;
+                    let r3 =
+                        run_cluster_inproc(&p, ex, 2, ClusterConfig::default(), None)?;
+                    rt.row(vec![
+                        t.to_string(),
+                        fmt_s(r1.trace.wall_ns),
+                        fmt_s(r2.trace.wall_ns),
+                        fmt_s(r3.trace.wall_ns),
+                        r3.trace.bytes_transferred.to_string(),
+                    ]);
+                }
+                println!("{}", rt.render());
+                println!(
+                    "(single core ⇒ no real parallel speedup is possible here; the\n\
+                     distributed row shows protocol overhead, the simulated table\n\
+                     above shows the scaling shape — see DESIGN.md §7)"
+                );
+            }
+            Err(e) => println!("real mode skipped: {e:#} (run `make artifacts`)"),
+        }
+    }
+
+    // machine-readable dump for EXPERIMENTS.md
+    let json = Table::to_json(&table).to_string();
+    std::fs::write("bench_fig2.json", &json)?;
+    println!("\nwrote bench_fig2.json");
+    Ok(())
+}
+
+fn fmt_s(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e9)
+}

@@ -1,0 +1,174 @@
+//! Micro-benchmarks of the substrates on the hot path — the numbers the
+//! §Perf iteration log in EXPERIMENTS.md tracks:
+//!
+//! * codec encode/decode throughput (tensor-bearing messages);
+//! * work-stealing deque push/pop and steal rates;
+//! * JSON manifest parse;
+//! * PJRT artifact execute latency (the real task floor);
+//! * leader round-trip overhead per task (empty-ish tasks through the
+//!   in-proc cluster vs raw executor calls).
+//!
+//! ```sh
+//! cargo bench --bench micro_substrate
+//! ```
+
+use std::sync::Arc;
+
+use parhask::cluster::codec;
+use parhask::cluster::message::Message;
+use parhask::ir::task::{CostEst, OpKind, TaskId, Value};
+use parhask::ir::ProgramBuilder;
+use parhask::metrics::Table;
+use parhask::scheduler::deque::WorkDeque;
+use parhask::tensor::Tensor;
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // one warmup batch, then timed
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new("substrate micro-benchmarks", &["benchmark", "per-op", "throughput"]);
+
+    // --- codec --------------------------------------------------------------
+    let msg = Message::TaskDone {
+        task: TaskId(7),
+        outputs: vec![Value::tensor(Tensor::uniform(vec![256, 256], 1))],
+        compute_ns: 12345,
+    };
+    let encoded = codec::encode(&msg);
+    let sz = encoded.len() as f64;
+    let enc_ns = bench(200, || {
+        std::hint::black_box(codec::encode(&msg));
+    });
+    t.row(vec![
+        "codec encode 256x256 tensor msg".into(),
+        format!("{:.1} us", enc_ns / 1e3),
+        format!("{:.2} GB/s", sz / enc_ns),
+    ]);
+    let dec_ns = bench(200, || {
+        std::hint::black_box(codec::decode(&encoded).unwrap());
+    });
+    t.row(vec![
+        "codec decode 256x256 tensor msg".into(),
+        format!("{:.1} us", dec_ns / 1e3),
+        format!("{:.2} GB/s", sz / dec_ns),
+    ]);
+
+    // --- deque ---------------------------------------------------------------
+    let d = WorkDeque::<u32>::with_capacity(1024);
+    let pp_ns = bench(1000, || {
+        for i in 0..64u32 {
+            d.push(i);
+        }
+        while d.pop().is_some() {}
+    }) / 128.0;
+    t.row(vec![
+        "deque push+pop (owner)".into(),
+        format!("{:.1} ns", pp_ns),
+        format!("{:.0} Mops/s", 1e3 / pp_ns),
+    ]);
+    for i in 0..512u32 {
+        d.push(i);
+    }
+    let steal_ns = bench(512, || {
+        let _ = std::hint::black_box(d.steal());
+    });
+    t.row(vec![
+        "deque steal (uncontended)".into(),
+        format!("{:.1} ns", steal_ns),
+        format!("{:.0} Mops/s", 1e3 / steal_ns),
+    ]);
+
+    // --- json manifest --------------------------------------------------------
+    let dir = parhask::runtime::default_artifact_dir();
+    if let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) {
+        let parse_ns = bench(100, || {
+            std::hint::black_box(parhask::util::json::Json::parse(&text).unwrap());
+        });
+        t.row(vec![
+            format!("manifest.json parse ({} B)", text.len()),
+            format!("{:.1} us", parse_ns / 1e3),
+            format!("{:.0} MB/s", text.len() as f64 / parse_ns * 1e3),
+        ]);
+    }
+
+    // --- PJRT execute latency ---------------------------------------------------
+    match parhask::runtime::RuntimeService::start_default() {
+        Ok(svc) => {
+            let h = svc.handle();
+            for name in ["matmul_64", "matmul_256", "matsum_256", "matgen_256"] {
+                h.precompile(name)?;
+                let entry = h.manifest().require(name)?.clone();
+                let args: Vec<Tensor> = entry
+                    .inputs
+                    .iter()
+                    .map(|d| match d.dtype {
+                        parhask::tensor::DType::F32 => Tensor::uniform(d.shape.clone(), 3),
+                        parhask::tensor::DType::I32 => {
+                            let n: usize = d.shape.iter().product();
+                            Tensor::i32(d.shape.clone(), vec![1; n]).unwrap()
+                        }
+                    })
+                    .collect();
+                let ns = bench(20, || {
+                    std::hint::black_box(h.execute(name, args.clone()).unwrap());
+                });
+                let gflops = entry.flops as f64 / ns;
+                t.row(vec![
+                    format!("PJRT execute {name}"),
+                    format!("{:.1} us", ns / 1e3),
+                    format!("{gflops:.2} GFLOP/s"),
+                ]);
+            }
+        }
+        Err(e) => {
+            t.row(vec![format!("PJRT skipped: {e}"), "-".into(), "-".into()]);
+        }
+    }
+
+    // --- leader overhead per task -------------------------------------------------
+    {
+        use parhask::cluster::{run_cluster_inproc, ClusterConfig};
+        use parhask::tasks::SyntheticExecutor;
+        let n_tasks = 200usize;
+        let mut b = ProgramBuilder::new();
+        for i in 0..n_tasks {
+            b.push(
+                OpKind::Synthetic { compute_us: 0 },
+                vec![],
+                1,
+                CostEst { flops: 1, bytes_in: 0, bytes_out: 1 },
+                format!("t{i}"),
+            );
+        }
+        let p = b.build().unwrap();
+        let mut best = f64::MAX;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            let r = run_cluster_inproc(
+                &p,
+                Arc::new(SyntheticExecutor),
+                2,
+                ClusterConfig::default(),
+                None,
+            )?;
+            let dt = t0.elapsed().as_nanos() as f64;
+            assert_eq!(r.trace.events.len(), n_tasks);
+            best = best.min(dt / n_tasks as f64);
+        }
+        t.row(vec![
+            "cluster round-trip / empty task".into(),
+            format!("{:.1} us", best / 1e3),
+            format!("{:.0} tasks/s", 1e9 / best),
+        ]);
+    }
+
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! The paper's two Figure-2 baselines: single-thread execution and the
+//! shared-memory SMP pool (re-exported from [`crate::scheduler::local`]).
+
+pub mod single;
+
+pub use crate::scheduler::local::run_smp;
+pub use single::run_single;

@@ -1,0 +1,127 @@
+//! Single-thread baseline: execute the task program in topological (id)
+//! order on the calling thread. This is the paper's "single-thread"
+//! reference line in Figure 2 and the semantic oracle for every parallel
+//! engine (same outputs, by purity).
+
+use anyhow::{Context, Result};
+
+use crate::ir::task::{ArgRef, Value};
+use crate::ir::TaskProgram;
+use crate::scheduler::trace::{RunResult, ScheduleTrace, TraceEvent};
+use crate::scheduler::WorkerId;
+use crate::tasks::Executor;
+
+/// Execute sequentially; task ids are already a topological order
+/// (validated at program construction).
+pub fn run_single(program: &TaskProgram, executor: &dyn Executor) -> Result<RunResult> {
+    let mut values: Vec<Option<Vec<Value>>> = vec![None; program.len()];
+    let mut trace = ScheduleTrace::default();
+    let t0 = crate::util::now_ns();
+    for spec in program.tasks() {
+        let mut args = Vec::with_capacity(spec.args.len());
+        for a in &spec.args {
+            match a {
+                ArgRef::Const(v) => args.push(v.clone()),
+                ArgRef::Output { task, index } => {
+                    let outs = values[task.index()]
+                        .as_ref()
+                        .expect("topological order violated");
+                    args.push(outs[*index].clone());
+                }
+            }
+        }
+        let start = crate::util::now_ns();
+        let outs = executor
+            .execute(&spec.op, &args)
+            .with_context(|| format!("executing {} ({})", spec.id, spec.op.label()))?;
+        let end = crate::util::now_ns();
+        anyhow::ensure!(
+            outs.len() >= spec.n_outputs,
+            "{} produced {} outputs, expected {}",
+            spec.id,
+            outs.len(),
+            spec.n_outputs
+        );
+        trace.push(TraceEvent {
+            task: spec.id,
+            worker: WorkerId(0),
+            start_ns: start,
+            end_ns: end,
+        });
+        values[spec.id.index()] = Some(outs);
+    }
+    trace.wall_ns = crate::util::now_ns() - t0;
+    let outputs = program
+        .outputs()
+        .iter()
+        .map(|o| match o {
+            ArgRef::Const(v) => Ok(v.clone()),
+            ArgRef::Output { task, index } => Ok(values[task.index()]
+                .as_ref()
+                .context("output task never ran")?[*index]
+                .clone()),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(RunResult { outputs, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{CostEst, OpKind};
+    use crate::ir::ProgramBuilder;
+    use crate::tasks::HostExecutor;
+
+    #[test]
+    fn matches_direct_computation_and_validates() {
+        let mut b = ProgramBuilder::new();
+        let g1 = b.push(
+            OpKind::HostMatGen { n: 16 },
+            vec![ArgRef::const_i32(3)],
+            1,
+            CostEst::ZERO,
+            "a",
+        );
+        let g2 = b.push(
+            OpKind::HostMatGen { n: 16 },
+            vec![ArgRef::const_i32(4)],
+            1,
+            CostEst::ZERO,
+            "b",
+        );
+        let mm = b.push(
+            OpKind::HostMatMul,
+            vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+            1,
+            CostEst::ZERO,
+            "c",
+        );
+        b.mark_output(ArgRef::out(mm, 0));
+        let p = b.build().unwrap();
+        let r = run_single(&p, &HostExecutor).unwrap();
+        r.trace.validate(&p).unwrap();
+        let want = crate::tensor::Tensor::uniform(vec![16, 16], 3)
+            .matmul(&crate::tensor::Tensor::uniform(vec![16, 16], 4))
+            .unwrap();
+        assert!(r.outputs[0].as_tensor().unwrap().allclose(&want, 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn single_worker_trace_is_serial() {
+        let mut b = ProgramBuilder::new();
+        for i in 0..5 {
+            b.push(
+                OpKind::Synthetic { compute_us: 10 },
+                vec![],
+                1,
+                CostEst::ZERO,
+                format!("t{i}"),
+            );
+        }
+        let p = b.build().unwrap();
+        let r = run_single(&p, &crate::tasks::SyntheticExecutor).unwrap();
+        r.trace.validate(&p).unwrap();
+        assert_eq!(r.trace.n_workers(), 1);
+        assert!(r.trace.utilization() > 0.5);
+    }
+}

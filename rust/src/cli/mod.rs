@@ -1,0 +1,119 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Shape: `parhask <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut args = Args {
+            subcommand,
+            ..Default::default()
+        };
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), Some(v.to_string()));
+                } else {
+                    // value-flag if the next token isn't a flag
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        args.flags.insert(name.to_string(), it.next());
+                    } else {
+                        args.flags.insert(name.to_string(), None);
+                    }
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.as_deref())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// All `--key value` pairs (for RunConfig overrides).
+    pub fn pairs(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.flags
+            .iter()
+            .filter_map(|(k, v)| v.as_deref().map(|v| (k.as_str(), v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("run prog.hs extra");
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.positional, vec!["prog.hs", "extra"]);
+    }
+
+    #[test]
+    fn flags_with_and_without_values() {
+        let a = parse("bench --engine sim:4 --verbose --size=256");
+        assert_eq!(a.get("engine"), Some("sim:4"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("size"), Some("256"));
+        assert_eq!(a.get_usize("size", 0).unwrap(), 256);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn boolean_flag_before_positional_eats_nothing() {
+        // documented limitation: `--flag positional` treats positional as
+        // the flag's value; use `--flag=true` style when mixing. Check the
+        // trailing-flag case works:
+        let a = parse("run file.hs --trace");
+        assert!(a.flag("trace"));
+        assert_eq!(a.positional, vec!["file.hs"]);
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+}

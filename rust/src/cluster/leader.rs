@@ -1,0 +1,459 @@
+//! The leader (coordinator): the paper's scheduler made operational.
+//!
+//! Single-threaded event loop over per-worker reader threads:
+//!
+//! * **pump** — greedily assign ready tasks to alive workers with spare
+//!   pipeline capacity (placement policy decides *which* worker);
+//! * **steal** — when a worker idles and nothing is ready, revoke a queued
+//!   task from a victim (steal policy decides *whom*) and reroute it;
+//! * **recover** — a disconnected worker's in-flight tasks are requeued and
+//!   re-executed elsewhere; purity (checked at lowering) makes this safe,
+//!   which is precisely the paper's fault-tolerance argument.
+//!
+//! The leader owns the object store: task outputs return with `TaskDone`
+//! and argument values ship inline — unless the target worker already
+//! holds them, in which case a `Cached` reference saves the transfer
+//! (what locality-aware placement is for).
+
+use std::collections::HashSet;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::task::{ArgRef, TaskId, Value};
+use crate::ir::TaskProgram;
+use crate::scheduler::trace::{RunResult, ScheduleTrace, TraceEvent};
+use crate::scheduler::{GreedyState, PlacementPolicy, StealPolicy, WorkerId};
+use crate::util::rng::Rng;
+use crate::{log_debug, log_info, log_warn};
+
+use super::message::{ArgSpec, Message};
+use super::transport::{MsgReceiver, MsgSender};
+
+/// Cluster run configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub placement: PlacementPolicy,
+    pub steal: StealPolicy,
+    /// Max tasks in flight (queued + running) per worker.
+    pub pipeline_depth: usize,
+    /// Event-loop timeout; also the liveness probe interval.
+    pub heartbeat: Duration,
+    /// How many worker deaths to tolerate before giving up.
+    pub max_failures: usize,
+    /// Ship `Cached` references for args the target worker already holds.
+    pub use_cached_args: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            placement: PlacementPolicy::LeastLoaded,
+            steal: StealPolicy::RandomVictim,
+            pipeline_depth: 2,
+            heartbeat: Duration::from_millis(200),
+            max_failures: 0,
+            use_cached_args: true,
+        }
+    }
+}
+
+enum Event {
+    Msg(WorkerId, Message),
+    Disconnected(WorkerId),
+}
+
+/// The leader endpoint. Owns the senders; receivers run on reader threads.
+pub struct Leader {
+    program: TaskProgram,
+    cfg: ClusterConfig,
+    senders: Vec<Box<dyn MsgSender>>,
+    events: mpsc::Receiver<Event>,
+    _readers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Leader {
+    /// Build a leader over already-connected transports (one per worker).
+    pub fn new(
+        program: TaskProgram,
+        links: Vec<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)>,
+        cfg: ClusterConfig,
+    ) -> Leader {
+        let (ev_tx, events) = mpsc::channel();
+        let mut senders = Vec::new();
+        let mut readers = Vec::new();
+        for (i, (tx, mut rx)) in links.into_iter().enumerate() {
+            let w = WorkerId(i as u32);
+            senders.push(tx);
+            let ev_tx = ev_tx.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("leader-rx-{w}"))
+                    .spawn(move || loop {
+                        match rx.recv() {
+                            Ok(m) => {
+                                if ev_tx.send(Event::Msg(w, m)).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(_) => {
+                                let _ = ev_tx.send(Event::Disconnected(w));
+                                return;
+                            }
+                        }
+                    })
+                    .expect("spawn reader"),
+            );
+        }
+        Leader {
+            program,
+            cfg,
+            senders,
+            events,
+            _readers: readers,
+        }
+    }
+
+    /// Drive the program to completion; returns outputs + trace.
+    pub fn run(mut self) -> Result<RunResult> {
+        let n_workers = self.senders.len();
+        anyhow::ensure!(n_workers > 0, "cluster needs at least one worker");
+        let program = self.program.clone();
+        let mut state = GreedyState::new(&program, n_workers, self.cfg.placement);
+        let mut values: Vec<Option<Vec<Value>>> = vec![None; program.len()];
+        let mut inflight: Vec<Vec<TaskId>> = vec![Vec::new(); n_workers];
+        let mut alive = vec![true; n_workers];
+        let mut revoking: HashSet<TaskId> = HashSet::new();
+        // task -> thief that requested the steal (assigned there on Revoked)
+        let mut pending_steals: std::collections::HashMap<TaskId, WorkerId> =
+            std::collections::HashMap::new();
+        // dispatch timestamps: trace starts are clamped to these so the
+        // reconstructed schedule respects the causal order the leader saw
+        let mut assigned_at: std::collections::HashMap<TaskId, u64> =
+            std::collections::HashMap::new();
+        // per-worker last trace end: TaskDones arrive in execution order
+        // (FIFO transport), so clamping start to this preserves the
+        // worker's serial execution in the reconstructed trace
+        let mut last_end = vec![0u64; n_workers];
+        let mut trace = ScheduleTrace::default();
+        let mut failures = 0usize;
+        let mut rng = Rng::new(0x5EED);
+        let mut bytes_in = 0u64; // worker->leader payload estimate
+        let t0 = crate::util::now_ns();
+
+        // Wait for Hellos (workers announce themselves) — but in-proc
+        // workers start instantly; just process them as normal events.
+
+        self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+
+        while !state.is_done() {
+            // try stealing for idle workers
+            self.try_steal(&mut state, &inflight, &alive, &mut revoking, &mut pending_steals, &mut rng)?;
+
+            let ev = match self.events.recv_timeout(self.cfg.heartbeat) {
+                Ok(ev) => ev,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // liveness probe
+                    for (w, s) in self.senders.iter_mut().enumerate() {
+                        if alive[w] {
+                            let _ = s.send(&Message::Ping);
+                        }
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    bail!("all reader threads gone")
+                }
+            };
+
+            match ev {
+                Event::Msg(w, Message::Hello { .. }) => {
+                    log_debug!("leader", "{w} connected");
+                }
+                Event::Msg(w, Message::TaskDone { task, outputs, compute_ns }) => {
+                    bytes_in += outputs.iter().map(|v| v.size_bytes() as u64).sum::<u64>();
+                    let end = crate::util::now_ns();
+                    let assign_t = assigned_at.get(&task).copied().unwrap_or(0);
+                    let start = end
+                        .saturating_sub(compute_ns)
+                        .max(assign_t)
+                        .max(last_end[w.index()]);
+                    let end = end.max(start);
+                    last_end[w.index()] = end;
+                    trace.push(TraceEvent {
+                        task,
+                        worker: w,
+                        start_ns: start,
+                        end_ns: end,
+                    });
+                    inflight[w.index()].retain(|t| *t != task);
+                    if values[task.index()].is_none() {
+                        values[task.index()] = Some(outputs);
+                        state.on_done(&program, task, w);
+                    } else {
+                        // duplicate completion (e.g. post-revoke race) — ignore
+                        log_debug!("leader", "duplicate completion of {task} from {w}");
+                    }
+                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+                }
+                Event::Msg(w, Message::TaskFailed { task, error }) => {
+                    bail!("task {task} failed on {w}: {error}");
+                }
+                Event::Msg(w, Message::Revoked { task }) => {
+                    revoking.remove(&task);
+                    inflight[w.index()].retain(|t| *t != task);
+                    state.unassign(&program, task, w);
+                    log_debug!("leader", "stole {task} back from {w}");
+                    // hand the stolen task straight to the thief that asked
+                    // (placement would otherwise bounce it back to the busy
+                    // victim under locality-aware policy)
+                    let thief = pending_steals.remove(&task);
+                    if let Some(thief) = thief.filter(|t| {
+                        alive[t.index()] && inflight[t.index()].len() < self.cfg.pipeline_depth
+                    }) {
+                        if let Some(t2) = state.assign_to(&program, thief) {
+                            let args = self.build_args(&program, &state, &values, t2, thief)?;
+                            match self.senders[thief.index()].send(&Message::Assign {
+                                task: t2,
+                                op: program.task(t2).op.clone(),
+                                args,
+                            }) {
+                                Ok(()) => {
+                                    inflight[thief.index()].push(t2);
+                                    assigned_at.insert(t2, crate::util::now_ns());
+                                    log_debug!("leader", "steal-assigned {t2} -> {thief}");
+                                }
+                                Err(_) => state.unassign(&program, t2, thief),
+                            }
+                        }
+                    }
+                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+                }
+                Event::Msg(_, Message::RevokeDenied { task }) => {
+                    revoking.remove(&task);
+                    pending_steals.remove(&task);
+                }
+                Event::Msg(_, Message::Pong) => {}
+                Event::Msg(w, Message::Bye { .. }) => {
+                    log_debug!("leader", "{w} said bye");
+                }
+                Event::Msg(w, other) => {
+                    log_warn!("leader", "unexpected {} from {w}", other.kind());
+                }
+                Event::Disconnected(w) => {
+                    if !alive[w.index()] {
+                        continue;
+                    }
+                    alive[w.index()] = false;
+                    failures += 1;
+                    let lost: Vec<TaskId> = std::mem::take(&mut inflight[w.index()]);
+                    for t in &lost {
+                        revoking.remove(t);
+                        pending_steals.remove(t);
+                    }
+                    log_info!(
+                        "leader",
+                        "{w} died with {} task(s) in flight; requeueing (failure {failures}/{})",
+                        lost.len(),
+                        self.cfg.max_failures
+                    );
+                    if failures > self.cfg.max_failures {
+                        bail!(
+                            "worker {w} died ({} in flight) and failure budget ({}) is exhausted",
+                            lost.len(),
+                            self.cfg.max_failures
+                        );
+                    }
+                    if !alive.iter().any(|a| *a) {
+                        bail!("all workers dead");
+                    }
+                    state.requeue(&program, &lost, w);
+                    state.mark_dead(w);
+                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+                }
+            }
+        }
+
+        // graceful shutdown
+        for (w, s) in self.senders.iter_mut().enumerate() {
+            if alive[w] {
+                let _ = s.send(&Message::Shutdown);
+            }
+        }
+        // brief drain of Byes so workers exit cleanly
+        while self.events.recv_timeout(Duration::from_millis(50)).is_ok() {}
+
+        trace.wall_ns = crate::util::now_ns() - t0;
+        trace.bytes_transferred =
+            self.senders.iter().map(|s| s.bytes_sent()).sum::<u64>() + bytes_in;
+
+        let outputs = program
+            .outputs()
+            .iter()
+            .map(|o| match o {
+                ArgRef::Const(v) => Ok(v.clone()),
+                ArgRef::Output { task, index } => Ok(values[task.index()]
+                    .as_ref()
+                    .with_context(|| format!("output task {task} never completed"))?[*index]
+                    .clone()),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunResult { outputs, trace })
+    }
+
+    /// Assign ready tasks while capacity remains.
+    ///
+    /// A failed send means the worker is dying: the task is requeued and
+    /// the worker excluded for the rest of this pump; the authoritative
+    /// death accounting happens when its `Disconnected` event arrives.
+    fn pump(
+        &mut self,
+        program: &TaskProgram,
+        state: &mut GreedyState,
+        values: &mut [Option<Vec<Value>>],
+        inflight: &mut [Vec<TaskId>],
+        alive: &[bool],
+        assigned_at: &mut std::collections::HashMap<TaskId, u64>,
+    ) -> Result<()> {
+        let mut skip: HashSet<usize> = HashSet::new();
+        loop {
+            let usable = |w: usize, skip: &HashSet<usize>, inflight: &[Vec<TaskId>]| {
+                alive[w] && !skip.contains(&w) && inflight[w].len() < self.cfg.pipeline_depth
+            };
+            let has_capacity = (0..self.senders.len()).any(|w| usable(w, &skip, inflight));
+            if !has_capacity || state.n_ready() == 0 {
+                return Ok(());
+            }
+            let Some((task, w)) = state.assign_next(program) else {
+                return Ok(());
+            };
+            let (task, w) = if usable(w.index(), &skip, inflight) {
+                (task, w)
+            } else {
+                // policy picked a bad target; reroute to most-idle usable worker
+                state.unassign(program, task, w);
+                let Some(w2) = (0..self.senders.len())
+                    .filter(|i| usable(*i, &skip, inflight))
+                    .min_by_key(|i| inflight[*i].len())
+                else {
+                    return Ok(());
+                };
+                let w2 = WorkerId(w2 as u32);
+                // pop the (new) top of the heap and pin it to w2
+                let Some(t2) = state.assign_to(program, w2) else {
+                    return Ok(());
+                };
+                (t2, w2)
+            };
+            let args = self.build_args(program, state, values, task, w)?;
+            match self.senders[w.index()].send(&Message::Assign {
+                task,
+                op: program.task(task).op.clone(),
+                args,
+            }) {
+                Ok(()) => {
+                    inflight[w.index()].push(task);
+                    assigned_at.insert(task, crate::util::now_ns());
+                    log_debug!("leader", "assigned {task} -> {w}");
+                }
+                Err(e) => {
+                    log_info!("leader", "send to {w} failed ({e:#}); requeueing {task}");
+                    state.unassign(program, task, w);
+                    skip.insert(w.index());
+                }
+            }
+        }
+    }
+
+    fn build_args(
+        &self,
+        program: &TaskProgram,
+        state: &GreedyState,
+        values: &[Option<Vec<Value>>],
+        task: TaskId,
+        target: WorkerId,
+    ) -> Result<Vec<ArgSpec>> {
+        program
+            .task(task)
+            .args
+            .iter()
+            .map(|a| match a {
+                ArgRef::Const(v) => Ok(ArgSpec::Inline(v.clone())),
+                ArgRef::Output { task: d, index } => {
+                    if self.cfg.use_cached_args && state.location(*d) == Some(target) {
+                        Ok(ArgSpec::Cached {
+                            task: *d,
+                            index: *index,
+                        })
+                    } else {
+                        let v = values[d.index()]
+                            .as_ref()
+                            .with_context(|| format!("{task} needs unfinished {d}"))?[*index]
+                            .clone();
+                        Ok(ArgSpec::Inline(v))
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Leader-mediated work stealing: idle worker + empty ready queue →
+    /// revoke a queued task from a victim.
+    fn try_steal(
+        &mut self,
+        state: &mut GreedyState,
+        inflight: &[Vec<TaskId>],
+        alive: &[bool],
+        revoking: &mut HashSet<TaskId>,
+        pending_steals: &mut std::collections::HashMap<TaskId, WorkerId>,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        if self.cfg.steal == StealPolicy::None || state.n_ready() > 0 || state.is_done() {
+            return Ok(());
+        }
+        if !revoking.is_empty() {
+            return Ok(()); // one steal in flight at a time — no storms
+        }
+        let idle_exists = (0..self.senders.len()).any(|w| alive[w] && inflight[w].is_empty());
+        if !idle_exists {
+            return Ok(());
+        }
+        // victims: workers with >1 in flight (≥1 queued beyond the running one)
+        let depths: Vec<usize> = inflight
+            .iter()
+            .enumerate()
+            .map(|(w, q)| {
+                if alive[w] && q.len() > 1 {
+                    q.len()
+                } else {
+                    0
+                }
+            })
+            .collect();
+        // thief is the first idle worker
+        let thief = WorkerId(
+            (0..self.senders.len())
+                .find(|w| alive[*w] && inflight[*w].is_empty())
+                .unwrap() as u32,
+        );
+        let Some(victim) = self.cfg.steal.pick_victim(thief, &depths, rng) else {
+            return Ok(());
+        };
+        // steal the most recently queued (last) task not already revoking
+        let Some(&task) = inflight[victim.index()]
+            .iter()
+            .rev()
+            .find(|t| !revoking.contains(t))
+        else {
+            return Ok(());
+        };
+        revoking.insert(task);
+        pending_steals.insert(task, thief);
+        log_debug!("leader", "revoking {task} from {victim} for {thief}");
+        self.senders[victim.index()]
+            .send(&Message::Revoke { task })
+            .with_context(|| format!("revoking {task} from {victim}"))?;
+        Ok(())
+    }
+}

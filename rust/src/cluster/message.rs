@@ -1,0 +1,68 @@
+//! Leader ↔ worker protocol.
+
+use crate::ir::task::{OpKind, TaskId, Value};
+use crate::scheduler::WorkerId;
+
+/// A task argument as shipped to a worker: inline value, or a reference to
+/// an output the worker already holds in its cache (locality win — no
+/// bytes on the wire).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgSpec {
+    Inline(Value),
+    Cached { task: TaskId, index: usize },
+}
+
+/// Wire messages. Leader→worker and worker→leader share one enum (the
+/// codec is symmetric; direction is enforced by the state machines).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    // -- worker -> leader ---------------------------------------------------
+    /// First message on connect.
+    Hello { worker: WorkerId },
+    /// Task finished; outputs travel back to the leader's object store.
+    TaskDone {
+        task: TaskId,
+        outputs: Vec<Value>,
+        compute_ns: u64,
+    },
+    /// Task raised an error (deterministic failure — not a crash).
+    TaskFailed { task: TaskId, error: String },
+    /// Response to `Revoke`: the task had not started and is returned.
+    Revoked { task: TaskId },
+    /// Response to `Revoke` when the task already started (or finished).
+    RevokeDenied { task: TaskId },
+    Pong,
+    /// Graceful shutdown acknowledgement.
+    Bye { worker: WorkerId },
+
+    // -- leader -> worker ---------------------------------------------------
+    /// Run a task. Args are inline values or cache references.
+    Assign {
+        task: TaskId,
+        op: OpKind,
+        args: Vec<ArgSpec>,
+    },
+    /// Take back a queued (not yet started) task for rebalancing.
+    Revoke { task: TaskId },
+    Ping,
+    Shutdown,
+}
+
+impl Message {
+    /// Short name for logs/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "hello",
+            Message::TaskDone { .. } => "task_done",
+            Message::TaskFailed { .. } => "task_failed",
+            Message::Revoked { .. } => "revoked",
+            Message::RevokeDenied { .. } => "revoke_denied",
+            Message::Pong => "pong",
+            Message::Bye { .. } => "bye",
+            Message::Assign { .. } => "assign",
+            Message::Revoke { .. } => "revoke",
+            Message::Ping => "ping",
+            Message::Shutdown => "shutdown",
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Distributed substrate — the Cloud Haskell analog.
+//!
+//! The paper prototyped on Cloud Haskell with *simulated* workers
+//! (message-passing processes on one box). This module is that substrate,
+//! built from scratch:
+//!
+//! * [`message`] — the leader↔worker protocol;
+//! * [`codec`] — binary wire format (every message is serialized even on
+//!   the in-proc transport, so communication cost is real in both modes);
+//! * [`transport`] — in-proc channels and TCP, behind one trait pair;
+//! * [`worker`] — worker loop: receive, execute, reply (+ fault injection);
+//! * [`leader`] — the coordinator: greedy dispatch, pipelined assignment,
+//!   leader-mediated work stealing, failure detection and re-execution;
+//! * [`node`] — assembly helpers (in-proc cluster, TCP serve/connect).
+
+pub mod codec;
+pub mod leader;
+pub mod message;
+pub mod node;
+pub mod transport;
+pub mod worker;
+
+pub use leader::{ClusterConfig, Leader};
+pub use message::{ArgSpec, Message};
+pub use node::{run_cluster_inproc, run_cluster_tcp, serve_worker};
+pub use worker::{FaultPlan, Worker};

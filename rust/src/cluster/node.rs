@@ -1,0 +1,327 @@
+//! Cluster assembly: in-proc clusters (the paper's simulated-workers mode)
+//! and real TCP clusters (`parhask worker` processes).
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::ir::TaskProgram;
+use crate::scheduler::trace::RunResult;
+use crate::scheduler::WorkerId;
+use crate::tasks::Executor;
+use crate::log_info;
+
+use super::leader::{ClusterConfig, Leader};
+use super::transport::{inproc_pair, tcp_split, MsgReceiver, MsgSender};
+use super::worker::{FaultPlan, Worker};
+
+/// Run `program` on an in-process cluster of `n_workers` worker threads
+/// exchanging fully-serialized messages — the paper's Cloud-Haskell-style
+/// "simulated distributed" setup.
+///
+/// `faults[i]` (if provided) injects failures into worker `i`.
+pub fn run_cluster_inproc(
+    program: &TaskProgram,
+    executor: Arc<dyn Executor>,
+    n_workers: usize,
+    cfg: ClusterConfig,
+    faults: Option<Vec<FaultPlan>>,
+) -> Result<RunResult> {
+    anyhow::ensure!(n_workers >= 1, "need at least one worker");
+    let mut links: Vec<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)> = Vec::new();
+    let mut worker_handles = Vec::new();
+    for i in 0..n_workers {
+        let ((l_tx, l_rx), (w_tx, w_rx)) = inproc_pair();
+        links.push((Box::new(l_tx), Box::new(l_rx)));
+        let ex = Arc::clone(&executor);
+        let fault = faults
+            .as_ref()
+            .and_then(|f| f.get(i).copied())
+            .unwrap_or_default();
+        worker_handles.push(
+            std::thread::Builder::new()
+                .name(format!("worker-{i}"))
+                .spawn(move || {
+                    let w = Worker::new(WorkerId(i as u32), w_tx, w_rx, ex).with_fault(fault);
+                    if let Err(e) = w.run() {
+                        crate::log_warn!("worker", "w{i} error: {e:#}");
+                    }
+                })
+                .context("spawning worker thread")?,
+        );
+    }
+    let leader = Leader::new(program.clone(), links, cfg);
+    let result = leader.run();
+    for h in worker_handles {
+        let _ = h.join();
+    }
+    result
+}
+
+/// Serve one worker over TCP: connect to the leader at `leader_addr`,
+/// announce with `id`, execute until shutdown. This is the body of the
+/// `parhask worker` subcommand.
+pub fn serve_worker(
+    leader_addr: &str,
+    id: WorkerId,
+    executor: Arc<dyn Executor>,
+    fault: FaultPlan,
+) -> Result<()> {
+    let stream = TcpStream::connect(leader_addr)
+        .with_context(|| format!("connecting to leader at {leader_addr}"))?;
+    let (tx, rx) = tcp_split(stream)?;
+    log_info!("worker", "{id} connected to {leader_addr}");
+    Worker::new(id, tx, rx, executor).with_fault(fault).run()
+}
+
+/// Run a TCP cluster: listen on `bind`, wait for `n_workers` connections,
+/// then drive the program. Workers are external processes
+/// (`parhask worker --leader <addr>`).
+pub fn run_cluster_tcp<A: ToSocketAddrs>(
+    program: &TaskProgram,
+    bind: A,
+    n_workers: usize,
+    cfg: ClusterConfig,
+) -> Result<RunResult> {
+    let listener = TcpListener::bind(bind).context("binding leader socket")?;
+    log_info!(
+        "leader",
+        "listening on {} for {n_workers} workers",
+        listener.local_addr()?
+    );
+    let mut links: Vec<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)> = Vec::new();
+    for _ in 0..n_workers {
+        let (stream, peer) = listener.accept().context("accepting worker")?;
+        log_info!("leader", "worker connected from {peer}");
+        let (tx, rx) = tcp_split(stream)?;
+        links.push((Box::new(tx), Box::new(rx)));
+    }
+    Leader::new(program.clone(), links, cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{ArgRef, CombineKind, CostEst, OpKind};
+    use crate::ir::ProgramBuilder;
+    use crate::tasks::{HostExecutor, SyntheticExecutor};
+
+    fn matrix_program(rounds: usize, n: usize) -> TaskProgram {
+        let mut b = ProgramBuilder::new();
+        let mut sums = Vec::new();
+        for r in 0..rounds {
+            let g1 = b.push(
+                OpKind::HostMatGen { n },
+                vec![ArgRef::const_i32(2 * r as i32)],
+                1,
+                CostEst { flops: 8 * (n * n) as u64, bytes_in: 4, bytes_out: (4 * n * n) as u64 },
+                format!("a{r}"),
+            );
+            let g2 = b.push(
+                OpKind::HostMatGen { n },
+                vec![ArgRef::const_i32(2 * r as i32 + 1)],
+                1,
+                CostEst { flops: 8 * (n * n) as u64, bytes_in: 4, bytes_out: (4 * n * n) as u64 },
+                format!("b{r}"),
+            );
+            let mm = b.push(
+                OpKind::HostMatMul,
+                vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+                1,
+                CostEst { flops: 2 * (n * n * n) as u64, bytes_in: (8 * n * n) as u64, bytes_out: (4 * n * n) as u64 },
+                format!("c{r}"),
+            );
+            let s = b.push(
+                OpKind::HostMatSum,
+                vec![ArgRef::out(mm, 0)],
+                1,
+                CostEst { flops: 2 * (n * n) as u64, bytes_in: (4 * n * n) as u64, bytes_out: 4 },
+                format!("s{r}"),
+            );
+            sums.push(ArgRef::out(s, 0));
+        }
+        let total = b.push(
+            OpKind::Combine(CombineKind::AddScalars),
+            sums,
+            1,
+            CostEst::ZERO,
+            "total",
+        );
+        b.mark_output(ArgRef::out(total, 0));
+        b.build().unwrap()
+    }
+
+    fn expected_total(rounds: usize, n: usize) -> f32 {
+        let mut acc = 0.0f64;
+        for r in 0..rounds {
+            let a = crate::tensor::Tensor::uniform(vec![n, n], 2 * r as u64);
+            let b = crate::tensor::Tensor::uniform(vec![n, n], 2 * r as u64 + 1);
+            acc += a.matmul(&b).unwrap().sumsq().unwrap() as f64;
+        }
+        acc as f32
+    }
+
+    #[test]
+    fn inproc_cluster_correct_results() {
+        let p = matrix_program(4, 16);
+        let r = run_cluster_inproc(
+            &p,
+            Arc::new(HostExecutor),
+            3,
+            ClusterConfig::default(),
+            None,
+        )
+        .unwrap();
+        r.trace.validate(&p).unwrap();
+        let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+        let want = expected_total(4, 16);
+        assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+        assert!(r.trace.bytes_transferred > 0);
+    }
+
+    #[test]
+    fn single_worker_cluster_works() {
+        let p = matrix_program(2, 8);
+        let r = run_cluster_inproc(
+            &p,
+            Arc::new(HostExecutor),
+            1,
+            ClusterConfig::default(),
+            None,
+        )
+        .unwrap();
+        r.trace.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn all_placement_policies_complete() {
+        use crate::scheduler::PlacementPolicy;
+        let p = matrix_program(3, 8);
+        for placement in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::LeastLoaded,
+            PlacementPolicy::LocalityAware,
+        ] {
+            let cfg = ClusterConfig {
+                placement,
+                ..Default::default()
+            };
+            let r =
+                run_cluster_inproc(&p, Arc::new(HostExecutor), 2, cfg, None).unwrap();
+            r.trace.validate(&p).unwrap();
+            let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+            let want = expected_total(3, 8);
+            assert!((got - want).abs() / want < 1e-4, "{placement:?}");
+        }
+    }
+
+    #[test]
+    fn worker_death_recovers_via_reexecution() {
+        let p = matrix_program(6, 8);
+        let cfg = ClusterConfig {
+            max_failures: 1,
+            heartbeat: std::time::Duration::from_millis(50),
+            ..Default::default()
+        };
+        // worker 0 dies after 2 tasks
+        let faults = vec![
+            FaultPlan {
+                die_after_tasks: Some(2),
+            },
+            FaultPlan::default(),
+            FaultPlan::default(),
+        ];
+        let r = run_cluster_inproc(&p, Arc::new(HostExecutor), 3, cfg, Some(faults)).unwrap();
+        let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+        let want = expected_total(6, 8);
+        assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+        // note: trace may contain a duplicate event for a task that
+        // completed just as its worker died; validate() is for exact runs.
+    }
+
+    #[test]
+    fn failure_budget_exhaustion_errors() {
+        let p = matrix_program(6, 8);
+        let cfg = ClusterConfig {
+            max_failures: 0,
+            heartbeat: std::time::Duration::from_millis(50),
+            ..Default::default()
+        };
+        let faults = vec![
+            FaultPlan {
+                die_after_tasks: Some(1),
+            },
+            FaultPlan::default(),
+        ];
+        let err =
+            run_cluster_inproc(&p, Arc::new(HostExecutor), 2, cfg, Some(faults)).unwrap_err();
+        assert!(format!("{err:#}").contains("failure budget"), "{err:#}");
+    }
+
+    #[test]
+    fn synthetic_imbalanced_load_with_stealing() {
+        use crate::scheduler::StealPolicy;
+        // 1 huge + many small tasks; stealing should still complete fast
+        let mut b = ProgramBuilder::new();
+        for i in 0..12 {
+            let us = if i == 0 { 20_000 } else { 500 };
+            b.push(
+                OpKind::Synthetic { compute_us: us },
+                vec![],
+                1,
+                CostEst { flops: us, bytes_in: 0, bytes_out: 0 },
+                format!("t{i}"),
+            );
+        }
+        let p = b.build().unwrap();
+        for steal in [StealPolicy::None, StealPolicy::RandomVictim, StealPolicy::RichestVictim] {
+            let cfg = ClusterConfig {
+                steal,
+                pipeline_depth: 6,
+                ..Default::default()
+            };
+            let r = run_cluster_inproc(&p, Arc::new(SyntheticExecutor), 2, cfg, None).unwrap();
+            r.trace.validate(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn tcp_cluster_end_to_end() {
+        let p = matrix_program(3, 8);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener); // free the port; race is fine for a test
+        let addr_s = addr.to_string();
+
+        let worker_threads: Vec<_> = (0..2)
+            .map(|i| {
+                let addr_s = addr_s.clone();
+                std::thread::spawn(move || {
+                    // retry until leader listens
+                    for _ in 0..100 {
+                        match serve_worker(
+                            &addr_s,
+                            WorkerId(i),
+                            Arc::new(HostExecutor),
+                            FaultPlan::default(),
+                        ) {
+                            Ok(()) => return,
+                            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+                        }
+                    }
+                    panic!("worker never connected");
+                })
+            })
+            .collect();
+
+        let r = run_cluster_tcp(&p, addr, 2, ClusterConfig::default()).unwrap();
+        r.trace.validate(&p).unwrap();
+        let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+        let want = expected_total(3, 8);
+        assert!((got - want).abs() / want < 1e-4);
+        for t in worker_threads {
+            t.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Transports: moving serialized messages between leader and workers.
+//!
+//! Two implementations behind one trait pair:
+//!
+//! * **in-proc** — mpsc channels carrying `Vec<u8>`. Messages are *fully
+//!   serialized* even in-process, so codec cost is identical to the wire —
+//!   this is the "workers simulated on one box" mode the paper used;
+//! * **TCP** — length-prefixed frames over `std::net::TcpStream` for real
+//!   multi-process clusters (`parhask worker`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::codec;
+use super::message::Message;
+
+/// Sending half.
+pub trait MsgSender: Send {
+    fn send(&mut self, msg: &Message) -> Result<()>;
+    /// Bytes pushed so far (for transfer accounting).
+    fn bytes_sent(&self) -> u64;
+}
+
+/// Receiving half. `recv` blocks; `recv_timeout` returns `Ok(None)` on
+/// timeout. A broken peer yields `Err` from either.
+pub trait MsgReceiver: Send {
+    fn recv(&mut self) -> Result<Message>;
+    fn recv_timeout(&mut self, d: Duration) -> Result<Option<Message>>;
+}
+
+// ---------------------------------------------------------------------------
+// In-proc
+// ---------------------------------------------------------------------------
+
+pub struct ChanSender {
+    tx: mpsc::Sender<Vec<u8>>,
+    sent: u64,
+}
+
+pub struct ChanReceiver {
+    rx: mpsc::Receiver<Vec<u8>>,
+}
+
+/// A bidirectional in-proc link: returns (endpoint A, endpoint B), each a
+/// (sender, receiver) pair.
+pub fn inproc_pair() -> ((ChanSender, ChanReceiver), (ChanSender, ChanReceiver)) {
+    let (a2b_tx, a2b_rx) = mpsc::channel();
+    let (b2a_tx, b2a_rx) = mpsc::channel();
+    (
+        (
+            ChanSender { tx: a2b_tx, sent: 0 },
+            ChanReceiver { rx: b2a_rx },
+        ),
+        (
+            ChanSender { tx: b2a_tx, sent: 0 },
+            ChanReceiver { rx: a2b_rx },
+        ),
+    )
+}
+
+impl MsgSender for ChanSender {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let bytes = codec::encode(msg);
+        self.sent += bytes.len() as u64;
+        self.tx
+            .send(bytes)
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+}
+
+impl MsgReceiver for ChanReceiver {
+    fn recv(&mut self) -> Result<Message> {
+        let bytes = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))?;
+        codec::decode(&bytes)
+    }
+
+    fn recv_timeout(&mut self, d: Duration) -> Result<Option<Message>> {
+        match self.rx.recv_timeout(d) {
+            Ok(bytes) => Ok(Some(codec::decode(&bytes)?)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => bail!("peer disconnected"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+pub struct TcpSender {
+    stream: TcpStream,
+    sent: u64,
+}
+
+pub struct TcpReceiver {
+    stream: TcpStream,
+    /// Partial frame accumulated across timed-out reads — a timeout
+    /// mid-frame must not lose bytes (stream desync), so reads resume here.
+    pending: Vec<u8>,
+}
+
+/// Split a connected stream into sender/receiver halves.
+pub fn tcp_split(stream: TcpStream) -> Result<(TcpSender, TcpReceiver)> {
+    stream.set_nodelay(true).ok();
+    let s2 = stream.try_clone().context("cloning tcp stream")?;
+    Ok((
+        TcpSender { stream, sent: 0 },
+        TcpReceiver {
+            stream: s2,
+            pending: Vec::new(),
+        },
+    ))
+}
+
+impl MsgSender for TcpSender {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let bytes = codec::encode(msg);
+        let len = (bytes.len() as u32).to_le_bytes();
+        self.stream.write_all(&len).context("tcp write len")?;
+        self.stream.write_all(&bytes).context("tcp write body")?;
+        self.sent += (bytes.len() + 4) as u64;
+        Ok(())
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+}
+
+impl TcpReceiver {
+    /// Grow `pending` to at least `target` bytes. Returns false on a read
+    /// timeout (progress so far is kept), errors on disconnect.
+    fn fill(&mut self, target: usize) -> Result<bool> {
+        let mut chunk = [0u8; 16 * 1024];
+        while self.pending.len() < target {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => bail!("peer closed the connection"),
+                Ok(n) => self.pending.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(false);
+                }
+                Err(e) => return Err(e).context("tcp read"),
+            }
+        }
+        Ok(true)
+    }
+
+    /// Try to complete one frame; `Ok(None)` = timed out mid-frame (state
+    /// kept for the next call).
+    fn try_frame(&mut self) -> Result<Option<Message>> {
+        if !self.fill(4)? {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.pending[..4].try_into().unwrap()) as usize;
+        if len > 1 << 30 {
+            bail!("absurd frame length {len}");
+        }
+        if !self.fill(4 + len)? {
+            return Ok(None);
+        }
+        let msg = codec::decode(&self.pending[4..4 + len])?;
+        self.pending.drain(..4 + len);
+        Ok(Some(msg))
+    }
+}
+
+impl MsgReceiver for TcpReceiver {
+    fn recv(&mut self) -> Result<Message> {
+        self.stream.set_read_timeout(None).ok();
+        loop {
+            if let Some(m) = self.try_frame()? {
+                return Ok(m);
+            }
+        }
+    }
+
+    fn recv_timeout(&mut self, d: Duration) -> Result<Option<Message>> {
+        // zero is "poll": OS sockets reject a 0 read-timeout, so use the
+        // smallest representable one
+        let d = if d.is_zero() { Duration::from_micros(1) } else { d };
+        self.stream.set_read_timeout(Some(d)).ok();
+        self.try_frame()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::TaskId;
+    use crate::scheduler::WorkerId;
+
+    #[test]
+    fn inproc_roundtrip_and_accounting() {
+        let ((mut a_tx, mut a_rx), (mut b_tx, mut b_rx)) = inproc_pair();
+        a_tx.send(&Message::Ping).unwrap();
+        assert_eq!(b_rx.recv().unwrap(), Message::Ping);
+        b_tx.send(&Message::Pong).unwrap();
+        assert_eq!(a_rx.recv().unwrap(), Message::Pong);
+        assert!(a_tx.bytes_sent() > 0);
+    }
+
+    #[test]
+    fn inproc_timeout_and_disconnect() {
+        let ((_a_tx, mut a_rx), (b_tx, _b_rx)) = inproc_pair();
+        assert!(a_rx
+            .recv_timeout(Duration::from_millis(10))
+            .unwrap()
+            .is_none());
+        drop(b_tx);
+        assert!(a_rx.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let (mut tx, mut rx) = tcp_split(stream).unwrap();
+            let m = rx.recv().unwrap();
+            assert_eq!(
+                m,
+                Message::Hello {
+                    worker: WorkerId(1)
+                }
+            );
+            tx.send(&Message::Revoke { task: TaskId(5) }).unwrap();
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let (mut tx, mut rx) = tcp_split(stream).unwrap();
+        tx.send(&Message::Hello {
+            worker: WorkerId(1),
+        })
+        .unwrap();
+        assert_eq!(rx.recv().unwrap(), Message::Revoke { task: TaskId(5) });
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_timeout_returns_none() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _keep = std::thread::spawn(move || {
+            let (_stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let (_tx, mut rx) = tcp_split(stream).unwrap();
+        let got = rx.recv_timeout(Duration::from_millis(30)).unwrap();
+        assert!(got.is_none());
+    }
+}

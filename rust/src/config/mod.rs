@@ -1,0 +1,148 @@
+//! Run configuration: engine selection + knobs, parseable from CLI args
+//! (`key=value` style) so benches and the launcher share one surface.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::scheduler::{PlacementPolicy, StealPolicy};
+
+/// Which execution engine runs the program.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Engine {
+    /// Sequential topological execution (paper baseline 1).
+    Single,
+    /// Shared-memory work-stealing pool (paper baseline 2, GHC -N).
+    Smp { threads: usize },
+    /// In-proc message-passing cluster (the paper's simulated distribution).
+    Cluster { workers: usize },
+    /// Discrete-event simulation at `workers` width.
+    Sim { workers: usize },
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Engine> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let num = |d: usize| -> Result<usize> {
+            Ok(match arg {
+                Some(a) => a.parse()?,
+                None => d,
+            })
+        };
+        Ok(match name {
+            "single" => Engine::Single,
+            "smp" => Engine::Smp { threads: num(4)? },
+            "cluster" | "dist" => Engine::Cluster { workers: num(4)? },
+            "sim" => Engine::Sim { workers: num(4)? },
+            _ => bail!("unknown engine {s:?} (single | smp:K | cluster:W | sim:W)"),
+        })
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            Engine::Single => "single".into(),
+            Engine::Smp { threads } => format!("smp:{threads}"),
+            Engine::Cluster { workers } => format!("cluster:{workers}"),
+            Engine::Sim { workers } => format!("sim:{workers}"),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub engine: Engine,
+    pub placement: PlacementPolicy,
+    pub steal: StealPolicy,
+    pub pipeline_depth: usize,
+    pub heartbeat_ms: u64,
+    pub max_failures: usize,
+    pub use_cached_args: bool,
+    /// Execute via AOT artifacts (vs host reference ops).
+    pub use_artifacts: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            engine: Engine::Cluster { workers: 4 },
+            placement: PlacementPolicy::LeastLoaded,
+            steal: StealPolicy::RandomVictim,
+            pipeline_depth: 2,
+            heartbeat_ms: 200,
+            max_failures: 0,
+            use_cached_args: true,
+            use_artifacts: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply a `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "engine" => self.engine = Engine::parse(value)?,
+            "placement" => {
+                self.placement = PlacementPolicy::parse(value)
+                    .ok_or_else(|| anyhow::anyhow!("bad placement {value:?}"))?
+            }
+            "steal" => {
+                self.steal = StealPolicy::parse(value)
+                    .ok_or_else(|| anyhow::anyhow!("bad steal policy {value:?}"))?
+            }
+            "depth" => self.pipeline_depth = value.parse()?,
+            "heartbeat_ms" => self.heartbeat_ms = value.parse()?,
+            "max_failures" => self.max_failures = value.parse()?,
+            "cached_args" => self.use_cached_args = value.parse()?,
+            "artifacts" => self.use_artifacts = value.parse()?,
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            placement: self.placement,
+            steal: self.steal,
+            pipeline_depth: self.pipeline_depth,
+            heartbeat: Duration::from_millis(self.heartbeat_ms),
+            max_failures: self.max_failures,
+            use_cached_args: self.use_cached_args,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parsing() {
+        assert_eq!(Engine::parse("single").unwrap(), Engine::Single);
+        assert_eq!(Engine::parse("smp:8").unwrap(), Engine::Smp { threads: 8 });
+        assert_eq!(
+            Engine::parse("cluster:2").unwrap(),
+            Engine::Cluster { workers: 2 }
+        );
+        assert_eq!(Engine::parse("sim:16").unwrap(), Engine::Sim { workers: 16 });
+        assert!(Engine::parse("gpu").is_err());
+        assert!(Engine::parse("smp:x").is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = RunConfig::default();
+        c.set("engine", "sim:8").unwrap();
+        c.set("placement", "locality").unwrap();
+        c.set("steal", "none").unwrap();
+        c.set("depth", "5").unwrap();
+        assert_eq!(c.engine, Engine::Sim { workers: 8 });
+        assert_eq!(c.placement, PlacementPolicy::LocalityAware);
+        assert_eq!(c.pipeline_depth, 5);
+        assert!(c.set("bogus", "1").is_err());
+    }
+}

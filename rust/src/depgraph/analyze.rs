@@ -1,0 +1,156 @@
+//! Graph analysis: work/span, width, and the parallelism bound the
+//! evaluation narrative quotes (Brent: T_p ≤ T₁/p + T_∞).
+
+use std::collections::HashMap;
+
+use super::graph::{DepGraph, NodeId};
+
+/// Analysis summary of a dependency graph under a per-node cost function.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub io_nodes: usize,
+    /// Sum of node costs (T₁).
+    pub work: f64,
+    /// Critical-path cost (T_∞).
+    pub span: f64,
+    /// work / span — the asymptotic speedup ceiling.
+    pub parallelism: f64,
+    /// Peak simultaneously-ready nodes (unit-cost wavefront).
+    pub max_width: usize,
+    /// Longest chain in *nodes* (unit-cost depth).
+    pub depth: usize,
+}
+
+/// Compute stats with `cost(node) -> f64` (seconds, flops — any unit).
+pub fn analyze(g: &DepGraph, cost: impl Fn(NodeId) -> f64) -> GraphStats {
+    let order = g.topo_order().expect("depgraph must be acyclic");
+    let mut finish: HashMap<NodeId, f64> = HashMap::new();
+    let mut depth: HashMap<NodeId, usize> = HashMap::new();
+    let mut work = 0.0;
+    for &n in &order {
+        let c = cost(n);
+        work += c;
+        let (mut best_t, mut best_d) = (0.0f64, 0usize);
+        for (_, p) in g.predecessors(n) {
+            best_t = best_t.max(finish[&p]);
+            best_d = best_d.max(depth[&p]);
+        }
+        finish.insert(n, best_t + c);
+        depth.insert(n, best_d + 1);
+    }
+    let span = finish.values().copied().fold(0.0, f64::max);
+    // wavefront width with unit costs
+    let mut indeg: Vec<usize> = (0..g.len()).map(|i| g.in_degree(NodeId(i as u32))).collect();
+    let mut ready: Vec<NodeId> = g
+        .nodes()
+        .iter()
+        .filter(|n| indeg[n.id.index()] == 0)
+        .map(|n| n.id)
+        .collect();
+    let mut max_width = 0usize;
+    while !ready.is_empty() {
+        max_width = max_width.max(ready.len());
+        let mut next = Vec::new();
+        for n in ready.drain(..) {
+            for (_, s) in g.successors(n) {
+                indeg[s.index()] -= 1;
+                if indeg[s.index()] == 0 {
+                    next.push(s);
+                }
+            }
+        }
+        ready = next;
+    }
+    GraphStats {
+        nodes: g.len(),
+        edges: g.edges().len(),
+        io_nodes: g.nodes().iter().filter(|n| n.io).count(),
+        work,
+        span,
+        parallelism: if span > 0.0 { work / span } else { 0.0 },
+        max_width,
+        depth: depth.values().copied().max().unwrap_or(0),
+    }
+}
+
+/// Brent's bound: with `p` workers, T_p ≤ work/p + span.
+pub fn brent_bound(stats: &GraphStats, p: usize) -> f64 {
+    stats.work / p as f64 + stats.span
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::{DepGraph, EdgeKind};
+    use super::*;
+
+    fn wide_graph(k: usize) -> DepGraph {
+        // source -> k parallel nodes -> sink
+        let mut g = DepGraph::new();
+        let src = g.add_node("src", Some("s"), false, "s = src");
+        let sink = {
+            let mids: Vec<NodeId> = (0..k)
+                .map(|i| {
+                    let m = g.add_node(&format!("m{i}"), Some(&format!("v{i}")), false, "mid");
+                    g.add_edge(src, m, EdgeKind::Value("s".into()));
+                    m
+                })
+                .collect();
+            let sink = g.add_node("sink", None, true, "print");
+            for m in mids {
+                g.add_edge(m, sink, EdgeKind::Value("v".into()));
+            }
+            sink
+        };
+        let _ = sink;
+        g
+    }
+
+    #[test]
+    fn wide_graph_stats() {
+        let g = wide_graph(8);
+        let s = analyze(&g, |_| 1.0);
+        assert_eq!(s.nodes, 10);
+        assert_eq!(s.work, 10.0);
+        assert_eq!(s.span, 3.0); // src -> mid -> sink
+        assert_eq!(s.max_width, 8);
+        assert_eq!(s.depth, 3);
+        assert!((s.parallelism - 10.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chain_has_unit_parallelism() {
+        let mut g = DepGraph::new();
+        let a = g.add_node("a", Some("x"), true, "a");
+        let b = g.add_node("b", Some("y"), true, "b");
+        let c = g.add_node("c", None, true, "c");
+        g.add_edge(a, b, EdgeKind::World);
+        g.add_edge(b, c, EdgeKind::World);
+        let s = analyze(&g, |_| 2.0);
+        assert_eq!(s.work, 6.0);
+        assert_eq!(s.span, 6.0);
+        assert_eq!(s.parallelism, 1.0);
+        assert_eq!(s.io_nodes, 3);
+    }
+
+    #[test]
+    fn brent_bound_shrinks_with_workers() {
+        let g = wide_graph(16);
+        let s = analyze(&g, |_| 1.0);
+        let t1 = brent_bound(&s, 1);
+        let t4 = brent_bound(&s, 4);
+        let t16 = brent_bound(&s, 16);
+        assert!(t1 > t4 && t4 > t16);
+        assert!(t16 >= s.span);
+    }
+
+    #[test]
+    fn heterogeneous_costs() {
+        let g = wide_graph(2);
+        // src costs 10, everything else 1
+        let s = analyze(&g, |n| if n.index() == 0 { 10.0 } else { 1.0 });
+        assert_eq!(s.work, 13.0);
+        assert_eq!(s.span, 12.0);
+    }
+}

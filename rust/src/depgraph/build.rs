@@ -1,0 +1,293 @@
+//! Graph construction from a checked do-block — the paper's parser step.
+//!
+//! Rules (paper §2 + Figure 1):
+//!
+//! * each statement's call becomes a node;
+//! * a use of variable `v` adds a **Value(v)** edge from `v`'s producer;
+//! * every IO call consumes the RealWorld token from the *previous* IO
+//!   call and produces it for the next — **World** edges forming a chain
+//!   (Figure 1 draws RealWorld as input and output of every IO function);
+//! * pure calls get no World edges, so they float free as soon as their
+//!   value inputs are ready — that is the entire parallelization win.
+//!
+//! Operator expressions (`y + z`) and tuples inside a statement become
+//! their own "glue" nodes so the value flow stays explicit.
+
+use crate::frontend::ast::{Expr, Stmt};
+use crate::frontend::diag::Diagnostic;
+use crate::frontend::pretty;
+use crate::types::CheckedProgram;
+
+use super::graph::{DepGraph, EdgeKind, NodeId};
+
+/// Build the dependency graph for the checked program's entry block.
+pub fn build_depgraph(checked: &CheckedProgram) -> Result<DepGraph, Diagnostic> {
+    let mut b = Builder {
+        g: DepGraph::new(),
+        producers: std::collections::HashMap::new(),
+        last_io: None,
+        checked,
+        glue_counter: 0,
+    };
+    for stmt in &checked.main_stmts {
+        b.stmt(stmt)?;
+    }
+    Ok(b.g)
+}
+
+struct Builder<'a> {
+    g: DepGraph,
+    /// variable -> node that produces it
+    producers: std::collections::HashMap<String, NodeId>,
+    /// last IO node (RealWorld token holder)
+    last_io: Option<NodeId>,
+    checked: &'a CheckedProgram,
+    glue_counter: u32,
+}
+
+impl<'a> Builder<'a> {
+    fn stmt(&mut self, stmt: &Stmt) -> Result<(), Diagnostic> {
+        let binds = stmt.bound_name();
+        let node = self.expr_node(stmt.expr(), binds, &pretty::stmt(stmt))?;
+        if let (Some(v), Some(node)) = (binds, node) {
+            self.producers.insert(v.to_string(), node);
+        }
+        Ok(())
+    }
+
+    /// Create the node for a statement-level expression. Returns the node
+    /// producing the statement's value (None only for constant lets, which
+    /// fold away).
+    fn expr_node(
+        &mut self,
+        expr: &Expr,
+        binds: Option<&str>,
+        label: &str,
+    ) -> Result<Option<NodeId>, Diagnostic> {
+        match expr {
+            // A call (possibly nullary): the canonical node kind.
+            _ if expr.as_call().is_some() => {
+                let (func, args) = expr.as_call().unwrap();
+                // A bare bound-variable reference is an alias, not a call.
+                if args.is_empty() && self.producers.contains_key(func) {
+                    let src = self.producers[func];
+                    if let Some(b) = binds {
+                        self.producers.insert(b.to_string(), src);
+                    }
+                    return Ok(Some(src));
+                }
+                let io = self.checked.purity.is_io(func);
+                let id = self.g.add_node(func, binds, io, label);
+                // value edges from argument variables (and glue for nested exprs)
+                let args = args.to_vec();
+                for a in &args {
+                    self.arg_edges(a, id)?;
+                }
+                if io {
+                    self.world_edge(id);
+                }
+                Ok(Some(id))
+            }
+            // Operator / tuple glue at statement level becomes a glue node.
+            Expr::BinOp { .. } | Expr::Tuple { .. } => {
+                self.glue_counter += 1;
+                let func = format!("expr#{}", self.glue_counter);
+                let id = self.g.add_node(&func, binds, false, label);
+                self.arg_edges(expr, id)?;
+                Ok(Some(id))
+            }
+            // Constants produce no node; they fold into consumers.
+            Expr::Int { .. } | Expr::Float { .. } | Expr::Str { .. } | Expr::Unit { .. }
+            | Expr::Con { .. } => Ok(None),
+            Expr::Var { .. } | Expr::App { .. } => unreachable!("covered by as_call"),
+        }
+    }
+
+    /// Wire value edges from every variable used in `arg` into `dst`;
+    /// nested calls inside arguments become their own nodes (pure by the
+    /// checker's no-nested-IO rule).
+    fn arg_edges(&mut self, arg: &Expr, dst: NodeId) -> Result<(), Diagnostic> {
+        match arg {
+            Expr::Var { name, .. } => {
+                if let Some(src) = self.producers.get(name).copied() {
+                    if !self.g.has_edge(src, dst) {
+                        self.g.add_edge(src, dst, EdgeKind::Value(name.clone()));
+                    }
+                }
+                // else: a global function constant — no edge.
+                Ok(())
+            }
+            Expr::App { .. } => {
+                // nested pure call: own node, then value edge to dst
+                let label = pretty::expr(arg);
+                let sub = self.expr_node(arg, None, &label)?;
+                if let Some(sub) = sub {
+                    self.g
+                        .add_edge(sub, dst, EdgeKind::Value(format!("<{label}>")));
+                }
+                Ok(())
+            }
+            Expr::BinOp { lhs, rhs, .. } => {
+                self.arg_edges(lhs, dst)?;
+                self.arg_edges(rhs, dst)
+            }
+            Expr::Tuple { items, .. } => {
+                for i in items {
+                    self.arg_edges(i, dst)?;
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn world_edge(&mut self, id: NodeId) {
+        if let Some(prev) = self.last_io {
+            self.g.add_edge(prev, id, EdgeKind::World);
+        }
+        self.last_io = Some(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_program;
+    use crate::types::check_program;
+
+    pub const NLP: &str = r#"
+data Summary = Opaque
+
+clean_files :: IO Summary
+clean_files = prim
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = prim
+
+semantic_analysis :: IO Int
+semantic_analysis = prim
+
+prim :: Int
+prim = 0
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  z <- semantic_analysis
+  print (y, z)
+"#;
+
+    fn graph(src: &str) -> DepGraph {
+        let p = parse_program(src).unwrap();
+        let c = check_program(&p, "main").unwrap();
+        build_depgraph(&c).unwrap()
+    }
+
+    /// The exact Figure 1 structure from the paper.
+    #[test]
+    fn figure1_structure() {
+        let g = graph(NLP);
+        assert_eq!(g.len(), 4);
+        let cf = g.find_by_func("clean_files").unwrap();
+        let ce = g.find_by_func("complex_evaluation").unwrap();
+        let sa = g.find_by_func("semantic_analysis").unwrap();
+        let pr = g.find_by_func("print").unwrap();
+
+        // value deps: x flows clean_files -> complex_evaluation,
+        // y and z flow into print
+        assert!(g.has_edge(cf, ce));
+        assert!(g.has_edge(ce, pr));
+        assert!(g.has_edge(sa, pr));
+
+        // RealWorld chain: clean_files -> semantic_analysis -> print
+        let world_edges: Vec<_> = g
+            .edges()
+            .iter()
+            .filter(|e| e.kind == EdgeKind::World)
+            .map(|e| (e.src, e.dst))
+            .collect();
+        assert_eq!(world_edges, vec![(cf, sa), (sa, pr)]);
+
+        // Key parallelism fact from the paper: once clean_files is done,
+        // complex_evaluation AND semantic_analysis are both schedulable.
+        assert_eq!(g.in_degree(ce), 1); // only x
+        assert_eq!(
+            g.predecessors(sa).map(|(_, s)| s).collect::<Vec<_>>(),
+            vec![cf]
+        ); // only the token
+    }
+
+    #[test]
+    fn pure_calls_have_no_world_edges() {
+        let g = graph(NLP);
+        let ce = g.find_by_func("complex_evaluation").unwrap();
+        assert!(g
+            .predecessors(ce)
+            .all(|(e, _)| matches!(e.kind, EdgeKind::Value(_))));
+        assert!(g
+            .successors(ce)
+            .all(|(e, _)| matches!(e.kind, EdgeKind::Value(_))));
+    }
+
+    #[test]
+    fn independent_pure_lets_have_no_edges_between_them() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f 1\n  let b = f 2\n  print (a, b)\n";
+        let g = graph(src);
+        let a = g.nodes().iter().find(|n| n.binds.as_deref() == Some("a")).unwrap().id;
+        let b = g.nodes().iter().find(|n| n.binds.as_deref() == Some("b")).unwrap().id;
+        assert!(!g.has_edge(a, b) && !g.has_edge(b, a));
+        assert_eq!(g.in_degree(a), 0);
+        assert_eq!(g.in_degree(b), 0);
+    }
+
+    #[test]
+    fn duplicate_value_edges_are_collapsed() {
+        let src = "f :: Int -> Int\nf x = x\ng :: Int -> Int -> Int\ng x y = x\nmain :: IO ()\nmain = do\n  let a = f 1\n  let c = g a a\n  print c\n";
+        let g = graph(src);
+        let a = g.nodes().iter().find(|n| n.binds.as_deref() == Some("a")).unwrap().id;
+        let c = g.nodes().iter().find(|n| n.binds.as_deref() == Some("c")).unwrap().id;
+        assert_eq!(
+            g.edges().iter().filter(|e| e.src == a && e.dst == c).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn nested_pure_calls_become_nodes() {
+        let src = "f :: Int -> Int\nf x = x\ng :: Int -> Int\ng x = x\nmain :: IO ()\nmain = do\n  let a = f (g 1)\n  print a\n";
+        let g = graph(src);
+        // nodes: g-call, f-call, print
+        assert_eq!(g.len(), 3);
+        let gi = g.find_by_func("g").unwrap();
+        let fi = g.find_by_func("f").unwrap();
+        assert!(g.has_edge(gi, fi));
+    }
+
+    #[test]
+    fn operator_statement_becomes_glue_node() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f 1\n  let b = f 2\n  let c = a + b\n  print c\n";
+        let g = graph(src);
+        let c = g.nodes().iter().find(|n| n.binds.as_deref() == Some("c")).unwrap();
+        assert!(c.func.starts_with("expr#"));
+        assert_eq!(g.in_degree(c.id), 2);
+    }
+
+    #[test]
+    fn alias_binding_reuses_producer() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f 1\n  let b = a\n  print b\n";
+        let g = graph(src);
+        assert_eq!(g.len(), 2); // f-call + print; alias adds no node
+    }
+
+    #[test]
+    fn io_only_program_is_a_chain() {
+        let src = "act :: IO Int\nact = act\nmain :: IO ()\nmain = do\n  a <- act\n  b <- act\n  c <- act\n  print c\n";
+        let g = graph(src);
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 4);
+        // chain => max width 1
+        let world = g.edges().iter().filter(|e| e.kind == EdgeKind::World).count();
+        assert_eq!(world, 3);
+    }
+}

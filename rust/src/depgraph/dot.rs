@@ -1,0 +1,94 @@
+//! Graphviz DOT emitter — regenerates the paper's Figure 1.
+//!
+//! IO nodes render as double octagons with the RealWorld chain dashed,
+//! pure nodes as plain boxes; value edges are labelled with the variable
+//! they carry.
+
+use super::graph::{DepGraph, EdgeKind};
+
+/// Render the graph as DOT.
+pub fn to_dot(g: &DepGraph, title: &str) -> String {
+    let mut out = String::new();
+    out.push_str("digraph depgraph {\n");
+    out.push_str(&format!("  label=\"{}\";\n", escape(title)));
+    out.push_str("  labelloc=t;\n  rankdir=TB;\n  node [fontname=\"monospace\"];\n");
+    // RealWorld source pseudo-node if any IO exists (Figure 1 draws the
+    // initial world as an input).
+    let has_io = g.nodes().iter().any(|n| n.io);
+    if has_io {
+        out.push_str("  world0 [label=\"RealWorld\", shape=plaintext];\n");
+    }
+    for n in g.nodes() {
+        let shape = if n.io { "doubleoctagon" } else { "box" };
+        let bind = n
+            .binds
+            .as_deref()
+            .map(|b| format!("{b} = "))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "  n{} [label=\"{}{}\", shape={}];\n",
+            n.id.0,
+            escape(&bind),
+            escape(&n.func),
+            shape
+        ));
+    }
+    // initial world token flows to the first IO node
+    if let Some(first_io) = g.nodes().iter().find(|n| {
+        n.io && !g
+            .predecessors(n.id)
+            .any(|(e, _)| matches!(e.kind, EdgeKind::World))
+    }) {
+        out.push_str(&format!("  world0 -> n{} [style=dashed];\n", first_io.id.0));
+    }
+    for e in g.edges() {
+        match &e.kind {
+            EdgeKind::Value(v) => out.push_str(&format!(
+                "  n{} -> n{} [label=\"{}\"];\n",
+                e.src.0,
+                e.dst.0,
+                escape(v)
+            )),
+            EdgeKind::World => out.push_str(&format!(
+                "  n{} -> n{} [style=dashed, label=\"RealWorld\"];\n",
+                e.src.0, e.dst.0
+            )),
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::{DepGraph, EdgeKind};
+    use super::*;
+
+    #[test]
+    fn dot_contains_nodes_edges_and_world() {
+        let mut g = DepGraph::new();
+        let a = g.add_node("clean_files", Some("x"), true, "x <- clean_files");
+        let b = g.add_node("complex_evaluation", Some("y"), false, "let y = ...");
+        g.add_edge(a, b, EdgeKind::Value("x".into()));
+        let dot = to_dot(&g, "fig1");
+        assert!(dot.contains("doubleoctagon"));
+        assert!(dot.contains("shape=box"));
+        assert!(dot.contains("label=\"x\""));
+        assert!(dot.contains("world0 -> n0 [style=dashed]"));
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.ends_with("}\n"));
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let mut g = DepGraph::new();
+        g.add_node("f\"oo", None, false, "quote");
+        let dot = to_dot(&g, "t\"itle");
+        assert!(dot.contains("f\\\"oo"));
+        assert!(dot.contains("t\\\"itle"));
+    }
+}

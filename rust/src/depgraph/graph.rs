@@ -1,0 +1,250 @@
+//! The dependency DAG data structure (small, purpose-built graph lib:
+//! adjacency lists, topo sort, cycle check, reachability).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Node handle.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Why an edge exists.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum EdgeKind {
+    /// A value dependency through the named variable.
+    Value(String),
+    /// The RealWorld token (IO sequencing).
+    World,
+}
+
+/// One call instance in the parallelized section.
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    pub id: NodeId,
+    /// Function being called (e.g. `clean_files`, `matmul`, `print`).
+    pub func: String,
+    /// Variable the result is bound to, if any.
+    pub binds: Option<String>,
+    /// Impure (IO) call?
+    pub io: bool,
+    /// Pretty-printed statement (for DOT labels / traces).
+    pub label: String,
+}
+
+/// Directed edge `src -> dst` meaning "dst needs src's output".
+#[derive(Clone, Debug, PartialEq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub kind: EdgeKind,
+}
+
+/// The dependency graph.
+#[derive(Clone, Debug, Default)]
+pub struct DepGraph {
+    nodes: Vec<NodeInfo>,
+    edges: Vec<Edge>,
+    succ: Vec<Vec<usize>>, // indices into edges
+    pred: Vec<Vec<usize>>,
+}
+
+impl DepGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, func: &str, binds: Option<&str>, io: bool, label: &str) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(NodeInfo {
+            id,
+            func: func.to_string(),
+            binds: binds.map(str::to_string),
+            io,
+            label: label.to_string(),
+        });
+        self.succ.push(Vec::new());
+        self.pred.push(Vec::new());
+        id
+    }
+
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, kind: EdgeKind) {
+        let ei = self.edges.len();
+        self.edges.push(Edge { src, dst, kind });
+        self.succ[src.index()].push(ei);
+        self.pred[dst.index()].push(ei);
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> &[NodeInfo] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &NodeInfo {
+        &self.nodes[id.index()]
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn successors(&self, id: NodeId) -> impl Iterator<Item = (&Edge, NodeId)> {
+        self.succ[id.index()]
+            .iter()
+            .map(move |ei| (&self.edges[*ei], self.edges[*ei].dst))
+    }
+
+    pub fn predecessors(&self, id: NodeId) -> impl Iterator<Item = (&Edge, NodeId)> {
+        self.pred[id.index()]
+            .iter()
+            .map(move |ei| (&self.edges[*ei], self.edges[*ei].src))
+    }
+
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.pred[id.index()].len()
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.succ[id.index()].len()
+    }
+
+    pub fn find_by_func(&self, func: &str) -> Option<NodeId> {
+        self.nodes.iter().find(|n| n.func == func).map(|n| n.id)
+    }
+
+    pub fn has_edge(&self, src: NodeId, dst: NodeId) -> bool {
+        self.succ[src.index()]
+            .iter()
+            .any(|ei| self.edges[*ei].dst == dst)
+    }
+
+    /// Kahn topological sort; errors on cycles (can only arise from
+    /// construction bugs — builds from checked programs are acyclic).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let mut indeg: Vec<usize> = (0..self.len()).map(|i| self.pred[i].len()).collect();
+        let mut queue: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|n| indeg[n.id.index()] == 0)
+            .map(|n| n.id)
+            .collect();
+        let mut out = Vec::with_capacity(self.len());
+        while let Some(n) = queue.pop() {
+            out.push(n);
+            for (_, s) in self.successors(n) {
+                indeg[s.index()] -= 1;
+                if indeg[s.index()] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if out.len() != self.len() {
+            bail!("dependency graph contains a cycle");
+        }
+        Ok(out)
+    }
+
+    /// All nodes reachable from `start` (inclusive).
+    pub fn reachable(&self, start: NodeId) -> Vec<NodeId> {
+        let mut seen = vec![false; self.len()];
+        let mut stack = vec![start];
+        let mut out = Vec::new();
+        while let Some(n) = stack.pop() {
+            if std::mem::replace(&mut seen[n.index()], true) {
+                continue;
+            }
+            out.push(n);
+            for (_, s) in self.successors(n) {
+                stack.push(s);
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Group nodes by producer variable: `var -> producing node`.
+    pub fn producers(&self) -> HashMap<&str, NodeId> {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.binds.as_deref().map(|v| (v, n.id)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> (DepGraph, [NodeId; 4]) {
+        let mut g = DepGraph::new();
+        let a = g.add_node("a", Some("x"), false, "x = a");
+        let l = g.add_node("l", Some("y"), false, "y = l x");
+        let r = g.add_node("r", Some("z"), false, "z = r x");
+        let j = g.add_node("j", None, true, "print (y, z)");
+        g.add_edge(a, l, EdgeKind::Value("x".into()));
+        g.add_edge(a, r, EdgeKind::Value("x".into()));
+        g.add_edge(l, j, EdgeKind::Value("y".into()));
+        g.add_edge(r, j, EdgeKind::Value("z".into()));
+        (g, [a, l, r, j])
+    }
+
+    #[test]
+    fn degrees_and_lookup() {
+        let (g, [a, l, _r, j]) = diamond();
+        assert_eq!(g.in_degree(a), 0);
+        assert_eq!(g.out_degree(a), 2);
+        assert_eq!(g.in_degree(j), 2);
+        assert!(g.has_edge(a, l));
+        assert!(!g.has_edge(l, a));
+        assert_eq!(g.find_by_func("l"), Some(l));
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let (g, _) = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = (0..4)
+            .map(|i| order.iter().position(|n| n.index() == i).unwrap())
+            .collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = DepGraph::new();
+        let a = g.add_node("a", None, false, "a");
+        let b = g.add_node("b", None, false, "b");
+        g.add_edge(a, b, EdgeKind::World);
+        g.add_edge(b, a, EdgeKind::World);
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn reachability() {
+        let (g, [a, l, r, j]) = diamond();
+        assert_eq!(g.reachable(a), vec![a, l, r, j]);
+        assert_eq!(g.reachable(l), vec![l, j]);
+    }
+
+    #[test]
+    fn producers_map() {
+        let (g, [a, ..]) = diamond();
+        let p = g.producers();
+        assert_eq!(p.get("x"), Some(&a));
+        assert!(!p.contains_key("w"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Data-dependency graph — the paper's Figure 1.
+//!
+//! From the checked do-block we build a DAG whose nodes are call instances
+//! and whose edges carry either a *value* (a bound variable) or the
+//! *RealWorld* token (threading every IO action after its predecessor).
+//! Pure calls depend only on their value inputs; IO calls additionally
+//! form a total order through the token chain.
+
+pub mod analyze;
+pub mod build;
+pub mod dot;
+pub mod graph;
+
+pub use build::build_depgraph;
+pub use graph::{DepGraph, EdgeKind, NodeId, NodeInfo};

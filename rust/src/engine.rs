@@ -1,0 +1,77 @@
+//! Engine dispatch: run one [`TaskProgram`] on whichever engine the
+//! [`RunConfig`] selects. The single entry point shared by the CLI,
+//! examples and benches.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baselines::{run_single, run_smp};
+use crate::cluster::run_cluster_inproc;
+use crate::config::{Engine, RunConfig};
+use crate::ir::TaskProgram;
+use crate::scheduler::trace::RunResult;
+use crate::simulator::{simulate, CostModel, SimConfig};
+use crate::tasks::Executor;
+
+/// Run `program` per `cfg`. For `Engine::Sim` no values are computed —
+/// outputs are empty and the trace carries simulated times (the cost
+/// model is loaded from the artifact dir when calibrated).
+pub fn run(program: &TaskProgram, cfg: &RunConfig, executor: Arc<dyn Executor>) -> Result<RunResult> {
+    match cfg.engine {
+        Engine::Single => run_single(program, executor.as_ref()),
+        Engine::Smp { threads } => run_smp(program, executor, threads),
+        Engine::Cluster { workers } => {
+            run_cluster_inproc(program, executor, workers, cfg.cluster_config(), None)
+        }
+        Engine::Sim { workers } => {
+            let cm = CostModel::load_or_default(&crate::runtime::default_artifact_dir());
+            let sim_cfg = SimConfig {
+                n_workers: workers,
+                placement: cfg.placement,
+                pipeline_depth: cfg.pipeline_depth,
+                transfer_free: false,
+            };
+            let r = simulate(program, &cm, &sim_cfg)?;
+            Ok(RunResult {
+                outputs: Vec::new(),
+                trace: r.trace,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::HostExecutor;
+    use crate::workload::matrix_program;
+
+    #[test]
+    fn all_engines_run_the_same_program() {
+        let p = matrix_program(3, 8, false, None);
+        for engine in ["single", "smp:2", "cluster:2", "sim:2"] {
+            let mut cfg = RunConfig::default();
+            cfg.set("engine", engine).unwrap();
+            let r = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+            r.trace.validate(&p).unwrap();
+            if engine != "sim:2" {
+                assert!(!r.outputs.is_empty(), "{engine}");
+            }
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_results() {
+        let p = matrix_program(2, 12, false, None);
+        let mut results = Vec::new();
+        for engine in ["single", "smp:3", "cluster:3"] {
+            let mut cfg = RunConfig::default();
+            cfg.set("engine", engine).unwrap();
+            let r = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+            results.push(r.outputs[0].as_tensor().unwrap().scalar().unwrap());
+        }
+        assert!((results[0] - results[1]).abs() < 1e-3);
+        assert!((results[0] - results[2]).abs() < 1e-3);
+    }
+}

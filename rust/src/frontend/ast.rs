@@ -1,0 +1,309 @@
+//! HaskLite abstract syntax.
+
+use super::span::Span;
+
+/// A whole module/program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub decls: Vec<Decl>,
+}
+
+impl Program {
+    pub fn type_sigs(&self) -> impl Iterator<Item = (&str, &TypeExpr)> {
+        self.decls.iter().filter_map(|d| match d {
+            Decl::TypeSig { name, ty, .. } => Some((name.as_str(), ty)),
+            _ => None,
+        })
+    }
+
+    pub fn fun_defs(&self) -> impl Iterator<Item = (&str, &[String], &Body)> {
+        self.decls.iter().filter_map(|d| match d {
+            Decl::FunDef {
+                name, params, body, ..
+            } => Some((name.as_str(), params.as_slice(), body)),
+            _ => None,
+        })
+    }
+
+    pub fn find_fun(&self, name: &str) -> Option<(&[String], &Body)> {
+        self.fun_defs()
+            .find(|(n, _, _)| *n == name)
+            .map(|(_, p, b)| (p, b))
+    }
+
+    pub fn find_sig(&self, name: &str) -> Option<&TypeExpr> {
+        self.type_sigs().find(|(n, _)| *n == name).map(|(_, t)| t)
+    }
+}
+
+/// Top-level declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decl {
+    /// `data Summary = ...` — constructors are opaque to the parallelizer.
+    DataDecl { name: String, span: Span },
+    /// `f :: T`
+    TypeSig {
+        name: String,
+        ty: TypeExpr,
+        span: Span,
+    },
+    /// `f x y = body`
+    FunDef {
+        name: String,
+        params: Vec<String>,
+        body: Body,
+        span: Span,
+    },
+}
+
+impl Decl {
+    pub fn name(&self) -> &str {
+        match self {
+            Decl::DataDecl { name, .. }
+            | Decl::TypeSig { name, .. }
+            | Decl::FunDef { name, .. } => name,
+        }
+    }
+
+    pub fn span(&self) -> Span {
+        match self {
+            Decl::DataDecl { span, .. }
+            | Decl::TypeSig { span, .. }
+            | Decl::FunDef { span, .. } => *span,
+        }
+    }
+}
+
+/// Function body: expression or do-block.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Body {
+    Expr(Expr),
+    Do(Vec<Stmt>),
+}
+
+/// A statement in a `do` block.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `x <- expr` — monadic bind (impure right-hand side).
+    Bind { name: String, expr: Expr, span: Span },
+    /// `let x = expr` — pure binding.
+    Let { name: String, expr: Expr, span: Span },
+    /// bare expression statement (e.g. `print (y, z)`).
+    Expr { expr: Expr, span: Span },
+}
+
+impl Stmt {
+    pub fn span(&self) -> Span {
+        match self {
+            Stmt::Bind { span, .. } | Stmt::Let { span, .. } | Stmt::Expr { span, .. } => *span,
+        }
+    }
+
+    pub fn bound_name(&self) -> Option<&str> {
+        match self {
+            Stmt::Bind { name, .. } | Stmt::Let { name, .. } => Some(name),
+            Stmt::Expr { .. } => None,
+        }
+    }
+
+    pub fn expr(&self) -> &Expr {
+        match self {
+            Stmt::Bind { expr, .. } | Stmt::Let { expr, .. } | Stmt::Expr { expr, .. } => expr,
+        }
+    }
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Variable or function reference (lowercase).
+    Var { name: String, span: Span },
+    /// Data constructor reference (uppercase) — opaque value.
+    Con { name: String, span: Span },
+    Int { value: i64, span: Span },
+    Float { value: f64, span: Span },
+    Str { value: String, span: Span },
+    /// Unit literal `()`.
+    Unit { span: Span },
+    /// Application `f a b` (head + ≥1 args).
+    App {
+        func: Box<Expr>,
+        args: Vec<Expr>,
+        span: Span,
+    },
+    /// Binary operator `a + b`.
+    BinOp {
+        op: String,
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+        span: Span,
+    },
+    /// Tuple `(a, b, ...)`.
+    Tuple { items: Vec<Expr>, span: Span },
+}
+
+impl Expr {
+    pub fn span(&self) -> Span {
+        match self {
+            Expr::Var { span, .. }
+            | Expr::Con { span, .. }
+            | Expr::Int { span, .. }
+            | Expr::Float { span, .. }
+            | Expr::Str { span, .. }
+            | Expr::Unit { span }
+            | Expr::App { span, .. }
+            | Expr::BinOp { span, .. }
+            | Expr::Tuple { span, .. } => *span,
+        }
+    }
+
+    /// All variable names referenced (free-variable approximation: HaskLite
+    /// expressions have no binders).
+    pub fn vars(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        self.collect_vars(&mut out);
+        out
+    }
+
+    fn collect_vars<'a>(&'a self, out: &mut Vec<&'a str>) {
+        match self {
+            Expr::Var { name, .. } => out.push(name),
+            Expr::App { func, args, .. } => {
+                func.collect_vars(out);
+                for a in args {
+                    a.collect_vars(out);
+                }
+            }
+            Expr::BinOp { lhs, rhs, .. } => {
+                lhs.collect_vars(out);
+                rhs.collect_vars(out);
+            }
+            Expr::Tuple { items, .. } => {
+                for i in items {
+                    i.collect_vars(out);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// If this is a call `f a₁ … aₙ` (or a bare var = nullary call),
+    /// return the head name and args.
+    pub fn as_call(&self) -> Option<(&str, &[Expr])> {
+        match self {
+            Expr::Var { name, .. } => Some((name, &[])),
+            Expr::App { func, args, .. } => match func.as_ref() {
+                Expr::Var { name, .. } => Some((name, args)),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+}
+
+/// Type expressions from signatures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TypeExpr {
+    /// Type constructor possibly applied: `Int`, `IO Summary`, `Maybe a`.
+    Con { name: String, args: Vec<TypeExpr> },
+    /// Type variable (lowercase).
+    Var(String),
+    /// Function arrow (right-assoc).
+    Arrow(Box<TypeExpr>, Box<TypeExpr>),
+    /// Tuple type.
+    Tuple(Vec<TypeExpr>),
+    /// `()`
+    Unit,
+}
+
+impl TypeExpr {
+    /// Result type after consuming all arrows.
+    pub fn result(&self) -> &TypeExpr {
+        match self {
+            TypeExpr::Arrow(_, r) => r.result(),
+            t => t,
+        }
+    }
+
+    /// Argument types, left to right.
+    pub fn params(&self) -> Vec<&TypeExpr> {
+        let mut out = Vec::new();
+        let mut cur = self;
+        while let TypeExpr::Arrow(a, r) = cur {
+            out.push(a.as_ref());
+            cur = r;
+        }
+        out
+    }
+
+    /// The paper's purity rule: impure ⇔ the *result* type is `IO t`.
+    pub fn is_io(&self) -> bool {
+        matches!(self.result(), TypeExpr::Con { name, .. } if name == "IO")
+    }
+
+    pub fn arity(&self) -> usize {
+        self.params().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn con(name: &str) -> TypeExpr {
+        TypeExpr::Con {
+            name: name.into(),
+            args: vec![],
+        }
+    }
+
+    #[test]
+    fn purity_from_result_type() {
+        // Summary -> Int : pure
+        let t = TypeExpr::Arrow(Box::new(con("Summary")), Box::new(con("Int")));
+        assert!(!t.is_io());
+        assert_eq!(t.arity(), 1);
+
+        // IO Summary : impure
+        let t = TypeExpr::Con {
+            name: "IO".into(),
+            args: vec![con("Summary")],
+        };
+        assert!(t.is_io());
+        assert_eq!(t.arity(), 0);
+
+        // Int -> IO () : impure with one param
+        let io_unit = TypeExpr::Con {
+            name: "IO".into(),
+            args: vec![TypeExpr::Unit],
+        };
+        let t = TypeExpr::Arrow(Box::new(con("Int")), Box::new(io_unit));
+        assert!(t.is_io());
+        assert_eq!(t.arity(), 1);
+    }
+
+    #[test]
+    fn expr_vars_and_calls() {
+        let e = Expr::App {
+            func: Box::new(Expr::Var {
+                name: "f".into(),
+                span: Span::DUMMY,
+            }),
+            args: vec![
+                Expr::Var {
+                    name: "x".into(),
+                    span: Span::DUMMY,
+                },
+                Expr::Int {
+                    value: 3,
+                    span: Span::DUMMY,
+                },
+            ],
+            span: Span::DUMMY,
+        };
+        assert_eq!(e.vars(), vec!["f", "x"]);
+        let (head, args) = e.as_call().unwrap();
+        assert_eq!(head, "f");
+        assert_eq!(args.len(), 2);
+    }
+}

@@ -1,0 +1,67 @@
+//! Diagnostics: errors with source spans, rendered with a caret line.
+
+use super::span::Span;
+
+/// A frontend error (lex, parse, type, or lowering) tied to a span.
+#[derive(Clone, Debug, thiserror::Error)]
+#[error("{msg} at {span}")]
+pub struct Diagnostic {
+    pub msg: String,
+    pub span: Span,
+}
+
+impl Diagnostic {
+    pub fn new(msg: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic {
+            msg: msg.into(),
+            span,
+        }
+    }
+
+    /// Render with the offending source line and a caret.
+    ///
+    /// ```text
+    /// error: unexpected `)` at 3:12
+    ///   |
+    /// 3 |   let y = f x)
+    ///   |            ^
+    /// ```
+    pub fn render(&self, source: &str) -> String {
+        let mut out = format!("error: {} at {}\n", self.msg, self.span);
+        if self.span.line == 0 {
+            return out;
+        }
+        if let Some(line) = source.lines().nth(self.span.line as usize - 1) {
+            let ln = self.span.line;
+            let pad = ln.to_string().len();
+            out.push_str(&format!("{:pad$} |\n", "", pad = pad));
+            out.push_str(&format!("{ln} | {line}\n"));
+            let caret_col = (self.span.col as usize).saturating_sub(1);
+            out.push_str(&format!(
+                "{:pad$} | {:caret$}^\n",
+                "",
+                "",
+                pad = pad,
+                caret = caret_col
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_points_at_column() {
+        let src = "main = do\n  x <- f )\n";
+        let d = Diagnostic::new("unexpected `)`", Span::new(18, 19, 2, 10));
+        let r = d.render(src);
+        assert!(r.contains("2 |   x <- f )"), "{r}");
+        // caret under column 10
+        let caret_line = r.lines().last().unwrap();
+        // prefix is "  | " (pad=1 + " | " = 4 chars), then col-1 spaces
+        assert_eq!(caret_line.find('^'), Some(4 + 9));
+    }
+}

@@ -1,0 +1,337 @@
+//! HaskLite lexer.
+//!
+//! Newlines are significant (they delimit statements and declarations)
+//! *except* inside parens/brackets, where logical lines continue — so
+//! multi-line tuples parse naturally. `--` comments run to end of line;
+//! `{- -}` block comments nest, as in Haskell.
+
+use super::diag::Diagnostic;
+use super::span::Span;
+use super::token::{Tok, Token};
+
+pub fn lex(src: &str) -> Result<Vec<Token>, Diagnostic> {
+    Lexer {
+        b: src.as_bytes(),
+        pos: 0,
+        line: 1,
+        col: 1,
+        depth: 0,
+        out: Vec::new(),
+    }
+    .run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+    /// Paren/bracket nesting depth — newlines inside are insignificant.
+    depth: u32,
+    out: Vec<Token>,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.b.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn here(&self) -> Span {
+        Span::new(self.pos, self.pos + 1, self.line, self.col)
+    }
+
+    fn push(&mut self, tok: Tok, start: (usize, u32, u32)) {
+        let (s, l, c) = start;
+        self.out.push(Token {
+            tok,
+            span: Span::new(s, self.pos, l, c),
+        });
+    }
+
+    fn err(&self, msg: impl Into<String>) -> Diagnostic {
+        Diagnostic::new(msg, self.here())
+    }
+
+    fn run(mut self) -> Result<Vec<Token>, Diagnostic> {
+        while let Some(c) = self.peek() {
+            let start = (self.pos, self.line, self.col);
+            match c {
+                b' ' | b'\t' | b'\r' => {
+                    self.bump();
+                }
+                b'\n' => {
+                    self.bump();
+                    if self.depth == 0 {
+                        // Collapse runs of newlines into one token.
+                        if !matches!(self.out.last().map(|t| &t.tok), Some(Tok::Newline) | None) {
+                            self.push(Tok::Newline, start);
+                        }
+                    }
+                }
+                b'-' if self.peek2() == Some(b'-') => {
+                    while self.peek().is_some_and(|c| c != b'\n') {
+                        self.bump();
+                    }
+                }
+                b'{' if self.peek2() == Some(b'-') => self.block_comment()?,
+                b'(' => {
+                    self.bump();
+                    self.depth += 1;
+                    self.push(Tok::LParen, start);
+                }
+                b')' => {
+                    self.bump();
+                    if self.depth == 0 {
+                        return Err(Diagnostic::new("unbalanced `)`", Span::new(start.0, start.0 + 1, start.1, start.2)));
+                    }
+                    self.depth -= 1;
+                    self.push(Tok::RParen, start);
+                }
+                b'[' => {
+                    self.bump();
+                    self.depth += 1;
+                    self.push(Tok::LBracket, start);
+                }
+                b']' => {
+                    self.bump();
+                    self.depth = self.depth.saturating_sub(1);
+                    self.push(Tok::RBracket, start);
+                }
+                b',' => {
+                    self.bump();
+                    self.push(Tok::Comma, start);
+                }
+                b';' => {
+                    self.bump();
+                    self.push(Tok::Semi, start);
+                }
+                b'"' => self.string(start)?,
+                b'0'..=b'9' => self.number(start)?,
+                b'_' | b'a'..=b'z' => self.ident(start, false),
+                b'A'..=b'Z' => self.ident(start, true),
+                _ => self.operator(start)?,
+            }
+        }
+        let start = (self.pos, self.line, self.col);
+        if !matches!(self.out.last().map(|t| &t.tok), Some(Tok::Newline) | None) {
+            self.push(Tok::Newline, start);
+        }
+        self.push(Tok::Eof, start);
+        Ok(self.out)
+    }
+
+    fn block_comment(&mut self) -> Result<(), Diagnostic> {
+        self.bump();
+        self.bump(); // consume {-
+        let mut depth = 1u32;
+        while depth > 0 {
+            match (self.peek(), self.peek2()) {
+                (Some(b'{'), Some(b'-')) => {
+                    self.bump();
+                    self.bump();
+                    depth += 1;
+                }
+                (Some(b'-'), Some(b'}')) => {
+                    self.bump();
+                    self.bump();
+                    depth -= 1;
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => return Err(self.err("unterminated block comment")),
+            }
+        }
+        Ok(())
+    }
+
+    fn string(&mut self, start: (usize, u32, u32)) -> Result<(), Diagnostic> {
+        self.bump(); // opening quote
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None | Some(b'\n') => return Err(self.err("unterminated string literal")),
+                Some(b'"') => break,
+                Some(b'\\') => match self.bump() {
+                    Some(b'n') => s.push('\n'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    _ => return Err(self.err("bad string escape")),
+                },
+                Some(c) => s.push(c as char),
+            }
+        }
+        self.push(Tok::Str(s), start);
+        Ok(())
+    }
+
+    fn number(&mut self, start: (usize, u32, u32)) -> Result<(), Diagnostic> {
+        let s0 = self.pos;
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.bump();
+        }
+        let is_float = self.peek() == Some(b'.') && self.peek2().is_some_and(|c| c.is_ascii_digit());
+        if is_float {
+            self.bump();
+            while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+                self.bump();
+            }
+        }
+        let text = std::str::from_utf8(&self.b[s0..self.pos]).unwrap();
+        if is_float {
+            let v: f64 = text.parse().map_err(|_| self.err("bad float literal"))?;
+            self.push(Tok::Float(v), start);
+        } else {
+            let v: i64 = text.parse().map_err(|_| self.err("integer literal overflows i64"))?;
+            self.push(Tok::Int(v), start);
+        }
+        Ok(())
+    }
+
+    fn ident(&mut self, start: (usize, u32, u32), upper: bool) {
+        let s0 = self.pos;
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_alphanumeric() || c == b'_' || c == b'\'')
+        {
+            self.bump();
+        }
+        let text = std::str::from_utf8(&self.b[s0..self.pos]).unwrap().to_string();
+        let tok = match text.as_str() {
+            "data" => Tok::Data,
+            "do" => Tok::Do,
+            "let" => Tok::Let,
+            "where" => Tok::Where,
+            _ if upper => Tok::Upper(text),
+            _ => Tok::Lower(text),
+        };
+        self.push(tok, start);
+    }
+
+    fn operator(&mut self, start: (usize, u32, u32)) -> Result<(), Diagnostic> {
+        const OPCHARS: &[u8] = b"+-*/<>=:|.&$!%^~?";
+        let s0 = self.pos;
+        while self.peek().is_some_and(|c| OPCHARS.contains(&c)) {
+            self.bump();
+        }
+        if self.pos == s0 {
+            return Err(self.err(format!(
+                "unexpected character {:?}",
+                self.peek().map(|c| c as char).unwrap_or('?')
+            )));
+        }
+        let text = std::str::from_utf8(&self.b[s0..self.pos]).unwrap();
+        let tok = match text {
+            "::" => Tok::DColon,
+            "<-" => Tok::LArrow,
+            "->" => Tok::RArrow,
+            "=" => Tok::Equals,
+            "|" => Tok::Pipe,
+            op => Tok::Op(op.to_string()),
+        };
+        self.push(tok, start);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_signature() {
+        let toks = kinds("complex_evaluation :: Summary -> Int");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Lower("complex_evaluation".into()),
+                Tok::DColon,
+                Tok::Upper("Summary".into()),
+                Tok::RArrow,
+                Tok::Upper("Int".into()),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_do_block_tokens() {
+        let toks = kinds("main = do\n  x <- f\n  let y = g x\n");
+        assert!(toks.contains(&Tok::Do));
+        assert!(toks.contains(&Tok::LArrow));
+        assert!(toks.contains(&Tok::Let));
+        assert_eq!(toks.iter().filter(|t| **t == Tok::Newline).count(), 3);
+    }
+
+    #[test]
+    fn newlines_inside_parens_are_insignificant() {
+        let toks = kinds("x = (1,\n 2)");
+        assert_eq!(toks.iter().filter(|t| **t == Tok::Newline).count(), 1);
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let toks = kinds("x = 1 -- comment\n{- block {- nested -} -}y = 2");
+        assert!(toks.contains(&Tok::Lower("y".into())));
+        assert!(!toks.iter().any(|t| matches!(t, Tok::Str(_))));
+    }
+
+    #[test]
+    fn spans_track_lines_and_cols() {
+        let toks = lex("main = do\n  x <- f\n").unwrap();
+        let x = toks
+            .iter()
+            .find(|t| t.tok == Tok::Lower("x".into()))
+            .unwrap();
+        assert_eq!((x.span.line, x.span.col), (2, 3));
+    }
+
+    #[test]
+    fn numeric_literals() {
+        assert_eq!(
+            kinds("x = 42 3.5")[2..4],
+            [Tok::Int(42), Tok::Float(3.5)]
+        );
+    }
+
+    #[test]
+    fn string_literals_with_escapes() {
+        assert_eq!(
+            kinds(r#"x = "a\nb""#)[2],
+            Tok::Str("a\nb".into())
+        );
+        assert!(lex("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn unbalanced_paren_is_error() {
+        assert!(lex("x = )").is_err());
+    }
+
+    #[test]
+    fn primes_in_identifiers() {
+        assert_eq!(kinds("x' = f'")[0], Tok::Lower("x'".into()));
+    }
+}

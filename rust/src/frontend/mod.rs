@@ -1,0 +1,35 @@
+//! Frontend: lexer + parser for **HaskLite**, the Haskell subset the
+//! paper's "shallow parser" consumes (§2).
+//!
+//! Supported surface:
+//!
+//! ```haskell
+//! data Summary = Opaque            -- data decls are opaque markers
+//! clean_files :: IO Summary       -- type signatures drive purity
+//! complex_evaluation :: Summary -> Int
+//! main :: IO ()
+//! main = do
+//!   x <- clean_files              -- monadic bind
+//!   let y = complex_evaluation x  -- pure let
+//!   z <- semantic_analysis
+//!   print (y, z)                  -- effect expression
+//! ```
+//!
+//! Layout rule (simplified, documented): declarations start at column 1;
+//! every line indented deeper belongs to the enclosing `do` block; one
+//! statement per line. This covers the paper's §2 programs and everything
+//! the examples/benches generate.
+
+pub mod ast;
+pub mod diag;
+pub mod inline;
+pub mod lexer;
+pub mod parser;
+pub mod pretty;
+pub mod span;
+pub mod token;
+
+pub use ast::{Body, Decl, Expr, Program, Stmt, TypeExpr};
+pub use diag::Diagnostic;
+pub use inline::inline_stmts;
+pub use parser::parse_program;

@@ -1,0 +1,561 @@
+//! Recursive-descent parser for HaskLite.
+//!
+//! Grammar (one statement per logical line; `do` blocks extend while lines
+//! are indented deeper than column 1):
+//!
+//! ```text
+//! program  := { decl NEWLINE }
+//! decl     := 'data' Upper '=' <rest of line>
+//!           | lower '::' type
+//!           | lower { lower } '=' ('do' NEWLINE { stmt NEWLINE } | expr)
+//! type     := btype [ '->' type ]
+//! btype    := atype { atype }                 -- constructor application
+//! atype    := Upper | lower | '(' ')' | '(' type { ',' type } ')' | '[' type ']'
+//! stmt     := lower '<-' expr | 'let' lower '=' expr | expr
+//! expr     := app { binop app }               -- left-assoc, no precedence
+//!                                             -- tower (documented)
+//! app      := atom { atom }
+//! atom     := lower | Upper | INT | FLOAT | STRING
+//!           | '(' ')' | '(' expr { ',' expr } ')'
+//! ```
+
+use super::ast::*;
+use super::diag::Diagnostic;
+use super::lexer::lex;
+use super::span::Span;
+use super::token::{Tok, Token};
+
+/// Parse a full HaskLite program.
+pub fn parse_program(src: &str) -> Result<Program, Diagnostic> {
+    let tokens = lex(src)?;
+    let mut p = Parser { tokens, pos: 0 };
+    p.program()
+}
+
+/// Parse a type expression alone (used by tests and the registry tooling).
+pub fn parse_type(src: &str) -> Result<TypeExpr, Diagnostic> {
+    let tokens = lex(src)?;
+    let mut p = Parser { tokens, pos: 0 };
+    let t = p.ty()?;
+    p.skip_newlines();
+    p.expect_eof()?;
+    Ok(t)
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.tokens[self.pos].tok
+    }
+
+    fn peek_span(&self) -> Span {
+        self.tokens[self.pos].span
+    }
+
+    fn peek2(&self) -> &Tok {
+        self.tokens
+            .get(self.pos + 1)
+            .map(|t| &t.tok)
+            .unwrap_or(&Tok::Eof)
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.tokens[self.pos].clone();
+        if self.pos + 1 < self.tokens.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: impl Into<String>) -> Diagnostic {
+        Diagnostic::new(msg, self.peek_span())
+    }
+
+    fn expect(&mut self, tok: &Tok) -> Result<Token, Diagnostic> {
+        if self.peek() == tok {
+            Ok(self.bump())
+        } else {
+            Err(self.err(format!(
+                "expected {}, found {}",
+                tok.describe(),
+                self.peek().describe()
+            )))
+        }
+    }
+
+    fn expect_eof(&self) -> Result<(), Diagnostic> {
+        if matches!(self.peek(), Tok::Eof) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected end of input, found {}", self.peek().describe())))
+        }
+    }
+
+    fn skip_newlines(&mut self) {
+        while matches!(self.peek(), Tok::Newline) {
+            self.bump();
+        }
+    }
+
+    fn lower_name(&mut self) -> Result<(String, Span), Diagnostic> {
+        match self.peek().clone() {
+            Tok::Lower(name) => {
+                let sp = self.peek_span();
+                self.bump();
+                Ok((name, sp))
+            }
+            other => Err(self.err(format!("expected a lowercase name, found {}", other.describe()))),
+        }
+    }
+
+    // -- declarations --------------------------------------------------------
+
+    fn program(&mut self) -> Result<Program, Diagnostic> {
+        let mut decls = Vec::new();
+        self.skip_newlines();
+        while !matches!(self.peek(), Tok::Eof) {
+            decls.push(self.decl()?);
+            self.skip_newlines();
+        }
+        Ok(Program { decls })
+    }
+
+    fn decl(&mut self) -> Result<Decl, Diagnostic> {
+        match self.peek() {
+            Tok::Data => self.data_decl(),
+            Tok::Lower(_) => {
+                if matches!(self.peek2(), Tok::DColon) {
+                    self.type_sig()
+                } else {
+                    self.fun_def()
+                }
+            }
+            other => Err(self.err(format!(
+                "expected a declaration, found {}",
+                other.describe()
+            ))),
+        }
+    }
+
+    fn data_decl(&mut self) -> Result<Decl, Diagnostic> {
+        let start = self.peek_span();
+        self.expect(&Tok::Data)?;
+        let name = match self.peek().clone() {
+            Tok::Upper(n) => {
+                self.bump();
+                n
+            }
+            other => {
+                return Err(self.err(format!(
+                    "expected a type name after `data`, found {}",
+                    other.describe()
+                )))
+            }
+        };
+        // constructors are opaque: consume to end of line
+        let mut end = start;
+        while !matches!(self.peek(), Tok::Newline | Tok::Eof) {
+            end = self.peek_span();
+            self.bump();
+        }
+        Ok(Decl::DataDecl {
+            name,
+            span: start.to(end),
+        })
+    }
+
+    fn type_sig(&mut self) -> Result<Decl, Diagnostic> {
+        let (name, start) = self.lower_name()?;
+        self.expect(&Tok::DColon)?;
+        let ty = self.ty()?;
+        let end = self.peek_span();
+        Ok(Decl::TypeSig {
+            name,
+            ty,
+            span: start.to(end),
+        })
+    }
+
+    fn fun_def(&mut self) -> Result<Decl, Diagnostic> {
+        let (name, start) = self.peek_decl_column_guard()?;
+        let mut params = Vec::new();
+        while let Tok::Lower(p) = self.peek().clone() {
+            params.push(p);
+            self.bump();
+        }
+        self.expect(&Tok::Equals)?;
+        let body = if matches!(self.peek(), Tok::Do) {
+            self.bump();
+            self.expect(&Tok::Newline)?;
+            Body::Do(self.do_block()?)
+        } else {
+            Body::Expr(self.expr()?)
+        };
+        let end = self.peek_span();
+        Ok(Decl::FunDef {
+            name,
+            params,
+            body,
+            span: start.to(end),
+        })
+    }
+
+    /// Function name of a definition; enforces the layout rule that
+    /// declarations start at column 1.
+    fn peek_decl_column_guard(&mut self) -> Result<(String, Span), Diagnostic> {
+        let sp = self.peek_span();
+        if sp.col != 1 {
+            return Err(self.err(
+                "declarations must start at column 1 (HaskLite layout rule)",
+            ));
+        }
+        self.lower_name()
+    }
+
+    fn do_block(&mut self) -> Result<Vec<Stmt>, Diagnostic> {
+        let mut stmts = Vec::new();
+        loop {
+            self.skip_newlines();
+            if matches!(self.peek(), Tok::Eof) {
+                break;
+            }
+            // Block ends when a line returns to column 1 (next declaration).
+            if self.peek_span().col == 1 {
+                break;
+            }
+            stmts.push(self.stmt()?);
+            if !matches!(self.peek(), Tok::Eof) {
+                self.expect(&Tok::Newline)?;
+            }
+        }
+        if stmts.is_empty() {
+            return Err(self.err("empty `do` block"));
+        }
+        Ok(stmts)
+    }
+
+    // -- statements ----------------------------------------------------------
+
+    fn stmt(&mut self) -> Result<Stmt, Diagnostic> {
+        let start = self.peek_span();
+        match self.peek() {
+            Tok::Let => {
+                self.bump();
+                let (name, _) = self.lower_name()?;
+                self.expect(&Tok::Equals)?;
+                let expr = self.expr()?;
+                let span = start.to(expr.span());
+                Ok(Stmt::Let { name, expr, span })
+            }
+            Tok::Lower(_) if matches!(self.peek2(), Tok::LArrow) => {
+                let (name, _) = self.lower_name()?;
+                self.expect(&Tok::LArrow)?;
+                let expr = self.expr()?;
+                let span = start.to(expr.span());
+                Ok(Stmt::Bind { name, expr, span })
+            }
+            _ => {
+                let expr = self.expr()?;
+                let span = start.to(expr.span());
+                Ok(Stmt::Expr { expr, span })
+            }
+        }
+    }
+
+    // -- expressions ---------------------------------------------------------
+
+    fn expr(&mut self) -> Result<Expr, Diagnostic> {
+        let mut lhs = self.app()?;
+        while let Tok::Op(op) = self.peek().clone() {
+            self.bump();
+            let rhs = self.app()?;
+            let span = lhs.span().to(rhs.span());
+            lhs = Expr::BinOp {
+                op,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+                span,
+            };
+        }
+        Ok(lhs)
+    }
+
+    fn app(&mut self) -> Result<Expr, Diagnostic> {
+        let head = self.atom()?;
+        let mut args = Vec::new();
+        while self.starts_atom() {
+            args.push(self.atom()?);
+        }
+        if args.is_empty() {
+            Ok(head)
+        } else {
+            let span = head.span().to(args.last().unwrap().span());
+            Ok(Expr::App {
+                func: Box::new(head),
+                args,
+                span,
+            })
+        }
+    }
+
+    fn starts_atom(&self) -> bool {
+        matches!(
+            self.peek(),
+            Tok::Lower(_) | Tok::Upper(_) | Tok::Int(_) | Tok::Float(_) | Tok::Str(_) | Tok::LParen
+        )
+    }
+
+    fn atom(&mut self) -> Result<Expr, Diagnostic> {
+        let span = self.peek_span();
+        match self.peek().clone() {
+            Tok::Lower(name) => {
+                self.bump();
+                Ok(Expr::Var { name, span })
+            }
+            Tok::Upper(name) => {
+                self.bump();
+                Ok(Expr::Con { name, span })
+            }
+            Tok::Int(value) => {
+                self.bump();
+                Ok(Expr::Int { value, span })
+            }
+            Tok::Float(value) => {
+                self.bump();
+                Ok(Expr::Float { value, span })
+            }
+            Tok::Str(value) => {
+                self.bump();
+                Ok(Expr::Str { value, span })
+            }
+            Tok::LParen => {
+                self.bump();
+                if matches!(self.peek(), Tok::RParen) {
+                    let end = self.bump().span;
+                    return Ok(Expr::Unit {
+                        span: span.to(end),
+                    });
+                }
+                let first = self.expr()?;
+                let mut items = vec![first];
+                while matches!(self.peek(), Tok::Comma) {
+                    self.bump();
+                    items.push(self.expr()?);
+                }
+                let end = self.expect(&Tok::RParen)?.span;
+                if items.len() == 1 {
+                    Ok(items.pop().unwrap()) // parenthesized expr
+                } else {
+                    Ok(Expr::Tuple {
+                        items,
+                        span: span.to(end),
+                    })
+                }
+            }
+            other => Err(self.err(format!("expected an expression, found {}", other.describe()))),
+        }
+    }
+
+    // -- types ----------------------------------------------------------------
+
+    fn ty(&mut self) -> Result<TypeExpr, Diagnostic> {
+        let lhs = self.btype()?;
+        if matches!(self.peek(), Tok::RArrow) {
+            self.bump();
+            let rhs = self.ty()?; // right-assoc
+            Ok(TypeExpr::Arrow(Box::new(lhs), Box::new(rhs)))
+        } else {
+            Ok(lhs)
+        }
+    }
+
+    fn btype(&mut self) -> Result<TypeExpr, Diagnostic> {
+        let head = self.atype()?;
+        let mut args = Vec::new();
+        while self.starts_atype() {
+            args.push(self.atype()?);
+        }
+        if args.is_empty() {
+            return Ok(head);
+        }
+        match head {
+            TypeExpr::Con { name, args: mut a0 } => {
+                a0.extend(args);
+                Ok(TypeExpr::Con { name, args: a0 })
+            }
+            _ => Err(self.err("only type constructors can be applied")),
+        }
+    }
+
+    fn starts_atype(&self) -> bool {
+        matches!(
+            self.peek(),
+            Tok::Upper(_) | Tok::Lower(_) | Tok::LParen | Tok::LBracket
+        )
+    }
+
+    fn atype(&mut self) -> Result<TypeExpr, Diagnostic> {
+        match self.peek().clone() {
+            Tok::Upper(name) => {
+                self.bump();
+                Ok(TypeExpr::Con { name, args: vec![] })
+            }
+            Tok::Lower(name) => {
+                self.bump();
+                Ok(TypeExpr::Var(name))
+            }
+            Tok::LBracket => {
+                self.bump();
+                let inner = self.ty()?;
+                self.expect(&Tok::RBracket)?;
+                Ok(TypeExpr::Con {
+                    name: "List".into(),
+                    args: vec![inner],
+                })
+            }
+            Tok::LParen => {
+                self.bump();
+                if matches!(self.peek(), Tok::RParen) {
+                    self.bump();
+                    return Ok(TypeExpr::Unit);
+                }
+                let first = self.ty()?;
+                let mut items = vec![first];
+                while matches!(self.peek(), Tok::Comma) {
+                    self.bump();
+                    items.push(self.ty()?);
+                }
+                self.expect(&Tok::RParen)?;
+                if items.len() == 1 {
+                    Ok(items.pop().unwrap())
+                } else {
+                    Ok(TypeExpr::Tuple(items))
+                }
+            }
+            other => Err(self.err(format!("expected a type, found {}", other.describe()))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's §2 program, verbatim modulo the elided bodies.
+    pub const NLP_EXAMPLE: &str = r#"
+data Summary = Opaque
+
+clean_files :: IO Summary
+clean_files = primClean
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = primEval x
+
+semantic_analysis :: IO Int
+semantic_analysis = primSem
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  z <- semantic_analysis
+  print (y, z)
+"#;
+
+    #[test]
+    fn parses_paper_example() {
+        let p = parse_program(NLP_EXAMPLE).unwrap();
+        assert_eq!(p.decls.len(), 9);
+        let (params, body) = p.find_fun("main").unwrap();
+        assert!(params.is_empty());
+        let Body::Do(stmts) = body else {
+            panic!("main should be a do block")
+        };
+        assert_eq!(stmts.len(), 4);
+        assert_eq!(stmts[0].bound_name(), Some("x"));
+        assert!(matches!(stmts[1], Stmt::Let { .. }));
+        assert_eq!(stmts[2].bound_name(), Some("z"));
+        assert!(matches!(stmts[3], Stmt::Expr { .. }));
+        // print (y, z) is an application of print to a tuple
+        let (head, args) = stmts[3].expr().as_call().unwrap();
+        assert_eq!(head, "print");
+        assert!(matches!(args[0], Expr::Tuple { .. }));
+    }
+
+    #[test]
+    fn signature_types() {
+        let p = parse_program(NLP_EXAMPLE).unwrap();
+        assert!(p.find_sig("clean_files").unwrap().is_io());
+        assert!(!p.find_sig("complex_evaluation").unwrap().is_io());
+        assert_eq!(p.find_sig("complex_evaluation").unwrap().arity(), 1);
+        assert!(p.find_sig("main").unwrap().is_io());
+    }
+
+    #[test]
+    fn parses_multi_arg_application_and_operators() {
+        let p = parse_program("f :: Int -> Int -> Int\nr = f 1 2 + f 3 4\n").unwrap();
+        let (_, body) = p.find_fun("r").unwrap();
+        let Body::Expr(Expr::BinOp { op, lhs, rhs, .. }) = body else {
+            panic!("expected binop, got {body:?}")
+        };
+        assert_eq!(op, "+");
+        assert!(matches!(**lhs, Expr::App { .. }));
+        assert!(matches!(**rhs, Expr::App { .. }));
+    }
+
+    #[test]
+    fn parses_params() {
+        let p = parse_program("g a b = a\n").unwrap();
+        let (params, _) = p.find_fun("g").unwrap();
+        assert_eq!(params, &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn nested_io_type() {
+        let t = parse_type("Int -> IO (Int, Summary)").unwrap();
+        assert!(t.is_io());
+        assert_eq!(t.arity(), 1);
+        let TypeExpr::Con { name, args } = t.result() else {
+            panic!()
+        };
+        assert_eq!(name, "IO");
+        assert!(matches!(args[0], TypeExpr::Tuple(_)));
+    }
+
+    #[test]
+    fn list_type_sugar() {
+        let t = parse_type("[Int] -> Int").unwrap();
+        let p = t.params();
+        assert!(matches!(p[0], TypeExpr::Con { name, .. } if name == "List"));
+    }
+
+    #[test]
+    fn error_messages_have_spans() {
+        let err = parse_program("main = do\n  x <- \n").unwrap_err();
+        assert!(err.span.line >= 2, "{err}");
+        let rendered = err.render("main = do\n  x <- \n");
+        assert!(rendered.contains('^'));
+    }
+
+    #[test]
+    fn empty_do_block_rejected() {
+        assert!(parse_program("main = do\n").is_err());
+    }
+
+    #[test]
+    fn indented_declaration_rejected() {
+        assert!(parse_program("  f = 1\n").is_err());
+    }
+
+    #[test]
+    fn multiline_tuple_in_parens() {
+        let p = parse_program("main = do\n  print (1,\n          2)\n").unwrap();
+        let (_, body) = p.find_fun("main").unwrap();
+        let Body::Do(stmts) = body else { panic!() };
+        assert_eq!(stmts.len(), 1);
+    }
+}

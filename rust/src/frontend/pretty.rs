@@ -1,0 +1,185 @@
+//! Pretty-printer: AST → HaskLite source. Used by `parhask parse --pretty`,
+//! error reporting, and the parse→print→parse stability tests.
+
+use super::ast::*;
+
+pub fn program(p: &Program) -> String {
+    let mut out = String::new();
+    for d in &p.decls {
+        out.push_str(&decl(d));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn decl(d: &Decl) -> String {
+    match d {
+        Decl::DataDecl { name, .. } => format!("data {name} = Opaque"),
+        Decl::TypeSig { name, ty, .. } => format!("{name} :: {}", ty_str(ty)),
+        Decl::FunDef {
+            name, params, body, ..
+        } => {
+            let mut head = name.clone();
+            for p in params {
+                head.push(' ');
+                head.push_str(p);
+            }
+            match body {
+                Body::Expr(e) => format!("{head} = {}", expr(e)),
+                Body::Do(stmts) => {
+                    let mut out = format!("{head} = do\n");
+                    for s in stmts {
+                        out.push_str("  ");
+                        out.push_str(&stmt(s));
+                        out.push('\n');
+                    }
+                    out.pop();
+                    out
+                }
+            }
+        }
+    }
+}
+
+pub fn stmt(s: &Stmt) -> String {
+    match s {
+        Stmt::Bind { name, expr: e, .. } => format!("{name} <- {}", expr(e)),
+        Stmt::Let { name, expr: e, .. } => format!("let {name} = {}", expr(e)),
+        Stmt::Expr { expr: e, .. } => expr(e),
+    }
+}
+
+pub fn expr(e: &Expr) -> String {
+    expr_prec(e, 0)
+}
+
+/// prec 0 = top, 1 = operator operand, 2 = application argument.
+fn expr_prec(e: &Expr, prec: u8) -> String {
+    match e {
+        Expr::Var { name, .. } => name.clone(),
+        Expr::Con { name, .. } => name.clone(),
+        Expr::Int { value, .. } => value.to_string(),
+        Expr::Float { value, .. } => format!("{value:?}"),
+        Expr::Str { value, .. } => format!("{value:?}"),
+        Expr::Unit { .. } => "()".into(),
+        Expr::Tuple { items, .. } => {
+            let inner: Vec<String> = items.iter().map(|i| expr_prec(i, 0)).collect();
+            format!("({})", inner.join(", "))
+        }
+        Expr::App { func, args, .. } => {
+            let mut s = expr_prec(func, 2);
+            for a in args {
+                s.push(' ');
+                s.push_str(&expr_prec(a, 2));
+            }
+            if prec >= 2 {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+        Expr::BinOp { op, lhs, rhs, .. } => {
+            let s = format!("{} {op} {}", expr_prec(lhs, 1), expr_prec(rhs, 1));
+            if prec >= 1 {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+    }
+}
+
+pub fn ty_str(t: &TypeExpr) -> String {
+    ty_prec(t, 0)
+}
+
+/// prec 0 = top, 1 = arrow lhs / con argument.
+fn ty_prec(t: &TypeExpr, prec: u8) -> String {
+    match t {
+        TypeExpr::Unit => "()".into(),
+        TypeExpr::Var(v) => v.clone(),
+        TypeExpr::Tuple(items) => {
+            let inner: Vec<String> = items.iter().map(|i| ty_prec(i, 0)).collect();
+            format!("({})", inner.join(", "))
+        }
+        TypeExpr::Con { name, args } if name == "List" && args.len() == 1 => {
+            format!("[{}]", ty_prec(&args[0], 0))
+        }
+        TypeExpr::Con { name, args } => {
+            if args.is_empty() {
+                name.clone()
+            } else {
+                let inner: Vec<String> = args.iter().map(|a| ty_prec(a, 1)).collect();
+                let s = format!("{name} {}", inner.join(" "));
+                if prec >= 1 {
+                    format!("({s})")
+                } else {
+                    s
+                }
+            }
+        }
+        TypeExpr::Arrow(a, r) => {
+            let s = format!("{} -> {}", ty_prec(a, 1), ty_prec(r, 0));
+            if prec >= 1 {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse_program;
+    use super::*;
+
+    /// parse ∘ print ∘ parse == parse (print is a stable normal form).
+    #[test]
+    fn print_parse_fixpoint() {
+        let src = r#"
+data Summary = Opaque
+
+clean_files :: IO Summary
+clean_files = primClean
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  print (y, x)
+"#;
+        let p1 = parse_program(src).unwrap();
+        let printed = program(&p1);
+        let p2 = parse_program(&printed).unwrap();
+        let printed2 = program(&p2);
+        assert_eq!(printed, printed2);
+    }
+
+    #[test]
+    fn application_parenthesization() {
+        let p = parse_program("r = f (g x) y\n").unwrap();
+        let printed = program(&p);
+        assert!(printed.contains("f (g x) y"), "{printed}");
+        // and it reparses to the same shape
+        let p2 = parse_program(&printed).unwrap();
+        assert_eq!(program(&p2), printed);
+    }
+
+    #[test]
+    fn type_printing() {
+        use super::super::parser::parse_type;
+        for src in [
+            "Int -> IO ()",
+            "Summary -> Int",
+            "IO (Int, Summary)",
+            "(Int -> Int) -> [Int]",
+            "Matrix -> Matrix -> Matrix",
+        ] {
+            let t = parse_type(src).unwrap();
+            let printed = ty_str(&t);
+            let t2 = parse_type(&printed).unwrap();
+            assert_eq!(t, t2, "{src} -> {printed}");
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Token kinds produced by the lexer.
+
+use super::span::Span;
+
+#[derive(Clone, PartialEq, Debug)]
+pub enum Tok {
+    /// lowercase-initial identifier (variables, functions).
+    Lower(String),
+    /// Uppercase-initial identifier (type/data constructors).
+    Upper(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    // keywords
+    Data,
+    Do,
+    Let,
+    Where,
+    // punctuation / operators
+    DColon,   // ::
+    LArrow,   // <-
+    RArrow,   // ->
+    Equals,   // =
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Pipe,     // |
+    Op(String), // + - * / etc.
+    /// End of a logical line (newline outside parens).
+    Newline,
+    Eof,
+}
+
+impl Tok {
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Lower(s) | Tok::Upper(s) => format!("identifier `{s}`"),
+            Tok::Int(i) => format!("integer `{i}`"),
+            Tok::Float(x) => format!("float `{x}`"),
+            Tok::Str(s) => format!("string {s:?}"),
+            Tok::Data => "`data`".into(),
+            Tok::Do => "`do`".into(),
+            Tok::Let => "`let`".into(),
+            Tok::Where => "`where`".into(),
+            Tok::DColon => "`::`".into(),
+            Tok::LArrow => "`<-`".into(),
+            Tok::RArrow => "`->`".into(),
+            Tok::Equals => "`=`".into(),
+            Tok::LParen => "`(`".into(),
+            Tok::RParen => "`)`".into(),
+            Tok::LBracket => "`[`".into(),
+            Tok::RBracket => "`]`".into(),
+            Tok::Comma => "`,`".into(),
+            Tok::Semi => "`;`".into(),
+            Tok::Pipe => "`|`".into(),
+            Tok::Op(s) => format!("operator `{s}`"),
+            Tok::Newline => "end of line".into(),
+            Tok::Eof => "end of file".into(),
+        }
+    }
+}
+
+/// Token with its source span.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}

@@ -1,0 +1,383 @@
+//! Lowering: checked HaskLite program → [`TaskProgram`].
+//!
+//! The compiler backend of the auto-parallelizer. Walks the entry
+//! do-block, consults the [`FunctionRegistry`] to bind each call to an
+//! executable op, and wires `ArgRef`s:
+//!
+//! * variables → the producing task's output 0;
+//! * literals → inline `Const` values;
+//! * nested pure calls → their own tasks;
+//! * IO calls additionally take the previous IO task's **token output**
+//!   (output 1) as a final arg and expose their own token as output 1 —
+//!   reproducing the RealWorld threading at the executable level.
+//!
+//! Purity cross-check: the registry's notion of purity must agree with the
+//! type signature's. A mismatch means the environment lies about effects —
+//! the exact failure mode the paper's design rules out — so it is a hard
+//! error, not a warning.
+
+use std::collections::HashMap;
+
+use crate::frontend::ast::{Expr, Stmt};
+use crate::frontend::diag::Diagnostic;
+use crate::frontend::pretty;
+use crate::frontend::span::Span;
+use crate::ir::program::{ProgramBuilder, TaskProgram};
+use crate::ir::task::{ArgRef, CombineKind, CostEst, OpKind, TaskId, Value};
+use crate::tasks::registry::{Binding, FunctionRegistry};
+use crate::types::CheckedProgram;
+
+/// Result of lowering: the program plus a map from DSL variable names to
+/// the task outputs that carry them (used by examples/tests to fish out
+/// results).
+#[derive(Clone, Debug)]
+pub struct Lowered {
+    pub program: TaskProgram,
+    pub var_outputs: HashMap<String, ArgRef>,
+}
+
+/// Lower the checked program's entry block against `registry`.
+pub fn lower(checked: &CheckedProgram, registry: &FunctionRegistry) -> Result<Lowered, Diagnostic> {
+    let mut l = Lowering {
+        b: ProgramBuilder::new(),
+        env: HashMap::new(),
+        last_io: None,
+        checked,
+        registry,
+    };
+    for stmt in &checked.main_stmts {
+        l.stmt(stmt)?;
+    }
+    // Program outputs: whatever the final IO action produced, plus every
+    // named binding (so callers can inspect any intermediate).
+    let mut b = l.b;
+    if let Some(last) = l.last_io {
+        b.mark_output(ArgRef::out(last, 0));
+    }
+    let var_outputs: HashMap<String, ArgRef> = l.env.clone();
+    for arg in var_outputs.values() {
+        b.mark_output(arg.clone());
+    }
+    let program = b
+        .build()
+        .map_err(|e| Diagnostic::new(format!("internal lowering error: {e}"), Span::DUMMY))?;
+    Ok(Lowered {
+        program,
+        var_outputs,
+    })
+}
+
+struct Lowering<'a> {
+    b: ProgramBuilder,
+    /// variable -> producing ArgRef
+    env: HashMap<String, ArgRef>,
+    /// last IO task (token holder)
+    last_io: Option<TaskId>,
+    checked: &'a CheckedProgram,
+    registry: &'a FunctionRegistry,
+}
+
+impl<'a> Lowering<'a> {
+    fn stmt(&mut self, stmt: &Stmt) -> Result<(), Diagnostic> {
+        let label = pretty::stmt(stmt);
+        let result = self.expr_value(stmt.expr(), &label)?;
+        if let Some(name) = stmt.bound_name() {
+            self.env.insert(name.to_string(), result);
+        }
+        Ok(())
+    }
+
+    /// Lower an expression to the ArgRef carrying its value.
+    fn expr_value(&mut self, expr: &Expr, label: &str) -> Result<ArgRef, Diagnostic> {
+        match expr {
+            Expr::Int { value, .. } => Ok(ArgRef::const_i32(*value as i32)),
+            Expr::Float { value, .. } => Ok(ArgRef::const_f32(*value as f32)),
+            Expr::Str { .. } | Expr::Unit { .. } | Expr::Con { .. } => {
+                Ok(ArgRef::Const(Value::Unit))
+            }
+            Expr::Var { name, span } => {
+                // Bound variable first; otherwise a nullary call
+                // (`x <- clean_files` parses as a bare Var).
+                if let Some(v) = self.env.get(name) {
+                    return Ok(v.clone());
+                }
+                if self.registry.get(name).is_some() || name == "print" {
+                    return self.call(expr, label);
+                }
+                Err(Diagnostic::new(format!("`{name}` has no value here"), *span))
+            }
+            Expr::App { .. } => self.call(expr, label),
+            Expr::BinOp { op, lhs, rhs, span } => {
+                if op != "+" {
+                    return Err(Diagnostic::new(
+                        format!("operator `{op}` is not lowered (only `+` on scalars is)"),
+                        *span,
+                    ));
+                }
+                let l = self.expr_value(lhs, label)?;
+                let r = self.expr_value(rhs, label)?;
+                let id = self.b.push(
+                    OpKind::Combine(CombineKind::AddScalars),
+                    vec![l, r],
+                    1,
+                    CostEst::ZERO,
+                    label,
+                );
+                Ok(ArgRef::out(id, 0))
+            }
+            Expr::Tuple { span, .. } => Err(Diagnostic::new(
+                "tuple values only appear as arguments to effects (e.g. print); \
+                 bind components separately",
+                *span,
+            )),
+        }
+    }
+
+    /// Lower a call `f a₁ … aₙ` to a task.
+    fn call(&mut self, expr: &Expr, label: &str) -> Result<ArgRef, Diagnostic> {
+        let (func, call_args) = expr.as_call().expect("call() on non-call");
+        let span = expr.span();
+
+        // builtin print: IoAction over flattened args
+        if func == "print" {
+            let mut args = Vec::new();
+            for a in call_args {
+                self.flatten_arg(a, &mut args, label)?;
+            }
+            let id = self.push_io(
+                OpKind::IoAction {
+                    label: "print".into(),
+                    compute_us: 0,
+                },
+                args,
+                CostEst::ZERO,
+                label,
+            );
+            return Ok(ArgRef::out(id, 0));
+        }
+
+        let entry = self
+            .registry
+            .require(func)
+            .map_err(|e| Diagnostic::new(e.to_string(), span))?;
+
+        // purity cross-check: type signature vs registry
+        let sig_io = self.checked.purity.is_io(func);
+        if sig_io == entry.pure {
+            return Err(Diagnostic::new(
+                format!(
+                    "purity mismatch for `{func}`: type signature says {}, registry binding says {} — \
+                     refusing to schedule (effects would escape ordering)",
+                    if sig_io { "IO" } else { "pure" },
+                    if entry.pure { "pure" } else { "IO" },
+                ),
+                span,
+            ));
+        }
+        if call_args.len() != entry.arity {
+            return Err(Diagnostic::new(
+                format!(
+                    "`{func}` arity {} but called with {} args",
+                    entry.arity,
+                    call_args.len()
+                ),
+                span,
+            ));
+        }
+
+        let mut args = Vec::new();
+        for a in call_args {
+            let sub_label = pretty::expr(a);
+            args.push(self.expr_value(a, &sub_label)?);
+        }
+
+        let op = match &entry.binding {
+            Binding::Artifact(name) => OpKind::Artifact { name: name.clone() },
+            Binding::Op(op) => op.clone(),
+        };
+        let id = if entry.pure {
+            self.b.push(op, args, entry.n_outputs, entry.est, label)
+        } else {
+            self.push_io(op, args, entry.est, label)
+        };
+        Ok(ArgRef::out(id, 0))
+    }
+
+    /// Push an IO task: appends the previous token arg, records the chain.
+    fn push_io(
+        &mut self,
+        op: OpKind,
+        mut args: Vec<ArgRef>,
+        est: CostEst,
+        label: &str,
+    ) -> TaskId {
+        match self.last_io {
+            Some(prev) => args.push(ArgRef::out(prev, 1)),
+            None => args.push(ArgRef::Const(Value::Token)),
+        }
+        let id = self.b.push(op, args, 2, est, label);
+        self.last_io = Some(id);
+        id
+    }
+
+    /// Flatten a print argument (tuples expand; everything else lowers).
+    fn flatten_arg(
+        &mut self,
+        a: &Expr,
+        out: &mut Vec<ArgRef>,
+        label: &str,
+    ) -> Result<(), Diagnostic> {
+        match a {
+            Expr::Tuple { items, .. } => {
+                for i in items {
+                    self.flatten_arg(i, out, label)?;
+                }
+                Ok(())
+            }
+            other => {
+                out.push(self.expr_value(other, label)?);
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_program;
+    use crate::types::check_program;
+
+    const NLP: &str = r#"
+clean_files :: IO Summary
+clean_files = prim
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = prim
+
+semantic_analysis :: IO Int
+semantic_analysis = prim
+
+prim :: Int
+prim = 0
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  z <- semantic_analysis
+  print (y, z)
+"#;
+
+    fn lowered(src: &str, reg: &FunctionRegistry) -> Lowered {
+        let p = parse_program(src).unwrap();
+        let c = check_program(&p, "main").unwrap();
+        lower(&c, reg).unwrap()
+    }
+
+    #[test]
+    fn nlp_lowering_shape() {
+        let reg = FunctionRegistry::nlp_demo(100, 100, 100);
+        let l = lowered(NLP, &reg);
+        let p = &l.program;
+        assert_eq!(p.len(), 4);
+        // t0 clean_files (io), t1 complex_evaluation, t2 semantic_analysis (io), t3 print
+        assert!(!p.task(TaskId(0)).is_pure());
+        assert!(p.task(TaskId(1)).is_pure());
+        assert!(!p.task(TaskId(2)).is_pure());
+        assert!(!p.task(TaskId(3)).is_pure());
+        // token chain: t2 depends on t0 (token), t3 on t2 (token)
+        assert!(p.task(TaskId(2)).deps().contains(&TaskId(0)));
+        assert!(p.task(TaskId(3)).deps().contains(&TaskId(2)));
+        // value deps: t1 <- t0, t3 <- t1
+        assert_eq!(p.task(TaskId(1)).deps(), vec![TaskId(0)]);
+        assert!(p.task(TaskId(3)).deps().contains(&TaskId(1)));
+        // after t0, both t1 and t2 are ready: width 2
+        assert_eq!(p.max_parallel_width(), 2);
+    }
+
+    #[test]
+    fn matrix_program_lowering() {
+        let reg = FunctionRegistry::matrix_host(16);
+        let src = r#"
+matgen :: Int -> Matrix
+matgen s = prim
+
+matmul :: Matrix -> Matrix -> Matrix
+matmul a b = prim
+
+matsum :: Matrix -> Double
+matsum a = prim
+
+prim :: Int
+prim = 0
+
+main :: IO ()
+main = do
+  let a = matgen 1
+  let b = matgen 2
+  let c = matmul a b
+  let s = matsum c
+  print s
+"#;
+        let l = lowered(src, &reg);
+        assert_eq!(l.program.len(), 5);
+        // literal seeds became consts, so matgens are roots
+        assert_eq!(l.program.roots().len(), 2);
+        assert!(l.var_outputs.contains_key("s"));
+    }
+
+    #[test]
+    fn scalar_addition_becomes_combine() {
+        let reg = FunctionRegistry::matrix_host(8);
+        let src = "matsum :: Matrix -> Double\nmatsum a = a\nmatgen :: Int -> Matrix\nmatgen s = s\nmain :: IO ()\nmain = do\n  let a = matgen 1\n  let s1 = matsum a\n  let s2 = matsum a\n  let t = s1 + s2\n  print t\n";
+        let l = lowered(src, &reg);
+        let combine = l
+            .program
+            .tasks()
+            .iter()
+            .find(|t| matches!(t.op, OpKind::Combine(CombineKind::AddScalars)))
+            .unwrap();
+        assert_eq!(combine.deps().len(), 2);
+    }
+
+    #[test]
+    fn unbound_function_fails() {
+        let p = parse_program("foo :: Int -> Int\nfoo x = x\nmain :: IO ()\nmain = do\n  let a = foo 1\n  print a\n").unwrap();
+        let c = check_program(&p, "main").unwrap();
+        let reg = FunctionRegistry::new();
+        let err = lower(&c, &reg).unwrap_err();
+        assert!(err.msg.contains("not bound in the registry"), "{err}");
+    }
+
+    #[test]
+    fn purity_mismatch_fails_loudly() {
+        // type says pure; registry binds an IO action
+        let src = "sneaky :: Int -> Int\nsneaky x = x\nmain :: IO ()\nmain = do\n  let a = sneaky 1\n  print a\n";
+        let p = parse_program(src).unwrap();
+        let c = check_program(&p, "main").unwrap();
+        let mut reg = FunctionRegistry::new();
+        reg.bind_op(
+            "sneaky",
+            OpKind::IoAction {
+                label: "sneaky".into(),
+                compute_us: 0,
+            },
+            1,
+            CostEst::ZERO,
+        );
+        let err = lower(&c, &reg).unwrap_err();
+        assert!(err.msg.contains("purity mismatch"), "{err}");
+    }
+
+    #[test]
+    fn first_io_gets_const_token() {
+        let reg = FunctionRegistry::nlp_demo(1, 1, 1);
+        let l = lowered(NLP, &reg);
+        let t0 = l.program.task(TaskId(0));
+        assert!(matches!(
+            t0.args.last(),
+            Some(ArgRef::Const(Value::Token))
+        ));
+    }
+}

@@ -1,0 +1,9 @@
+//! Task-level IR: what the auto-parallelizer lowers programs *to* and what
+//! every execution engine (baselines, SMP pool, cluster, simulator) runs.
+
+pub mod task;
+pub mod program;
+pub mod lower;
+
+pub use program::{ProgramBuilder, TaskProgram};
+pub use task::{ArgRef, CostEst, OpKind, TaskId, TaskSpec, Value};

@@ -1,0 +1,306 @@
+//! `TaskProgram`: a validated DAG of tasks plus designated outputs.
+
+use anyhow::{bail, Result};
+
+use super::task::{ArgRef, CostEst, OpKind, TaskId, TaskSpec};
+
+/// A validated, schedulable task DAG.
+#[derive(Clone, Debug)]
+pub struct TaskProgram {
+    tasks: Vec<TaskSpec>,
+    outputs: Vec<ArgRef>,
+    /// Reverse edges: `consumers[t]` = tasks that read an output of `t`.
+    consumers: Vec<Vec<TaskId>>,
+}
+
+impl TaskProgram {
+    /// Validate and freeze. Enforced invariants:
+    /// 1. ids are dense and equal to position;
+    /// 2. args only reference *earlier* tasks (⇒ acyclic);
+    /// 3. referenced output indices are in range;
+    /// 4. IO actions form a single chain through Token args (at most one
+    ///    impure predecessor per impure task).
+    pub fn new(tasks: Vec<TaskSpec>, outputs: Vec<ArgRef>) -> Result<TaskProgram> {
+        for (i, t) in tasks.iter().enumerate() {
+            if t.id.index() != i {
+                bail!("task id {} at position {i}", t.id);
+            }
+            if t.n_outputs == 0 {
+                bail!("task {} declares zero outputs", t.id);
+            }
+            for a in &t.args {
+                if let ArgRef::Output { task, index } = a {
+                    if task.index() >= i {
+                        bail!(
+                            "task {} references non-earlier task {} (forward edge / cycle)",
+                            t.id,
+                            task
+                        );
+                    }
+                    if *index >= tasks[task.index()].n_outputs {
+                        bail!(
+                            "task {} reads output {index} of {} which has {}",
+                            t.id,
+                            task,
+                            tasks[task.index()].n_outputs
+                        );
+                    }
+                }
+            }
+        }
+        for o in &outputs {
+            if let ArgRef::Output { task, index } = o {
+                let Some(t) = tasks.get(task.index()) else {
+                    bail!("program output references unknown task {task}");
+                };
+                if *index >= t.n_outputs {
+                    bail!("program output index {index} out of range for {task}");
+                }
+            }
+        }
+        let mut consumers = vec![Vec::new(); tasks.len()];
+        for t in &tasks {
+            for d in t.deps() {
+                consumers[d.index()].push(t.id);
+            }
+        }
+        Ok(TaskProgram {
+            tasks,
+            outputs,
+            consumers,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn tasks(&self) -> &[TaskSpec] {
+        &self.tasks
+    }
+
+    pub fn task(&self, id: TaskId) -> &TaskSpec {
+        &self.tasks[id.index()]
+    }
+
+    pub fn outputs(&self) -> &[ArgRef] {
+        &self.outputs
+    }
+
+    pub fn consumers(&self, id: TaskId) -> &[TaskId] {
+        &self.consumers[id.index()]
+    }
+
+    /// Number of unfinished dependencies per task (scheduler seed state).
+    pub fn dep_counts(&self) -> Vec<usize> {
+        self.tasks.iter().map(|t| t.deps().len()).collect()
+    }
+
+    /// Tasks with no dependencies.
+    pub fn roots(&self) -> Vec<TaskId> {
+        self.tasks
+            .iter()
+            .filter(|t| t.deps().is_empty())
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Total work (sum of flops) and critical-path work (span) — the
+    /// Brent-bound analysis quoted in EXPERIMENTS.md: speedup ≤ work/span.
+    pub fn work_span_flops(&self) -> (u64, u64) {
+        let mut span = vec![0u64; self.tasks.len()];
+        let mut work = 0u64;
+        for t in &self.tasks {
+            let dep_max = t.deps().iter().map(|d| span[d.index()]).max().unwrap_or(0);
+            span[t.id.index()] = dep_max + t.est.flops;
+            work += t.est.flops;
+        }
+        (work, span.iter().copied().max().unwrap_or(0))
+    }
+
+    /// Maximum antichain-ish width proxy: peak number of simultaneously
+    /// ready tasks under greedy unlimited-worker execution.
+    pub fn max_parallel_width(&self) -> usize {
+        let mut deps = self.dep_counts();
+        let mut ready: Vec<TaskId> = self.roots();
+        let mut width = 0usize;
+        while !ready.is_empty() {
+            width = width.max(ready.len());
+            let mut next = Vec::new();
+            for t in ready.drain(..) {
+                for &c in self.consumers(t) {
+                    deps[c.index()] -= 1;
+                    if deps[c.index()] == 0 {
+                        next.push(c);
+                    }
+                }
+            }
+            ready = next;
+        }
+        width
+    }
+}
+
+/// Incremental builder used by lowering and by tests/examples that
+/// construct programs directly against the public API.
+#[derive(Default, Debug)]
+pub struct ProgramBuilder {
+    tasks: Vec<TaskSpec>,
+    outputs: Vec<ArgRef>,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Append a task; returns its id.
+    pub fn push(
+        &mut self,
+        op: OpKind,
+        args: Vec<ArgRef>,
+        n_outputs: usize,
+        est: CostEst,
+        label: impl Into<String>,
+    ) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        self.tasks.push(TaskSpec {
+            id,
+            op,
+            args,
+            n_outputs,
+            est,
+            label: label.into(),
+        });
+        id
+    }
+
+    /// Convenience: single-output task, args by (task, 0).
+    pub fn push_simple(&mut self, op: OpKind, deps: &[TaskId], label: &str) -> TaskId {
+        let args = deps.iter().map(|d| ArgRef::out(*d, 0)).collect();
+        self.push(op, args, 1, CostEst::ZERO, label)
+    }
+
+    pub fn mark_output(&mut self, arg: ArgRef) {
+        self.outputs.push(arg);
+    }
+
+    pub fn build(self) -> anyhow::Result<TaskProgram> {
+        TaskProgram::new(self.tasks, self.outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::Value;
+
+    fn spin(us: u64) -> OpKind {
+        OpKind::Synthetic { compute_us: us }
+    }
+
+    #[test]
+    fn diamond_program_validates() {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(spin(1), &[], "a");
+        let l = b.push_simple(spin(1), &[a], "l");
+        let r = b.push_simple(spin(1), &[a], "r");
+        let j = b.push_simple(spin(1), &[l, r], "j");
+        b.mark_output(ArgRef::out(j, 0));
+        let p = b.build().unwrap();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.roots(), vec![a]);
+        assert_eq!(p.consumers(a), &[l, r]);
+        assert_eq!(p.max_parallel_width(), 2);
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let t0 = TaskSpec {
+            id: TaskId(0),
+            op: spin(1),
+            args: vec![ArgRef::out(TaskId(1), 0)],
+            n_outputs: 1,
+            est: CostEst::ZERO,
+            label: "bad".into(),
+        };
+        let t1 = TaskSpec {
+            id: TaskId(1),
+            op: spin(1),
+            args: vec![],
+            n_outputs: 1,
+            est: CostEst::ZERO,
+            label: "b".into(),
+        };
+        assert!(TaskProgram::new(vec![t0, t1], vec![]).is_err());
+    }
+
+    #[test]
+    fn bad_output_index_rejected() {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(spin(1), &[], "a");
+        b.mark_output(ArgRef::Output { task: a, index: 3 });
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn const_args_do_not_create_deps() {
+        let mut b = ProgramBuilder::new();
+        let a = b.push(
+            spin(1),
+            vec![ArgRef::Const(Value::scalar_i32(5))],
+            1,
+            CostEst::ZERO,
+            "a",
+        );
+        let p = b.build().unwrap();
+        assert_eq!(p.roots(), vec![a]);
+    }
+
+    #[test]
+    fn work_span_on_chain_vs_fanout() {
+        // chain: span == work
+        let mut b = ProgramBuilder::new();
+        let mut prev: Option<TaskId> = None;
+        for i in 0..4 {
+            let deps: Vec<TaskId> = prev.into_iter().collect();
+            let id = b.push(
+                spin(1),
+                deps.iter().map(|d| ArgRef::out(*d, 0)).collect(),
+                1,
+                CostEst { flops: 10, bytes_in: 0, bytes_out: 0 },
+                format!("c{i}"),
+            );
+            prev = Some(id);
+        }
+        let chain = b.build().unwrap();
+        assert_eq!(chain.work_span_flops(), (40, 40));
+
+        // fanout: span == one task
+        let mut b = ProgramBuilder::new();
+        for i in 0..4 {
+            b.push(
+                spin(1),
+                vec![],
+                1,
+                CostEst { flops: 10, bytes_in: 0, bytes_out: 0 },
+                format!("f{i}"),
+            );
+        }
+        let fan = b.build().unwrap();
+        assert_eq!(fan.work_span_flops(), (40, 10));
+        assert_eq!(fan.max_parallel_width(), 4);
+    }
+}

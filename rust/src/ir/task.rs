@@ -1,0 +1,251 @@
+//! Task specifications and runtime values.
+
+use std::sync::Arc;
+
+use crate::tensor::Tensor;
+
+/// Dense task identifier; tasks are numbered in lowering order and an
+/// [`ArgRef`] may only point *backwards*, which makes every well-formed
+/// program a DAG by construction (validated in [`super::program`]).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct TaskId(pub u32);
+
+impl TaskId {
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// A runtime value flowing along a dependency edge.
+///
+/// `Token` is the `RealWorld` of the paper's Figure 1: a zero-sized witness
+/// that threads through IO actions to serialize them. It crosses the wire
+/// as one byte.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// Dense tensor (shared — cloning a `Value` never copies the payload).
+    Tensor(Arc<Tensor>),
+    /// Unit result of an effect.
+    Unit,
+    /// RealWorld token.
+    Token,
+}
+
+impl Value {
+    pub fn tensor(t: Tensor) -> Value {
+        Value::Tensor(Arc::new(t))
+    }
+
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::tensor(Tensor::scalar_f32(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::tensor(Tensor::scalar_i32(v))
+    }
+
+    pub fn as_tensor(&self) -> anyhow::Result<&Tensor> {
+        match self {
+            Value::Tensor(t) => Ok(t),
+            other => anyhow::bail!("expected tensor value, got {other:?}"),
+        }
+    }
+
+    /// Wire/transfer size in bytes (used by the simulator's network model
+    /// and the cluster's transfer accounting).
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Value::Tensor(t) => t.size_bytes(),
+            Value::Unit | Value::Token => 1,
+        }
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Value::Tensor(a), Value::Tensor(b)) => a == b,
+            (Value::Unit, Value::Unit) => true,
+            (Value::Token, Value::Token) => true,
+            _ => false,
+        }
+    }
+}
+
+/// Reference to a task argument: either the `index`-th output of an earlier
+/// task or an inline constant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgRef {
+    Output { task: TaskId, index: usize },
+    Const(Value),
+}
+
+impl ArgRef {
+    pub fn out(task: TaskId, index: usize) -> ArgRef {
+        ArgRef::Output { task, index }
+    }
+
+    pub fn const_i32(v: i32) -> ArgRef {
+        ArgRef::Const(Value::scalar_i32(v))
+    }
+
+    pub fn const_f32(v: f32) -> ArgRef {
+        ArgRef::Const(Value::scalar_f32(v))
+    }
+
+    pub fn dep(&self) -> Option<TaskId> {
+        match self {
+            ArgRef::Output { task, .. } => Some(*task),
+            ArgRef::Const(_) => None,
+        }
+    }
+}
+
+/// Host-side combine operations — cheap glue the leader (or any worker)
+/// evaluates without a PJRT artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CombineKind {
+    /// Elementwise mean over all tensor args (data-parallel grad averaging).
+    MeanTensors,
+    /// Sum of scalar args.
+    AddScalars,
+    /// Select the `i`-th argument (tuple projection glue).
+    Select(usize),
+    /// Pack all args into multiple outputs unchanged (fan-out regroup).
+    Identity,
+}
+
+/// What a task *does*. The executor (real PJRT / host / synthetic)
+/// interprets this.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Run the named AOT artifact (Layer-1/2 computation) on the worker.
+    Artifact { name: String },
+    /// Host reference implementation of the matrix ops (no PJRT).
+    HostMatGen { n: usize },
+    HostMatMul,
+    HostMatSum,
+    /// Pure synthetic compute (spin) — scheduler/bench workloads.
+    Synthetic { compute_us: u64 },
+    /// Impure action: consumes + produces the RealWorld token.
+    /// `label` identifies the effect; compute simulates its latency.
+    IoAction { label: String, compute_us: u64 },
+    /// Host-side combine glue.
+    Combine(CombineKind),
+}
+
+impl OpKind {
+    /// Purity — the paper's central property: pure tasks may run anywhere,
+    /// in any dependency-consistent order, and may be *re-executed* after a
+    /// worker failure; IO actions are totally ordered by the token chain.
+    pub fn is_pure(&self) -> bool {
+        !matches!(self, OpKind::IoAction { .. })
+    }
+
+    /// Short label for traces/DOT.
+    pub fn label(&self) -> String {
+        match self {
+            OpKind::Artifact { name } => name.clone(),
+            OpKind::HostMatGen { n } => format!("host_matgen_{n}"),
+            OpKind::HostMatMul => "host_matmul".into(),
+            OpKind::HostMatSum => "host_matsum".into(),
+            OpKind::Synthetic { compute_us } => format!("spin_{compute_us}us"),
+            OpKind::IoAction { label, .. } => format!("io:{label}"),
+            OpKind::Combine(k) => format!("combine:{k:?}"),
+        }
+    }
+}
+
+/// Cost estimate carried by every task — seeds the simulator and the
+/// priority heuristics before calibration refines it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostEst {
+    pub flops: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl CostEst {
+    pub const ZERO: CostEst = CostEst {
+        flops: 0,
+        bytes_in: 0,
+        bytes_out: 0,
+    };
+}
+
+/// One node of the lowered program.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    pub op: OpKind,
+    pub args: Vec<ArgRef>,
+    pub n_outputs: usize,
+    pub est: CostEst,
+    /// Human-readable provenance (DSL variable name / statement).
+    pub label: String,
+}
+
+impl TaskSpec {
+    /// Tasks this one depends on (deduplicated, order-preserving).
+    pub fn deps(&self) -> Vec<TaskId> {
+        let mut seen = Vec::new();
+        for a in &self.args {
+            if let Some(d) = a.dep() {
+                if !seen.contains(&d) {
+                    seen.push(d);
+                }
+            }
+        }
+        seen
+    }
+
+    pub fn is_pure(&self) -> bool {
+        self.op.is_pure()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_clone_shares_payload() {
+        let v = Value::tensor(crate::tensor::Tensor::uniform(vec![64, 64], 0));
+        let w = v.clone();
+        match (&v, &w) {
+            (Value::Tensor(a), Value::Tensor(b)) => assert!(Arc::ptr_eq(a, b)),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn deps_deduplicate() {
+        let t = TaskSpec {
+            id: TaskId(3),
+            op: OpKind::HostMatMul,
+            args: vec![
+                ArgRef::out(TaskId(1), 0),
+                ArgRef::out(TaskId(1), 0),
+                ArgRef::out(TaskId(2), 0),
+                ArgRef::const_i32(7),
+            ],
+            n_outputs: 1,
+            est: CostEst::ZERO,
+            label: "c".into(),
+        };
+        assert_eq!(t.deps(), vec![TaskId(1), TaskId(2)]);
+    }
+
+    #[test]
+    fn purity_of_ops() {
+        assert!(OpKind::Artifact { name: "matmul_256".into() }.is_pure());
+        assert!(OpKind::Synthetic { compute_us: 5 }.is_pure());
+        assert!(!OpKind::IoAction { label: "print".into(), compute_us: 0 }.is_pure());
+    }
+}

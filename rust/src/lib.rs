@@ -1,0 +1,40 @@
+//! # parhask — an auto-parallelizer for distributed computing
+//!
+//! Reproduction of *"An Auto-Parallelizer for Distributed Computing in
+//! Haskell"* (Haskell Symposium 2023) as a Rust + JAX + Pallas three-layer
+//! system. See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
+//! the paper-vs-measured record.
+//!
+//! Pipeline (the paper's §2 flow):
+//!
+//! ```text
+//! HaskLite source ──frontend──▶ AST ──types──▶ purity-annotated program
+//!    ──depgraph──▶ data-dependency DAG (RealWorld-threaded)
+//!    ──ir::lower──▶ TaskProgram
+//!    ──{baselines | scheduler | cluster | simulator}──▶ results + trace
+//! ```
+//!
+//! The compute tasks themselves are AOT-compiled JAX/Pallas artifacts
+//! executed through [`runtime`] (PJRT CPU client); Python never runs on
+//! the request path.
+
+pub mod util;
+pub mod tensor;
+pub mod ir;
+pub mod runtime;
+pub mod tasks;
+pub mod frontend;
+pub mod types;
+pub mod depgraph;
+pub mod scheduler;
+pub mod cluster;
+pub mod baselines;
+pub mod simulator;
+pub mod metrics;
+pub mod config;
+pub mod cli;
+pub mod workload;
+pub mod engine;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

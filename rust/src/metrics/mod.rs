@@ -1,0 +1,7 @@
+//! Metrics: summary statistics and report tables for the bench harness.
+
+pub mod stats;
+pub mod table;
+
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,68 @@
+//! Host tensor ⇄ `xla::Literal` conversion.
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{DType, Tensor};
+
+/// Host tensor → XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+    let lit = match t.dtype() {
+        DType::F32 => {
+            let data = t.as_f32()?;
+            if t.rank() == 0 {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            xla::Literal::vec1(data)
+        }
+        DType::I32 => {
+            let data = t.as_i32()?;
+            if t.rank() == 0 {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            xla::Literal::vec1(data)
+        }
+    };
+    lit.reshape(&dims).context("reshaping literal")
+}
+
+/// XLA literal → host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Tensor::f32(dims, lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => Tensor::i32(dims, lit.to_vec::<i32>()?),
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::uniform(vec![4, 6], 3);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::i32(vec![5], vec![-1, 0, 1, i32::MAX, i32::MIN]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        for t in [Tensor::scalar_f32(2.5), Tensor::scalar_i32(-7)] {
+            let lit = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&lit).unwrap();
+            assert_eq!(t, back);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! `manifest.json` — the typed contract between Layer-2 (Python AOT) and
+//! Layer-3 (this crate).
+//!
+//! The manifest carries, per artifact: file name, input/output shapes and
+//! dtypes (used to type-check task wiring at lowering time), and analytic
+//! FLOP/byte counts (seed for the simulator's cost model).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoDesc {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoDesc {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<IoDesc> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("io desc missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .context("io desc missing dtype")?,
+        )?;
+        Ok(IoDesc { shape, dtype })
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+    pub flops: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub kind: String,
+    pub desc: String,
+}
+
+/// Parsed manifest with name index.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = Vec::new();
+        let mut by_name = HashMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts array")?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let entry = ArtifactEntry {
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("artifact missing file")?
+                    .to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("missing inputs")?
+                    .iter()
+                    .map(IoDesc::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .context("missing outputs")?
+                    .iter()
+                    .map(IoDesc::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                flops: a.get("flops").and_then(Json::as_u64).unwrap_or(0),
+                bytes_in: a.get("bytes_in").and_then(Json::as_u64).unwrap_or(0),
+                bytes_out: a.get("bytes_out").and_then(Json::as_u64).unwrap_or(0),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                desc: a
+                    .get("desc")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                name: name.clone(),
+            };
+            by_name.insert(name, entries.len());
+            entries.push(entry);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+            by_name,
+        })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.by_name.get(name).map(|i| &self.entries[*i])
+    }
+
+    pub fn require(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.require(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "matmul_64", "file": "matmul_64.hlo.txt",
+         "inputs": [{"shape": [64,64], "dtype": "f32"}, {"shape": [64,64], "dtype": "f32"}],
+         "outputs": [{"shape": [64,64], "dtype": "f32"}],
+         "flops": 524288, "bytes_in": 32768, "bytes_out": 16384,
+         "kind": "pallas_matmul", "desc": "test"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let e = m.require("matmul_64").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![64, 64]);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.flops, 524288);
+        assert_eq!(m.hlo_path("matmul_64").unwrap(), Path::new("/tmp/matmul_64.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.require("nope").is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        assert!(Manifest::parse(r#"{"version": 9, "artifacts": []}"#, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["matgen_256", "matmul_256", "matsum_256", "mlp_grad"] {
+                let e = m.require(name).unwrap();
+                assert!(dir.join(&e.file).exists(), "{name} hlo file missing");
+                assert!(e.flops > 0);
+            }
+            // matmul_256 io contract
+            let e = m.require("matmul_256").unwrap();
+            assert_eq!(e.inputs[0].shape, vec![256, 256]);
+            assert_eq!(e.outputs[0].shape, vec![256, 256]);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes
+//! them on the XLA CPU client from the Layer-3 hot path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so the client
+//! lives on a dedicated **runtime service thread** that owns the compile
+//! cache; the rest of the system talks to it through a cloneable
+//! [`RuntimeHandle`] (an actor, in effect). On this 1-core testbed the
+//! serialization this imposes costs nothing; in a multi-process deployment
+//! each worker process gets its own service thread.
+
+pub mod manifest;
+pub mod bridge;
+pub mod service;
+
+pub use manifest::{ArtifactEntry, IoDesc, Manifest};
+pub use service::{RuntimeHandle, RuntimeService};
+
+/// Default artifact directory, relative to the crate root at dev time and
+/// overridable with `PARHASK_ARTIFACTS` in deployment.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("PARHASK_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}

@@ -1,0 +1,359 @@
+//! The runtime service: a dedicated thread owning the PJRT client and the
+//! compile cache, serving execute requests over channels.
+//!
+//! Why an actor: `xla::PjRtClient` is `Rc`-based and `!Send`, but workers
+//! are threads. Confining the client to one thread keeps the unsafe surface
+//! at zero while giving every thread a cheap, cloneable [`RuntimeHandle`].
+//! Requests carry host tensors; the service bridges to literals, executes,
+//! and bridges back.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::bridge::{literal_to_tensor, tensor_to_literal};
+use crate::runtime::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::{log_debug, log_info};
+
+enum Request {
+    /// Execute `artifact` with `args`; reply with outputs.
+    Execute {
+        artifact: String,
+        args: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    /// Warm the compile cache.
+    Precompile {
+        artifact: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Request>,
+    manifest: Arc<Manifest>,
+}
+
+impl RuntimeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact synchronously. Inputs are validated against the
+    /// manifest before they reach PJRT, so wiring bugs surface with task
+    /// context instead of an XLA abort.
+    pub fn execute(&self, artifact: &str, args: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.require(artifact)?;
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "artifact {artifact}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (a, d)) in args.iter().zip(&entry.inputs).enumerate() {
+            if a.shape() != d.shape.as_slice() || a.dtype() != d.dtype {
+                bail!(
+                    "artifact {artifact} input {i}: expected {}{:?}, got {}{:?}",
+                    d.dtype.name(),
+                    d.shape,
+                    a.dtype().name(),
+                    a.shape()
+                );
+            }
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute {
+                artifact: artifact.to_string(),
+                args,
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
+    /// Compile an artifact ahead of first use.
+    pub fn precompile(&self, artifact: &str) -> Result<()> {
+        self.manifest.require(artifact)?;
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Precompile {
+                artifact: artifact.to_string(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+}
+
+/// Owns the service thread; dropping it shuts the thread down.
+pub struct RuntimeService {
+    handle: RuntimeHandle,
+    join: Option<JoinHandle<()>>,
+    tx: mpsc::Sender<Request>,
+}
+
+impl RuntimeService {
+    /// Start the service for the given artifact dir (loads the manifest).
+    pub fn start(artifact_dir: PathBuf) -> Result<RuntimeService> {
+        let manifest = Arc::new(Manifest::load(&artifact_dir)?);
+        Self::start_with_manifest(manifest)
+    }
+
+    /// Start against the default artifact dir.
+    pub fn start_default() -> Result<RuntimeService> {
+        Self::start(crate::runtime::default_artifact_dir())
+    }
+
+    pub fn start_with_manifest(manifest: Arc<Manifest>) -> Result<RuntimeService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let m2 = Arc::clone(&manifest);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || service_loop(rx, m2, ready_tx))
+            .context("spawning runtime thread")?;
+        // Propagate client-construction failure to the caller.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during startup"))??;
+        let handle = RuntimeHandle {
+            tx: tx.clone(),
+            manifest,
+        };
+        Ok(RuntimeService {
+            handle,
+            join: Some(join),
+            tx,
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn service_loop(
+    rx: mpsc::Receiver<Request>,
+    manifest: Arc<Manifest>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("creating PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    log_info!(
+        "runtime",
+        "PJRT up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Precompile { artifact, reply } => {
+                let r = compile_cached(&client, &manifest, &mut cache, &artifact).map(|_| ());
+                let _ = reply.send(r);
+            }
+            Request::Execute {
+                artifact,
+                args,
+                reply,
+            } => {
+                let r = (|| -> Result<Vec<Tensor>> {
+                    let t0 = crate::util::now_ns();
+                    compile_cached(&client, &manifest, &mut cache, &artifact)?;
+                    let exe = cache.get(&artifact).unwrap();
+                    let lits: Vec<xla::Literal> = args
+                        .iter()
+                        .map(tensor_to_literal)
+                        .collect::<Result<Vec<_>>>()?;
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .with_context(|| format!("executing {artifact}"))?;
+                    let result = bufs[0][0]
+                        .to_literal_sync()
+                        .context("fetching result literal")?;
+                    // Artifacts are lowered with return_tuple=True.
+                    let parts = result.to_tuple().context("untupling result")?;
+                    let out = parts
+                        .iter()
+                        .map(literal_to_tensor)
+                        .collect::<Result<Vec<_>>>()?;
+                    log_debug!(
+                        "runtime",
+                        "{artifact}: {} -> {} in {}us",
+                        args.len(),
+                        out.len(),
+                        (crate::util::now_ns() - t0) / 1000
+                    );
+                    Ok(out)
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+    log_info!("runtime", "PJRT service shutting down");
+}
+
+fn compile_cached<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(artifact) {
+        let path = manifest.hlo_path(artifact)?;
+        let t0 = crate::util::now_ns();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {artifact}"))?;
+        log_info!(
+            "runtime",
+            "compiled {artifact} in {}ms",
+            (crate::util::now_ns() - t0) / 1_000_000
+        );
+        cache.insert(artifact.to_string(), exe);
+    }
+    Ok(cache.get(artifact).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> Option<RuntimeService> {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: artifacts not built");
+            return None;
+        }
+        Some(RuntimeService::start(dir).unwrap())
+    }
+
+    #[test]
+    fn matmul_artifact_matches_host_oracle() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let a = Tensor::uniform(vec![64, 64], 1);
+        let b = Tensor::uniform(vec![64, 64], 2);
+        let out = h.execute("matmul_64", vec![a.clone(), b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        let oracle = a.matmul(&b).unwrap();
+        assert!(
+            out[0].allclose(&oracle, 1e-4, 1e-4),
+            "max diff {}",
+            out[0].max_abs_diff(&oracle).unwrap()
+        );
+    }
+
+    #[test]
+    fn matgen_is_deterministic_in_seed() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let g1 = h.execute("matgen_64", vec![Tensor::scalar_i32(7)]).unwrap();
+        let g2 = h.execute("matgen_64", vec![Tensor::scalar_i32(7)]).unwrap();
+        let g3 = h.execute("matgen_64", vec![Tensor::scalar_i32(8)]).unwrap();
+        assert_eq!(g1[0], g2[0]);
+        assert_ne!(g1[0], g3[0]);
+        assert_eq!(g1[0].shape(), &[64, 64]);
+    }
+
+    #[test]
+    fn matsum_matches_host_oracle() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let a = Tensor::uniform(vec![64, 64], 5);
+        let out = h.execute("matsum_64", vec![a.clone()]).unwrap();
+        let got = out[0].scalar().unwrap();
+        let want = a.sumsq().unwrap();
+        assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+    }
+
+    #[test]
+    fn fused_round_equals_pipeline() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let fused = h
+            .execute(
+                "matround_64",
+                vec![Tensor::scalar_i32(1), Tensor::scalar_i32(2)],
+            )
+            .unwrap()[0]
+            .scalar()
+            .unwrap();
+        let a = h.execute("matgen_64", vec![Tensor::scalar_i32(1)]).unwrap();
+        let b = h.execute("matgen_64", vec![Tensor::scalar_i32(2)]).unwrap();
+        let c = h
+            .execute("matmul_64", vec![a[0].clone(), b[0].clone()])
+            .unwrap();
+        let s = h.execute("matsum_64", vec![c[0].clone()]).unwrap()[0]
+            .scalar()
+            .unwrap();
+        assert!((fused - s).abs() / s.abs() < 1e-4, "{fused} vs {s}");
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shapes() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let bad = Tensor::uniform(vec![32, 32], 0);
+        let err = h
+            .execute("matmul_64", vec![bad.clone(), bad])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected f32[64, 64]"), "{err}");
+        assert!(h.execute("matmul_64", vec![]).is_err());
+        assert!(h.execute("no_such_artifact", vec![]).is_err());
+    }
+
+    #[test]
+    fn handle_is_send_and_usable_from_threads() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let g = h
+                        .execute("matgen_64", vec![Tensor::scalar_i32(i)])
+                        .unwrap();
+                    g[0].sumsq().unwrap()
+                })
+            })
+            .collect();
+        let sums: Vec<f32> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        assert!(sums.iter().all(|s| *s > 0.0));
+    }
+}

@@ -1,0 +1,330 @@
+//! Chase–Lev work-stealing deque (Chase & Lev, SPAA'05; memory orderings
+//! per Lê et al., PPoPP'13).
+//!
+//! One owner thread pushes/pops at the *bottom*; any number of thieves
+//! steal from the *top*. Restricted to `T: Copy` (we store task ids), which
+//! sidesteps drop-safety entirely: a lost race just re-reads a slot.
+//!
+//! The ring buffer grows by doubling; retired buffers are parked until the
+//! deque drops (the standard no-GC reclamation strategy — bounded leak of
+//! log₂(peak) buffers, freed at drop).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicIsize, AtomicPtr, Ordering};
+use std::sync::Mutex;
+
+use crossbeam_utils::CachePadded;
+
+/// Result of a steal attempt.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Steal<T> {
+    Empty,
+    /// Lost a race; try again.
+    Retry,
+    Success(T),
+}
+
+struct Buffer<T> {
+    cap: usize,
+    mask: usize,
+    slots: Box<[UnsafeCell<T>]>,
+}
+
+impl<T: Copy + Default> Buffer<T> {
+    fn new(cap: usize) -> *mut Buffer<T> {
+        debug_assert!(cap.is_power_of_two());
+        let slots: Box<[UnsafeCell<T>]> =
+            (0..cap).map(|_| UnsafeCell::new(T::default())).collect();
+        Box::into_raw(Box::new(Buffer {
+            cap,
+            mask: cap - 1,
+            slots,
+        }))
+    }
+
+    unsafe fn read(&self, i: isize) -> T {
+        *self.slots[(i as usize) & self.mask].get()
+    }
+
+    unsafe fn write(&self, i: isize, v: T) {
+        *self.slots[(i as usize) & self.mask].get() = v;
+    }
+}
+
+/// The deque. Owner side is NOT `Sync`-safe for push/pop — use
+/// [`WorkDeque::stealer`] handles for other threads.
+pub struct WorkDeque<T: Copy + Default> {
+    top: CachePadded<AtomicIsize>,
+    bottom: CachePadded<AtomicIsize>,
+    buf: AtomicPtr<Buffer<T>>,
+    /// Retired buffers, freed on drop.
+    retired: Mutex<Vec<*mut Buffer<T>>>,
+}
+
+// Safety: all cross-thread access goes through atomics with the C11
+// Chase-Lev protocol; `T: Copy` means a torn logical read can only yield a
+// value that loses its race and is discarded.
+unsafe impl<T: Copy + Default + Send> Send for WorkDeque<T> {}
+unsafe impl<T: Copy + Default + Send> Sync for WorkDeque<T> {}
+
+impl<T: Copy + Default> WorkDeque<T> {
+    pub fn new() -> Self {
+        Self::with_capacity(64)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.next_power_of_two().max(2);
+        WorkDeque {
+            top: CachePadded::new(AtomicIsize::new(0)),
+            bottom: CachePadded::new(AtomicIsize::new(0)),
+            buf: AtomicPtr::new(Buffer::new(cap)),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Approximate occupancy (racy; for policies/metrics only).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner: push at the bottom. Grows when full.
+    ///
+    /// Safety contract: must only be called from the owner thread.
+    pub fn push(&self, v: T) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = self.buf.load(Ordering::Relaxed);
+        unsafe {
+            if b - t >= (*buf).cap as isize {
+                buf = self.grow(b, t, buf);
+            }
+            (*buf).write(b, v);
+        }
+        self.bottom.store(b + 1, Ordering::Release);
+    }
+
+    /// Owner: pop from the bottom (LIFO — cache-warm tasks first).
+    pub fn pop(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = self.buf.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // empty: restore
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let v = unsafe { (*buf).read(b) };
+        if t == b {
+            // last element: race with thieves via CAS on top
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if won {
+                Some(v)
+            } else {
+                None
+            }
+        } else {
+            Some(v)
+        }
+    }
+
+    /// Thief: steal from the top (FIFO — oldest, likely largest subtree).
+    pub fn steal(&self) -> Steal<T> {
+        let t = self.top.load(Ordering::Acquire);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let buf = self.buf.load(Ordering::Acquire);
+        let v = unsafe { (*buf).read(t) };
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_err()
+        {
+            return Steal::Retry;
+        }
+        Steal::Success(v)
+    }
+
+    unsafe fn grow(&self, b: isize, t: isize, old: *mut Buffer<T>) -> *mut Buffer<T> {
+        let new = Buffer::new((*old).cap * 2);
+        for i in t..b {
+            (*new).write(i, (*old).read(i));
+        }
+        self.buf.store(new, Ordering::Release);
+        self.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl<T: Copy + Default> Default for WorkDeque<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy + Default> Drop for WorkDeque<T> {
+    fn drop(&mut self) {
+        unsafe {
+            drop(Box::from_raw(self.buf.load(Ordering::Relaxed)));
+            for p in self.retired.lock().unwrap().drain(..) {
+                drop(Box::from_raw(p));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifo_for_owner() {
+        let d = WorkDeque::new();
+        d.push(1u32);
+        d.push(2);
+        d.push(3);
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), Some(1));
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn fifo_for_thief() {
+        let d = WorkDeque::new();
+        d.push(1u32);
+        d.push(2);
+        assert_eq!(d.steal(), Steal::Success(1));
+        assert_eq!(d.steal(), Steal::Success(2));
+        assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let d = WorkDeque::with_capacity(2);
+        for i in 0..1000u32 {
+            d.push(i);
+        }
+        assert_eq!(d.len(), 1000);
+        for i in (0..1000).rev() {
+            assert_eq!(d.pop(), Some(i));
+        }
+    }
+
+    /// The crucial concurrency invariant: every pushed element is consumed
+    /// exactly once across owner pops and concurrent thieves.
+    #[test]
+    fn no_loss_no_duplication_under_contention() {
+        const N: u64 = 20_000;
+        const THIEVES: usize = 3;
+        let d = Arc::new(WorkDeque::<u32>::new());
+        let sum = Arc::new(AtomicU64::new(0));
+        let count = Arc::new(AtomicU64::new(0));
+
+        let thieves: Vec<_> = (0..THIEVES)
+            .map(|_| {
+                let d = Arc::clone(&d);
+                let sum = Arc::clone(&sum);
+                let count = Arc::clone(&count);
+                std::thread::spawn(move || loop {
+                    match d.steal() {
+                        Steal::Success(v) => {
+                            if v == u32::MAX {
+                                return; // poison pill: done
+                            }
+                            sum.fetch_add(v as u64, Ordering::Relaxed);
+                            count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => std::hint::spin_loop(),
+                    }
+                })
+            })
+            .collect();
+
+        // Owner: interleave pushes and pops.
+        let mut owner_sum = 0u64;
+        let mut owner_count = 0u64;
+        for i in 1..=N {
+            d.push(i as u32);
+            if i % 3 == 0 {
+                if let Some(v) = d.pop() {
+                    owner_sum += v as u64;
+                    owner_count += 1;
+                }
+            }
+        }
+        // Drain what's left as the owner.
+        while let Some(v) = d.pop() {
+            owner_sum += v as u64;
+            owner_count += 1;
+        }
+        // Dismiss thieves.
+        for _ in 0..THIEVES {
+            d.push(u32::MAX);
+        }
+        for t in thieves {
+            t.join().unwrap();
+        }
+        // Owner may have popped a poison pill before a thief saw it; drain
+        // any leftovers.
+        while let Some(v) = d.pop() {
+            if v != u32::MAX {
+                owner_sum += v as u64;
+                owner_count += 1;
+            }
+        }
+
+        let total_count = owner_count + count.load(Ordering::Relaxed);
+        let total_sum = owner_sum + sum.load(Ordering::Relaxed);
+        assert_eq!(total_count, N, "every element consumed exactly once");
+        assert_eq!(total_sum, N * (N + 1) / 2, "no element altered");
+    }
+
+    #[test]
+    fn concurrent_growth_is_safe() {
+        let d = Arc::new(WorkDeque::<u32>::with_capacity(2));
+        let stop = Arc::new(AtomicU64::new(0));
+        let thief = {
+            let d = Arc::clone(&d);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut got = 0u64;
+                while stop.load(Ordering::Relaxed) == 0 {
+                    if let Steal::Success(_) = d.steal() {
+                        got += 1;
+                    }
+                }
+                got
+            })
+        };
+        let mut popped = 0u64;
+        for round in 0..200 {
+            for i in 0..64u32 {
+                d.push(round * 64 + i);
+            }
+            while d.pop().is_some() {
+                popped += 1;
+            }
+        }
+        stop.store(1, Ordering::Relaxed);
+        let stolen = thief.join().unwrap();
+        assert_eq!(popped + stolen, 200 * 64);
+    }
+}

@@ -1,0 +1,292 @@
+//! Engine-agnostic greedy scheduler state — the paper's core loop:
+//! *"greedily schedules tasks to worker nodes as their inputs are ready"*.
+//!
+//! Both the cluster leader (real time) and the discrete-event simulator
+//! (virtual time) drive this same state machine, so policy behaviour is
+//! identical across them by construction.
+//!
+//! Ready tasks are prioritized by *descending estimated cost* (longest
+//! processing time first — the classic greedy-makespan heuristic); ties
+//! break on task id for determinism.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::ir::task::TaskId;
+use crate::ir::TaskProgram;
+
+use super::policy::{place, PlacementPolicy};
+use super::WorkerId;
+
+#[derive(PartialEq, Eq)]
+struct Prio {
+    cost: u64,
+    // inverted id for deterministic max-heap tie-break (lower id first)
+    id: std::cmp::Reverse<u32>,
+}
+
+impl Ord for Prio {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.cost, &self.id).cmp(&(other.cost, &other.id))
+    }
+}
+
+impl PartialOrd for Prio {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Greedy scheduler state over one program.
+pub struct GreedyState {
+    dep_counts: Vec<usize>,
+    ready: BinaryHeap<(Prio, TaskId)>,
+    /// queued + running per worker
+    loads: Vec<usize>,
+    /// where each finished task's outputs live (for locality placement)
+    locations: HashMap<TaskId, WorkerId>,
+    completed: usize,
+    total: usize,
+    rr_counter: usize,
+    policy: PlacementPolicy,
+}
+
+impl GreedyState {
+    pub fn new(program: &TaskProgram, n_workers: usize, policy: PlacementPolicy) -> GreedyState {
+        let dep_counts = program.dep_counts();
+        let mut s = GreedyState {
+            dep_counts,
+            ready: BinaryHeap::new(),
+            loads: vec![0; n_workers],
+            locations: HashMap::new(),
+            completed: 0,
+            total: program.len(),
+            rr_counter: 0,
+            policy,
+        };
+        for t in program.roots() {
+            s.push_ready(program, t);
+        }
+        s
+    }
+
+    fn push_ready(&mut self, program: &TaskProgram, t: TaskId) {
+        let cost = program.task(t).est.flops;
+        self.ready.push((
+            Prio {
+                cost,
+                id: std::cmp::Reverse(t.0),
+            },
+            t,
+        ));
+    }
+
+    pub fn n_ready(&self) -> usize {
+        self.ready.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completed == self.total
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    pub fn loads(&self) -> &[usize] {
+        &self.loads
+    }
+
+    pub fn location(&self, t: TaskId) -> Option<WorkerId> {
+        self.locations.get(&t).copied()
+    }
+
+    /// Pop the highest-priority ready task and place it per policy.
+    /// Returns `None` when nothing is ready.
+    pub fn assign_next(&mut self, program: &TaskProgram) -> Option<(TaskId, WorkerId)> {
+        let (_, task) = self.ready.pop()?;
+        // input holders for locality
+        let holders: Vec<WorkerId> = program
+            .task(task)
+            .deps()
+            .iter()
+            .filter_map(|d| self.locations.get(d).copied())
+            .collect();
+        let w = place(self.policy, task, &self.loads, &holders, &mut self.rr_counter);
+        self.loads[w.index()] += 1;
+        Some((task, w))
+    }
+
+    /// Like [`assign_next`] but pinned to a specific worker (used when an
+    /// idle worker asks for work — pull model).
+    pub fn assign_to(&mut self, _program: &TaskProgram, w: WorkerId) -> Option<TaskId> {
+        let (_, task) = self.ready.pop()?;
+        self.loads[w.index()] += 1;
+        Some(task)
+    }
+
+    /// Record completion; returns the newly-ready tasks.
+    pub fn on_done(&mut self, program: &TaskProgram, task: TaskId, w: WorkerId) -> Vec<TaskId> {
+        self.completed += 1;
+        self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+        self.locations.insert(task, w);
+        let mut newly = Vec::new();
+        for &c in program.consumers(task) {
+            let dc = &mut self.dep_counts[c.index()];
+            *dc -= 1;
+            if *dc == 0 {
+                newly.push(c);
+                self.push_ready(program, c);
+            }
+        }
+        newly
+    }
+
+    /// Undo an assignment that could not be delivered (worker full or
+    /// dead): decrement the load and put the task back on the ready heap.
+    pub fn unassign(&mut self, program: &TaskProgram, task: TaskId, w: WorkerId) {
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+        }
+        self.push_ready(program, task);
+    }
+
+    /// Assign a specific ready-popped task to a specific worker,
+    /// bypassing the placement policy (leader-side overrides).
+    pub fn force_assign(&mut self, task: TaskId, w: WorkerId) {
+        let _ = task;
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] += 1;
+        }
+    }
+
+    /// Re-enqueue tasks after a worker failure (purity makes re-execution
+    /// safe; IO tasks are re-run too — the paper's model treats simulated
+    /// effects as replayable, see DESIGN.md §7).
+    pub fn requeue(&mut self, program: &TaskProgram, tasks: &[TaskId], w: WorkerId) {
+        for &t in tasks {
+            self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+            self.push_ready(program, t);
+        }
+    }
+
+    /// Drop a dead worker from placement consideration by pinning its load
+    /// to `usize::MAX` (least-loaded never picks it; round-robin skips via
+    /// modulo on live set is handled by the leader).
+    pub fn mark_dead(&mut self, w: WorkerId) {
+        self.loads[w.index()] = usize::MAX;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{ArgRef, CostEst, OpKind};
+    use crate::ir::ProgramBuilder;
+
+    fn prog_fan(costs: &[u64]) -> TaskProgram {
+        let mut b = ProgramBuilder::new();
+        for (i, c) in costs.iter().enumerate() {
+            b.push(
+                OpKind::Synthetic { compute_us: *c },
+                vec![],
+                1,
+                CostEst { flops: *c, bytes_in: 0, bytes_out: 0 },
+                format!("t{i}"),
+            );
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn highest_cost_first() {
+        let p = prog_fan(&[5, 50, 20]);
+        let mut s = GreedyState::new(&p, 2, PlacementPolicy::LeastLoaded);
+        let (t, _) = s.assign_next(&p).unwrap();
+        assert_eq!(t, TaskId(1)); // cost 50
+        let (t, _) = s.assign_next(&p).unwrap();
+        assert_eq!(t, TaskId(2)); // cost 20
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let p = prog_fan(&[7, 7, 7]);
+        let mut s = GreedyState::new(&p, 1, PlacementPolicy::RoundRobin);
+        let order: Vec<u32> = std::iter::from_fn(|| s.assign_next(&p).map(|(t, _)| t.0)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn dependencies_gate_readiness() {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+        let c = b.push(
+            OpKind::Synthetic { compute_us: 1 },
+            vec![ArgRef::out(a, 0)],
+            1,
+            CostEst::ZERO,
+            "c",
+        );
+        let p = b.build().unwrap();
+        let mut s = GreedyState::new(&p, 1, PlacementPolicy::LeastLoaded);
+        assert_eq!(s.n_ready(), 1);
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, a);
+        assert!(s.assign_next(&p).is_none()); // c not ready yet
+        let newly = s.on_done(&p, a, w);
+        assert_eq!(newly, vec![c]);
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, c);
+        s.on_done(&p, c, w);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn loads_track_assignments() {
+        let p = prog_fan(&[1, 1, 1, 1]);
+        let mut s = GreedyState::new(&p, 2, PlacementPolicy::LeastLoaded);
+        let mut assigned = Vec::new();
+        while let Some(a) = s.assign_next(&p) {
+            assigned.push(a);
+        }
+        // least-loaded alternates 2-2
+        assert_eq!(s.loads(), &[2, 2]);
+        for (t, w) in assigned {
+            s.on_done(&p, t, w);
+        }
+        assert_eq!(s.loads(), &[0, 0]);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn requeue_after_failure() {
+        let p = prog_fan(&[1, 1]);
+        let mut s = GreedyState::new(&p, 2, PlacementPolicy::LeastLoaded);
+        let (t0, w0) = s.assign_next(&p).unwrap();
+        let _ = s.assign_next(&p).unwrap();
+        // w0 dies holding t0
+        s.requeue(&p, &[t0], w0);
+        s.mark_dead(w0);
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, t0);
+        assert_ne!(w, w0); // least-loaded never picks the dead (MAX-load) worker
+    }
+
+    #[test]
+    fn locality_assignment_uses_locations() {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+        let _c = b.push(
+            OpKind::Synthetic { compute_us: 1 },
+            vec![ArgRef::out(a, 0)],
+            1,
+            CostEst::ZERO,
+            "c",
+        );
+        let p = b.build().unwrap();
+        let mut s = GreedyState::new(&p, 4, PlacementPolicy::LocalityAware);
+        let (t, _) = s.assign_next(&p).unwrap();
+        s.on_done(&p, t, WorkerId(3));
+        let (_, w) = s.assign_next(&p).unwrap();
+        assert_eq!(w, WorkerId(3)); // follows the input
+    }
+}

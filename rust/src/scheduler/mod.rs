@@ -1,0 +1,38 @@
+//! Scheduling: the paper's "greedily schedules tasks to worker nodes as
+//! their inputs are ready" plus the work-stealing machinery its keyword
+//! list promises.
+//!
+//! * [`deque`] — Chase–Lev work-stealing deque (lock-free, owner + thieves);
+//! * [`policy`] — placement (which worker gets a ready task) and stealing
+//!   (which victim an idle worker raids) policies, swept by Ablation A/B;
+//! * [`greedy`] — engine-agnostic greedy scheduler state machine shared by
+//!   the cluster leader and the discrete-event simulator;
+//! * [`local`] — shared-memory work-stealing pool (the GHC `-N` SMP
+//!   baseline of Figure 2);
+//! * [`trace`] — schedule traces, validity checking, utilization, Gantt.
+
+pub mod deque;
+pub mod greedy;
+pub mod local;
+pub mod policy;
+pub mod trace;
+
+pub use greedy::GreedyState;
+pub use policy::{PlacementPolicy, StealPolicy};
+pub use trace::{RunResult, ScheduleTrace, TraceEvent};
+
+/// Worker identifier (0-based, dense).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct WorkerId(pub u32);
+
+impl WorkerId {
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for WorkerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "w{}", self.0)
+    }
+}

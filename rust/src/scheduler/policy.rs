@@ -1,0 +1,244 @@
+//! Placement and stealing policies (Ablations A and B).
+
+use crate::ir::task::TaskId;
+use crate::util::rng::Rng;
+
+use super::WorkerId;
+
+/// Which worker a ready task is assigned to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PlacementPolicy {
+    /// Cycle through workers regardless of load.
+    RoundRobin,
+    /// Fewest queued+running tasks.
+    LeastLoaded,
+    /// Prefer workers already holding the task's inputs (falls back to
+    /// least-loaded among ties) — only meaningful with worker-side caching.
+    LocalityAware,
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
+            "least-loaded" | "ll" => Some(PlacementPolicy::LeastLoaded),
+            "locality" | "loc" => Some(PlacementPolicy::LocalityAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::LocalityAware => "locality",
+        }
+    }
+}
+
+/// How an idle worker (or the leader on its behalf) picks a steal victim.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum StealPolicy {
+    /// No stealing: tasks stay where they were placed.
+    None,
+    /// Uniformly random victim (classic Cilk/BLumofe-Leiserson).
+    RandomVictim,
+    /// The worker with the deepest queue.
+    RichestVictim,
+}
+
+impl StealPolicy {
+    pub fn parse(s: &str) -> Option<StealPolicy> {
+        match s {
+            "none" => Some(StealPolicy::None),
+            "random" => Some(StealPolicy::RandomVictim),
+            "richest" => Some(StealPolicy::RichestVictim),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StealPolicy::None => "none",
+            StealPolicy::RandomVictim => "random",
+            StealPolicy::RichestVictim => "richest",
+        }
+    }
+
+    /// Choose a victim for `thief` among workers with the given queue
+    /// depths. Returns `None` when nothing is worth stealing.
+    pub fn pick_victim(
+        &self,
+        thief: WorkerId,
+        queue_depths: &[usize],
+        rng: &mut Rng,
+    ) -> Option<WorkerId> {
+        let candidates: Vec<usize> = queue_depths
+            .iter()
+            .enumerate()
+            .filter(|(w, d)| *w != thief.index() && **d > 0)
+            .map(|(w, _)| w)
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        match self {
+            StealPolicy::None => None,
+            StealPolicy::RandomVictim => {
+                Some(WorkerId(candidates[rng.range(0, candidates.len())] as u32))
+            }
+            StealPolicy::RichestVictim => candidates
+                .into_iter()
+                .max_by_key(|w| queue_depths[*w])
+                .map(|w| WorkerId(w as u32)),
+        }
+    }
+}
+
+/// Pick the placement target for a ready task.
+///
+/// `loads` = queued+running per worker; `holders` = workers already caching
+/// this task's inputs (empty slice when unknown).
+pub fn place(
+    policy: PlacementPolicy,
+    task: TaskId,
+    loads: &[usize],
+    holders: &[WorkerId],
+    rr_counter: &mut usize,
+) -> WorkerId {
+    debug_assert!(!loads.is_empty());
+    match policy {
+        PlacementPolicy::RoundRobin => {
+            let w = WorkerId((*rr_counter % loads.len()) as u32);
+            *rr_counter += 1;
+            w
+        }
+        PlacementPolicy::LeastLoaded => least_loaded(loads),
+        PlacementPolicy::LocalityAware => {
+            if holders.is_empty() {
+                least_loaded(loads)
+            } else {
+                // among holders, the least loaded
+                holders
+                    .iter()
+                    .copied()
+                    .min_by_key(|w| loads[w.index()])
+                    .unwrap_or_else(|| least_loaded(loads))
+            }
+        }
+    }
+    .tap_trace(task)
+}
+
+fn least_loaded(loads: &[usize]) -> WorkerId {
+    let (w, _) = loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, l)| **l)
+        .expect("at least one worker");
+    WorkerId(w as u32)
+}
+
+trait TapTrace {
+    fn tap_trace(self, task: TaskId) -> Self;
+}
+
+impl TapTrace for WorkerId {
+    fn tap_trace(self, task: TaskId) -> Self {
+        crate::log_trace!("place", "{task} -> {self}");
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut ctr = 0;
+        let loads = vec![0usize; 3];
+        let picks: Vec<u32> = (0..6)
+            .map(|i| place(PlacementPolicy::RoundRobin, TaskId(i), &loads, &[], &mut ctr).0)
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum() {
+        let mut ctr = 0;
+        let w = place(
+            PlacementPolicy::LeastLoaded,
+            TaskId(0),
+            &[3, 1, 2],
+            &[],
+            &mut ctr,
+        );
+        assert_eq!(w, WorkerId(1));
+    }
+
+    #[test]
+    fn locality_prefers_holders_then_load() {
+        let mut ctr = 0;
+        let holders = [WorkerId(2), WorkerId(0)];
+        let w = place(
+            PlacementPolicy::LocalityAware,
+            TaskId(0),
+            &[5, 0, 1],
+            &holders,
+            &mut ctr,
+        );
+        assert_eq!(w, WorkerId(2)); // least-loaded among holders, not global min
+
+        // no holders: falls back to global least-loaded
+        let w = place(
+            PlacementPolicy::LocalityAware,
+            TaskId(0),
+            &[5, 0, 1],
+            &[],
+            &mut ctr,
+        );
+        assert_eq!(w, WorkerId(1));
+    }
+
+    #[test]
+    fn steal_policies() {
+        let mut rng = Rng::new(1);
+        let depths = [0usize, 4, 2, 0];
+        assert_eq!(
+            StealPolicy::None.pick_victim(WorkerId(0), &depths, &mut rng),
+            None
+        );
+        assert_eq!(
+            StealPolicy::RichestVictim.pick_victim(WorkerId(0), &depths, &mut rng),
+            Some(WorkerId(1))
+        );
+        for _ in 0..20 {
+            let v = StealPolicy::RandomVictim
+                .pick_victim(WorkerId(0), &depths, &mut rng)
+                .unwrap();
+            assert!(v == WorkerId(1) || v == WorkerId(2));
+        }
+        // thief's own queue is never a victim
+        let depths = [9usize, 0, 0, 0];
+        assert_eq!(
+            StealPolicy::RandomVictim.pick_victim(WorkerId(0), &depths, &mut rng),
+            None
+        );
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for p in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::LeastLoaded,
+            PlacementPolicy::LocalityAware,
+        ] {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        for s in [StealPolicy::None, StealPolicy::RandomVictim, StealPolicy::RichestVictim] {
+            assert_eq!(StealPolicy::parse(s.name()), Some(s));
+        }
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+    }
+}

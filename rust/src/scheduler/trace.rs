@@ -1,0 +1,244 @@
+//! Schedule traces: what ran where and when, with validation against the
+//! program's dependency structure — the property the whole system must
+//! preserve.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::ir::task::{TaskId, Value};
+use crate::ir::TaskProgram;
+
+use super::WorkerId;
+
+/// One task execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub task: TaskId,
+    pub worker: WorkerId,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Full schedule trace of one run.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleTrace {
+    pub events: Vec<TraceEvent>,
+    /// Bytes shipped worker↔leader (0 for shared-memory engines).
+    pub bytes_transferred: u64,
+    /// Wall-clock of the whole run (ns); ≥ max event end.
+    pub wall_ns: u64,
+}
+
+/// Outputs + trace of one engine run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub outputs: Vec<Value>,
+    pub trace: ScheduleTrace,
+}
+
+impl ScheduleTrace {
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    /// Makespan: last end − first start.
+    pub fn makespan_ns(&self) -> u64 {
+        let start = self.events.iter().map(|e| e.start_ns).min().unwrap_or(0);
+        let end = self.events.iter().map(|e| e.end_ns).max().unwrap_or(0);
+        end.saturating_sub(start)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.events
+            .iter()
+            .map(|e| e.worker.index() + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-worker busy nanoseconds.
+    pub fn busy_ns(&self) -> Vec<u64> {
+        let mut busy = vec![0u64; self.n_workers()];
+        for e in &self.events {
+            busy[e.worker.index()] += e.end_ns - e.start_ns;
+        }
+        busy
+    }
+
+    /// Mean worker utilization over the makespan.
+    pub fn utilization(&self) -> f64 {
+        let span = self.makespan_ns();
+        if span == 0 || self.events.is_empty() {
+            return 0.0;
+        }
+        let busy: u64 = self.busy_ns().iter().sum();
+        busy as f64 / (span as f64 * self.n_workers() as f64)
+    }
+
+    /// Validate against a program:
+    /// 1. every task ran exactly once;
+    /// 2. no task started before all its dependencies ended
+    ///    (allowing equal timestamps — the simulator is discrete);
+    /// 3. no worker ran two tasks at overlapping times.
+    pub fn validate(&self, program: &TaskProgram) -> Result<()> {
+        let mut by_task: HashMap<TaskId, &TraceEvent> = HashMap::new();
+        for e in &self.events {
+            if by_task.insert(e.task, e).is_some() {
+                bail!("task {} executed more than once", e.task);
+            }
+            if e.end_ns < e.start_ns {
+                bail!("task {} ends before it starts", e.task);
+            }
+        }
+        for t in program.tasks() {
+            let Some(ev) = by_task.get(&t.id) else {
+                bail!("task {} never executed", t.id);
+            };
+            for d in t.deps() {
+                let dep_ev = by_task
+                    .get(&d)
+                    .ok_or_else(|| anyhow::anyhow!("dependency {d} of {} missing", t.id))?;
+                if ev.start_ns < dep_ev.end_ns {
+                    bail!(
+                        "task {} started at {} before dependency {} finished at {}",
+                        t.id,
+                        ev.start_ns,
+                        d,
+                        dep_ev.end_ns
+                    );
+                }
+            }
+        }
+        // per-worker serial execution
+        let mut per_worker: HashMap<WorkerId, Vec<&TraceEvent>> = HashMap::new();
+        for e in &self.events {
+            per_worker.entry(e.worker).or_default().push(e);
+        }
+        for (w, mut evs) in per_worker {
+            evs.sort_by_key(|e| e.start_ns);
+            for pair in evs.windows(2) {
+                if pair[1].start_ns < pair[0].end_ns {
+                    bail!(
+                        "worker {w} overlaps: {} [{}..{}] and {} [{}..{}]",
+                        pair[0].task,
+                        pair[0].start_ns,
+                        pair[0].end_ns,
+                        pair[1].task,
+                        pair[1].start_ns,
+                        pair[1].end_ns
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// ASCII Gantt chart (one row per worker, `width` columns).
+    pub fn gantt(&self, width: usize) -> String {
+        let span = self.makespan_ns().max(1);
+        let t0 = self.events.iter().map(|e| e.start_ns).min().unwrap_or(0);
+        let mut rows = vec![vec![b'.'; width]; self.n_workers()];
+        for e in &self.events {
+            let a = ((e.start_ns - t0) as u128 * width as u128 / span as u128) as usize;
+            let b = (((e.end_ns - t0) as u128 * width as u128).div_ceil(span as u128) as usize)
+                .min(width);
+            let ch = b"0123456789abcdefghijklmnopqrstuvwxyz"[e.task.index() % 36];
+            for c in &mut rows[e.worker.index()][a..b.max(a + 1).min(width)] {
+                *c = ch;
+            }
+        }
+        rows.iter()
+            .enumerate()
+            .map(|(i, r)| format!("w{i} |{}|", String::from_utf8_lossy(r)))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::OpKind;
+    use crate::ir::ProgramBuilder;
+
+    fn chain2() -> TaskProgram {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+        let _c = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[a], "c");
+        b.build().unwrap()
+    }
+
+    fn ev(task: u32, worker: u32, s: u64, e: u64) -> TraceEvent {
+        TraceEvent {
+            task: TaskId(task),
+            worker: WorkerId(worker),
+            start_ns: s,
+            end_ns: e,
+        }
+    }
+
+    #[test]
+    fn valid_trace_passes() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 1, 10, 25));
+        t.validate(&p).unwrap();
+        assert_eq!(t.makespan_ns(), 25);
+        assert_eq!(t.busy_ns(), vec![10, 15]);
+    }
+
+    #[test]
+    fn dependency_violation_caught() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 1, 5, 25)); // starts before dep ends
+        assert!(t.validate(&p).is_err());
+    }
+
+    #[test]
+    fn missing_and_duplicate_tasks_caught() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        assert!(t.validate(&p).is_err()); // task 1 missing
+
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(0, 0, 10, 20));
+        assert!(t.validate(&p).is_err()); // duplicate
+    }
+
+    #[test]
+    fn worker_overlap_caught() {
+        let mut b = ProgramBuilder::new();
+        b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+        b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "b");
+        let p = b.build().unwrap();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 0, 5, 15)); // same worker, overlapping
+        assert!(t.validate(&p).is_err());
+    }
+
+    #[test]
+    fn utilization_of_perfect_parallel_run() {
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 100));
+        t.push(ev(1, 1, 0, 100));
+        assert!((t.utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 50));
+        t.push(ev(1, 1, 50, 100));
+        let g = t.gantt(20);
+        assert!(g.starts_with("w0 |"));
+        assert!(g.contains("\nw1 |"));
+        assert!(g.contains('0') && g.contains('1'));
+    }
+}

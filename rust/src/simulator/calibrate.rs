@@ -1,0 +1,102 @@
+//! Calibration: time the real PJRT executables on this machine and write
+//! `artifacts/costmodel.json` so the simulator's virtual clock is anchored
+//! to measured reality (`parhask calibrate`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::RuntimeHandle;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::log_info;
+
+use super::costmodel::CostModel;
+
+/// Time one artifact: `reps` timed runs after `warmup` runs; returns mean ns.
+pub fn time_artifact(
+    rt: &RuntimeHandle,
+    name: &str,
+    warmup: usize,
+    reps: usize,
+) -> Result<u64> {
+    let entry = rt.manifest().require(name)?;
+    let mut rng = Rng::new(0xCA11);
+    // synthesize matching inputs
+    let args: Vec<Tensor> = entry
+        .inputs
+        .iter()
+        .map(|d| match d.dtype {
+            crate::tensor::DType::F32 => {
+                Tensor::uniform(d.shape.clone(), rng.next_u64() % 1000)
+            }
+            crate::tensor::DType::I32 => {
+                let n: usize = d.shape.iter().product();
+                Tensor::i32(d.shape.clone(), (0..n).map(|i| i as i32 % 7).collect()).unwrap()
+            }
+        })
+        .collect();
+    for _ in 0..warmup {
+        rt.execute(name, args.clone())
+            .with_context(|| format!("warmup of {name}"))?;
+    }
+    let t0 = crate::util::now_ns();
+    for _ in 0..reps {
+        rt.execute(name, args.clone())?;
+    }
+    Ok(((crate::util::now_ns() - t0) / reps as u64).max(1))
+}
+
+/// Calibrate every artifact in the manifest; merge into the cost model and
+/// (optionally) persist to `<dir>/costmodel.json`.
+pub fn calibrate_all(
+    rt: &RuntimeHandle,
+    reps: usize,
+    save_dir: Option<&Path>,
+) -> Result<CostModel> {
+    let mut cm = CostModel::default();
+    let names: Vec<String> = rt
+        .manifest()
+        .entries()
+        .iter()
+        .map(|e| e.name.clone())
+        .collect();
+    for name in names {
+        let ns = time_artifact(rt, &name, 1, reps)?;
+        log_info!("calibrate", "{name}: {} us/run", ns / 1000);
+        cm.set_measured(&name, ns);
+    }
+    // anchor the analytic fallback to the measured matmul rate if present
+    if let (Some(ns), Some(e)) = (
+        cm.measured("matmul_256"),
+        rt.manifest().get("matmul_256"),
+    ) {
+        cm.flops_per_ns = e.flops as f64 / ns as f64;
+    }
+    if let Some(dir) = save_dir {
+        cm.save(&dir.join("costmodel.json"))?;
+        log_info!("calibrate", "saved {}", dir.join("costmodel.json").display());
+    }
+    Ok(cm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RuntimeService;
+
+    #[test]
+    fn calibrates_small_artifacts() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let svc = RuntimeService::start(dir).unwrap();
+        let h = svc.handle();
+        let ns = time_artifact(&h, "matmul_64", 1, 3).unwrap();
+        assert!(ns > 0);
+        let bigger = time_artifact(&h, "matmul_256", 1, 3).unwrap();
+        // 256³ vs 64³ = 64x flops; even noisy, must be slower
+        assert!(bigger > ns, "matmul_256 {bigger}ns vs matmul_64 {ns}ns");
+    }
+}

@@ -1,0 +1,196 @@
+//! Per-op cost model: measured where possible, analytic where not.
+//!
+//! Costs come from three layers, first hit wins:
+//! 1. **measured** — mean ns per op key from `artifacts/costmodel.json`
+//!    (written by `parhask calibrate`, which times the real PJRT
+//!    executables on this machine);
+//! 2. **intrinsic** — `Synthetic`/`IoAction` ops carry their own duration;
+//! 3. **analytic** — `flops / flops_per_ns` from the task's estimate.
+//!
+//! The network model is bandwidth + per-message latency; defaults
+//! approximate loopback TCP (measured by the micro bench).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::ir::task::{OpKind, TaskSpec};
+use crate::util::json::Json;
+
+/// Cost model for the simulator.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// op key -> mean ns (from calibration).
+    measured: HashMap<String, u64>,
+    /// Analytic fallback: effective compute rate (flops per ns).
+    pub flops_per_ns: f64,
+    /// Network bandwidth (bytes per ns). 1 GB/s = 1.074 bytes/ns.
+    pub bytes_per_ns: f64,
+    /// Per-message latency (ns).
+    pub latency_ns: u64,
+    /// Leader dispatch overhead per assignment (ns).
+    pub dispatch_ns: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            measured: HashMap::new(),
+            // ~2 GFLOP/s effective single-core XLA-CPU f32 matmul rate —
+            // replaced by calibration whenever costmodel.json exists.
+            flops_per_ns: 2.0,
+            // ~2 GB/s loopback-ish
+            bytes_per_ns: 2.0,
+            latency_ns: 50_000,  // 50 µs per message
+            dispatch_ns: 5_000,  // 5 µs leader overhead
+        }
+    }
+}
+
+impl CostModel {
+    /// Cost key for an op (artifact name, host op label, etc.).
+    pub fn key(op: &OpKind) -> String {
+        op.label()
+    }
+
+    pub fn set_measured(&mut self, key: &str, ns: u64) {
+        self.measured.insert(key.to_string(), ns);
+    }
+
+    pub fn measured(&self, key: &str) -> Option<u64> {
+        self.measured.get(key).copied()
+    }
+
+    /// Simulated compute time of one task (ns).
+    pub fn task_cost_ns(&self, spec: &TaskSpec) -> u64 {
+        if let Some(ns) = self.measured.get(&Self::key(&spec.op)) {
+            return (*ns).max(1);
+        }
+        match &spec.op {
+            OpKind::Synthetic { compute_us } => (*compute_us * 1_000).max(1),
+            OpKind::IoAction { compute_us, .. } => (*compute_us * 1_000).max(1),
+            OpKind::Combine(_) => 1_000, // 1 µs of leader glue
+            _ => ((spec.est.flops as f64 / self.flops_per_ns) as u64).max(1),
+        }
+    }
+
+    /// Simulated transfer time for `bytes` over the wire (ns).
+    pub fn transfer_ns(&self, bytes: u64) -> u64 {
+        self.latency_ns + (bytes as f64 / self.bytes_per_ns) as u64
+    }
+
+    // -- persistence ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut measured: Vec<(&str, Json)> = Vec::new();
+        let mut keys: Vec<&String> = self.measured.keys().collect();
+        keys.sort();
+        for k in keys {
+            measured.push((k.as_str(), Json::num(self.measured[k] as f64)));
+        }
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("flops_per_ns", Json::num(self.flops_per_ns)),
+            ("bytes_per_ns", Json::num(self.bytes_per_ns)),
+            ("latency_ns", Json::num(self.latency_ns as f64)),
+            ("dispatch_ns", Json::num(self.dispatch_ns as f64)),
+            ("measured_ns", Json::Obj(
+                measured
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v))
+                    .collect(),
+            )),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CostModel> {
+        let mut cm = CostModel {
+            flops_per_ns: j
+                .get("flops_per_ns")
+                .and_then(Json::as_f64)
+                .unwrap_or(2.0),
+            bytes_per_ns: j.get("bytes_per_ns").and_then(Json::as_f64).unwrap_or(2.0),
+            latency_ns: j.get("latency_ns").and_then(Json::as_u64).unwrap_or(50_000),
+            dispatch_ns: j.get("dispatch_ns").and_then(Json::as_u64).unwrap_or(5_000),
+            measured: HashMap::new(),
+        };
+        if let Some(Json::Obj(m)) = j.get("measured_ns") {
+            for (k, v) in m {
+                cm.measured
+                    .insert(k.clone(), v.as_u64().context("bad measured ns")?);
+            }
+        }
+        Ok(cm)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<CostModel> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Load `artifacts/costmodel.json` if present, else defaults.
+    pub fn load_or_default(dir: &Path) -> CostModel {
+        Self::load(&dir.join("costmodel.json")).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{CostEst, TaskId};
+
+    fn spec(op: OpKind, flops: u64) -> TaskSpec {
+        TaskSpec {
+            id: TaskId(0),
+            op,
+            args: vec![],
+            n_outputs: 1,
+            est: CostEst { flops, bytes_in: 0, bytes_out: 0 },
+            label: "t".into(),
+        }
+    }
+
+    #[test]
+    fn measured_beats_analytic() {
+        let mut cm = CostModel::default();
+        let s = spec(OpKind::Artifact { name: "matmul_256".into() }, 2 * 256u64.pow(3));
+        let analytic = cm.task_cost_ns(&s);
+        cm.set_measured("matmul_256", 123_456);
+        assert_eq!(cm.task_cost_ns(&s), 123_456);
+        assert_ne!(analytic, 123_456);
+    }
+
+    #[test]
+    fn synthetic_uses_intrinsic_duration() {
+        let cm = CostModel::default();
+        assert_eq!(
+            cm.task_cost_ns(&spec(OpKind::Synthetic { compute_us: 7 }, 999)),
+            7_000
+        );
+    }
+
+    #[test]
+    fn transfer_has_latency_floor() {
+        let cm = CostModel::default();
+        assert!(cm.transfer_ns(0) >= cm.latency_ns);
+        assert!(cm.transfer_ns(1 << 20) > cm.transfer_ns(1 << 10));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cm = CostModel::default();
+        cm.set_measured("matmul_256", 42_000);
+        cm.set_measured("matgen_64", 9_000);
+        cm.flops_per_ns = 3.5;
+        let j = cm.to_json();
+        let back = CostModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.measured("matmul_256"), Some(42_000));
+        assert_eq!(back.flops_per_ns, 3.5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event cluster simulator.
+//!
+//! Why it exists: the paper's Figure 2 sweeps *worker count*, but this
+//! testbed has one CPU core (and the paper itself "simulated" its workers
+//! with Cloud Haskell on one box). The simulator executes the same greedy
+//! scheduler state machine as the real leader, in virtual time, with
+//! per-op costs **calibrated from real PJRT runs** (`parhask calibrate`)
+//! and an explicit network model — so scaling *shape* (who wins, where
+//! the crossover falls) is faithful even though wall-clock is not
+//! measurable here. See DESIGN.md §7 (substitution log).
+
+pub mod calibrate;
+pub mod costmodel;
+pub mod sim;
+
+pub use costmodel::CostModel;
+pub use sim::{simulate, SimConfig, SimResult};

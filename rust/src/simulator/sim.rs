@@ -1,0 +1,409 @@
+//! The discrete-event simulation proper.
+//!
+//! Drives the *same* [`GreedyState`] the real leader uses, but over
+//! virtual time:
+//!
+//! * assignment: leader pays `dispatch_ns`, then the task's non-local
+//!   argument bytes travel at the network rate; the task arrives in the
+//!   worker's FIFO queue;
+//! * compute: workers are serial servers — `start = max(free_at, arrive)`,
+//!   `end = start + cost(task)`;
+//! * completion: output bytes travel back; only then does the leader see
+//!   the completion and assign successors (exactly the real protocol's
+//!   round trip).
+//!
+//! `transfer_free: true` removes dispatch + network costs — that is the
+//! SMP/shared-memory model (and with one worker, the single-thread model),
+//! so all three Figure-2 engines come out of one simulator.
+
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use crate::ir::task::TaskId;
+use crate::ir::TaskProgram;
+use crate::scheduler::trace::{ScheduleTrace, TraceEvent};
+use crate::scheduler::{GreedyState, PlacementPolicy, WorkerId};
+
+use super::costmodel::CostModel;
+
+/// Simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_workers: usize,
+    pub placement: PlacementPolicy,
+    pub pipeline_depth: usize,
+    /// Shared-memory mode: no dispatch/network costs.
+    pub transfer_free: bool,
+}
+
+impl SimConfig {
+    pub fn cluster(n_workers: usize) -> SimConfig {
+        SimConfig {
+            n_workers,
+            placement: PlacementPolicy::LeastLoaded,
+            pipeline_depth: 2,
+            transfer_free: false,
+        }
+    }
+
+    pub fn smp(n_workers: usize) -> SimConfig {
+        SimConfig {
+            n_workers,
+            placement: PlacementPolicy::LeastLoaded,
+            pipeline_depth: 2,
+            transfer_free: true,
+        }
+    }
+
+    pub fn single() -> SimConfig {
+        SimConfig::smp(1)
+    }
+}
+
+/// Simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub makespan_ns: u64,
+    pub trace: ScheduleTrace,
+    pub bytes_transferred: u64,
+    pub utilization: f64,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Ev {
+    /// Assignment lands in the worker queue.
+    Arrive(WorkerId, TaskId),
+    /// Worker finished computing; output starts its trip back.
+    Computed(WorkerId, TaskId),
+    /// Leader has the result.
+    LeaderSees(WorkerId, TaskId),
+}
+
+#[derive(PartialEq, Eq)]
+struct QEv {
+    t: u64,
+    seq: u64, // FIFO tie-break for determinism
+    ev: Ev,
+}
+
+impl Ord for QEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap via reverse
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+impl PartialOrd for QEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Run the simulation; deterministic for a given (program, config, model).
+pub fn simulate(program: &TaskProgram, cm: &CostModel, cfg: &SimConfig) -> Result<SimResult> {
+    anyhow::ensure!(cfg.n_workers >= 1, "need at least one worker");
+    let mut state = GreedyState::new(program, cfg.n_workers, cfg.placement);
+    let mut heap: BinaryHeap<QEv> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut now = 0u64;
+    let mut free_at = vec![0u64; cfg.n_workers];
+    let mut inflight = vec![0usize; cfg.n_workers];
+    let mut trace = ScheduleTrace::default();
+    let mut bytes = 0u64;
+
+    let push = |heap: &mut BinaryHeap<QEv>, t: u64, ev: Ev, seq: &mut u64| {
+        heap.push(QEv { t, seq: *seq, ev });
+        *seq += 1;
+    };
+
+    // initial assignments
+    pump(
+        program, cm, cfg, &mut state, &mut inflight, now, &mut heap, &mut seq, &mut bytes,
+    );
+
+    while let Some(QEv { t, ev, .. }) = heap.pop() {
+        debug_assert!(t >= now, "time went backwards");
+        now = t;
+        match ev {
+            Ev::Arrive(w, task) => {
+                let start = now.max(free_at[w.index()]);
+                let cost = cm.task_cost_ns(program.task(task));
+                let end = start + cost;
+                free_at[w.index()] = end;
+                trace.push(TraceEvent {
+                    task,
+                    worker: w,
+                    start_ns: start,
+                    end_ns: end,
+                });
+                push(&mut heap, end, Ev::Computed(w, task), &mut seq);
+            }
+            Ev::Computed(w, task) => {
+                let out_bytes: u64 = program.task(task).est.bytes_out;
+                let dt = if cfg.transfer_free {
+                    0
+                } else {
+                    bytes += out_bytes;
+                    cm.transfer_ns(out_bytes)
+                };
+                push(&mut heap, now + dt, Ev::LeaderSees(w, task), &mut seq);
+            }
+            Ev::LeaderSees(w, task) => {
+                inflight[w.index()] -= 1;
+                state.on_done(program, task, w);
+                pump(
+                    program, cm, cfg, &mut state, &mut inflight, now, &mut heap, &mut seq,
+                    &mut bytes,
+                );
+            }
+        }
+    }
+
+    anyhow::ensure!(
+        state.is_done(),
+        "simulation stalled with {} tasks incomplete",
+        program.len() - state.completed()
+    );
+    let makespan = now;
+    trace.wall_ns = makespan;
+    trace.bytes_transferred = bytes;
+    let busy: u64 = trace.busy_ns().iter().sum();
+    Ok(SimResult {
+        makespan_ns: makespan,
+        utilization: if makespan > 0 {
+            busy as f64 / (makespan as f64 * cfg.n_workers as f64)
+        } else {
+            0.0
+        },
+        trace,
+        bytes_transferred: bytes,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pump(
+    program: &TaskProgram,
+    cm: &CostModel,
+    cfg: &SimConfig,
+    state: &mut GreedyState,
+    inflight: &mut [usize],
+    now: u64,
+    heap: &mut BinaryHeap<QEv>,
+    seq: &mut u64,
+    bytes: &mut u64,
+) {
+    let mut dispatch_t = now;
+    loop {
+        let has_capacity = (0..cfg.n_workers).any(|w| inflight[w] < cfg.pipeline_depth);
+        if !has_capacity || state.n_ready() == 0 {
+            return;
+        }
+        let Some((task, mut w)) = state.assign_next(program) else {
+            return;
+        };
+        if inflight[w.index()] >= cfg.pipeline_depth {
+            state.unassign(program, task, w);
+            let w2 = (0..cfg.n_workers)
+                .filter(|i| inflight[*i] < cfg.pipeline_depth)
+                .min_by_key(|i| inflight[*i])
+                .unwrap();
+            let Some(_t2) = state.assign_to(program, WorkerId(w2 as u32)) else {
+                return;
+            };
+            w = WorkerId(w2 as u32);
+        }
+        inflight[w.index()] += 1;
+        // argument bytes that must travel: inputs whose producer is not w
+        let arrive = if cfg.transfer_free {
+            dispatch_t
+        } else {
+            dispatch_t += cm.dispatch_ns; // leader serializes dispatches
+            let spec = program.task(task);
+            let mut wire_bytes = 0u64;
+            for a in &spec.args {
+                if let crate::ir::task::ArgRef::Output { task: d, .. } = a {
+                    if state.location(*d) != Some(w) {
+                        wire_bytes += program.task(*d).est.bytes_out;
+                    }
+                }
+            }
+            // constants travel too (seeds: negligible but accounted)
+            wire_bytes += spec
+                .args
+                .iter()
+                .filter(|a| matches!(a, crate::ir::task::ArgRef::Const(_)))
+                .count() as u64
+                * 8;
+            *bytes += wire_bytes;
+            dispatch_t + cm.transfer_ns(wire_bytes)
+        };
+        heap.push(QEv {
+            t: arrive,
+            seq: *seq,
+            ev: Ev::Arrive(w, task),
+        });
+        *seq += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{ArgRef, CombineKind, CostEst, OpKind};
+    use crate::ir::ProgramBuilder;
+
+    /// t independent rounds of gen+gen+mul+sum (the Figure 2 workload).
+    pub fn rounds_program(t: usize, n: usize) -> TaskProgram {
+        let nn = (n * n * 4) as u64;
+        let mut b = ProgramBuilder::new();
+        let mut sums = Vec::new();
+        for r in 0..t {
+            let g1 = b.push(
+                OpKind::Artifact { name: format!("matgen_{n}") },
+                vec![ArgRef::const_i32(2 * r as i32)],
+                1,
+                CostEst { flops: 8 * (n * n) as u64, bytes_in: 4, bytes_out: nn },
+                format!("a{r}"),
+            );
+            let g2 = b.push(
+                OpKind::Artifact { name: format!("matgen_{n}") },
+                vec![ArgRef::const_i32(2 * r as i32 + 1)],
+                1,
+                CostEst { flops: 8 * (n * n) as u64, bytes_in: 4, bytes_out: nn },
+                format!("b{r}"),
+            );
+            let mm = b.push(
+                OpKind::Artifact { name: format!("matmul_{n}") },
+                vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+                1,
+                CostEst { flops: 2 * (n as u64).pow(3), bytes_in: 2 * nn, bytes_out: nn },
+                format!("c{r}"),
+            );
+            let s = b.push(
+                OpKind::Artifact { name: format!("matsum_{n}") },
+                vec![ArgRef::out(mm, 0)],
+                1,
+                CostEst { flops: 2 * (n * n) as u64, bytes_in: nn, bytes_out: 4 },
+                format!("s{r}"),
+            );
+            sums.push(ArgRef::out(s, 0));
+        }
+        let total = b.push(
+            OpKind::Combine(CombineKind::AddScalars),
+            sums,
+            1,
+            CostEst::ZERO,
+            "total",
+        );
+        b.mark_output(ArgRef::out(total, 0));
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn trace_is_valid_and_deterministic() {
+        let p = rounds_program(8, 64);
+        let cm = CostModel::default();
+        let r1 = simulate(&p, &cm, &SimConfig::cluster(4)).unwrap();
+        let r2 = simulate(&p, &cm, &SimConfig::cluster(4)).unwrap();
+        r1.trace.validate(&p).unwrap();
+        assert_eq!(r1.makespan_ns, r2.makespan_ns);
+        assert_eq!(r1.bytes_transferred, r2.bytes_transferred);
+    }
+
+    #[test]
+    fn more_workers_never_slower_on_parallel_workload() {
+        let p = rounds_program(16, 64);
+        let cm = CostModel::default();
+        let times: Vec<u64> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|w| simulate(&p, &cm, &SimConfig::cluster(*w)).unwrap().makespan_ns)
+            .collect();
+        for pair in times.windows(2) {
+            assert!(pair[1] <= pair[0] + pair[0] / 10, "{times:?}");
+        }
+        // and meaningful speedup 1 -> 4 workers on 16 independent rounds
+        assert!(
+            (times[0] as f64) / (times[2] as f64) > 2.0,
+            "expected >2x speedup: {times:?}"
+        );
+    }
+
+    #[test]
+    fn smp_beats_cluster_at_same_width() {
+        // shared memory has no transfer cost, so it must win
+        let p = rounds_program(8, 64);
+        let cm = CostModel::default();
+        let smp = simulate(&p, &cm, &SimConfig::smp(4)).unwrap();
+        let dist = simulate(&p, &cm, &SimConfig::cluster(4)).unwrap();
+        assert!(smp.makespan_ns < dist.makespan_ns);
+        assert_eq!(smp.bytes_transferred, 0);
+        assert!(dist.bytes_transferred > 0);
+    }
+
+    #[test]
+    fn chain_gets_no_speedup() {
+        let mut b = ProgramBuilder::new();
+        let mut prev = b.push(
+            OpKind::Synthetic { compute_us: 100 },
+            vec![],
+            1,
+            CostEst { flops: 0, bytes_in: 0, bytes_out: 8 },
+            "t0",
+        );
+        for i in 1..10 {
+            prev = b.push(
+                OpKind::Synthetic { compute_us: 100 },
+                vec![ArgRef::out(prev, 0)],
+                1,
+                CostEst { flops: 0, bytes_in: 8, bytes_out: 8 },
+                format!("t{i}"),
+            );
+        }
+        let p = b.build().unwrap();
+        let cm = CostModel::default();
+        let t1 = simulate(&p, &cm, &SimConfig::smp(1)).unwrap().makespan_ns;
+        let t4 = simulate(&p, &cm, &SimConfig::smp(4)).unwrap().makespan_ns;
+        assert_eq!(t1, t4); // span-bound
+    }
+
+    #[test]
+    fn measured_costs_change_makespan() {
+        let p = rounds_program(4, 64);
+        let mut cm = CostModel::default();
+        let base = simulate(&p, &cm, &SimConfig::cluster(2)).unwrap().makespan_ns;
+        cm.set_measured("matmul_64", 50_000_000); // pretend matmul is huge
+        let slow = simulate(&p, &cm, &SimConfig::cluster(2)).unwrap().makespan_ns;
+        assert!(slow > base * 5, "{slow} vs {base}");
+    }
+
+    #[test]
+    fn locality_placement_reduces_bytes() {
+        let p = rounds_program(8, 128);
+        let cm = CostModel::default();
+        let ll = SimConfig {
+            placement: PlacementPolicy::LeastLoaded,
+            ..SimConfig::cluster(4)
+        };
+        let loc = SimConfig {
+            placement: PlacementPolicy::LocalityAware,
+            ..SimConfig::cluster(4)
+        };
+        let r_ll = simulate(&p, &cm, &ll).unwrap();
+        let r_loc = simulate(&p, &cm, &loc).unwrap();
+        assert!(
+            r_loc.bytes_transferred <= r_ll.bytes_transferred,
+            "locality {} vs least-loaded {}",
+            r_loc.bytes_transferred,
+            r_ll.bytes_transferred
+        );
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let p = rounds_program(8, 64);
+        let cm = CostModel::default();
+        let r = simulate(&p, &cm, &SimConfig::cluster(2)).unwrap();
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+    }
+}

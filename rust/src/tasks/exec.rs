@@ -1,0 +1,322 @@
+//! Executors: interpret an [`OpKind`] with concrete argument values.
+//!
+//! All engines (single-thread baseline, SMP pool, cluster workers, and the
+//! calibration harness) execute through this one trait, so correctness
+//! tests transfer across engines.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::task::{CombineKind, OpKind, Value};
+use crate::runtime::RuntimeHandle;
+use crate::tensor::Tensor;
+
+/// Executes one task body. Must be thread-safe: the SMP pool and in-proc
+/// cluster call it from many worker threads.
+pub trait Executor: Send + Sync {
+    fn execute(&self, op: &OpKind, args: &[Value]) -> Result<Vec<Value>>;
+}
+
+// ---------------------------------------------------------------------------
+// Shared glue: combines + IO actions behave identically in all executors.
+// ---------------------------------------------------------------------------
+
+fn run_combine(kind: &CombineKind, args: &[Value]) -> Result<Vec<Value>> {
+    match kind {
+        CombineKind::MeanTensors => {
+            let tensors: Vec<&Tensor> = args
+                .iter()
+                .map(|v| v.as_tensor())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(vec![Value::tensor(Tensor::mean_of(&tensors)?)])
+        }
+        CombineKind::AddScalars => {
+            let mut acc = 0.0f64;
+            for v in args {
+                acc += v.as_tensor()?.scalar()? as f64;
+            }
+            Ok(vec![Value::scalar_f32(acc as f32)])
+        }
+        CombineKind::Select(i) => {
+            let v = args
+                .get(*i)
+                .with_context(|| format!("Select({i}) with {} args", args.len()))?;
+            Ok(vec![v.clone()])
+        }
+        CombineKind::Identity => Ok(args.to_vec()),
+    }
+}
+
+/// Busy-spin for `us` microseconds — a deterministic stand-in for compute
+/// (sleep would let the OS oversubscribe and distort scheduler benches).
+fn spin_us(us: u64) {
+    let t0 = crate::util::now_ns();
+    let target = us * 1_000;
+    while crate::util::now_ns() - t0 < target {
+        std::hint::spin_loop();
+    }
+}
+
+fn run_io(label: &str, compute_us: u64, args: &[Value]) -> Result<Vec<Value>> {
+    // An IO action consumes its (value + token) args and produces
+    // `(result, RealWorld')` — output 0 is the action's value, output 1 the
+    // next world token (exactly the paper's Figure 1 shape).
+    spin_us(compute_us);
+    if label == "print" {
+        let rendered: Vec<String> = args
+            .iter()
+            .filter(|v| !matches!(v, Value::Token))
+            .map(|v| match v {
+                Value::Tensor(t) if t.len() == 1 => format!("{}", t.scalar().unwrap()),
+                Value::Tensor(t) => format!("{t}"),
+                Value::Unit => "()".into(),
+                Value::Token => unreachable!(),
+            })
+            .collect();
+        println!("{}", rendered.join(" "));
+    }
+    Ok(vec![Value::Unit, Value::Token])
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic executor — scheduler/bench workloads, no numerics.
+// ---------------------------------------------------------------------------
+
+/// Executes `Synthetic` ops by spinning and everything else by the host
+/// path; used by scheduler unit tests and overhead benches.
+#[derive(Default, Clone)]
+pub struct SyntheticExecutor;
+
+impl Executor for SyntheticExecutor {
+    fn execute(&self, op: &OpKind, args: &[Value]) -> Result<Vec<Value>> {
+        match op {
+            OpKind::Synthetic { compute_us } => {
+                spin_us(*compute_us);
+                Ok(vec![Value::Unit])
+            }
+            OpKind::IoAction { label, compute_us } => run_io(label, *compute_us, args),
+            OpKind::Combine(k) => run_combine(k, args),
+            other => bail!("synthetic executor cannot run {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host executor — naive reference ops, runs anywhere, no artifacts needed.
+// ---------------------------------------------------------------------------
+
+/// Reference implementation of the matrix ops on the host; the correctness
+/// oracle for the PJRT path and the fallback when artifacts are absent.
+#[derive(Default, Clone)]
+pub struct HostExecutor;
+
+impl Executor for HostExecutor {
+    fn execute(&self, op: &OpKind, args: &[Value]) -> Result<Vec<Value>> {
+        match op {
+            OpKind::HostMatGen { n } => {
+                let seed = args
+                    .first()
+                    .context("host_matgen needs a seed arg")?
+                    .as_tensor()?
+                    .scalar()? as u64;
+                Ok(vec![Value::tensor(Tensor::uniform(vec![*n, *n], seed))])
+            }
+            OpKind::HostMatMul => {
+                let (a, b) = (args[0].as_tensor()?, args[1].as_tensor()?);
+                Ok(vec![Value::tensor(a.matmul(b)?)])
+            }
+            OpKind::HostMatSum => {
+                let a = args[0].as_tensor()?;
+                Ok(vec![Value::scalar_f32(a.sumsq()?)])
+            }
+            OpKind::Synthetic { compute_us } => {
+                spin_us(*compute_us);
+                Ok(vec![Value::Unit])
+            }
+            OpKind::IoAction { label, compute_us } => run_io(label, *compute_us, args),
+            OpKind::Combine(k) => run_combine(k, args),
+            OpKind::Artifact { name } => {
+                // Host fallback for the artifact families we know analytically.
+                host_artifact_fallback(name, args)
+            }
+        }
+    }
+}
+
+/// Evaluate `matgen_N` / `matmul_N` / `matsum_N` / `matround_N` artifacts
+/// with host ops (different PRNG for matgen — same distribution, not
+/// bit-identical; tests that need bit-equality use the PJRT path).
+fn host_artifact_fallback(name: &str, args: &[Value]) -> Result<Vec<Value>> {
+    let (family, n) = match name.rsplit_once('_') {
+        Some((f, n)) => (f, n.parse::<usize>().ok()),
+        None => (name, None),
+    };
+    match (family, n) {
+        ("matgen", Some(n)) => {
+            let seed = args[0].as_tensor()?.scalar()? as u64;
+            Ok(vec![Value::tensor(Tensor::uniform(vec![n, n], seed))])
+        }
+        ("matmul", Some(_)) => {
+            let (a, b) = (args[0].as_tensor()?, args[1].as_tensor()?);
+            Ok(vec![Value::tensor(a.matmul(b)?)])
+        }
+        ("matsum", Some(_)) => Ok(vec![Value::scalar_f32(args[0].as_tensor()?.sumsq()?)]),
+        ("matround", Some(n)) => {
+            let sa = args[0].as_tensor()?.scalar()? as u64;
+            let sb = args[1].as_tensor()?.scalar()? as u64;
+            let a = Tensor::uniform(vec![n, n], sa);
+            let b = Tensor::uniform(vec![n, n], sb);
+            Ok(vec![Value::scalar_f32(a.matmul(&b)?.sumsq()?)])
+        }
+        _ => bail!("host executor has no fallback for artifact {name:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT executor — the real path.
+// ---------------------------------------------------------------------------
+
+/// Executes `Artifact` ops via the runtime service; delegates glue ops to
+/// the shared implementations and host ops to [`HostExecutor`].
+#[derive(Clone)]
+pub struct PjrtExecutor {
+    runtime: RuntimeHandle,
+    host: HostExecutor,
+}
+
+impl PjrtExecutor {
+    pub fn new(runtime: RuntimeHandle) -> Arc<Self> {
+        Arc::new(Self {
+            runtime,
+            host: HostExecutor,
+        })
+    }
+
+    pub fn runtime(&self) -> &RuntimeHandle {
+        &self.runtime
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&self, op: &OpKind, args: &[Value]) -> Result<Vec<Value>> {
+        match op {
+            OpKind::Artifact { name } => {
+                let tensors: Vec<Tensor> = args
+                    .iter()
+                    .map(|v| v.as_tensor().map(Clone::clone))
+                    .collect::<Result<Vec<_>>>()?;
+                let outs = self.runtime.execute(name, tensors)?;
+                Ok(outs.into_iter().map(Value::tensor).collect())
+            }
+            other => self.host.execute(other, args),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::CombineKind;
+
+    #[test]
+    fn host_matmul_pipeline() {
+        let ex = HostExecutor;
+        let g1 = ex
+            .execute(
+                &OpKind::HostMatGen { n: 16 },
+                &[Value::scalar_i32(1)],
+            )
+            .unwrap();
+        let g2 = ex
+            .execute(
+                &OpKind::HostMatGen { n: 16 },
+                &[Value::scalar_i32(2)],
+            )
+            .unwrap();
+        let c = ex
+            .execute(&OpKind::HostMatMul, &[g1[0].clone(), g2[0].clone()])
+            .unwrap();
+        let s = ex.execute(&OpKind::HostMatSum, &[c[0].clone()]).unwrap();
+        assert!(s[0].as_tensor().unwrap().scalar().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn combine_mean() {
+        let ex = SyntheticExecutor;
+        let a = Value::tensor(Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap());
+        let b = Value::tensor(Tensor::f32(vec![2], vec![3.0, 4.0]).unwrap());
+        let out = ex
+            .execute(&OpKind::Combine(CombineKind::MeanTensors), &[a, b])
+            .unwrap();
+        assert_eq!(out[0].as_tensor().unwrap().as_f32().unwrap(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn combine_add_scalars_and_select() {
+        let ex = SyntheticExecutor;
+        let out = ex
+            .execute(
+                &OpKind::Combine(CombineKind::AddScalars),
+                &[Value::scalar_f32(1.5), Value::scalar_f32(2.5)],
+            )
+            .unwrap();
+        assert_eq!(out[0].as_tensor().unwrap().scalar().unwrap(), 4.0);
+
+        let out = ex
+            .execute(
+                &OpKind::Combine(CombineKind::Select(1)),
+                &[Value::Unit, Value::scalar_f32(9.0)],
+            )
+            .unwrap();
+        assert_eq!(out[0].as_tensor().unwrap().scalar().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn io_action_returns_value_and_token() {
+        let ex = SyntheticExecutor;
+        let out = ex
+            .execute(
+                &OpKind::IoAction {
+                    label: "noop".into(),
+                    compute_us: 0,
+                },
+                &[Value::Token],
+            )
+            .unwrap();
+        assert!(matches!(out[0], Value::Unit));
+        assert!(matches!(out[1], Value::Token));
+    }
+
+    #[test]
+    fn synthetic_spin_takes_time() {
+        let ex = SyntheticExecutor;
+        let t0 = crate::util::now_ns();
+        ex.execute(&OpKind::Synthetic { compute_us: 2000 }, &[])
+            .unwrap();
+        assert!(crate::util::now_ns() - t0 >= 2_000_000);
+    }
+
+    #[test]
+    fn host_fallback_for_artifacts() {
+        let ex = HostExecutor;
+        let out = ex
+            .execute(
+                &OpKind::Artifact {
+                    name: "matround_16".into(),
+                },
+                &[Value::scalar_i32(1), Value::scalar_i32(2)],
+            )
+            .unwrap();
+        assert!(out[0].as_tensor().unwrap().scalar().unwrap() > 0.0);
+        assert!(ex
+            .execute(&OpKind::Artifact { name: "mlp_grad".into() }, &[])
+            .is_err());
+    }
+
+    #[test]
+    fn synthetic_rejects_real_ops() {
+        let ex = SyntheticExecutor;
+        assert!(ex.execute(&OpKind::HostMatMul, &[]).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Task execution: the [`Executor`] trait plus its three implementations
+//! (real PJRT artifacts, host reference ops, synthetic spin), and the
+//! [`registry::FunctionRegistry`] that binds DSL function names to ops —
+//! the "auto" half of the auto-parallelizer.
+
+pub mod exec;
+pub mod registry;
+
+pub use exec::{Executor, HostExecutor, PjrtExecutor, SyntheticExecutor};
+pub use registry::{Binding, FunctionRegistry};

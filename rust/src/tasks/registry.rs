@@ -1,0 +1,214 @@
+//! Function registry: binds DSL function names to executable ops.
+//!
+//! The paper's pipeline ends at "schedule the calls in `main`"; *what a
+//! call does* comes from this registry — each HaskLite function name maps
+//! to an AOT artifact, a host op, or a synthetic action. Lowering
+//! (`ir::lower`) consults it to build `TaskSpec`s, pulling cost estimates
+//! from the manifest when present.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::ir::task::{CostEst, OpKind};
+use crate::runtime::Manifest;
+
+/// How a DSL function name executes.
+#[derive(Clone, Debug)]
+pub enum Binding {
+    /// AOT artifact by name.
+    Artifact(String),
+    /// Direct op (host / synthetic / io / combine).
+    Op(OpKind),
+}
+
+/// Registry entry: binding + call signature metadata.
+#[derive(Clone, Debug)]
+pub struct FuncEntry {
+    pub binding: Binding,
+    pub arity: usize,
+    pub n_outputs: usize,
+    pub est: CostEst,
+    /// Purity as the *registry* knows it; cross-checked against the DSL
+    /// type signature at lowering (mismatch = hard error, the paper's
+    /// correctness hinge).
+    pub pure: bool,
+}
+
+/// Name → entry map consulted during lowering.
+#[derive(Clone, Debug, Default)]
+pub struct FunctionRegistry {
+    map: HashMap<String, FuncEntry>,
+}
+
+impl FunctionRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&FuncEntry> {
+        self.map.get(name)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&FuncEntry> {
+        self.map
+            .get(name)
+            .with_context(|| format!("function {name:?} is not bound in the registry"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+
+    pub fn bind(&mut self, name: &str, entry: FuncEntry) -> &mut Self {
+        self.map.insert(name.to_string(), entry);
+        self
+    }
+
+    /// Bind a name to an artifact, reading arity/outputs/costs from the
+    /// manifest.
+    pub fn bind_artifact(
+        &mut self,
+        name: &str,
+        artifact: &str,
+        manifest: &Manifest,
+    ) -> Result<&mut Self> {
+        let e = manifest.require(artifact)?;
+        self.bind(
+            name,
+            FuncEntry {
+                binding: Binding::Artifact(artifact.to_string()),
+                arity: e.inputs.len(),
+                n_outputs: e.outputs.len(),
+                est: CostEst {
+                    flops: e.flops,
+                    bytes_in: e.bytes_in,
+                    bytes_out: e.bytes_out,
+                },
+                pure: true, // every artifact is a pure jax function
+            },
+        );
+        Ok(self)
+    }
+
+    /// Bind a host/synthetic/io op. IO actions get two outputs:
+    /// `(result, RealWorld token)`.
+    pub fn bind_op(&mut self, name: &str, op: OpKind, arity: usize, est: CostEst) -> &mut Self {
+        let pure = op.is_pure();
+        self.bind(
+            name,
+            FuncEntry {
+                binding: Binding::Op(op),
+                arity,
+                n_outputs: if pure { 1 } else { 2 },
+                est,
+                pure,
+            },
+        )
+    }
+
+    // -----------------------------------------------------------------------
+    // Prebuilt registries for the paper's workloads
+    // -----------------------------------------------------------------------
+
+    /// The Figure-2 matrix workload at size `n`, executing through AOT
+    /// artifacts: `matgen`, `matmul`, `matsum` (+ fused `matround`).
+    pub fn matrix_artifacts(n: usize, manifest: &Manifest) -> Result<FunctionRegistry> {
+        let mut r = FunctionRegistry::new();
+        r.bind_artifact("matgen", &format!("matgen_{n}"), manifest)?;
+        r.bind_artifact("matmul", &format!("matmul_{n}"), manifest)?;
+        r.bind_artifact("matsum", &format!("matsum_{n}"), manifest)?;
+        r.bind_artifact("matround", &format!("matround_{n}"), manifest)?;
+        Ok(r)
+    }
+
+    /// Same workload on host reference ops (no artifacts required).
+    pub fn matrix_host(n: usize) -> FunctionRegistry {
+        let mm_flops = 2 * (n as u64).pow(3);
+        let nn_bytes = (n * n * 4) as u64;
+        let mut r = FunctionRegistry::new();
+        r.bind_op(
+            "matgen",
+            OpKind::HostMatGen { n },
+            1,
+            CostEst { flops: 8 * (n as u64).pow(2), bytes_in: 4, bytes_out: nn_bytes },
+        );
+        r.bind_op(
+            "matmul",
+            OpKind::HostMatMul,
+            2,
+            CostEst { flops: mm_flops, bytes_in: 2 * nn_bytes, bytes_out: nn_bytes },
+        );
+        r.bind_op(
+            "matsum",
+            OpKind::HostMatSum,
+            1,
+            CostEst { flops: 2 * (n as u64).pow(2), bytes_in: nn_bytes, bytes_out: 4 },
+        );
+        r
+    }
+
+    /// The paper §2 NLP sketch: `clean_files :: IO Summary`,
+    /// `complex_evaluation :: Summary -> Int`, `semantic_analysis :: IO Int`.
+    /// Latencies are synthetic (µs).
+    pub fn nlp_demo(clean_us: u64, eval_us: u64, sem_us: u64) -> FunctionRegistry {
+        let mut r = FunctionRegistry::new();
+        r.bind_op(
+            "clean_files",
+            OpKind::IoAction { label: "clean_files".into(), compute_us: clean_us },
+            0,
+            CostEst { flops: clean_us * 1000, bytes_in: 1, bytes_out: 8 },
+        );
+        r.bind_op(
+            "complex_evaluation",
+            OpKind::Synthetic { compute_us: eval_us },
+            1,
+            CostEst { flops: eval_us * 1000, bytes_in: 8, bytes_out: 8 },
+        );
+        r.bind_op(
+            "semantic_analysis",
+            OpKind::IoAction { label: "semantic_analysis".into(), compute_us: sem_us },
+            0,
+            CostEst { flops: sem_us * 1000, bytes_in: 1, bytes_out: 8 },
+        );
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_registry_binds_matrix_ops() {
+        let r = FunctionRegistry::matrix_host(64);
+        assert_eq!(r.require("matmul").unwrap().arity, 2);
+        assert!(r.require("matgen").unwrap().pure);
+        assert!(r.get("nope").is_none());
+        assert!(r.require("nope").is_err());
+    }
+
+    #[test]
+    fn nlp_registry_purity() {
+        let r = FunctionRegistry::nlp_demo(10, 10, 10);
+        assert!(!r.require("clean_files").unwrap().pure);
+        assert!(r.require("complex_evaluation").unwrap().pure);
+        assert!(!r.require("semantic_analysis").unwrap().pure);
+    }
+
+    #[test]
+    fn artifact_registry_reads_manifest() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let r = FunctionRegistry::matrix_artifacts(256, &m).unwrap();
+        let mm = r.require("matmul").unwrap();
+        assert_eq!(mm.arity, 2);
+        assert_eq!(mm.est.flops, 2 * 256u64.pow(3));
+        assert!(matches!(&mm.binding, Binding::Artifact(a) if a == "matmul_256"));
+        // unknown size fails cleanly
+        assert!(FunctionRegistry::matrix_artifacts(512, &m).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! Host-side tensors: the coordinator's in-memory value representation.
+//!
+//! These flow between tasks, through the wire codec, and across the PJRT
+//! literal bridge. A small set of *reference* operations (naive matmul,
+//! reductions, elementwise) lives here too — they are the Layer-3
+//! correctness oracle against the AOT artifacts and the host-fallback
+//! executor for environments without artifacts.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Element type. Only the two dtypes the Layer-2 contract uses.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Tensor payload.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor (row-major).
+#[derive(Clone, PartialEq, Debug)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Data,
+}
+
+impl Tensor {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor {
+            shape,
+            data: Data::F32(data),
+        })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor {
+            shape,
+            data: Data::I32(data),
+        })
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: Data::I32(vec![v]),
+        }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: Data::F32(vec![0.0; n]),
+        }
+    }
+
+    /// Uniform(-1, 1) fill — host analog of the `matgen` artifact
+    /// (different PRNG, same distribution; used by the host executor).
+    pub fn uniform(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut rng = Rng::new(seed);
+        Tensor {
+            shape,
+            data: Data::F32((0..n).map(|_| rng.f32_pm1()).collect()),
+        }
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor, got {}", self.dtype().name()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor, got {}", self.dtype().name()),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        if self.len() != 1 {
+            bail!("scalar() on tensor of shape {:?}", self.shape);
+        }
+        match &self.data {
+            Data::F32(v) => Ok(v[0]),
+            Data::I32(v) => Ok(v[0] as f32),
+        }
+    }
+
+    // ---- reference ops (L3 oracle / host fallback) -------------------------
+
+    /// Naive O(n³) matmul with an f64 accumulator (oracle-grade precision).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        let (&[m, k], &[k2, n]) = (&self.shape[..], &other.shape[..]) else {
+            bail!(
+                "matmul wants rank-2 operands, got {:?} @ {:?}",
+                self.shape,
+                other.shape
+            );
+        };
+        if k != k2 {
+            bail!("matmul inner dim mismatch: {:?} @ {:?}", self.shape, other.shape);
+        }
+        let mut out = vec![0f32; m * n];
+        // ikj loop order: streams b row-major, decent cache behaviour.
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk] as f64;
+                let brow = &b[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] = (orow[j] as f64 + aik * brow[j] as f64) as f32;
+                }
+            }
+        }
+        Tensor::f32(vec![m, n], out)
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn sumsq(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        Ok(v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() as f32)
+    }
+
+    /// Elementwise sum of same-shaped tensors.
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        Tensor::f32(
+            self.shape.clone(),
+            a.iter().zip(b).map(|(x, y)| x + y).collect(),
+        )
+    }
+
+    pub fn scale(&self, s: f32) -> Result<Tensor> {
+        let a = self.as_f32()?;
+        Tensor::f32(self.shape.clone(), a.iter().map(|x| x * s).collect())
+    }
+
+    /// Mean of several same-shaped tensors (gradient averaging).
+    pub fn mean_of(tensors: &[&Tensor]) -> Result<Tensor> {
+        if tensors.is_empty() {
+            bail!("mean_of: empty input");
+        }
+        let mut acc = tensors[0].clone();
+        for t in &tensors[1..] {
+            acc = acc.add(t)?;
+        }
+        acc.scale(1.0 / tensors.len() as f32)
+    }
+
+    /// Max |a-b| over two same-shaped f32 tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Relative allclose (numpy-style `|a-b| <= atol + rtol*|b|`).
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape || self.dtype() != other.dtype() {
+            return false;
+        }
+        match (&self.data, &other.data) {
+            (Data::F32(a), Data::F32(b)) => a
+                .iter()
+                .zip(b)
+                .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs()),
+            (Data::I32(a), Data::I32(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[", self.dtype().name())?;
+        for (i, d) in self.shape.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")?;
+        if self.len() == 1 {
+            write!(f, "({})", self.scalar().unwrap())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_validates_shape() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::uniform(vec![8, 8], 1);
+        let mut eye = vec![0f32; 64];
+        for i in 0..8 {
+            eye[i * 8 + i] = 1.0;
+        }
+        let i8 = Tensor::f32(vec![8, 8], eye).unwrap();
+        let prod = a.matmul(&i8).unwrap();
+        assert!(prod.allclose(&a, 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::f32(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.as_f32().unwrap(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Tensor::f32(vec![1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::f32(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape(), &[1, 2]);
+        assert_eq!(c.as_f32().unwrap(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = Tensor::uniform(vec![2, 3], 0);
+        let b = Tensor::uniform(vec![2, 3], 1);
+        assert!(a.matmul(&b).is_err());
+        let s = Tensor::scalar_f32(1.0);
+        assert!(a.matmul(&s).is_err());
+    }
+
+    #[test]
+    fn sumsq_matches_manual() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        assert_eq!(t.sumsq().unwrap(), 30.0);
+    }
+
+    #[test]
+    fn uniform_is_deterministic_and_bounded() {
+        let a = Tensor::uniform(vec![16, 16], 9);
+        let b = Tensor::uniform(vec![16, 16], 9);
+        assert_eq!(a, b);
+        assert!(a.as_f32().unwrap().iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn mean_of_averages() {
+        let a = Tensor::f32(vec![2], vec![1.0, 3.0]).unwrap();
+        let b = Tensor::f32(vec![2], vec![3.0, 5.0]).unwrap();
+        let m = Tensor::mean_of(&[&a, &b]).unwrap();
+        assert_eq!(m.as_f32().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn allclose_rejects_shape_and_dtype_mismatch() {
+        let a = Tensor::zeros(vec![2, 2]);
+        let b = Tensor::zeros(vec![4]);
+        assert!(!a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::i32(vec![2, 2], vec![0; 4]).unwrap();
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+}

@@ -1,0 +1,288 @@
+//! Call checking over the parallelized section (`main`'s do-block).
+//!
+//! A lightweight pass — not full Hindley–Milner, deliberately matching the
+//! paper's "shallow" approach — that still catches the bugs that matter for
+//! scheduling correctness:
+//!
+//! * calls to functions with no signature and no definition;
+//! * arity mismatches (partial application is *not* supported in the
+//!   parallelized section — a documented HaskLite restriction);
+//! * uses of names bound later in the block (no recursive `do` bindings);
+//! * `let`-binding an IO call or `<-`-binding a pure call (the classic
+//!   confusion the purity rule exists to prevent);
+//! * duplicate bindings (shadowing within one block is rejected).
+
+use std::collections::HashSet;
+
+use crate::frontend::ast::{Body, Expr, Program, Stmt};
+use crate::frontend::diag::Diagnostic;
+use crate::types::purity::PurityTable;
+
+/// A program that passed checking, with its purity table.
+#[derive(Clone, Debug)]
+pub struct CheckedProgram {
+    pub program: Program,
+    pub purity: PurityTable,
+    /// Statements of the parallelized section (a copy of `main`'s block).
+    pub main_stmts: Vec<Stmt>,
+}
+
+/// Check `program`, focusing on the section to parallelize (`entry`,
+/// normally `"main"` — the prototype scope in the paper; any function name
+/// works, covering their "arbitrary function" future-work note).
+pub fn check_program(program: &Program, entry: &str) -> Result<CheckedProgram, Diagnostic> {
+    let purity = PurityTable::from_program(program)?;
+
+    let Some((params, body)) = program.find_fun(entry) else {
+        return Err(Diagnostic::new(
+            format!("entry function `{entry}` is not defined"),
+            crate::frontend::span::Span::DUMMY,
+        ));
+    };
+    if !params.is_empty() {
+        return Err(Diagnostic::new(
+            format!("entry function `{entry}` must be nullary to parallelize"),
+            crate::frontend::span::Span::DUMMY,
+        ));
+    }
+    let stmts: Vec<Stmt> = match body {
+        Body::Do(stmts) => stmts.clone(),
+        Body::Expr(e) => vec![Stmt::Expr {
+            expr: e.clone(),
+            span: e.span(),
+        }],
+    };
+
+    let defined: HashSet<&str> = program.fun_defs().map(|(n, _, _)| n).collect();
+    let mut bound: HashSet<String> = HashSet::new();
+
+    for stmt in &stmts {
+        check_expr(stmt.expr(), &purity, &defined, &bound)?;
+
+        match stmt {
+            Stmt::Bind { name, expr, span } => {
+                // `x <- e`: e must be an IO call.
+                if let Some((head, _)) = expr.as_call() {
+                    if !purity.is_io(head) && purity.get(head).is_some() {
+                        return Err(Diagnostic::new(
+                            format!(
+                                "`{name} <- {head} ...` binds a pure call; use `let {name} = ...`"
+                            ),
+                            *span,
+                        ));
+                    }
+                }
+                insert_unique(&mut bound, name, *span)?;
+            }
+            Stmt::Let { name, expr, span } => {
+                // `let x = e`: e must not be an IO call.
+                if let Some((head, _)) = expr.as_call() {
+                    if purity.is_io(head) {
+                        return Err(Diagnostic::new(
+                            format!(
+                                "`let {name} = {head} ...` binds an IO action; use `{name} <- ...`"
+                            ),
+                            *span,
+                        ));
+                    }
+                }
+                insert_unique(&mut bound, name, *span)?;
+            }
+            Stmt::Expr { .. } => {}
+        }
+    }
+
+    Ok(CheckedProgram {
+        program: program.clone(),
+        purity,
+        main_stmts: stmts,
+    })
+}
+
+fn insert_unique(
+    bound: &mut HashSet<String>,
+    name: &str,
+    span: crate::frontend::span::Span,
+) -> Result<(), Diagnostic> {
+    if !bound.insert(name.to_string()) {
+        return Err(Diagnostic::new(
+            format!("`{name}` is bound twice in the same do-block"),
+            span,
+        ));
+    }
+    Ok(())
+}
+
+fn check_expr(
+    e: &Expr,
+    purity: &PurityTable,
+    defined: &HashSet<&str>,
+    bound: &HashSet<String>,
+) -> Result<(), Diagnostic> {
+    match e {
+        Expr::Var { name, span } => {
+            if !bound.contains(name) && purity.get(name).is_none() && !defined.contains(name.as_str())
+            {
+                return Err(Diagnostic::new(
+                    format!("`{name}` is not bound, declared, or defined"),
+                    *span,
+                ));
+            }
+        }
+        Expr::App { func, args, span } => {
+            // Head must be a known function with matching arity.
+            if let Expr::Var { name, .. } = func.as_ref() {
+                if let Some(info) = purity.get(name) {
+                    if args.len() != info.arity {
+                        return Err(Diagnostic::new(
+                            format!(
+                                "`{name}` expects {} argument(s), got {} (partial application is outside HaskLite's parallelized fragment)",
+                                info.arity,
+                                args.len()
+                            ),
+                            *span,
+                        ));
+                    }
+                } else if !bound.contains(name) && !defined.contains(name.as_str()) {
+                    return Err(Diagnostic::new(
+                        format!("call to unknown function `{name}`"),
+                        *span,
+                    ));
+                }
+                // IO calls may not be nested inside argument expressions.
+                for a in args {
+                    check_no_io(a, purity)?;
+                    check_expr(a, purity, defined, bound)?;
+                }
+            } else {
+                return Err(Diagnostic::new(
+                    "only named functions can be applied in the parallelized section",
+                    *span,
+                ));
+            }
+        }
+        Expr::BinOp { lhs, rhs, .. } => {
+            check_expr(lhs, purity, defined, bound)?;
+            check_expr(rhs, purity, defined, bound)?;
+        }
+        Expr::Tuple { items, .. } => {
+            for i in items {
+                check_expr(i, purity, defined, bound)?;
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+fn check_no_io(e: &Expr, purity: &PurityTable) -> Result<(), Diagnostic> {
+    if let Some((head, _)) = e.as_call() {
+        if purity.is_io(head) {
+            return Err(Diagnostic::new(
+                format!("IO action `{head}` cannot appear nested in an argument; bind it with `<-` first"),
+                e.span(),
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_program;
+
+    const OK: &str = r#"
+clean_files :: IO Summary
+clean_files = prim
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = prim x
+
+semantic_analysis :: IO Int
+semantic_analysis = prim
+
+prim :: Int
+prim = 0
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  z <- semantic_analysis
+  print (y, z)
+"#;
+
+    fn check(src: &str) -> Result<CheckedProgram, Diagnostic> {
+        let p = parse_program(src).unwrap();
+        check_program(&p, "main")
+    }
+
+    #[test]
+    fn accepts_paper_example() {
+        let c = check(OK).unwrap();
+        assert_eq!(c.main_stmts.len(), 4);
+    }
+
+    #[test]
+    fn missing_entry() {
+        let err = check("f :: Int\nf = 1\n").unwrap_err();
+        assert!(err.msg.contains("`main` is not defined"), "{err}");
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        let err = check("main :: IO ()\nmain = do\n  let y = mystery 1\n").unwrap_err();
+        assert!(err.msg.contains("mystery"), "{err}");
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let y = f 1 2\n  print y\n";
+        let err = check(src).unwrap_err();
+        assert!(err.msg.contains("expects 1 argument"), "{err}");
+    }
+
+    #[test]
+    fn let_of_io_rejected() {
+        let src = "g :: IO Int\ng = g\nmain :: IO ()\nmain = do\n  let y = g\n  print y\n";
+        let err = check(src).unwrap_err();
+        assert!(err.msg.contains("binds an IO action"), "{err}");
+    }
+
+    #[test]
+    fn bind_of_pure_rejected() {
+        let src = "f :: Int\nf = 1\nmain :: IO ()\nmain = do\n  y <- f\n  print y\n";
+        let err = check(src).unwrap_err();
+        assert!(err.msg.contains("binds a pure call"), "{err}");
+    }
+
+    #[test]
+    fn use_before_bind_rejected() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f b\n  let b = f 1\n  print a\n";
+        let err = check(src).unwrap_err();
+        assert!(err.msg.contains("`b` is not bound"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_binding_rejected() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f 1\n  let a = f 2\n  print a\n";
+        let err = check(src).unwrap_err();
+        assert!(err.msg.contains("bound twice"), "{err}");
+    }
+
+    #[test]
+    fn nested_io_in_args_rejected() {
+        let src = "g :: IO Int\ng = g\nf :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let y = f g\n  print y\n";
+        let err = check(src).unwrap_err();
+        assert!(err.msg.contains("nested"), "{err}");
+    }
+
+    #[test]
+    fn entry_other_than_main_works() {
+        let src = "f :: Int -> Int\nf x = x\npipeline :: IO ()\npipeline = do\n  let a = f 1\n  print a\nmain :: IO ()\nmain = do\n  print 0\n";
+        let p = parse_program(src).unwrap();
+        let c = check_program(&p, "pipeline").unwrap();
+        assert_eq!(c.main_stmts.len(), 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Type-signature analysis: purity inference and call checking.
+//!
+//! This is the paper's key leverage point: *"the purity of a function call
+//! can be directly inferred from its type signature at compile time"*. We
+//! read every signature, classify each function as pure or IO, and check
+//! the calls inside the parallelized section against the signatures before
+//! any graph is built — wiring mistakes die here, not on a worker.
+
+pub mod check;
+pub mod purity;
+
+pub use check::{check_program, CheckedProgram};
+pub use purity::{purity_of, FnInfo, PurityTable};

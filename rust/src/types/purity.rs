@@ -1,0 +1,133 @@
+//! Purity inference from type signatures (the paper's §1–§2 rule).
+
+use std::collections::HashMap;
+
+use crate::frontend::ast::{Program, TypeExpr};
+use crate::frontend::diag::Diagnostic;
+use crate::frontend::span::Span;
+
+/// What we know about a named function from its signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FnInfo {
+    pub name: String,
+    pub ty: TypeExpr,
+    pub arity: usize,
+    /// `true` ⇔ result type is `IO t` — the function consumes/produces the
+    /// RealWorld token and must be sequenced.
+    pub io: bool,
+}
+
+/// Purity classification for every declared function plus builtins.
+#[derive(Clone, Debug, Default)]
+pub struct PurityTable {
+    map: HashMap<String, FnInfo>,
+}
+
+/// Builtins the paper's examples rely on. `print` is the canonical effect.
+fn builtins() -> Vec<FnInfo> {
+    use TypeExpr as T;
+    let io_unit = T::Con {
+        name: "IO".into(),
+        args: vec![T::Unit],
+    };
+    vec![FnInfo {
+        name: "print".into(),
+        ty: T::Arrow(Box::new(T::Var("a".into())), Box::new(io_unit)),
+        arity: 1,
+        io: true,
+    }]
+}
+
+impl PurityTable {
+    /// Build from a parsed program's signatures (+ builtins).
+    pub fn from_program(p: &Program) -> Result<PurityTable, Diagnostic> {
+        let mut map = HashMap::new();
+        for b in builtins() {
+            map.insert(b.name.clone(), b);
+        }
+        for (name, ty) in p.type_sigs() {
+            if map.contains_key(name) && !builtins().iter().any(|b| b.name == name) {
+                return Err(Diagnostic::new(
+                    format!("duplicate type signature for `{name}`"),
+                    Span::DUMMY,
+                ));
+            }
+            map.insert(
+                name.to_string(),
+                FnInfo {
+                    name: name.to_string(),
+                    ty: ty.clone(),
+                    arity: ty.arity(),
+                    io: ty.is_io(),
+                },
+            );
+        }
+        Ok(PurityTable { map })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&FnInfo> {
+        self.map.get(name)
+    }
+
+    pub fn is_io(&self, name: &str) -> bool {
+        self.map.get(name).map(|i| i.io).unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Classify a single type: `true` = impure (IO result).
+pub fn purity_of(ty: &TypeExpr) -> bool {
+    !ty.is_io()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_program;
+
+    const SRC: &str = r#"
+clean_files :: IO Summary
+clean_files = prim
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = prim x
+
+semantic_analysis :: IO Int
+semantic_analysis = prim
+
+matmul :: Matrix -> Matrix -> Matrix
+matmul a b = prim a b
+"#;
+
+    #[test]
+    fn classifies_paper_functions() {
+        let p = parse_program(SRC).unwrap();
+        let t = PurityTable::from_program(&p).unwrap();
+        assert!(t.is_io("clean_files"));
+        assert!(!t.is_io("complex_evaluation"));
+        assert!(t.is_io("semantic_analysis"));
+        assert!(!t.is_io("matmul"));
+        assert_eq!(t.get("matmul").unwrap().arity, 2);
+    }
+
+    #[test]
+    fn print_is_builtin_io() {
+        let p = parse_program("x = 1\n").unwrap();
+        let t = PurityTable::from_program(&p).unwrap();
+        assert!(t.is_io("print"));
+        assert_eq!(t.get("print").unwrap().arity, 1);
+    }
+
+    #[test]
+    fn duplicate_signature_rejected() {
+        let p = parse_program("f :: Int\nf :: Int\n").unwrap();
+        assert!(PurityTable::from_program(&p).is_err());
+    }
+}

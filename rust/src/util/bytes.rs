@@ -1,0 +1,319 @@
+//! Byte-level reader/writer used by the cluster wire codec.
+//!
+//! Little-endian fixed-width primitives plus LEB128 varints; the reader is
+//! bounds-checked and never panics on malformed input (the cluster treats
+//! peer bytes as untrusted).
+
+/// Append-only byte writer.
+#[derive(Default, Debug)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 unsigned varint.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.varint(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Bulk little-endian f32 slice (length-prefixed).
+    pub fn f32_slice(&mut self, xs: &[f32]) {
+        self.varint(xs.len() as u64);
+        // On little-endian targets this is a straight memcpy.
+        if cfg!(target_endian = "little") {
+            let raw =
+                unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+            self.buf.extend_from_slice(raw);
+        } else {
+            for x in xs {
+                self.f32(*x);
+            }
+        }
+    }
+
+    pub fn i32_slice(&mut self, xs: &[i32]) {
+        self.varint(xs.len() as u64);
+        if cfg!(target_endian = "little") {
+            let raw =
+                unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+            self.buf.extend_from_slice(raw);
+        } else {
+            for x in xs {
+                self.i32(*x);
+            }
+        }
+    }
+}
+
+/// Decode error — position + message, never a panic.
+#[derive(Debug, thiserror::Error)]
+#[error("decode error at byte {pos}: {msg}")]
+pub struct DecodeError {
+    pub pos: usize,
+    pub msg: &'static str,
+}
+
+/// Bounds-checked reader over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn err(&self, msg: &'static str) -> DecodeError {
+        DecodeError { pos: self.pos, msg }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(self.err("unexpected end of input"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32, DecodeError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn varint(&mut self) -> Result<u64, DecodeError> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift >= 64 {
+                return Err(self.err("varint overflow"));
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn str(&mut self) -> Result<String, DecodeError> {
+        let len = self.varint()? as usize;
+        if len > 1 << 24 {
+            return Err(self.err("string too long"));
+        }
+        let raw = self.take(len)?;
+        std::str::from_utf8(raw)
+            .map(|s| s.to_string())
+            .map_err(|_| self.err("invalid utf-8"))
+    }
+
+    pub fn f32_slice(&mut self) -> Result<Vec<f32>, DecodeError> {
+        let len = self.varint()? as usize;
+        if len > 1 << 28 {
+            return Err(self.err("f32 slice too long"));
+        }
+        let raw = self.take(len * 4)?;
+        // Bulk memcpy on little-endian targets (the per-chunk from_le_bytes
+        // loop was the decode hot-spot — see EXPERIMENTS.md §Perf).
+        if cfg!(target_endian = "little") {
+            let mut out = vec![0f32; len];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    len * 4,
+                );
+            }
+            return Ok(out);
+        }
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn i32_slice(&mut self) -> Result<Vec<i32>, DecodeError> {
+        let len = self.varint()? as usize;
+        if len > 1 << 28 {
+            return Err(self.err("i32 slice too long"));
+        }
+        let raw = self.take(len * 4)?;
+        if cfg!(target_endian = "little") {
+            let mut out = vec![0i32; len];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    len * 4,
+                );
+            }
+            return Ok(out);
+        }
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(4) {
+            out.push(i32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn primitive_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX);
+        w.i32(-42);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.str("héllo");
+        let bytes = w.into_vec();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i32().unwrap(), -42);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn varint_edges() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut w = Writer::new();
+            w.varint(v);
+            let bytes = w.into_vec();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(r.varint().unwrap(), v);
+            assert!(r.is_done());
+        }
+    }
+
+    #[test]
+    fn slices_roundtrip() {
+        let mut rng = Rng::new(11);
+        let fs: Vec<f32> = (0..1000).map(|_| rng.f32_pm1()).collect();
+        let is: Vec<i32> = (0..1000).map(|_| rng.next_u32() as i32).collect();
+        let mut w = Writer::new();
+        w.f32_slice(&fs);
+        w.i32_slice(&is);
+        let bytes = w.into_vec();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.f32_slice().unwrap(), fs);
+        assert_eq!(r.i32_slice().unwrap(), is);
+    }
+
+    #[test]
+    fn truncated_input_errors_not_panics() {
+        let mut w = Writer::new();
+        w.str("hello world");
+        w.f32_slice(&[1.0; 64]);
+        let bytes = w.into_vec();
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            // Either the string or the slice must fail; no panic allowed.
+            let ok = r.str().is_ok() && r.f32_slice().is_ok();
+            assert!(!ok, "cut={cut} should not decode fully");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Tiny leveled logger (no `env_logger` in the offline vendor set).
+//!
+//! Level comes from `PARHASK_LOG` (`error|warn|info|debug|trace`), default
+//! `warn` so tests and benches stay quiet. Output goes to stderr with a
+//! monotonic millisecond timestamp and the module tag.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn init_level() -> u8 {
+    let lvl = match std::env::var("PARHASK_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        Ok("warn") | _ => Level::Warn,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn enabled(level: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == u8::MAX {
+        cur = init_level();
+    }
+    (level as u8) <= cur
+}
+
+/// Force a level programmatically (used by `--verbose` CLI flags and tests).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log(level: Level, tag: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let ms = crate::util::now_ns() / 1_000_000;
+    let l = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{ms:>8}ms {l} {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! log_error { ($tag:expr, $($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, $tag, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($tag:expr, $($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, $tag, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($tag:expr, $($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, $tag, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($tag:expr, $($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, $tag, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($tag:expr, $($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, $tag, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered() {
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Warn);
+    }
+}

@@ -1,0 +1,16 @@
+//! Substrate utilities built in-repo (the offline vendor set has no serde /
+//! proptest / env_logger — see DESIGN.md §3).
+
+pub mod bytes;
+pub mod json;
+pub mod logging;
+pub mod qcheck;
+pub mod rng;
+
+/// Monotonic nanoseconds since an arbitrary process-local epoch.
+pub fn now_ns() -> u64 {
+    use std::time::Instant;
+    use once_cell::sync::Lazy;
+    static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+    EPOCH.elapsed().as_nanos() as u64
+}

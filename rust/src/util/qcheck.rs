@@ -1,0 +1,239 @@
+//! Mini property-based testing framework (no `proptest`/`quickcheck` in the
+//! offline vendor set).
+//!
+//! Deterministic: cases are generated from a fixed-seed [`Rng`], so failures
+//! reproduce. On failure the runner greedily *shrinks* the failing input
+//! using the type's [`Arbitrary::shrink`] candidates before reporting.
+//!
+//! ```ignore
+//! qcheck(200, |rng| {
+//!     let v = Vec::<u32>::arbitrary(rng);
+//!     prop_assert(reverse(reverse(&v)) == v, "double reverse");
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Values generable from an [`Rng`] with shrink candidates.
+pub trait Arbitrary: Sized + Clone + std::fmt::Debug {
+    fn arbitrary(rng: &mut Rng) -> Self;
+
+    /// Strictly "smaller" candidates; the runner re-tests each.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Arbitrary for u64 {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        // Mix small values and full range — edge cases live at both ends.
+        match rng.below(4) {
+            0 => rng.below(16),
+            1 => rng.below(1024),
+            _ => rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut c = Vec::new();
+        if *self > 0 {
+            c.push(0);
+            c.push(self / 2);
+            c.push(self - 1);
+        }
+        c.dedup();
+        c
+    }
+}
+
+impl Arbitrary for u32 {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        u64::arbitrary(rng) as u32
+    }
+    fn shrink(&self) -> Vec<Self> {
+        u64::shrink(&(*self as u64)).into_iter().map(|v| v as u32).collect()
+    }
+}
+
+impl Arbitrary for usize {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        (u64::arbitrary(rng) % (1 << 20)) as usize
+    }
+    fn shrink(&self) -> Vec<Self> {
+        u64::shrink(&(*self as u64)).into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl Arbitrary for f32 {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        match rng.below(8) {
+            0 => 0.0,
+            1 => 1.0,
+            2 => -1.0,
+            3 => f32::MIN_POSITIVE,
+            _ => (rng.f64() * 2000.0 - 1000.0) as f32,
+        }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl Arbitrary for bool {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        rng.chance(0.5)
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            vec![]
+        }
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        let len = rng.below(33) as usize;
+        (0..len).map(|_| T::arbitrary(rng)).collect()
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(Vec::new());
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        (A::arbitrary(rng), B::arbitrary(rng))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `cases` random trials of `property`. Panics (test failure) with the
+/// shrunk counterexample on the first violation.
+pub fn qcheck<T: Arbitrary>(cases: usize, property: impl Fn(&T) -> PropResult) {
+    qcheck_seeded(0xA11CE, cases, property)
+}
+
+/// Like [`qcheck`] but with an explicit seed (used to pin regressions).
+pub fn qcheck_seeded<T: Arbitrary>(
+    seed: u64,
+    cases: usize,
+    property: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = T::arbitrary(&mut rng);
+        if let Err(msg) = property(&input) {
+            let (shrunk, smsg, steps) = shrink_loop(input, msg, &property);
+            panic!(
+                "property failed (case {case}, shrunk {steps} steps): {smsg}\n  counterexample: {shrunk:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Arbitrary>(
+    mut cur: T,
+    mut msg: String,
+    property: &impl Fn(&T) -> PropResult,
+) -> (T, String, usize) {
+    let mut steps = 0;
+    'outer: loop {
+        if steps > 200 {
+            break;
+        }
+        for cand in cur.shrink() {
+            if let Err(m) = property(&cand) {
+                cur = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, msg, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        qcheck(200, |v: &Vec<u32>| {
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            prop(r == *v, "reverse is involutive")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        qcheck(200, |v: &Vec<u32>| prop(v.len() < 5, "vectors shorter than 5"));
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let res = std::panic::catch_unwind(|| {
+            qcheck(500, |x: &u64| prop(*x < 100, "x < 100"));
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // The shrunk counterexample should be exactly 100.
+        assert!(msg.contains("counterexample: 100"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        // Two identical runs observe the same sequence of inputs.
+        use std::cell::RefCell;
+        let collect = || {
+            let seen = RefCell::new(Vec::new());
+            qcheck_seeded(7, 50, |x: &u64| {
+                seen.borrow_mut().push(*x);
+                Ok(())
+            });
+            seen.into_inner()
+        };
+        assert_eq!(collect(), collect());
+    }
+}

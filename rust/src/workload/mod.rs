@@ -1,0 +1,347 @@
+//! Workload generators shared by examples, benches and integration tests.
+//!
+//! Three builders for the paper's evaluation workload (t rounds of
+//! gen+gen+mul+sum at size N), at three levels of the stack:
+//!
+//! * [`matrix_source`] — HaskLite *source text*, exercising the full
+//!   parse→check→graph→lower pipeline exactly as a user program would;
+//! * [`matrix_program`] — the equivalent `TaskProgram` built directly
+//!   against the public IR API (what a library embedder does);
+//! * [`mlp_program`] — the §2 "deep learning project": data-parallel MLP
+//!   training rounds (grad shards → mean → apply), for the e2e driver.
+
+use crate::ir::task::{ArgRef, CombineKind, CostEst, OpKind};
+use crate::ir::{ProgramBuilder, TaskProgram};
+use crate::runtime::Manifest;
+
+/// HaskLite source for `t` rounds at size `n` (size is bound via the
+/// registry, not the source — `matgen` etc. are abstract in the program,
+/// exactly like the paper's example).
+pub fn matrix_source(t: usize) -> String {
+    let mut src = String::from(
+        "matgen :: Int -> Matrix\nmatgen s = primGen s\n\n\
+         matmul :: Matrix -> Matrix -> Matrix\nmatmul a b = primMul a b\n\n\
+         matsum :: Matrix -> Double\nmatsum c = primSum c\n\n\
+         primGen :: Int\nprimGen = 0\n\nprimMul :: Int\nprimMul = 0\n\nprimSum :: Int\nprimSum = 0\n\n\
+         main :: IO ()\nmain = do\n",
+    );
+    for r in 0..t {
+        src.push_str(&format!("  let a{r} = matgen {}\n", 2 * r));
+        src.push_str(&format!("  let b{r} = matgen {}\n", 2 * r + 1));
+        src.push_str(&format!("  let c{r} = matmul a{r} b{r}\n"));
+        src.push_str(&format!("  let s{r} = matsum c{r}\n"));
+    }
+    // total = s0 + s1 + ... ; binary + folds left
+    src.push_str("  let total = ");
+    for r in 0..t {
+        if r > 0 {
+            src.push_str(" + ");
+        }
+        src.push_str(&format!("s{r}"));
+    }
+    src.push('\n');
+    src.push_str("  print total\n");
+    src
+}
+
+/// Cost estimates for the matrix ops at size `n`, taken from the manifest
+/// when available (so simulator runs agree with `parhask calibrate`).
+fn ests(n: usize, manifest: Option<&Manifest>) -> [CostEst; 4] {
+    let nn = (n * n * 4) as u64;
+    let get = |fam: &str, fallback: CostEst| -> CostEst {
+        manifest
+            .and_then(|m| m.get(&format!("{fam}_{n}")))
+            .map(|e| CostEst {
+                flops: e.flops,
+                bytes_in: e.bytes_in,
+                bytes_out: e.bytes_out,
+            })
+            .unwrap_or(fallback)
+    };
+    [
+        get("matgen", CostEst { flops: 8 * (n * n) as u64, bytes_in: 4, bytes_out: nn }),
+        get("matmul", CostEst { flops: 2 * (n as u64).pow(3), bytes_in: 2 * nn, bytes_out: nn }),
+        get("matsum", CostEst { flops: 2 * (n * n) as u64, bytes_in: nn, bytes_out: 4 }),
+        get("matround", CostEst { flops: 2 * (n as u64).pow(3) + 18 * (n * n) as u64, bytes_in: 8, bytes_out: 4 }),
+    ]
+}
+
+/// Build the Figure-2 workload directly: `t` rounds at size `n`.
+/// `via_artifacts` selects AOT artifacts vs host reference ops.
+pub fn matrix_program(
+    t: usize,
+    n: usize,
+    via_artifacts: bool,
+    manifest: Option<&Manifest>,
+) -> TaskProgram {
+    let [e_gen, e_mul, e_sum, _] = ests(n, manifest);
+    let mut b = ProgramBuilder::new();
+    let mut sums = Vec::new();
+    for r in 0..t {
+        let mk = |fam: &str| -> OpKind {
+            if via_artifacts {
+                OpKind::Artifact { name: format!("{fam}_{n}") }
+            } else {
+                match fam {
+                    "matgen" => OpKind::HostMatGen { n },
+                    "matmul" => OpKind::HostMatMul,
+                    _ => OpKind::HostMatSum,
+                }
+            }
+        };
+        let g1 = b.push(
+            mk("matgen"),
+            vec![ArgRef::const_i32(2 * r as i32)],
+            1,
+            e_gen,
+            format!("a{r}"),
+        );
+        let g2 = b.push(
+            mk("matgen"),
+            vec![ArgRef::const_i32(2 * r as i32 + 1)],
+            1,
+            e_gen,
+            format!("b{r}"),
+        );
+        let mm = b.push(
+            mk("matmul"),
+            vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+            1,
+            e_mul,
+            format!("c{r}"),
+        );
+        let s = b.push(
+            mk("matsum"),
+            vec![ArgRef::out(mm, 0)],
+            1,
+            e_sum,
+            format!("s{r}"),
+        );
+        sums.push(ArgRef::out(s, 0));
+    }
+    let total = b.push(
+        OpKind::Combine(CombineKind::AddScalars),
+        sums,
+        1,
+        CostEst::ZERO,
+        "total",
+    );
+    b.mark_output(ArgRef::out(total, 0));
+    b.build().expect("matrix program is well-formed")
+}
+
+/// Fused-granularity variant: each round is ONE `matround_N` artifact
+/// (Ablation C — task granularity at fixed FLOPs).
+pub fn matrix_program_fused(t: usize, n: usize, manifest: Option<&Manifest>) -> TaskProgram {
+    let [_, _, _, e_round] = ests(n, manifest);
+    let mut b = ProgramBuilder::new();
+    let mut sums = Vec::new();
+    for r in 0..t {
+        let s = b.push(
+            OpKind::Artifact { name: format!("matround_{n}") },
+            vec![
+                ArgRef::const_i32(2 * r as i32),
+                ArgRef::const_i32(2 * r as i32 + 1),
+            ],
+            1,
+            e_round,
+            format!("round{r}"),
+        );
+        sums.push(ArgRef::out(s, 0));
+    }
+    let total = b.push(
+        OpKind::Combine(CombineKind::AddScalars),
+        sums,
+        1,
+        CostEst::ZERO,
+        "total",
+    );
+    b.mark_output(ArgRef::out(total, 0));
+    b.build().expect("fused matrix program is well-formed")
+}
+
+/// Data-parallel MLP training: `steps` rounds × `shards` gradient tasks,
+/// grads averaged per parameter, SGD applied once per round. Returns the
+/// program; its outputs are the `steps` per-round mean losses (in order)
+/// followed by the final parameters.
+pub fn mlp_program(steps: usize, shards: usize, lr: f32, manifest: &Manifest) -> TaskProgram {
+    let grad_e = manifest.get("mlp_grad").map(|e| CostEst {
+        flops: e.flops,
+        bytes_in: e.bytes_in,
+        bytes_out: e.bytes_out,
+    });
+    let est = |name: &str| -> CostEst {
+        manifest
+            .get(name)
+            .map(|e| CostEst {
+                flops: e.flops,
+                bytes_in: e.bytes_in,
+                bytes_out: e.bytes_out,
+            })
+            .unwrap_or(CostEst::ZERO)
+    };
+    let mut b = ProgramBuilder::new();
+    // params <- mlp_init(0): 6 outputs
+    let init = b.push(
+        OpKind::Artifact { name: "mlp_init".into() },
+        vec![ArgRef::const_i32(0)],
+        6,
+        est("mlp_init"),
+        "init",
+    );
+    // data shards: fixed per shard (re-used every round, like an epoch of 1 batch)
+    let data: Vec<_> = (0..shards)
+        .map(|s| {
+            b.push(
+                OpKind::Artifact { name: "mlp_datagen".into() },
+                vec![ArgRef::const_i32(s as i32)],
+                2,
+                est("mlp_datagen"),
+                format!("data{s}"),
+            )
+        })
+        .collect();
+
+    let mut params: Vec<ArgRef> = (0..6).map(|i| ArgRef::out(init, i)).collect();
+    let mut loss_refs = Vec::new();
+    for step in 0..steps {
+        // shard gradients (parallel)
+        let grads: Vec<_> = (0..shards)
+            .map(|s| {
+                let mut args = params.clone();
+                args.push(ArgRef::out(data[s], 0));
+                args.push(ArgRef::out(data[s], 1));
+                b.push(
+                    OpKind::Artifact { name: "mlp_grad".into() },
+                    args,
+                    7,
+                    grad_e.unwrap_or(CostEst::ZERO),
+                    format!("grad{step}.{s}"),
+                )
+            })
+            .collect();
+        // mean grads per parameter tensor
+        let mean_g: Vec<ArgRef> = (0..6)
+            .map(|i| {
+                let id = b.push(
+                    OpKind::Combine(CombineKind::MeanTensors),
+                    grads.iter().map(|g| ArgRef::out(*g, i)).collect(),
+                    1,
+                    CostEst::ZERO,
+                    format!("meang{step}.{i}"),
+                );
+                ArgRef::out(id, 0)
+            })
+            .collect();
+        // mean loss across shards (the logged signal)
+        let loss = b.push(
+            OpKind::Combine(CombineKind::MeanTensors),
+            grads.iter().map(|g| ArgRef::out(*g, 6)).collect(),
+            1,
+            CostEst::ZERO,
+            format!("loss{step}"),
+        );
+        loss_refs.push(ArgRef::out(loss, 0));
+        // apply
+        let mut args = params.clone();
+        args.extend(mean_g);
+        args.push(ArgRef::const_f32(lr));
+        let apply = b.push(
+            OpKind::Artifact { name: "mlp_apply".into() },
+            args,
+            6,
+            est("mlp_apply"),
+            format!("apply{step}"),
+        );
+        params = (0..6).map(|i| ArgRef::out(apply, i)).collect();
+    }
+    for l in loss_refs {
+        b.mark_output(l);
+    }
+    for p in params {
+        b.mark_output(p);
+    }
+    b.build().expect("mlp program is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_program;
+    use crate::types::check_program;
+
+    #[test]
+    fn source_parses_checks_and_lowers() {
+        let src = matrix_source(3);
+        let p = parse_program(&src).unwrap();
+        let c = check_program(&p, "main").unwrap();
+        let g = crate::depgraph::build_depgraph(&c).unwrap();
+        // 3 rounds × 4 nodes + 1 glue node (whole `+` expr) + print = 14
+        assert_eq!(g.len(), 14);
+        let reg = crate::tasks::FunctionRegistry::matrix_host(16);
+        let l = crate::ir::lower::lower(&c, &reg).unwrap();
+        // lowered: 12 ops + 2 binary AddScalars combines + print
+        assert_eq!(l.program.len(), 15);
+        // rounds are independent: width ≥ 2·t (all gens at once)
+        assert!(l.program.max_parallel_width() >= 6);
+    }
+
+    #[test]
+    fn direct_program_matches_source_structure() {
+        let direct = matrix_program(3, 16, false, None);
+        // 12 ops + 1 n-ary combine (no print in direct form)
+        assert_eq!(direct.len(), 13);
+        assert_eq!(direct.roots().len(), 6);
+    }
+
+    #[test]
+    fn fused_program_has_t_plus_one_tasks() {
+        let p = matrix_program_fused(5, 64, None);
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.max_parallel_width(), 5);
+    }
+
+    #[test]
+    fn source_and_direct_agree_on_result() {
+        use crate::baselines::run_single;
+        use crate::tasks::{FunctionRegistry, HostExecutor};
+        let src = matrix_source(2);
+        let parsed = parse_program(&src).unwrap();
+        let checked = check_program(&parsed, "main").unwrap();
+        let reg = FunctionRegistry::matrix_host(16);
+        let lowered = crate::ir::lower::lower(&checked, &reg).unwrap();
+        let r1 = run_single(&lowered.program, &HostExecutor).unwrap();
+        let direct = matrix_program(2, 16, false, None);
+        let r2 = run_single(&direct, &HostExecutor).unwrap();
+        // The "total" variable is the largest scalar among the lowered
+        // program's outputs (it is the sum of the positive round sums).
+        let got1 = r1
+            .outputs
+            .iter()
+            .filter_map(|v| v.as_tensor().ok())
+            .filter(|t| t.len() == 1)
+            .map(|t| t.scalar().unwrap())
+            .fold(f32::MIN, f32::max);
+        let got2 = r2.outputs[0].as_tensor().unwrap().scalar().unwrap();
+        assert!(
+            (got1 - got2).abs() / got2 < 1e-5,
+            "source {got1} vs direct {got2}"
+        );
+    }
+
+    #[test]
+    fn mlp_program_structure() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let p = mlp_program(2, 4, 0.05, &m);
+        // per step: 4 grads + 6 means + 1 loss + 1 apply = 12; plus init + 4 datagen
+        assert_eq!(p.len(), 5 + 2 * 12);
+        // outputs: 2 losses + 6 params
+        assert_eq!(p.outputs().len(), 8);
+        // data + grads of step0 run in parallel
+        assert!(p.max_parallel_width() >= 4);
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration test: the paper's Figure 1, node- and edge-exact, from
+//! source text through the full frontend.
+
+use parhask::depgraph::{analyze, build_depgraph, dot, EdgeKind};
+use parhask::frontend::parse_program;
+use parhask::types::check_program;
+
+const PAPER_PROGRAM: &str = r#"
+data Summary = Opaque
+
+clean_files :: IO Summary
+clean_files = primitive
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = primitive
+
+semantic_analysis :: IO Int
+semantic_analysis = primitive
+
+primitive :: Int
+primitive = 0
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  z <- semantic_analysis
+  print (y, z)
+"#;
+
+#[test]
+fn figure1_graph_is_exact() {
+    let ast = parse_program(PAPER_PROGRAM).unwrap();
+    let checked = check_program(&ast, "main").unwrap();
+    let g = build_depgraph(&checked).unwrap();
+
+    // Exactly the 4 call nodes of Figure 1.
+    assert_eq!(g.len(), 4);
+    let cf = g.find_by_func("clean_files").unwrap();
+    let ce = g.find_by_func("complex_evaluation").unwrap();
+    let sa = g.find_by_func("semantic_analysis").unwrap();
+    let pr = g.find_by_func("print").unwrap();
+
+    // Node classification.
+    assert!(g.node(cf).io && g.node(sa).io && g.node(pr).io);
+    assert!(!g.node(ce).io);
+    assert_eq!(g.node(cf).binds.as_deref(), Some("x"));
+    assert_eq!(g.node(ce).binds.as_deref(), Some("y"));
+    assert_eq!(g.node(sa).binds.as_deref(), Some("z"));
+
+    // Value edges, with the variables they carry.
+    let val_edges: Vec<(_, _, String)> = g
+        .edges()
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EdgeKind::Value(v) => Some((e.src, e.dst, v.clone())),
+            EdgeKind::World => None,
+        })
+        .collect();
+    assert!(val_edges.contains(&(cf, ce, "x".to_string())));
+    assert!(val_edges.contains(&(ce, pr, "y".to_string())));
+    assert!(val_edges.contains(&(sa, pr, "z".to_string())));
+    assert_eq!(val_edges.len(), 3);
+
+    // RealWorld chain.
+    let world: Vec<(_, _)> = g
+        .edges()
+        .iter()
+        .filter(|e| e.kind == EdgeKind::World)
+        .map(|e| (e.src, e.dst))
+        .collect();
+    assert_eq!(world, vec![(cf, sa), (sa, pr)]);
+
+    // The parallelism the paper highlights: width 2 after clean_files.
+    let stats = analyze::analyze(&g, |_| 1.0);
+    assert_eq!(stats.max_width, 2);
+    assert_eq!(stats.depth, 3);
+    assert_eq!(stats.io_nodes, 3);
+}
+
+#[test]
+fn figure1_dot_renders_all_elements() {
+    let ast = parse_program(PAPER_PROGRAM).unwrap();
+    let checked = check_program(&ast, "main").unwrap();
+    let g = build_depgraph(&checked).unwrap();
+    let d = dot::to_dot(&g, "Figure 1");
+    for needle in [
+        "clean_files",
+        "complex_evaluation",
+        "semantic_analysis",
+        "print",
+        "doubleoctagon",           // IO node shape
+        "shape=box",               // pure node shape
+        "RealWorld",               // token edges + source
+        "label=\"x\"",
+        "label=\"y\"",
+        "label=\"z\"",
+        "world0",
+    ] {
+        assert!(d.contains(needle), "DOT missing {needle:?}:\n{d}");
+    }
+}
+
+#[test]
+fn entry_point_other_than_main_reproduces_subgraph() {
+    // the paper's future-work note: parallelize an arbitrary function
+    let src = format!(
+        "{PAPER_PROGRAM}\npipeline :: IO ()\npipeline = do\n  a <- clean_files\n  let b = complex_evaluation a\n  print b\n"
+    );
+    let ast = parse_program(&src).unwrap();
+    let checked = check_program(&ast, "pipeline").unwrap();
+    let g = build_depgraph(&checked).unwrap();
+    assert_eq!(g.len(), 3);
+}

@@ -1,0 +1,164 @@
+//! Frontend robustness: arbitrary input must produce a diagnostic or an
+//! AST — never a panic — and valid programs must round-trip through the
+//! pretty-printer.
+
+use parhask::frontend::{parse_program, pretty};
+use parhask::util::qcheck::{prop, qcheck_seeded, Arbitrary};
+use parhask::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+struct Garbage(String);
+
+impl Arbitrary for Garbage {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        const PIECES: &[&str] = &[
+            "main", "=", "do", "\n", "  ", "<-", "::", "IO", "Int", "(", ")", ",", "let",
+            "x", "f", "+", "data", "42", "\"s\"", "->", "[", "]", "{-", "-}", "--", "|",
+            "∀", "λ", "\t", "'",
+        ];
+        let n = rng.range(0, 40);
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push_str(PIECES[rng.range(0, PIECES.len())]);
+            if rng.chance(0.3) {
+                s.push(' ');
+            }
+        }
+        Garbage(s)
+    }
+}
+
+#[test]
+fn parser_never_panics_on_garbage() {
+    qcheck_seeded(0xF22, 500, |g: &Garbage| {
+        let _ = parse_program(&g.0); // Ok or Err — both fine; panic = fail
+        Ok(())
+    });
+}
+
+#[derive(Clone, Debug)]
+struct ValidProgram(String);
+
+impl Arbitrary for ValidProgram {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        // generate a random well-formed matrix-ish program
+        let rounds = rng.range(1, 6);
+        let mut src = String::from(
+            "matgen :: Int -> Matrix\nmatgen s = prim\n\nmatmul :: Matrix -> Matrix -> Matrix\nmatmul a b = prim\n\nmatsum :: Matrix -> Double\nmatsum c = prim\n\nprim :: Int\nprim = 0\n\nmain :: IO ()\nmain = do\n",
+        );
+        let mut sums = Vec::new();
+        for r in 0..rounds {
+            src.push_str(&format!("  let a{r} = matgen {}\n", rng.below(100)));
+            src.push_str(&format!("  let b{r} = matgen {}\n", rng.below(100)));
+            src.push_str(&format!("  let c{r} = matmul a{r} b{r}\n"));
+            if rng.chance(0.7) {
+                src.push_str(&format!("  let s{r} = matsum c{r}\n"));
+                sums.push(format!("s{r}"));
+            }
+        }
+        if sums.is_empty() {
+            src.push_str("  let s0 = matsum c0\n");
+            sums.push("s0".into());
+        }
+        src.push_str(&format!("  print ({})\n", sums.join(", ")));
+        ValidProgram(src)
+    }
+}
+
+#[test]
+fn valid_programs_parse_check_and_roundtrip() {
+    use parhask::types::check_program;
+    qcheck_seeded(0x600D, 80, |v: &ValidProgram| {
+        let p1 = parse_program(&v.0).map_err(|e| format!("parse: {e}\n{}", v.0))?;
+        check_program(&p1, "main").map_err(|e| format!("check: {e}"))?;
+        let printed = pretty::program(&p1);
+        let p2 = parse_program(&printed).map_err(|e| format!("reparse: {e}\n{printed}"))?;
+        prop(
+            pretty::program(&p2) == printed,
+            "pretty is a fixpoint under reparse",
+        )
+    });
+}
+
+#[test]
+fn valid_programs_lower_and_run() {
+    use parhask::baselines::run_single;
+    use parhask::ir::lower::lower;
+    use parhask::tasks::{FunctionRegistry, HostExecutor};
+    use parhask::types::check_program;
+    qcheck_seeded(0x60, 30, |v: &ValidProgram| {
+        let p = parse_program(&v.0).map_err(|e| e.to_string())?;
+        let c = check_program(&p, "main").map_err(|e| e.to_string())?;
+        let reg = FunctionRegistry::matrix_host(8);
+        let l = lower(&c, &reg).map_err(|e| e.to_string())?;
+        let r = run_single(&l.program, &HostExecutor).map_err(|e| format!("{e:#}"))?;
+        r.trace.validate(&l.program).map_err(|e| format!("{e:#}"))?;
+        Ok(())
+    });
+}
+
+/// The inliner must preserve semantics: a program written through helper
+/// abstractions computes the same result as its hand-flattened equivalent.
+#[derive(Clone, Debug)]
+struct HelperProgram {
+    via_helper: String,
+    flat: String,
+}
+
+impl Arbitrary for HelperProgram {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        let rounds = rng.range(1, 4);
+        let header = "matgen :: Int -> Matrix\nmatgen s = prim\n\nmatmul :: Matrix -> Matrix -> Matrix\nmatmul a b = prim\n\nmatsum :: Matrix -> Double\nmatsum c = prim\n\nprim :: Int\nprim = 0\n\nscore :: Int -> Int -> Double\nscore p q = matsum (matmul (matgen p) (matgen q))\n\n";
+        let mut via = format!("{header}main :: IO ()\nmain = do\n");
+        let mut flat = format!("{header}main :: IO ()\nmain = do\n");
+        let mut names = Vec::new();
+        for r in 0..rounds {
+            let (a, b) = (rng.below(50) as i64, rng.below(50) as i64);
+            via.push_str(&format!("  let s{r} = score {a} {b}\n"));
+            flat.push_str(&format!("  let s{r} = matsum (matmul (matgen {a}) (matgen {b}))\n"));
+            names.push(format!("s{r}"));
+        }
+        let total = names.join(" + ");
+        via.push_str(&format!("  let total = {total}\n  print total\n"));
+        flat.push_str(&format!("  let total = {total}\n  print total\n"));
+        HelperProgram { via_helper: via, flat }
+    }
+}
+
+#[test]
+fn prop_inliner_preserves_results() {
+    use parhask::baselines::run_single;
+    use parhask::frontend::inline_stmts;
+    use parhask::ir::lower::lower;
+    use parhask::tasks::{FunctionRegistry, HostExecutor};
+    use parhask::types::check_program;
+
+    let total_of = |src: &str, inline: bool| -> Result<f32, String> {
+        let p = parse_program(src).map_err(|e| e.to_string())?;
+        let mut c = check_program(&p, "main").map_err(|e| e.to_string())?;
+        if inline {
+            c.main_stmts =
+                inline_stmts(&p, &c.main_stmts, &["matgen", "matmul", "matsum"], 8)
+                    .map_err(|e| e.to_string())?;
+        }
+        let reg = FunctionRegistry::matrix_host(8);
+        let l = lower(&c, &reg).map_err(|e| e.to_string())?;
+        let r = run_single(&l.program, &HostExecutor).map_err(|e| format!("{e:#}"))?;
+        // `total` is the largest scalar among outputs (sum of positives)
+        Ok(r.outputs
+            .iter()
+            .filter_map(|v| v.as_tensor().ok())
+            .filter(|t| t.len() == 1)
+            .map(|t| t.scalar().unwrap())
+            .fold(f32::MIN, f32::max))
+    };
+
+    qcheck_seeded(0x111E, 30, |hp: &HelperProgram| {
+        let inlined = total_of(&hp.via_helper, true)?;
+        let direct = total_of(&hp.flat, false)?;
+        prop(
+            (inlined - direct).abs() <= direct.abs() * 1e-6,
+            &format!("inlined {inlined} == direct {direct}"),
+        )
+    });
+}

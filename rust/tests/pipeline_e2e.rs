@@ -1,0 +1,164 @@
+//! Integration: full pipeline (source → … → engines) with real PJRT
+//! artifacts, checking that every engine computes the identical result —
+//! the purity guarantee made testable.
+
+
+use parhask::baselines::{run_single, run_smp};
+use parhask::cluster::{run_cluster_inproc, ClusterConfig};
+use parhask::frontend::parse_program;
+use parhask::ir::lower::lower;
+use parhask::runtime::RuntimeService;
+use parhask::tasks::{FunctionRegistry, PjrtExecutor};
+use parhask::types::check_program;
+use parhask::workload;
+
+fn artifacts_available() -> bool {
+    parhask::runtime::default_artifact_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+#[test]
+fn source_to_cluster_with_artifacts_all_engines_agree() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let svc = RuntimeService::start_default().unwrap();
+    let executor = PjrtExecutor::new(svc.handle());
+
+    let src = workload::matrix_source(3);
+    let ast = parse_program(&src).unwrap();
+    let checked = check_program(&ast, "main").unwrap();
+    let registry = FunctionRegistry::matrix_artifacts(64, svc.handle().manifest()).unwrap();
+    let lowered = lower(&checked, &registry).unwrap();
+
+    let scalar_of = |r: &parhask::scheduler::trace::RunResult| -> f32 {
+        // "total" is the max scalar among outputs (sum of positive sums)
+        r.outputs
+            .iter()
+            .filter_map(|v| v.as_tensor().ok())
+            .filter(|t| t.len() == 1)
+            .map(|t| t.scalar().unwrap())
+            .fold(f32::MIN, f32::max)
+    };
+
+    let r_single = run_single(&lowered.program, executor.as_ref()).unwrap();
+    r_single.trace.validate(&lowered.program).unwrap();
+    let want = scalar_of(&r_single);
+    assert!(want > 0.0);
+
+    let r_smp = run_smp(&lowered.program, executor.clone(), 2).unwrap();
+    r_smp.trace.validate(&lowered.program).unwrap();
+    assert_eq!(scalar_of(&r_smp), want, "SMP must equal single (purity)");
+
+    let r_cluster = run_cluster_inproc(
+        &lowered.program,
+        executor,
+        3,
+        ClusterConfig::default(),
+        None,
+    )
+    .unwrap();
+    r_cluster.trace.validate(&lowered.program).unwrap();
+    assert_eq!(
+        scalar_of(&r_cluster),
+        want,
+        "cluster must equal single (purity + codec exactness)"
+    );
+}
+
+#[test]
+fn artifact_checksum_is_reproducible_across_runs() {
+    if !artifacts_available() {
+        return;
+    }
+    let svc = RuntimeService::start_default().unwrap();
+    let executor = PjrtExecutor::new(svc.handle());
+    let m = svc.handle().manifest().clone();
+    let p = workload::matrix_program(2, 64, true, Some(&m));
+    let r1 = run_single(&p, executor.as_ref()).unwrap();
+    let r2 = run_cluster_inproc(&p, executor, 2, ClusterConfig::default(), None).unwrap();
+    let s1 = r1.outputs[0].as_tensor().unwrap().scalar().unwrap();
+    let s2 = r2.outputs[0].as_tensor().unwrap().scalar().unwrap();
+    assert_eq!(s1, s2, "threefry artifacts are bit-deterministic");
+}
+
+#[test]
+fn fused_and_unfused_rounds_agree_numerically() {
+    if !artifacts_available() {
+        return;
+    }
+    let svc = RuntimeService::start_default().unwrap();
+    let executor = PjrtExecutor::new(svc.handle());
+    let m = svc.handle().manifest().clone();
+    let unfused = workload::matrix_program(2, 64, true, Some(&m));
+    let fused = workload::matrix_program_fused(2, 64, Some(&m));
+    let r1 = run_single(&unfused, executor.as_ref()).unwrap();
+    let r2 = run_single(&fused, executor.as_ref()).unwrap();
+    let s1 = r1.outputs[0].as_tensor().unwrap().scalar().unwrap();
+    let s2 = r2.outputs[0].as_tensor().unwrap().scalar().unwrap();
+    assert!(
+        (s1 - s2).abs() / s1 < 1e-4,
+        "fusion must not change results: {s1} vs {s2}"
+    );
+}
+
+#[test]
+fn mlp_training_descends_through_cluster() {
+    if !artifacts_available() {
+        return;
+    }
+    let svc = RuntimeService::start_default().unwrap();
+    let m = svc.handle().manifest().clone();
+    let steps = 6;
+    let program = workload::mlp_program(steps, 2, 0.05, &m);
+    let r = run_cluster_inproc(
+        &program,
+        PjrtExecutor::new(svc.handle()),
+        2,
+        ClusterConfig::default(),
+        None,
+    )
+    .unwrap();
+    let losses: Vec<f32> = r.outputs[..steps]
+        .iter()
+        .map(|v| v.as_tensor().unwrap().scalar().unwrap())
+        .collect();
+    assert!(
+        losses[steps - 1] < losses[0],
+        "loss must descend: {losses:?}"
+    );
+}
+
+#[test]
+fn locality_policy_moves_fewer_bytes_with_artifacts() {
+    if !artifacts_available() {
+        return;
+    }
+    use parhask::scheduler::PlacementPolicy;
+    let svc = RuntimeService::start_default().unwrap();
+    let m = svc.handle().manifest().clone();
+    let p = workload::matrix_program(4, 128, true, Some(&m));
+    let mut bytes = Vec::new();
+    for placement in [PlacementPolicy::RoundRobin, PlacementPolicy::LocalityAware] {
+        let cfg = ClusterConfig {
+            placement,
+            // isolate placement: no stealing reshuffles
+            steal: parhask::scheduler::StealPolicy::None,
+            ..Default::default()
+        };
+        let r = run_cluster_inproc(&p, PjrtExecutor::new(svc.handle()), 2, cfg, None).unwrap();
+        bytes.push(r.trace.bytes_transferred);
+    }
+    // Real-time placement is timing-dependent (assignments race task
+    // completions), so the clean deterministic comparison lives in the
+    // simulator test (`locality_placement_reduces_bytes`). Here we bound
+    // the real engine: locality must not ship meaningfully more.
+    assert!(
+        bytes[1] as f64 <= bytes[0] as f64 * 1.25,
+        "locality {} should not meaningfully exceed round-robin {}",
+        bytes[1],
+        bytes[0]
+    );
+}

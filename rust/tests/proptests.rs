@@ -1,0 +1,361 @@
+//! Property-based tests over the system's core invariants, using the
+//! in-repo qcheck substrate (no proptest offline).
+//!
+//! Invariants:
+//! 1. codec: decode ∘ encode = id for arbitrary messages;
+//! 2. scheduling: every engine yields a valid trace (each task once, deps
+//!    respected, workers serial) on arbitrary DAGs;
+//! 3. engines agree on results for arbitrary pure matrix DAGs;
+//! 4. simulator: makespan ∈ [span, work] under unit transfer costs;
+//! 5. graph analysis: span ≤ work, Brent bound monotone in workers.
+
+use std::sync::Arc;
+
+use parhask::cluster::codec;
+use parhask::cluster::message::{ArgSpec, Message};
+use parhask::ir::task::{ArgRef, CombineKind, CostEst, OpKind, TaskId, Value};
+use parhask::ir::{ProgramBuilder, TaskProgram};
+use parhask::scheduler::WorkerId;
+use parhask::tensor::Tensor;
+use parhask::util::qcheck::{prop, qcheck_seeded, Arbitrary};
+use parhask::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct AnyMessage(Message);
+
+fn any_value(rng: &mut Rng) -> Value {
+    match rng.below(5) {
+        0 => Value::Unit,
+        1 => Value::Token,
+        2 => Value::scalar_f32(rng.f32_pm1() * 100.0),
+        3 => {
+            let n: usize = rng.range(1, 20);
+            Value::Tensor(Arc::new(
+                Tensor::i32(vec![n], (0..n).map(|i| i as i32 - 5).collect()).unwrap(),
+            ))
+        }
+        _ => {
+            let r = rng.range(1, 9);
+            let c = rng.range(1, 9);
+            Value::Tensor(Arc::new(Tensor::uniform(vec![r, c], rng.next_u64())))
+        }
+    }
+}
+
+fn any_op(rng: &mut Rng) -> OpKind {
+    match rng.below(7) {
+        0 => OpKind::Artifact {
+            name: format!("matmul_{}", 64 << rng.below(3)),
+        },
+        1 => OpKind::HostMatGen {
+            n: rng.range(1, 64),
+        },
+        2 => OpKind::HostMatMul,
+        3 => OpKind::Synthetic {
+            compute_us: rng.below(1000),
+        },
+        4 => OpKind::IoAction {
+            label: "print".into(),
+            compute_us: rng.below(100),
+        },
+        5 => OpKind::Combine(CombineKind::Select(rng.below(4) as usize)),
+        _ => OpKind::Combine(CombineKind::MeanTensors),
+    }
+}
+
+impl Arbitrary for AnyMessage {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        let msg = match rng.below(8) {
+            0 => Message::Hello {
+                worker: WorkerId(rng.next_u32() % 64),
+            },
+            1 => Message::TaskDone {
+                task: TaskId(rng.next_u32() % 1000),
+                outputs: (0..rng.below(4)).map(|_| any_value(rng)).collect(),
+                compute_ns: rng.next_u64(),
+            },
+            2 => Message::TaskFailed {
+                task: TaskId(rng.next_u32() % 1000),
+                error: format!("err {}", rng.next_u32()),
+            },
+            3 => Message::Assign {
+                task: TaskId(rng.next_u32() % 1000),
+                op: any_op(rng),
+                args: (0..rng.below(5))
+                    .map(|_| {
+                        if rng.chance(0.5) {
+                            ArgSpec::Inline(any_value(rng))
+                        } else {
+                            ArgSpec::Cached {
+                                task: TaskId(rng.next_u32() % 1000),
+                                index: rng.below(8) as usize,
+                            }
+                        }
+                    })
+                    .collect(),
+            },
+            4 => Message::Revoke {
+                task: TaskId(rng.next_u32()),
+            },
+            5 => Message::Ping,
+            6 => Message::Pong,
+            _ => Message::Shutdown,
+        };
+        AnyMessage(msg)
+    }
+}
+
+/// A random well-formed pure DAG of host matrix ops + combines.
+#[derive(Clone, Debug)]
+struct AnyDag(TaskProgram);
+
+impl Arbitrary for AnyDag {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        let n_tasks = rng.range(1, 24);
+        let mut b = ProgramBuilder::new();
+        let mut scalar_outs: Vec<TaskId> = Vec::new(); // tasks producing scalars
+        let mut mat_outs: Vec<TaskId> = Vec::new(); // tasks producing 8x8 matrices
+        for i in 0..n_tasks {
+            match rng.below(3) {
+                0 => {
+                    let id = b.push(
+                        OpKind::HostMatGen { n: 8 },
+                        vec![ArgRef::const_i32(i as i32)],
+                        1,
+                        CostEst { flops: 64, bytes_in: 4, bytes_out: 256 },
+                        format!("g{i}"),
+                    );
+                    mat_outs.push(id);
+                }
+                1 if mat_outs.len() >= 2 => {
+                    let a = mat_outs[rng.range(0, mat_outs.len())];
+                    let c = mat_outs[rng.range(0, mat_outs.len())];
+                    let id = b.push(
+                        OpKind::HostMatMul,
+                        vec![ArgRef::out(a, 0), ArgRef::out(c, 0)],
+                        1,
+                        CostEst { flops: 1024, bytes_in: 512, bytes_out: 256 },
+                        format!("m{i}"),
+                    );
+                    mat_outs.push(id);
+                }
+                _ if !mat_outs.is_empty() => {
+                    let a = mat_outs[rng.range(0, mat_outs.len())];
+                    let id = b.push(
+                        OpKind::HostMatSum,
+                        vec![ArgRef::out(a, 0)],
+                        1,
+                        CostEst { flops: 128, bytes_in: 256, bytes_out: 4 },
+                        format!("s{i}"),
+                    );
+                    scalar_outs.push(id);
+                }
+                _ => {
+                    let id = b.push(
+                        OpKind::HostMatGen { n: 8 },
+                        vec![ArgRef::const_i32(i as i32)],
+                        1,
+                        CostEst { flops: 64, bytes_in: 4, bytes_out: 256 },
+                        format!("g{i}"),
+                    );
+                    mat_outs.push(id);
+                }
+            }
+        }
+        if scalar_outs.is_empty() {
+            let a = mat_outs[0];
+            scalar_outs.push(b.push(
+                OpKind::HostMatSum,
+                vec![ArgRef::out(a, 0)],
+                1,
+                CostEst { flops: 128, bytes_in: 256, bytes_out: 4 },
+                "s_final",
+            ));
+        }
+        let total = b.push(
+            OpKind::Combine(CombineKind::AddScalars),
+            scalar_outs.iter().map(|t| ArgRef::out(*t, 0)).collect(),
+            1,
+            CostEst::ZERO,
+            "total",
+        );
+        b.mark_output(ArgRef::out(total, 0));
+        AnyDag(b.build().expect("generated DAG is valid by construction"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_codec_roundtrip() {
+    qcheck_seeded(0xC0DEC, 300, |m: &AnyMessage| {
+        let bytes = codec::encode(&m.0);
+        let back = codec::decode(&bytes).map_err(|e| e.to_string())?;
+        prop(back == m.0, "decode(encode(m)) == m")
+    });
+}
+
+#[test]
+fn prop_codec_rejects_mutations_or_preserves_wellformedness() {
+    // flipping the tag/length bytes must never panic (errors are fine)
+    qcheck_seeded(0xBADC0DE, 150, |m: &AnyMessage| {
+        let mut bytes = codec::encode(&m.0);
+        if bytes.len() > 2 {
+            bytes[1] ^= 0xFF; // corrupt the tag
+        }
+        let _ = codec::decode(&bytes); // must not panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engines_yield_valid_traces_and_equal_results() {
+    use parhask::baselines::{run_single, run_smp};
+    use parhask::cluster::{run_cluster_inproc, ClusterConfig};
+    use parhask::tasks::HostExecutor;
+
+    qcheck_seeded(0xDA6, 40, |d: &AnyDag| {
+        let p = &d.0;
+        let ex = Arc::new(HostExecutor);
+        let r1 = run_single(p, ex.as_ref()).map_err(|e| format!("single: {e:#}"))?;
+        r1.trace.validate(p).map_err(|e| format!("single trace: {e:#}"))?;
+        let v1 = r1.outputs[0].as_tensor().unwrap().scalar().unwrap();
+
+        let r2 = run_smp(p, ex.clone(), 3).map_err(|e| format!("smp: {e:#}"))?;
+        r2.trace.validate(p).map_err(|e| format!("smp trace: {e:#}"))?;
+        let v2 = r2.outputs[0].as_tensor().unwrap().scalar().unwrap();
+        prop(v1 == v2, &format!("smp {v2} == single {v1}"))?;
+
+        let r3 = run_cluster_inproc(p, ex, 2, ClusterConfig::default(), None)
+            .map_err(|e| format!("cluster: {e:#}"))?;
+        r3.trace.validate(p).map_err(|e| format!("cluster trace: {e:#}"))?;
+        let v3 = r3.outputs[0].as_tensor().unwrap().scalar().unwrap();
+        prop(v1 == v3, &format!("cluster {v3} == single {v1}"))
+    });
+}
+
+#[test]
+fn prop_simulator_makespan_bounded_by_work_and_span() {
+    use parhask::simulator::{simulate, CostModel, SimConfig};
+    qcheck_seeded(0x51AB, 60, |d: &AnyDag| {
+        let p = &d.0;
+        let mut cm = CostModel::default();
+        cm.latency_ns = 0;
+        cm.dispatch_ns = 0;
+        cm.bytes_per_ns = f64::INFINITY;
+        let r = simulate(p, &cm, &SimConfig::smp(4)).map_err(|e| e.to_string())?;
+        // with zero overheads: span ≤ makespan ≤ work (both via cost model)
+        let cost = |t: &parhask::ir::task::TaskSpec| cm.task_cost_ns(t);
+        let work: u64 = p.tasks().iter().map(cost).sum();
+        let mut finish = vec![0u64; p.len()];
+        for t in p.tasks() {
+            let dep_max = t.deps().iter().map(|d| finish[d.index()]).max().unwrap_or(0);
+            finish[t.id.index()] = dep_max + cost(t);
+        }
+        let span = finish.iter().copied().max().unwrap_or(0);
+        prop(
+            r.makespan_ns >= span && r.makespan_ns <= work.max(span),
+            &format!("span {span} ≤ makespan {} ≤ work {work}", r.makespan_ns),
+        )
+    });
+}
+
+#[test]
+fn prop_sim_speedup_monotone_in_workers() {
+    use parhask::simulator::{simulate, CostModel, SimConfig};
+    qcheck_seeded(0x5EED5, 40, |d: &AnyDag| {
+        let p = &d.0;
+        let cm = CostModel::default();
+        let t1 = simulate(p, &cm, &SimConfig::smp(1)).map_err(|e| e.to_string())?;
+        let t4 = simulate(p, &cm, &SimConfig::smp(4)).map_err(|e| e.to_string())?;
+        prop(
+            t4.makespan_ns <= t1.makespan_ns,
+            &format!("4 workers {} ≤ 1 worker {}", t4.makespan_ns, t1.makespan_ns),
+        )
+    });
+}
+
+#[test]
+fn prop_work_span_analysis_consistent() {
+    qcheck_seeded(0xA11A, 100, |d: &AnyDag| {
+        let (work, span) = d.0.work_span_flops();
+        prop(span <= work, &format!("span {span} ≤ work {work}"))?;
+        let width = d.0.max_parallel_width();
+        prop(width >= 1 && width <= d.0.len(), "width within [1, n]")
+    });
+}
+
+#[test]
+fn prop_json_value_roundtrip() {
+    use parhask::util::json::Json;
+
+    #[derive(Clone, Debug)]
+    struct AnyJson(Json);
+
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        if depth == 0 {
+            return match rng.below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.next_u32() as f64 / 7.0 * 100.0).round() / 100.0),
+                _ => Json::Str(format!("s{}", rng.next_u32() % 1000)),
+            };
+        }
+        match rng.below(6) {
+            0 => Json::Null,
+            1 => Json::Bool(true),
+            2 => Json::Num(rng.next_u32() as f64),
+            3 => Json::Str("héllo \"quoted\"\n".into()),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    impl Arbitrary for AnyJson {
+        fn arbitrary(rng: &mut Rng) -> Self {
+            AnyJson(gen(rng, 3))
+        }
+    }
+
+    qcheck_seeded(0x150_1, 200, |j: &AnyJson| {
+        let text = j.0.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop(back == j.0, "parse(print(j)) == j")
+    });
+}
+
+#[test]
+fn prop_deque_never_loses_elements_single_thief() {
+    use parhask::scheduler::deque::{Steal, WorkDeque};
+    qcheck_seeded(0xDE0, 60, |ops: &Vec<u32>| {
+        let d = WorkDeque::<u32>::with_capacity(4);
+        let mut pushed = 0u64;
+        let mut got = 0u64;
+        for (i, op) in ops.iter().enumerate() {
+            if op % 3 != 0 {
+                d.push(i as u32);
+                pushed += 1;
+            } else if let Some(_v) = d.pop() {
+                got += 1;
+            }
+        }
+        while d.pop().is_some() {
+            got += 1;
+        }
+        // single-threaded: steal must now be empty
+        prop(
+            matches!(d.steal(), Steal::Empty) && got == pushed,
+            &format!("pushed {pushed} == consumed {got}"),
+        )
+    });
+}

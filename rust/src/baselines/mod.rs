@@ -3,5 +3,5 @@
 
 pub mod single;
 
-pub use crate::scheduler::local::run_smp;
-pub use single::run_single;
+pub use crate::scheduler::local::{run_smp, run_smp_cached};
+pub use single::{run_single, run_single_cached};

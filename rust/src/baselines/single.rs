@@ -5,6 +5,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::cache::ResultCache;
 use crate::ir::task::{ArgRef, Value};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::{RunResult, ScheduleTrace, TraceEvent};
@@ -14,6 +15,16 @@ use crate::tasks::Executor;
 /// Execute sequentially; task ids are already a topological order
 /// (validated at program construction).
 pub fn run_single(program: &TaskProgram, executor: &dyn Executor) -> Result<RunResult> {
+    run_single_cached(program, executor, None)
+}
+
+/// [`run_single`] with an optional purity-aware result cache: each pure
+/// task is looked up by content before executing and stored after.
+pub fn run_single_cached(
+    program: &TaskProgram,
+    executor: &dyn Executor,
+    cache: Option<&ResultCache>,
+) -> Result<RunResult> {
     let mut values: Vec<Option<Vec<Value>>> = vec![None; program.len()];
     let mut trace = ScheduleTrace::default();
     let t0 = crate::util::now_ns();
@@ -28,6 +39,16 @@ pub fn run_single(program: &TaskProgram, executor: &dyn Executor) -> Result<RunR
                         .expect("topological order violated");
                     args.push(outs[*index].clone());
                 }
+            }
+        }
+        if let Some(cache) = cache {
+            if let Some(outs) = cache.lookup(spec, &args) {
+                trace.record_cache_hit(spec.id);
+                values[spec.id.index()] = Some(outs);
+                continue;
+            }
+            if cache.cacheable(spec) {
+                trace.cache_misses += 1;
             }
         }
         let start = crate::util::now_ns();
@@ -48,6 +69,9 @@ pub fn run_single(program: &TaskProgram, executor: &dyn Executor) -> Result<RunR
             start_ns: start,
             end_ns: end,
         });
+        if let Some(cache) = cache {
+            cache.insert(spec, &args, &outs);
+        }
         values[spec.id.index()] = Some(outs);
     }
     trace.wall_ns = crate::util::now_ns() - t0;
@@ -104,6 +128,59 @@ mod tests {
             .matmul(&crate::tensor::Tensor::uniform(vec![16, 16], 4))
             .unwrap();
         assert!(r.outputs[0].as_tensor().unwrap().allclose(&want, 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn result_cache_serves_second_run_bit_identically() {
+        use crate::cache::ResultCache;
+        let p = crate::workload::matrix_program(2, 12, false, None);
+        let cache = ResultCache::new_enabled();
+        let r1 = run_single_cached(&p, &HostExecutor, Some(&cache)).unwrap();
+        assert_eq!(r1.trace.cache_hits, 0, "cold cache");
+        assert_eq!(r1.trace.executed_tasks(), p.len());
+        let r2 = run_single_cached(&p, &HostExecutor, Some(&cache)).unwrap();
+        r2.trace.validate(&p).unwrap();
+        assert_eq!(r1.outputs, r2.outputs, "bit-identical outputs");
+        assert_eq!(r2.trace.executed_tasks(), 0, "fully warm run executes nothing");
+        assert_eq!(r2.trace.cache_hits as usize, p.len());
+    }
+
+    #[test]
+    fn duplicate_subcomputations_hit_within_one_run() {
+        use crate::cache::ResultCache;
+        let mut b = ProgramBuilder::new();
+        // the same (op, args) twice: the second is a within-run hit
+        let g1 = b.push(
+            OpKind::HostMatGen { n: 8 },
+            vec![ArgRef::const_i32(7)],
+            1,
+            CostEst::ZERO,
+            "a",
+        );
+        let g2 = b.push(
+            OpKind::HostMatGen { n: 8 },
+            vec![ArgRef::const_i32(7)],
+            1,
+            CostEst::ZERO,
+            "a_again",
+        );
+        let mm = b.push(
+            OpKind::HostMatMul,
+            vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+            1,
+            CostEst::ZERO,
+            "c",
+        );
+        b.mark_output(ArgRef::out(mm, 0));
+        let p = b.build().unwrap();
+        let cache = ResultCache::new_enabled();
+        let r = run_single_cached(&p, &HostExecutor, Some(&cache)).unwrap();
+        r.trace.validate(&p).unwrap();
+        assert_eq!(r.trace.cache_hits, 1);
+        assert_eq!(r.trace.executed_tasks(), 2);
+        // and the uncached run agrees bit-for-bit
+        let r0 = run_single(&p, &HostExecutor).unwrap();
+        assert_eq!(r0.outputs, r.outputs);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Stable, content-addressed cache keys.
+//!
+//! A task's key is a 128-bit hash of its *semantics*: the canonical wire
+//! encoding of its op plus the canonical encodings of its concrete input
+//! values (not `ArgRef`s — two tasks in different programs that apply the
+//! same op to the same bytes share a key). The wire codec round-trips
+//! bit-exactly, so equal encodings ⇔ equal inputs, and the key is stable
+//! across processes, runs and programs.
+//!
+//! Canonicalization: for ops whose semantics are invariant under argument
+//! order (the commutative combines — `AddScalars` up to float-addition
+//! order used identically by every engine, and `MeanTensors` likewise),
+//! the per-argument digests are sorted before mixing, so `f(a, b)` and
+//! `f(b, a)` hit the same entry. Order-sensitive ops mix digests in
+//! argument order.
+//!
+//! NOTE on `AddScalars`/`MeanTensors` and floats: every executor reduces
+//! these left-to-right with an f64 accumulator, so reordering f32 inputs
+//! is exact in all but pathological cancellation cases; treating the two
+//! orders as one cache entry trades ≤1 ulp of f32 drift (never observed in
+//! the test workloads) for cross-program hits. Opt an op out via
+//! `CacheConfig::deny` if exact order sensitivity ever matters.
+
+use crate::cluster::codec;
+use crate::ir::task::{CombineKind, OpKind, Value};
+
+/// A 128-bit content hash (two independent 64-bit FNV-1a lanes).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct TaskKey {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl std::fmt::Display for TaskKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+const FNV_OFFSET_1: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_OFFSET_2: u64 = 0x6c62_272e_07bb_0142; // FNV-0 of a different basis
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// Streaming two-lane FNV-1a. Not cryptographic — collision resistance at
+/// 128 bits is ample for a same-trust-domain result cache.
+#[derive(Clone, Debug)]
+pub struct KeyHasher {
+    h1: u64,
+    h2: u64,
+}
+
+impl KeyHasher {
+    pub fn new() -> KeyHasher {
+        KeyHasher {
+            h1: FNV_OFFSET_1,
+            h2: FNV_OFFSET_2,
+        }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h1 = (self.h1 ^ b as u64).wrapping_mul(FNV_PRIME);
+            self.h2 = (self.h2 ^ b as u64).wrapping_mul(FNV_PRIME.wrapping_add(2));
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> TaskKey {
+        TaskKey {
+            hi: self.h1,
+            lo: self.h2,
+        }
+    }
+}
+
+impl Default for KeyHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// 64-bit digest of one value (lane 1 only — used as the per-arg digest
+/// that canonicalization sorts; the final key still mixes both lanes over
+/// the digests *and* the op encoding).
+pub fn value_digest(v: &Value) -> u64 {
+    let mut h = KeyHasher::new();
+    h.write(&codec::encode_value(v));
+    h.finish().hi
+}
+
+/// Is this op invariant under argument reordering?
+pub fn is_commutative(op: &OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::Combine(CombineKind::AddScalars) | OpKind::Combine(CombineKind::MeanTensors)
+    )
+}
+
+/// Content-addressed key of (op, input values), with reordering-invariant
+/// canonicalization for commutative ops.
+pub fn task_key(op: &OpKind, args: &[Value]) -> TaskKey {
+    task_key_in("", op, args)
+}
+
+/// [`task_key`] within a named key namespace. The namespace partitions the
+/// store by anything *outside* the task's content that can change result
+/// bits — most importantly which executor backend computes (host reference
+/// ops vs PJRT artifacts produce different float bits for the same op).
+pub fn task_key_in(namespace: &str, op: &OpKind, args: &[Value]) -> TaskKey {
+    let mut h = KeyHasher::new();
+    h.write_u64(namespace.len() as u64);
+    h.write(namespace.as_bytes());
+    h.write(&codec::encode_op(op));
+    h.write_u64(args.len() as u64);
+    if is_commutative(op) {
+        let mut digests: Vec<[u8; 24]> = args
+            .iter()
+            .map(|v| {
+                // full 128-bit per-arg digest + the value's own bytes'
+                // length, fixed-width so sorting is unambiguous
+                let mut vh = KeyHasher::new();
+                let bytes = codec::encode_value(v);
+                vh.write(&bytes);
+                let k = vh.finish();
+                let mut out = [0u8; 24];
+                out[..8].copy_from_slice(&k.hi.to_le_bytes());
+                out[8..16].copy_from_slice(&k.lo.to_le_bytes());
+                out[16..24].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+                out
+            })
+            .collect();
+        digests.sort_unstable();
+        for d in &digests {
+            h.write(d);
+        }
+    } else {
+        for v in args {
+            h.write(&codec::encode_value(v));
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn same_inputs_same_key_across_calls() {
+        let op = OpKind::HostMatMul;
+        let a = Value::tensor(Tensor::uniform(vec![8, 8], 1));
+        let b = Value::tensor(Tensor::uniform(vec![8, 8], 2));
+        let k1 = task_key(&op, &[a.clone(), b.clone()]);
+        let k2 = task_key(&op, &[a, b]);
+        assert_eq!(k1, k2);
+    }
+
+    #[test]
+    fn different_ops_or_args_differ() {
+        let a = Value::scalar_f32(1.0);
+        let b = Value::scalar_f32(2.0);
+        let k_mul = task_key(&OpKind::HostMatMul, &[a.clone(), b.clone()]);
+        let k_gen = task_key(&OpKind::HostMatGen { n: 8 }, &[a.clone(), b.clone()]);
+        assert_ne!(k_mul, k_gen);
+        let k_mul_swapped = task_key(&OpKind::HostMatMul, &[b, a]);
+        assert_ne!(k_mul, k_mul_swapped, "matmul is order-sensitive");
+    }
+
+    #[test]
+    fn commutative_ops_canonicalize_arg_order() {
+        let op = OpKind::Combine(CombineKind::AddScalars);
+        let args = vec![
+            Value::scalar_f32(1.5),
+            Value::scalar_f32(-3.0),
+            Value::scalar_f32(42.0),
+        ];
+        let mut rev = args.clone();
+        rev.reverse();
+        assert_eq!(task_key(&op, &args), task_key(&op, &rev));
+        let rotated = vec![args[2].clone(), args[0].clone(), args[1].clone()];
+        assert_eq!(task_key(&op, &args), task_key(&op, &rotated));
+    }
+
+    #[test]
+    fn namespaces_partition_the_keyspace() {
+        let op = OpKind::HostMatMul;
+        let args = [
+            Value::tensor(Tensor::uniform(vec![4, 4], 1)),
+            Value::tensor(Tensor::uniform(vec![4, 4], 2)),
+        ];
+        let host = task_key_in("host", &op, &args);
+        let pjrt = task_key_in("pjrt", &op, &args);
+        assert_ne!(host, pjrt, "different executors must never share entries");
+        assert_eq!(host, task_key_in("host", &op, &args));
+        assert_eq!(task_key(&op, &args), task_key_in("", &op, &args));
+    }
+
+    #[test]
+    fn arity_is_part_of_the_key() {
+        let op = OpKind::Combine(CombineKind::AddScalars);
+        let one = task_key(&op, &[Value::scalar_f32(0.0)]);
+        let two = task_key(&op, &[Value::scalar_f32(0.0), Value::scalar_f32(0.0)]);
+        assert_ne!(one, two);
+    }
+
+    #[test]
+    fn tensor_content_not_identity_drives_the_key() {
+        let op = OpKind::HostMatSum;
+        let t1 = Value::tensor(Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap());
+        let t2 = Value::tensor(Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap());
+        assert_eq!(task_key(&op, &[t1]), task_key(&op, &[t2]));
+        let t3 = Value::tensor(Tensor::f32(vec![2], vec![1.0, 2.5]).unwrap());
+        assert_ne!(
+            task_key(&op, &[Value::tensor(Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap())]),
+            task_key(&op, &[t3])
+        );
+    }
+}

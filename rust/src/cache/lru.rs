@@ -1,0 +1,240 @@
+//! Sharded LRU value store.
+//!
+//! Shard = `Mutex<HashMap<key, entry> + BTreeMap<tick, key>>`; a global
+//! atomic tick gives each touch a unique recency stamp, and eviction pops
+//! the smallest tick. O(log n) per operation, no unsafe, and the mutex is
+//! per-shard so the engines' worker threads rarely contend (the shard is
+//! picked by key bits, which are uniform).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::ir::task::Value;
+
+use super::key::TaskKey;
+
+/// One cached result: the task's output values (tensors are `Arc`-shared,
+/// so cloning in/out of the cache never copies payloads).
+#[derive(Clone, Debug)]
+struct Entry {
+    outputs: Vec<Value>,
+    bytes: usize,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<TaskKey, Entry>,
+    by_tick: BTreeMap<u64, TaskKey>,
+    bytes: usize,
+}
+
+/// Eviction outcome of one insert.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InsertOutcome {
+    pub inserted: bool,
+    pub evicted_entries: u64,
+    pub evicted_bytes: u64,
+}
+
+/// Sharded LRU keyed by [`TaskKey`]. Capacity is enforced per shard at
+/// `total / n_shards` (bytes and entries), which bounds the total exactly
+/// while keeping eviction local to one lock.
+pub struct ShardedLru {
+    shards: Vec<Mutex<Shard>>,
+    tick: AtomicU64,
+    shard_capacity_bytes: usize,
+    shard_max_entries: usize,
+}
+
+impl ShardedLru {
+    pub fn new(n_shards: usize, capacity_bytes: usize, max_entries: usize) -> ShardedLru {
+        let n = n_shards.max(1);
+        ShardedLru {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            tick: AtomicU64::new(0),
+            shard_capacity_bytes: (capacity_bytes / n).max(1),
+            shard_max_entries: (max_entries / n).max(1),
+        }
+    }
+
+    fn shard(&self, key: &TaskKey) -> &Mutex<Shard> {
+        &self.shards[(key.lo as usize) % self.shards.len()]
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Look up a key; a hit refreshes recency.
+    pub fn get(&self, key: &TaskKey) -> Option<Vec<Value>> {
+        let tick = self.next_tick();
+        let mut s = self.shard(key).lock().unwrap();
+        let entry = s.map.get_mut(key)?;
+        let old = entry.tick;
+        entry.tick = tick;
+        let outputs = entry.outputs.clone();
+        s.by_tick.remove(&old);
+        s.by_tick.insert(tick, *key);
+        Some(outputs)
+    }
+
+    /// Insert (or refresh) a key, evicting least-recently-used entries
+    /// until the shard fits. An entry larger than a whole shard's byte
+    /// budget is refused rather than allowed to flush everything.
+    pub fn insert(&self, key: TaskKey, outputs: Vec<Value>) -> InsertOutcome {
+        let bytes: usize = outputs.iter().map(Value::size_bytes).sum();
+        if bytes > self.shard_capacity_bytes {
+            return InsertOutcome::default();
+        }
+        let tick = self.next_tick();
+        let mut s = self.shard(&key).lock().unwrap();
+        if let Some(old) = s.map.remove(&key) {
+            s.by_tick.remove(&old.tick);
+            s.bytes -= old.bytes;
+        }
+        let mut out = InsertOutcome {
+            inserted: true,
+            ..Default::default()
+        };
+        while s.map.len() + 1 > self.shard_max_entries
+            || s.bytes + bytes > self.shard_capacity_bytes
+        {
+            let Some((&oldest, &victim)) = s.by_tick.iter().next() else {
+                break;
+            };
+            s.by_tick.remove(&oldest);
+            if let Some(e) = s.map.remove(&victim) {
+                s.bytes -= e.bytes;
+                out.evicted_entries += 1;
+                out.evicted_bytes += e.bytes as u64;
+            }
+        }
+        s.bytes += bytes;
+        s.by_tick.insert(tick, key);
+        s.map.insert(
+            key,
+            Entry {
+                outputs,
+                bytes,
+                tick,
+            },
+        );
+        out
+    }
+
+    /// Resident entry count across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes across shards.
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Hard bounds implied by the construction parameters.
+    pub fn max_entries(&self) -> usize {
+        self.shard_max_entries * self.shards.len()
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.shard_capacity_bytes * self.shards.len()
+    }
+
+    /// Drop everything (tests, and explicit invalidation).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut s = s.lock().unwrap();
+            s.map.clear();
+            s.by_tick.clear();
+            s.bytes = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(i: u64) -> TaskKey {
+        TaskKey { hi: i, lo: i }
+    }
+
+    fn unit_entry() -> Vec<Value> {
+        vec![Value::Unit]
+    }
+
+    #[test]
+    fn get_after_insert() {
+        let lru = ShardedLru::new(4, 1 << 20, 64);
+        assert!(lru.get(&k(1)).is_none());
+        lru.insert(k(1), vec![Value::scalar_f32(2.5)]);
+        let got = lru.get(&k(1)).unwrap();
+        assert_eq!(got[0].as_tensor().unwrap().scalar().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn entry_cap_enforced_lru_order() {
+        // single shard so the recency order is global and observable
+        let lru = ShardedLru::new(1, 1 << 20, 3);
+        for i in 0..3 {
+            lru.insert(k(i), unit_entry());
+        }
+        assert_eq!(lru.len(), 3);
+        // touch 0 so 1 becomes the LRU victim
+        assert!(lru.get(&k(0)).is_some());
+        let out = lru.insert(k(9), unit_entry());
+        assert_eq!(out.evicted_entries, 1);
+        assert_eq!(lru.len(), 3);
+        assert!(lru.get(&k(1)).is_none(), "LRU entry evicted");
+        assert!(lru.get(&k(0)).is_some());
+        assert!(lru.get(&k(2)).is_some());
+        assert!(lru.get(&k(9)).is_some());
+    }
+
+    #[test]
+    fn byte_cap_enforced() {
+        let big = || vec![Value::tensor(crate::tensor::Tensor::zeros(vec![100]))]; // 400 B
+        let lru = ShardedLru::new(1, 1000, 1024);
+        lru.insert(k(1), big());
+        lru.insert(k(2), big());
+        let out = lru.insert(k(3), big());
+        assert!(out.inserted && out.evicted_entries == 1);
+        assert!(lru.bytes() <= 1000);
+        assert!(lru.get(&k(1)).is_none());
+    }
+
+    #[test]
+    fn oversized_entry_refused() {
+        let lru = ShardedLru::new(1, 100, 16);
+        let out = lru.insert(k(1), vec![Value::tensor(crate::tensor::Tensor::zeros(vec![64]))]);
+        assert!(!out.inserted);
+        assert_eq!(lru.len(), 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_count() {
+        let lru = ShardedLru::new(2, 1 << 20, 64);
+        lru.insert(k(5), unit_entry());
+        lru.insert(k(5), vec![Value::scalar_f32(1.0)]);
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.get(&k(5)).unwrap()[0].as_tensor().unwrap().scalar().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let lru = ShardedLru::new(4, 1 << 20, 64);
+        for i in 0..10 {
+            lru.insert(k(i), unit_entry());
+        }
+        lru.clear();
+        assert!(lru.is_empty());
+        assert_eq!(lru.bytes(), 0);
+    }
+}

@@ -1,0 +1,319 @@
+//! Purity-aware, content-addressed result cache.
+//!
+//! The paper's central guarantee — pure tasks may run anywhere, in any
+//! dependency-consistent order, and may be *re-executed* — also makes
+//! their results *memoizable*: a pure task applied to the same input
+//! values is the same value, wherever and whenever it ran. This module
+//! exploits that for serving repeated traffic:
+//!
+//! * [`key`] — stable 128-bit task keys: hash of (op wire encoding,
+//!   canonicalized input-value encodings). Content-addressed, so hits
+//!   transfer across runs *and across different programs* that contain
+//!   the same sub-computation;
+//! * [`lru`] — sharded in-memory LRU store (byte + entry capped);
+//! * [`stats`] — hit/miss/eviction counters surfaced through `metrics`.
+//!
+//! All four engines consult one [`ResultCache`] through the same two
+//! calls: `lookup(spec, args)` before executing and `insert(spec, args,
+//! outputs)` after. Purity gating is absolute: a task whose op is not
+//! certifiably pure ([`crate::ir::task::OpKind::is_pure`], rooted in the
+//! `types::purity` signature analysis) is never looked up or stored, and
+//! individual ops can additionally be denied by label through
+//! [`CacheConfig::deny`] (e.g. when an artifact wraps a function whose
+//! type signature says `IO`).
+
+pub mod key;
+pub mod lru;
+pub mod stats;
+
+use std::collections::BTreeSet;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::ir::task::{TaskSpec, Value};
+use crate::types::PurityTable;
+
+pub use key::{task_key, task_key_in, TaskKey};
+pub use stats::{CacheCounters, CacheStats};
+
+use lru::ShardedLru;
+
+/// Result-cache configuration (part of [`crate::config::RunConfig`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Master switch. Off by default: `--cache off` (or simply not passing
+    /// `--cache on`) preserves the exact pre-cache execution paths.
+    pub enabled: bool,
+    /// Total resident-value budget in bytes.
+    pub capacity_bytes: usize,
+    /// Total resident-entry budget.
+    pub max_entries: usize,
+    /// Lock shards (rounded up to ≥ 1).
+    pub shards: usize,
+    /// Op labels (see `OpKind::label`) that must never be cached even
+    /// though their op kind looks pure — the per-op opt-out for anything
+    /// `types::purity` cannot certify.
+    pub deny: BTreeSet<String>,
+    /// Key namespace. Partitions the store by anything outside task
+    /// content that changes result bits — the CLI sets it to the executor
+    /// backend ("host" vs "pjrt") so a cache shared across runs can never
+    /// serve one backend's floats to the other.
+    pub namespace: String,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: false,
+            capacity_bytes: 256 << 20, // 256 MiB
+            max_entries: 1 << 16,
+            shards: 16,
+            deny: BTreeSet::new(),
+            namespace: String::new(),
+        }
+    }
+}
+
+impl CacheConfig {
+    /// Deny a single op label.
+    pub fn deny_op(&mut self, label: impl Into<String>) {
+        self.deny.insert(label.into());
+    }
+
+    /// Deny every function the purity analysis classifies as IO. Lowering
+    /// already turns those into impure `IoAction` ops, so this is defense
+    /// in depth for environments that bind IO-typed names to artifacts.
+    pub fn deny_io_from(&mut self, purity: &PurityTable) {
+        for name in purity.io_names() {
+            self.deny.insert(name.to_string());
+        }
+    }
+}
+
+/// The shared result cache. Cheap to clone via `Arc`; hold one across runs
+/// to serve repeated traffic warm.
+pub struct ResultCache {
+    cfg: CacheConfig,
+    store: ShardedLru,
+    counters: CacheCounters,
+}
+
+impl ResultCache {
+    pub fn new(cfg: CacheConfig) -> Arc<ResultCache> {
+        let store = ShardedLru::new(cfg.shards, cfg.capacity_bytes, cfg.max_entries);
+        Arc::new(ResultCache {
+            cfg,
+            store,
+            counters: CacheCounters::default(),
+        })
+    }
+
+    /// Convenience: an enabled cache with default sizing (tests, examples).
+    pub fn new_enabled() -> Arc<ResultCache> {
+        ResultCache::new(CacheConfig {
+            enabled: true,
+            ..CacheConfig::default()
+        })
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// May this task's result ever enter the cache? Purity is the paper's
+    /// criterion; the deny list is the operator's.
+    pub fn cacheable(&self, spec: &TaskSpec) -> bool {
+        self.cfg.enabled && spec.is_pure() && !self.cfg.deny.contains(&spec.op.label())
+    }
+
+    /// The task's content key within this cache's namespace. The cluster
+    /// leader computes it once for lookup + in-flight dedup.
+    pub fn key_for(&self, spec: &TaskSpec, args: &[Value]) -> TaskKey {
+        key::task_key_in(&self.cfg.namespace, &spec.op, args)
+    }
+
+    /// Look up the task's result by content. `None` means "execute it"
+    /// (uncacheable or miss — the counters distinguish the two).
+    pub fn lookup(&self, spec: &TaskSpec, args: &[Value]) -> Option<Vec<Value>> {
+        if !self.cacheable(spec) {
+            self.counters.uncacheable.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let key = self.key_for(spec, args);
+        match self.store.get(&key) {
+            Some(outputs) => {
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                Some(outputs)
+            }
+            None => {
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a computed result (no-op for uncacheable tasks).
+    pub fn insert(&self, spec: &TaskSpec, args: &[Value], outputs: &[Value]) {
+        if !self.cacheable(spec) {
+            return;
+        }
+        let key = self.key_for(spec, args);
+        self.insert_by_key(key, outputs);
+    }
+
+    /// Count a hit that bypassed the store: the cluster leader served a
+    /// task from an identical completed in-flight computation (dedup), so
+    /// trace hit counts and store counters stay in agreement.
+    pub fn note_dedup_hit(&self) {
+        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Key-level variants for callers that computed the key via
+    /// [`Self::key_for`] already (the cluster leader).
+    pub fn lookup_key(&self, key: &TaskKey) -> Option<Vec<Value>> {
+        match self.store.get(key) {
+            Some(outputs) => {
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                Some(outputs)
+            }
+            None => {
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert_by_key(&self, key: TaskKey, outputs: &[Value]) {
+        let out = self.store.insert(key, outputs.to_vec());
+        if out.inserted {
+            self.counters.insertions.fetch_add(1, Ordering::Relaxed);
+        }
+        if out.evicted_entries > 0 {
+            self.counters
+                .evictions
+                .fetch_add(out.evicted_entries, Ordering::Relaxed);
+            self.counters
+                .evicted_bytes
+                .fetch_add(out.evicted_bytes, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn clear(&self) {
+        self.store.clear();
+    }
+
+    /// Counter snapshot including resident sizes.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = self.counters.snapshot();
+        s.resident_entries = self.store.len() as u64;
+        s.resident_bytes = self.store.bytes() as u64;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{CostEst, OpKind, TaskId};
+
+    fn spec(op: OpKind) -> TaskSpec {
+        TaskSpec {
+            id: TaskId(0),
+            op,
+            args: vec![],
+            n_outputs: 1,
+            est: CostEst::ZERO,
+            label: "t".into(),
+        }
+    }
+
+    #[test]
+    fn disabled_cache_never_hits_or_stores() {
+        let c = ResultCache::new(CacheConfig::default()); // enabled: false
+        let s = spec(OpKind::HostMatSum);
+        let args = [Value::scalar_f32(1.0)];
+        c.insert(&s, &args, &[Value::scalar_f32(9.0)]);
+        assert!(c.lookup(&s, &args).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats().hits + c.stats().misses, 0);
+        assert!(c.stats().uncacheable > 0);
+    }
+
+    #[test]
+    fn pure_task_roundtrips() {
+        let c = ResultCache::new_enabled();
+        let s = spec(OpKind::HostMatSum);
+        let args = [Value::scalar_f32(1.0)];
+        assert!(c.lookup(&s, &args).is_none()); // cold miss
+        c.insert(&s, &args, &[Value::scalar_f32(9.0)]);
+        let out = c.lookup(&s, &args).unwrap();
+        assert_eq!(out[0].as_tensor().unwrap().scalar().unwrap(), 9.0);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.insertions), (1, 1, 1));
+    }
+
+    #[test]
+    fn impure_task_never_cached() {
+        let c = ResultCache::new_enabled();
+        let s = spec(OpKind::IoAction {
+            label: "print".into(),
+            compute_us: 0,
+        });
+        let args = [Value::Token];
+        c.insert(&s, &args, &[Value::Unit, Value::Token]);
+        assert!(c.lookup(&s, &args).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats().hits + c.stats().misses, 0, "never counted as cacheable");
+    }
+
+    #[test]
+    fn deny_list_blocks_pure_looking_ops() {
+        let mut cfg = CacheConfig {
+            enabled: true,
+            ..CacheConfig::default()
+        };
+        cfg.deny_op("shady_artifact");
+        let c = ResultCache::new(cfg);
+        let s = spec(OpKind::Artifact {
+            name: "shady_artifact".into(),
+        });
+        c.insert(&s, &[], &[Value::Unit]);
+        assert!(c.lookup(&s, &[]).is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn deny_io_from_purity_table() {
+        let p = crate::frontend::parse_program(
+            "fetch :: IO Int\nfetch = prim\n\nsquare :: Int -> Int\nsquare x = prim x\n",
+        )
+        .unwrap();
+        let t = PurityTable::from_program(&p).unwrap();
+        let mut cfg = CacheConfig::default();
+        cfg.deny_io_from(&t);
+        assert!(cfg.deny.contains("fetch"));
+        assert!(cfg.deny.contains("print")); // builtin effect
+        assert!(!cfg.deny.contains("square"));
+    }
+
+    #[test]
+    fn different_args_different_entries() {
+        let c = ResultCache::new_enabled();
+        let s = spec(OpKind::HostMatSum);
+        c.insert(&s, &[Value::scalar_f32(1.0)], &[Value::scalar_f32(10.0)]);
+        c.insert(&s, &[Value::scalar_f32(2.0)], &[Value::scalar_f32(20.0)]);
+        assert_eq!(c.len(), 2);
+        let a = c.lookup(&s, &[Value::scalar_f32(1.0)]).unwrap();
+        let b = c.lookup(&s, &[Value::scalar_f32(2.0)]).unwrap();
+        assert_eq!(a[0].as_tensor().unwrap().scalar().unwrap(), 10.0);
+        assert_eq!(b[0].as_tensor().unwrap().scalar().unwrap(), 20.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Cache counters, surfaced through [`crate::metrics`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::metrics::Table;
+
+/// Monotonic cache counters (atomics — updated from every engine's worker
+/// threads without locking).
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub insertions: AtomicU64,
+    pub evictions: AtomicU64,
+    pub evicted_bytes: AtomicU64,
+    /// Lookups refused before touching the store (impure op, denied op,
+    /// cache disabled) — kept separate from misses so hit *rate* reflects
+    /// cacheable traffic only.
+    pub uncacheable: AtomicU64,
+}
+
+impl CacheCounters {
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            evicted_bytes: self.evicted_bytes.load(Ordering::Relaxed),
+            uncacheable: self.uncacheable.load(Ordering::Relaxed),
+            resident_entries: 0,
+            resident_bytes: 0,
+        }
+    }
+}
+
+/// Point-in-time view of the cache, renderable as a metrics table.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub evicted_bytes: u64,
+    pub uncacheable: u64,
+    pub resident_entries: u64,
+    pub resident_bytes: u64,
+}
+
+impl CacheStats {
+    /// Hit rate over cacheable lookups; 0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// One-line summary for run reports.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "cache: {} hits / {} misses ({:.1}% of cacheable), {} entries ({} KiB) resident, {} evictions",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.resident_entries,
+            self.resident_bytes / 1024,
+            self.evictions,
+        )
+    }
+
+    /// Full counter table for the bench/metrics harness.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new("result cache", &["counter", "value"]);
+        t.row(vec!["hits".into(), self.hits.to_string()]);
+        t.row(vec!["misses".into(), self.misses.to_string()]);
+        t.row(vec![
+            "hit rate".into(),
+            format!("{:.3}", self.hit_rate()),
+        ]);
+        t.row(vec!["uncacheable lookups".into(), self.uncacheable.to_string()]);
+        t.row(vec!["insertions".into(), self.insertions.to_string()]);
+        t.row(vec!["evictions".into(), self.evictions.to_string()]);
+        t.row(vec!["evicted bytes".into(), self.evicted_bytes.to_string()]);
+        t.row(vec![
+            "resident entries".into(),
+            self.resident_entries.to_string(),
+        ]);
+        t.row(vec![
+            "resident bytes".into(),
+            self.resident_bytes.to_string(),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_edges() {
+        let mut s = CacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s.hits = 3;
+        s.misses = 1;
+        assert_eq!(s.hit_rate(), 0.75);
+    }
+
+    #[test]
+    fn table_and_summary_render() {
+        let c = CacheCounters::default();
+        c.hits.fetch_add(2, Ordering::Relaxed);
+        c.misses.fetch_add(2, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert!(s.summary_line().contains("2 hits / 2 misses"));
+        let rendered = s.table().render();
+        assert!(rendered.contains("hit rate"));
+        assert!(rendered.contains("0.500"));
+    }
+}

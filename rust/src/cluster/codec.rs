@@ -194,6 +194,22 @@ pub fn decode(bytes: &[u8]) -> Result<Message> {
     Ok(msg)
 }
 
+/// Canonical bytes of a single value — the wire encoding, exposed for the
+/// result cache's content addressing: the codec round-trips bit-exactly,
+/// so equal bytes ⇔ equal values.
+pub fn encode_value(v: &Value) -> Vec<u8> {
+    let mut w = Writer::with_capacity(16 + v.size_bytes());
+    put_value(&mut w, v);
+    w.into_vec()
+}
+
+/// Canonical bytes of an op — shared with the result cache's task keys.
+pub fn encode_op(op: &OpKind) -> Vec<u8> {
+    let mut w = Writer::with_capacity(16);
+    put_op(&mut w, op);
+    w.into_vec()
+}
+
 fn put_value(w: &mut Writer, v: &Value) {
     match v {
         Value::Tensor(t) => {

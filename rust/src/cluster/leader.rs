@@ -15,12 +15,14 @@
 //! holds them, in which case a `Cached` reference saves the transfer
 //! (what locality-aware placement is for).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::{ResultCache, TaskKey};
 use crate::ir::task::{ArgRef, TaskId, Value};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::{RunResult, ScheduleTrace, TraceEvent};
@@ -71,6 +73,29 @@ pub struct Leader {
     senders: Vec<Box<dyn MsgSender>>,
     events: mpsc::Receiver<Event>,
     _readers: Vec<std::thread::JoinHandle<()>>,
+    /// Purity-aware result cache. When set, the leader short-circuits
+    /// dispatch of content-hits and deduplicates identical in-flight tasks.
+    cache: Option<Arc<ResultCache>>,
+}
+
+/// Leader-side cache bookkeeping: which key each dispatched task carries,
+/// which keys are currently executing somewhere, and which tasks wait for
+/// an identical in-flight computation instead of running their own copy.
+#[derive(Default)]
+struct CacheState {
+    task_keys: HashMap<TaskId, TaskKey>,
+    inflight_keys: HashMap<TaskKey, TaskId>,
+    waiting: HashMap<TaskKey, Vec<TaskId>>,
+}
+
+impl CacheState {
+    /// Forget a task's key registration (revoke, failed send, worker
+    /// death) so its re-dispatch is not deduplicated against itself.
+    fn forget(&mut self, task: TaskId) {
+        if let Some(k) = self.task_keys.remove(&task) {
+            self.inflight_keys.remove(&k);
+        }
+    }
 }
 
 impl Leader {
@@ -112,7 +137,14 @@ impl Leader {
             senders,
             events,
             _readers: readers,
+            cache: None,
         }
+    }
+
+    /// Attach a result cache (shared across runs by the caller).
+    pub fn with_cache(mut self, cache: Option<Arc<ResultCache>>) -> Leader {
+        self.cache = cache;
+        self
     }
 
     /// Drive the program to completion; returns outputs + trace.
@@ -140,12 +172,13 @@ impl Leader {
         let mut failures = 0usize;
         let mut rng = Rng::new(0x5EED);
         let mut bytes_in = 0u64; // worker->leader payload estimate
+        let mut cstate = CacheState::default();
         let t0 = crate::util::now_ns();
 
         // Wait for Hellos (workers announce themselves) — but in-proc
         // workers start instantly; just process them as normal events.
 
-        self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+        self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
 
         while !state.is_done() {
             // try stealing for idle workers
@@ -189,13 +222,38 @@ impl Leader {
                     });
                     inflight[w.index()].retain(|t| *t != task);
                     if values[task.index()].is_none() {
+                        // result cache: store the result and serve any
+                        // identical tasks that were parked on this one
+                        if let Some(cache) = &self.cache {
+                            let spec = program.task(task);
+                            if cache.cacheable(spec) {
+                                let key = match cstate.task_keys.remove(&task) {
+                                    Some(k) => k,
+                                    // dispatched via a path that skipped
+                                    // registration (steal re-assign)
+                                    None => {
+                                        let args = gather_arg_values(&program, &values, task)?;
+                                        cache.key_for(spec, &args)
+                                    }
+                                };
+                                cstate.inflight_keys.remove(&key);
+                                cache.insert_by_key(key, &outputs);
+                                for t in cstate.waiting.remove(&key).unwrap_or_default() {
+                                    values[t.index()] = Some(outputs.clone());
+                                    cache.note_dedup_hit();
+                                    trace.record_cache_hit(t);
+                                    state.complete_local(&program, t);
+                                    log_debug!("leader", "dedup: served {t} from completed {task}");
+                                }
+                            }
+                        }
                         values[task.index()] = Some(outputs);
                         state.on_done(&program, task, w);
                     } else {
                         // duplicate completion (e.g. post-revoke race) — ignore
                         log_debug!("leader", "duplicate completion of {task} from {w}");
                     }
-                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
                 }
                 Event::Msg(w, Message::TaskFailed { task, error }) => {
                     bail!("task {task} failed on {w}: {error}");
@@ -203,6 +261,7 @@ impl Leader {
                 Event::Msg(w, Message::Revoked { task }) => {
                     revoking.remove(&task);
                     inflight[w.index()].retain(|t| *t != task);
+                    cstate.forget(task);
                     state.unassign(&program, task, w);
                     log_debug!("leader", "stole {task} back from {w}");
                     // hand the stolen task straight to the thief that asked
@@ -228,7 +287,7 @@ impl Leader {
                             }
                         }
                     }
-                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
                 }
                 Event::Msg(_, Message::RevokeDenied { task }) => {
                     revoking.remove(&task);
@@ -251,6 +310,10 @@ impl Leader {
                     for t in &lost {
                         revoking.remove(t);
                         pending_steals.remove(t);
+                        // a lost task is no longer in flight: identical
+                        // tasks must not park behind it (they will be
+                        // served when its re-execution completes)
+                        cstate.forget(*t);
                     }
                     log_info!(
                         "leader",
@@ -270,7 +333,7 @@ impl Leader {
                     }
                     state.requeue(&program, &lost, w);
                     state.mark_dead(w);
-                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at)?;
+                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
                 }
             }
         }
@@ -304,9 +367,15 @@ impl Leader {
 
     /// Assign ready tasks while capacity remains.
     ///
+    /// With a result cache attached, each ready task is first resolved
+    /// against the cache: content hits complete at the leader without any
+    /// dispatch, and a task identical to one already in flight parks until
+    /// that one completes instead of executing twice.
+    ///
     /// A failed send means the worker is dying: the task is requeued and
     /// the worker excluded for the rest of this pump; the authoritative
     /// death accounting happens when its `Disconnected` event arrives.
+    #[allow(clippy::too_many_arguments)]
     fn pump(
         &mut self,
         program: &TaskProgram,
@@ -315,6 +384,8 @@ impl Leader {
         inflight: &mut [Vec<TaskId>],
         alive: &[bool],
         assigned_at: &mut std::collections::HashMap<TaskId, u64>,
+        trace: &mut ScheduleTrace,
+        cstate: &mut CacheState,
     ) -> Result<()> {
         let mut skip: HashSet<usize> = HashSet::new();
         loop {
@@ -346,6 +417,37 @@ impl Leader {
                 };
                 (t2, w2)
             };
+            // result cache: resolve at the leader before paying dispatch
+            if let Some(cache) = &self.cache {
+                let spec = program.task(task);
+                if cache.cacheable(spec) {
+                    let arg_vals = gather_arg_values(program, values, task)?;
+                    let key = cache.key_for(spec, &arg_vals);
+                    // dedup first: while the provider is in flight its key
+                    // cannot be in the store, and parking is neither a
+                    // store hit nor a miss — it becomes a hit when served
+                    if let Some(&provider) = cstate.inflight_keys.get(&key) {
+                        state.abort_assign(w);
+                        cstate.waiting.entry(key).or_default().push(task);
+                        log_debug!(
+                            "leader",
+                            "dedup: {task} parked behind identical in-flight {provider}"
+                        );
+                        continue;
+                    }
+                    if let Some(outs) = cache.lookup_key(&key) {
+                        state.abort_assign(w);
+                        values[task.index()] = Some(outs);
+                        trace.record_cache_hit(task);
+                        state.complete_local(program, task);
+                        log_debug!("leader", "cache hit: {task} served at the leader");
+                        continue;
+                    }
+                    trace.cache_misses += 1;
+                    cstate.task_keys.insert(task, key);
+                    cstate.inflight_keys.insert(key, task);
+                }
+            }
             let args = self.build_args(program, state, values, task, w)?;
             match self.senders[w.index()].send(&Message::Assign {
                 task,
@@ -359,6 +461,7 @@ impl Leader {
                 }
                 Err(e) => {
                     log_info!("leader", "send to {w} failed ({e:#}); requeueing {task}");
+                    cstate.forget(task);
                     state.unassign(program, task, w);
                     skip.insert(w.index());
                 }
@@ -456,4 +559,26 @@ impl Leader {
             .with_context(|| format!("revoking {task} from {victim}"))?;
         Ok(())
     }
+}
+
+/// Concrete input values of a ready task (every dependency has completed,
+/// so this cannot fail on a well-formed program). Used to form the task's
+/// content-addressed cache key at the leader.
+fn gather_arg_values(
+    program: &TaskProgram,
+    values: &[Option<Vec<Value>>],
+    task: TaskId,
+) -> Result<Vec<Value>> {
+    program
+        .task(task)
+        .args
+        .iter()
+        .map(|a| match a {
+            ArgRef::Const(v) => Ok(v.clone()),
+            ArgRef::Output { task: d, index } => Ok(values[d.index()]
+                .as_ref()
+                .with_context(|| format!("{task} is ready but {d} has no value"))?[*index]
+                .clone()),
+        })
+        .collect()
 }

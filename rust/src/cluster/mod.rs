@@ -22,5 +22,8 @@ pub mod worker;
 
 pub use leader::{ClusterConfig, Leader};
 pub use message::{ArgSpec, Message};
-pub use node::{run_cluster_inproc, run_cluster_tcp, serve_worker};
+pub use node::{
+    run_cluster_inproc, run_cluster_inproc_cached, run_cluster_tcp, run_cluster_tcp_cached,
+    serve_worker,
+};
 pub use worker::{FaultPlan, Worker};

@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::cache::ResultCache;
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::RunResult;
 use crate::scheduler::WorkerId;
@@ -27,6 +28,20 @@ pub fn run_cluster_inproc(
     n_workers: usize,
     cfg: ClusterConfig,
     faults: Option<Vec<FaultPlan>>,
+) -> Result<RunResult> {
+    run_cluster_inproc_cached(program, executor, n_workers, cfg, faults, None)
+}
+
+/// [`run_cluster_inproc`] with an optional purity-aware result cache: the
+/// leader short-circuits dispatch of content hits and deduplicates
+/// identical in-flight tasks across workers.
+pub fn run_cluster_inproc_cached(
+    program: &TaskProgram,
+    executor: Arc<dyn Executor>,
+    n_workers: usize,
+    cfg: ClusterConfig,
+    faults: Option<Vec<FaultPlan>>,
+    cache: Option<Arc<ResultCache>>,
 ) -> Result<RunResult> {
     anyhow::ensure!(n_workers >= 1, "need at least one worker");
     let mut links: Vec<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)> = Vec::new();
@@ -51,7 +66,7 @@ pub fn run_cluster_inproc(
                 .context("spawning worker thread")?,
         );
     }
-    let leader = Leader::new(program.clone(), links, cfg);
+    let leader = Leader::new(program.clone(), links, cfg).with_cache(cache);
     let result = leader.run();
     for h in worker_handles {
         let _ = h.join();
@@ -84,6 +99,17 @@ pub fn run_cluster_tcp<A: ToSocketAddrs>(
     n_workers: usize,
     cfg: ClusterConfig,
 ) -> Result<RunResult> {
+    run_cluster_tcp_cached(program, bind, n_workers, cfg, None)
+}
+
+/// [`run_cluster_tcp`] with an optional leader-side result cache.
+pub fn run_cluster_tcp_cached<A: ToSocketAddrs>(
+    program: &TaskProgram,
+    bind: A,
+    n_workers: usize,
+    cfg: ClusterConfig,
+    cache: Option<Arc<ResultCache>>,
+) -> Result<RunResult> {
     let listener = TcpListener::bind(bind).context("binding leader socket")?;
     log_info!(
         "leader",
@@ -97,7 +123,7 @@ pub fn run_cluster_tcp<A: ToSocketAddrs>(
         let (tx, rx) = tcp_split(stream)?;
         links.push((Box::new(tx), Box::new(rx)));
     }
-    Leader::new(program.clone(), links, cfg).run()
+    Leader::new(program.clone(), links, cfg).with_cache(cache).run()
 }
 
 #[cfg(test)]
@@ -257,6 +283,71 @@ mod tests {
         let err =
             run_cluster_inproc(&p, Arc::new(HostExecutor), 2, cfg, Some(faults)).unwrap_err();
         assert!(format!("{err:#}").contains("failure budget"), "{err:#}");
+    }
+
+    #[test]
+    fn warm_cache_cluster_run_executes_nothing_and_agrees() {
+        let p = matrix_program(3, 8);
+        let cache = ResultCache::new_enabled();
+        let r1 = run_cluster_inproc_cached(
+            &p,
+            Arc::new(HostExecutor),
+            2,
+            ClusterConfig::default(),
+            None,
+            Some(Arc::clone(&cache)),
+        )
+        .unwrap();
+        r1.trace.validate(&p).unwrap();
+        let r2 = run_cluster_inproc_cached(
+            &p,
+            Arc::new(HostExecutor),
+            2,
+            ClusterConfig::default(),
+            None,
+            Some(cache),
+        )
+        .unwrap();
+        r2.trace.validate(&p).unwrap();
+        assert_eq!(r1.outputs, r2.outputs, "purity ⇒ bit-identical");
+        assert_eq!(r2.trace.executed_tasks(), 0, "leader served the whole run");
+        assert_eq!(r2.trace.cache_hits as usize, p.len());
+        // only control traffic (shutdown frames) moves on a warm run
+        assert!(r2.trace.bytes_transferred < 64, "{}", r2.trace.bytes_transferred);
+    }
+
+    #[test]
+    fn leader_dedupes_identical_inflight_tasks() {
+        // Two pairs of identical matgen tasks: the leader must execute one
+        // of each pair and serve its twin from the in-flight dedup.
+        let mut b = ProgramBuilder::new();
+        for _ in 0..2 {
+            for seed in [1, 2] {
+                b.push(
+                    OpKind::HostMatGen { n: 8 },
+                    vec![ArgRef::const_i32(seed)],
+                    1,
+                    CostEst { flops: 64, bytes_in: 4, bytes_out: 256 },
+                    format!("g{seed}"),
+                );
+            }
+        }
+        let p = b.build().unwrap();
+        let cache = ResultCache::new_enabled();
+        let r = run_cluster_inproc_cached(
+            &p,
+            Arc::new(HostExecutor),
+            2,
+            ClusterConfig::default(),
+            None,
+            Some(Arc::clone(&cache)),
+        )
+        .unwrap();
+        r.trace.validate(&p).unwrap();
+        assert_eq!(r.trace.cache_hits, 2, "one twin per pair served without executing");
+        assert_eq!(r.trace.executed_tasks(), 2);
+        // dedup serves count as hits in the store counters too
+        assert_eq!(cache.stats().hits, r.trace.cache_hits);
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::cache::CacheConfig;
 use crate::cluster::ClusterConfig;
 use crate::scheduler::{PlacementPolicy, StealPolicy};
 
@@ -64,6 +65,12 @@ pub struct RunConfig {
     pub use_cached_args: bool,
     /// Execute via AOT artifacts (vs host reference ops).
     pub use_artifacts: bool,
+    /// Purity-aware result cache (all engines). Disabled by default —
+    /// `--cache off` is exactly the pre-cache behavior.
+    pub cache: CacheConfig,
+    /// Simulator-only: model a warm cache at this hit rate (the real
+    /// engines measure their hit rate instead of assuming one).
+    pub sim_cache_hit_rate: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -77,6 +84,8 @@ impl Default for RunConfig {
             max_failures: 0,
             use_cached_args: true,
             use_artifacts: true,
+            cache: CacheConfig::default(),
+            sim_cache_hit_rate: None,
         }
     }
 }
@@ -99,6 +108,33 @@ impl RunConfig {
             "max_failures" => self.max_failures = value.parse()?,
             "cached_args" => self.use_cached_args = value.parse()?,
             "artifacts" => self.use_artifacts = value.parse()?,
+            "cache" => {
+                self.cache.enabled = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    _ => bail!("bad --cache value {value:?} (on | off)"),
+                }
+            }
+            "cache_mb" => {
+                let mb: usize = value.parse()?;
+                self.cache.capacity_bytes = mb
+                    .checked_mul(1 << 20)
+                    .ok_or_else(|| anyhow::anyhow!("cache_mb {mb} overflows the byte budget"))?;
+            }
+            "cache_entries" => self.cache.max_entries = value.parse()?,
+            "cache_shards" => self.cache.shards = value.parse()?,
+            "cache_deny" => {
+                for op in value.split(',').filter(|s| !s.is_empty()) {
+                    self.cache.deny_op(op.trim());
+                }
+            }
+            "cache_hit_rate" => {
+                let r: f64 = value.parse()?;
+                if !(0.0..=1.0).contains(&r) {
+                    bail!("cache_hit_rate must be in [0, 1], got {r}");
+                }
+                self.sim_cache_hit_rate = Some(r);
+            }
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -144,5 +180,33 @@ mod tests {
         assert_eq!(c.placement, PlacementPolicy::LocalityAware);
         assert_eq!(c.pipeline_depth, 5);
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn cache_overrides() {
+        let mut c = RunConfig::default();
+        assert!(!c.cache.enabled, "cache is off by default");
+        c.set("cache", "on").unwrap();
+        c.set("cache_mb", "64").unwrap();
+        c.set("cache_entries", "1024").unwrap();
+        c.set("cache_shards", "4").unwrap();
+        c.set("cache_deny", "matgen_256, legacy_op").unwrap();
+        assert!(c.cache.enabled);
+        assert_eq!(c.cache.capacity_bytes, 64 << 20);
+        assert_eq!(c.cache.max_entries, 1024);
+        assert_eq!(c.cache.shards, 4);
+        assert!(c.cache.deny.contains("matgen_256"));
+        assert!(c.cache.deny.contains("legacy_op"));
+        c.set("cache", "off").unwrap();
+        assert!(!c.cache.enabled);
+        assert!(c.set("cache", "maybe").is_err());
+
+        c.set("cache_hit_rate", "0.8").unwrap();
+        assert_eq!(c.sim_cache_hit_rate, Some(0.8));
+        assert!(c.set("cache_hit_rate", "1.5").is_err());
+        assert!(
+            c.set("cache_mb", "99999999999999").is_err(),
+            "oversized byte budget must be rejected, not wrap"
+        );
     }
 }

@@ -6,10 +6,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::baselines::{run_single, run_smp};
-use crate::cluster::run_cluster_inproc;
+use crate::baselines::single::run_single_cached;
+use crate::cache::ResultCache;
+use crate::cluster::run_cluster_inproc_cached;
 use crate::config::{Engine, RunConfig};
 use crate::ir::TaskProgram;
+use crate::scheduler::local::run_smp_cached;
 use crate::scheduler::trace::RunResult;
 use crate::simulator::{simulate, CostModel, SimConfig};
 use crate::tasks::Executor;
@@ -17,15 +19,47 @@ use crate::tasks::Executor;
 /// Run `program` per `cfg`. For `Engine::Sim` no values are computed —
 /// outputs are empty and the trace carries simulated times (the cost
 /// model is loaded from the artifact dir when calibrated).
+///
+/// When `cfg.cache.enabled` a fresh per-run [`ResultCache`] is built, so
+/// hits come from repeats *within* the run; to serve repeated traffic
+/// across runs, build one cache and call [`run_with_cache`].
 pub fn run(program: &TaskProgram, cfg: &RunConfig, executor: Arc<dyn Executor>) -> Result<RunResult> {
-    match cfg.engine {
-        Engine::Single => run_single(program, executor.as_ref()),
-        Engine::Smp { threads } => run_smp(program, executor, threads),
-        Engine::Cluster { workers } => {
-            run_cluster_inproc(program, executor, workers, cfg.cluster_config(), None)
+    let cache = cfg.cache.enabled.then(|| {
+        let mut cc = cfg.cache.clone();
+        if cc.namespace.is_empty() {
+            // partition keys by executor backend: host reference ops and
+            // PJRT artifacts produce different float bits for the same op
+            cc.namespace = if cfg.use_artifacts { "pjrt" } else { "host" }.into();
         }
+        ResultCache::new(cc)
+    });
+    run_with_cache(program, cfg, executor, cache)
+}
+
+/// [`run`] with a caller-held result cache (shared across requests — the
+/// serving pattern). `None` disables caching regardless of `cfg.cache`.
+pub fn run_with_cache(
+    program: &TaskProgram,
+    cfg: &RunConfig,
+    executor: Arc<dyn Executor>,
+    cache: Option<Arc<ResultCache>>,
+) -> Result<RunResult> {
+    match cfg.engine {
+        Engine::Single => run_single_cached(program, executor.as_ref(), cache.as_deref()),
+        Engine::Smp { threads } => run_smp_cached(program, executor, threads, cache),
+        Engine::Cluster { workers } => run_cluster_inproc_cached(
+            program,
+            executor,
+            workers,
+            cfg.cluster_config(),
+            None,
+            cache,
+        ),
         Engine::Sim { workers } => {
-            let cm = CostModel::load_or_default(&crate::runtime::default_artifact_dir());
+            let mut cm = CostModel::load_or_default(&crate::runtime::default_artifact_dir());
+            if let Some(rate) = cfg.sim_cache_hit_rate {
+                cm.cache_hit_rate = rate;
+            }
             let sim_cfg = SimConfig {
                 n_workers: workers,
                 placement: cfg.placement,
@@ -58,6 +92,30 @@ mod tests {
             if engine != "sim:2" {
                 assert!(!r.outputs.is_empty(), "{engine}");
             }
+        }
+    }
+
+    #[test]
+    fn shared_cache_serves_second_run_on_every_real_engine() {
+        let p = matrix_program(2, 10, false, None);
+        for engine in ["single", "smp:2", "cluster:2"] {
+            let mut cfg = RunConfig::default();
+            cfg.set("engine", engine).unwrap();
+            let base = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+            cfg.set("cache", "on").unwrap();
+            let cache = ResultCache::new(cfg.cache.clone());
+            let r1 =
+                run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(Arc::clone(&cache)))
+                    .unwrap();
+            let r2 = run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(cache)).unwrap();
+            r2.trace.validate(&p).unwrap();
+            assert_eq!(base.outputs, r1.outputs, "{engine}: cache on == cache off");
+            assert_eq!(r1.outputs, r2.outputs, "{engine}: warm == cold");
+            assert!(r2.trace.cache_hits > 0, "{engine}");
+            assert!(
+                r2.trace.executed_tasks() < p.len(),
+                "{engine}: warm run must execute strictly fewer tasks"
+            );
         }
     }
 

@@ -3,12 +3,19 @@
 use super::span::Span;
 
 /// A frontend error (lex, parse, type, or lowering) tied to a span.
-#[derive(Clone, Debug, thiserror::Error)]
-#[error("{msg} at {span}")]
+#[derive(Clone, Debug)]
 pub struct Diagnostic {
     pub msg: String,
     pub span: Span,
 }
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at {}", self.msg, self.span)
+    }
+}
+
+impl std::error::Error for Diagnostic {}
 
 impl Diagnostic {
     pub fn new(msg: impl Into<String>, span: Span) -> Diagnostic {

@@ -12,11 +12,29 @@
 //!    ──depgraph──▶ data-dependency DAG (RealWorld-threaded)
 //!    ──ir::lower──▶ TaskProgram
 //!    ──{baselines | scheduler | cluster | simulator}──▶ results + trace
+//!                         ▲
+//!                 [`cache`] ── purity-aware result cache consulted by
+//!                              every engine before executing a task
 //! ```
 //!
 //! The compute tasks themselves are AOT-compiled JAX/Pallas artifacts
 //! executed through [`runtime`] (PJRT CPU client); Python never runs on
 //! the request path.
+//!
+//! ## Result cache
+//!
+//! The same purity guarantee that lets the system re-execute tasks after
+//! a worker failure also makes pure results *memoizable*. [`cache`] is a
+//! content-addressed, sharded-LRU result store keyed by a stable hash of
+//! (op, canonicalized input values). All four engines consult it behind
+//! [`engine::run`]: the single-thread and SMP engines check before each
+//! execution, the cluster leader short-circuits dispatch of hits and
+//! deduplicates identical in-flight tasks, and the simulator's
+//! `CostModel::cache_hit_rate` models warm-cache serving for sweeps.
+//! Tasks the `types::purity` analysis cannot certify pure are never
+//! cached; `--cache off` (the default) is exactly the pre-cache engine
+//! behavior. See the "Result cache" section in the top-level README for
+//! keys, purity gating and the CLI flags.
 
 pub mod util;
 pub mod tensor;
@@ -27,6 +45,7 @@ pub mod frontend;
 pub mod types;
 pub mod depgraph;
 pub mod scheduler;
+pub mod cache;
 pub mod cluster;
 pub mod baselines;
 pub mod simulator;

@@ -80,6 +80,9 @@ USAGE:
 ENGINES: single | smp:K | cluster:W | sim:W
 KNOBS:   --placement rr|ll|loc  --steal none|random|richest  --depth D
          --artifacts true|false (PJRT artifacts vs host reference ops)
+CACHE:   --cache on|off (default off)  --cache_mb MB  --cache_entries N
+         --cache_shards S  --cache_deny op1,op2 (never cache these ops)
+         --cache_hit_rate R (sim engine: model a warm cache at rate R)
 ";
 
 fn read_source(args: &Args) -> Result<(String, String)> {
@@ -195,7 +198,7 @@ fn build_executor(cfg: &RunConfig) -> Result<(Arc<dyn Executor>, Option<RuntimeS
 
 fn report(r: &parhask::scheduler::trace::RunResult, show_trace: bool) {
     println!(
-        "done: {} tasks, makespan {:.3} ms, wall {:.3} ms, utilization {:.1}%, {} bytes moved",
+        "done: {} tasks executed, makespan {:.3} ms, wall {:.3} ms, utilization {:.1}%, {} bytes moved",
         r.trace.events.len(),
         r.trace.makespan_ns() as f64 / 1e6,
         r.trace.wall_ns as f64 / 1e6,
@@ -207,6 +210,25 @@ fn report(r: &parhask::scheduler::trace::RunResult, show_trace: bool) {
     }
 }
 
+/// Build the per-run result cache when enabled, and report it after. The
+/// key namespace is pinned to the executor backend so host and PJRT
+/// results can never alias.
+fn build_cache(cfg: &RunConfig) -> Option<std::sync::Arc<parhask::cache::ResultCache>> {
+    cfg.cache.enabled.then(|| {
+        let mut cc = cfg.cache.clone();
+        if cc.namespace.is_empty() {
+            cc.namespace = if cfg.use_artifacts { "pjrt" } else { "host" }.into();
+        }
+        parhask::cache::ResultCache::new(cc)
+    })
+}
+
+fn report_cache(cache: &Option<std::sync::Arc<parhask::cache::ResultCache>>) {
+    if let Some(cache) = cache {
+        println!("{}", cache.stats().summary_line());
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let (_, src) = read_source(args)?;
     let entry = args.get_or("entry", "main");
@@ -214,7 +236,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     // user helper functions inline by default so the registry only needs
     // the primitive ops (`--inline 0` keeps the paper's shallow behaviour)
     let inline_depth = args.get_usize("inline", 8)?;
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
 
     let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
     let mut checked =
@@ -263,8 +285,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         lowered.program.max_parallel_width(),
         cfg.engine.describe()
     );
-    let r = parhask::engine::run(&lowered.program, &cfg, executor)?;
+    // Never cache anything the signature analysis says is IO (defense in
+    // depth on top of the op-kind purity gate).
+    cfg.cache.deny_io_from(&checked.purity);
+    let cache = build_cache(&cfg);
+    let r = parhask::engine::run_with_cache(&lowered.program, &cfg, executor, cache.clone())?;
     report(&r, args.flag("trace"));
+    report_cache(&cache);
     Ok(())
 }
 
@@ -280,13 +307,15 @@ fn cmd_matrix(args: &Args) -> Result<()> {
         program.len(),
         cfg.engine.describe()
     );
-    let r = parhask::engine::run(&program, &cfg, executor)?;
+    let cache = build_cache(&cfg);
+    let r = parhask::engine::run_with_cache(&program, &cfg, executor, cache.clone())?;
     if let Some(v) = r.outputs.first() {
         if let Ok(t) = v.as_tensor() {
             println!("checksum: {}", t.scalar().unwrap_or(f32::NAN));
         }
     }
     report(&r, args.flag("trace"));
+    report_cache(&cache);
     Ok(())
 }
 
@@ -311,7 +340,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let bind = args.get("bind").context("--bind ADDR required")?;
     let workers = args.get_usize("workers", 2)?;
     let size = args.get_usize("size", 256)?;
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
     let entry = args.get_or("entry", "main");
 
     let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
@@ -325,9 +354,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let lowered =
         lower(&checked, &registry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    let r =
-        parhask::cluster::run_cluster_tcp(&lowered.program, bind, workers, cfg.cluster_config())?;
+    cfg.cache.deny_io_from(&checked.purity);
+    let cache = build_cache(&cfg);
+    let r = parhask::cluster::run_cluster_tcp_cached(
+        &lowered.program,
+        bind,
+        workers,
+        cfg.cluster_config(),
+        cache.clone(),
+    )?;
     report(&r, args.flag("trace"));
+    report_cache(&cache);
     Ok(())
 }
 

@@ -9,6 +9,7 @@
 //! each worker process gets its own service thread.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod bridge;
 pub mod service;
 

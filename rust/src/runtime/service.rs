@@ -7,6 +7,7 @@
 //! Requests carry host tensors; the service bridges to literals, executes,
 //! and bridges back.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -15,11 +16,17 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::bridge::{literal_to_tensor, tensor_to_literal};
 use crate::runtime::manifest::Manifest;
 use crate::tensor::Tensor;
-use crate::{log_debug, log_info};
+use crate::log_info;
+#[cfg(feature = "pjrt")]
+use crate::log_debug;
 
+// Without `pjrt` no loop consumes the request payloads; keep the shape
+// identical so the handle API does not change between builds.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 enum Request {
     /// Execute `artifact` with `args`; reply with outputs.
     Execute {
@@ -151,6 +158,23 @@ impl Drop for RuntimeService {
     }
 }
 
+/// Without the `pjrt` feature there is no XLA client to build: report a
+/// clear startup error (surfaced by `RuntimeService::start*`) and exit.
+/// Callers fall back to the host reference executors (`--artifacts false`).
+#[cfg(not(feature = "pjrt"))]
+fn service_loop(
+    _rx: mpsc::Receiver<Request>,
+    _manifest: Arc<Manifest>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    log_info!("runtime", "built without the `pjrt` feature; PJRT unavailable");
+    let _ = ready.send(Err(anyhow!(
+        "PJRT runtime unavailable: parhask was built without the `pjrt` feature \
+         (pass --artifacts false to use the host reference executors)"
+    )));
+}
+
+#[cfg(feature = "pjrt")]
 fn service_loop(
     rx: mpsc::Receiver<Request>,
     manifest: Arc<Manifest>,
@@ -222,6 +246,7 @@ fn service_loop(
     log_info!("runtime", "PJRT service shutting down");
 }
 
+#[cfg(feature = "pjrt")]
 fn compile_cached<'a>(
     client: &xla::PjRtClient,
     manifest: &Manifest,

@@ -13,7 +13,27 @@ use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicIsize, AtomicPtr, Ordering};
 use std::sync::Mutex;
 
-use crossbeam_utils::CachePadded;
+/// Pads and aligns a value to 128 bytes so `top` and `bottom` never share a
+/// cache line (the false-sharing hot spot of Chase–Lev). Local stand-in for
+/// `crossbeam_utils::CachePadded`, which the offline vendor set lacks.
+#[repr(align(128))]
+#[derive(Debug, Default)]
+struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
 
 /// Result of a steal attempt.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]

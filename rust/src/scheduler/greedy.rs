@@ -150,6 +150,34 @@ impl GreedyState {
         self.push_ready(program, task);
     }
 
+    /// Undo only the load charge of an assignment that will never be
+    /// dispatched — the leader resolved the task locally (result-cache hit
+    /// or in-flight dedup), so unlike [`Self::unassign`] the task must NOT
+    /// return to the ready heap.
+    pub fn abort_assign(&mut self, w: WorkerId) {
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+        }
+    }
+
+    /// Record a completion that happened at the leader (result-cache hit):
+    /// no worker executed the task, so no load is released and no output
+    /// location is recorded (the values live in the leader's object
+    /// store). Returns the newly-ready tasks.
+    pub fn complete_local(&mut self, program: &TaskProgram, task: TaskId) -> Vec<TaskId> {
+        self.completed += 1;
+        let mut newly = Vec::new();
+        for &c in program.consumers(task) {
+            let dc = &mut self.dep_counts[c.index()];
+            *dc -= 1;
+            if *dc == 0 {
+                newly.push(c);
+                self.push_ready(program, c);
+            }
+        }
+        newly
+    }
+
     /// Assign a specific ready-popped task to a specific worker,
     /// bypassing the placement policy (leader-side overrides).
     pub fn force_assign(&mut self, task: TaskId, w: WorkerId) {
@@ -269,6 +297,33 @@ mod tests {
         let (t, w) = s.assign_next(&p).unwrap();
         assert_eq!(t, t0);
         assert_ne!(w, w0); // least-loaded never picks the dead (MAX-load) worker
+    }
+
+    #[test]
+    fn local_completion_releases_consumers_without_location() {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+        let c = b.push(
+            OpKind::Synthetic { compute_us: 1 },
+            vec![ArgRef::out(a, 0)],
+            1,
+            CostEst::ZERO,
+            "c",
+        );
+        let p = b.build().unwrap();
+        let mut s = GreedyState::new(&p, 2, PlacementPolicy::LeastLoaded);
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, a);
+        // the leader serves `a` from cache instead of dispatching
+        s.abort_assign(w);
+        assert_eq!(s.loads(), &[0, 0]);
+        let newly = s.complete_local(&p, a);
+        assert_eq!(newly, vec![c]);
+        assert_eq!(s.location(a), None, "cache hits leave no worker location");
+        let (t, _) = s.assign_next(&p).unwrap();
+        assert_eq!(t, c);
+        s.complete_local(&p, c);
+        assert!(s.is_done());
     }
 
     #[test]

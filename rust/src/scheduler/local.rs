@@ -11,6 +11,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::cache::ResultCache;
 use crate::ir::task::{ArgRef, TaskId, Value};
 use crate::ir::TaskProgram;
 use crate::tasks::Executor;
@@ -26,11 +27,23 @@ pub fn run_smp(
     executor: Arc<dyn Executor>,
     n_threads: usize,
 ) -> Result<RunResult> {
+    run_smp_cached(program, executor, n_threads, None)
+}
+
+/// [`run_smp`] with an optional purity-aware result cache, consulted by
+/// every worker thread before executing a task.
+pub fn run_smp_cached(
+    program: &TaskProgram,
+    executor: Arc<dyn Executor>,
+    n_threads: usize,
+    cache: Option<Arc<ResultCache>>,
+) -> Result<RunResult> {
     assert!(n_threads >= 1);
     let n = program.len();
     let shared = Arc::new(Shared {
         program: program.clone(),
         executor,
+        cache,
         dep_counts: program
             .dep_counts()
             .into_iter()
@@ -69,6 +82,7 @@ pub fn run_smp(
 struct Shared {
     program: TaskProgram,
     executor: Arc<dyn Executor>,
+    cache: Option<Arc<ResultCache>>,
     dep_counts: Vec<AtomicUsize>,
     values: Vec<Mutex<Option<Vec<Value>>>>,
     deques: Vec<WorkDeque<u32>>,
@@ -135,6 +149,23 @@ fn run_task(sh: &Shared, me: WorkerId, tid: TaskId) -> Result<()> {
             }
         }
     }
+    // result cache: serve pure repeated work without executing
+    if let Some(cache) = &sh.cache {
+        if let Some(outs) = cache.lookup(spec, &args) {
+            *sh.values[tid.index()].lock().unwrap() = Some(outs);
+            sh.trace.lock().unwrap().record_cache_hit(tid);
+            for &c in sh.program.consumers(tid) {
+                if sh.dep_counts[c.index()].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    sh.deques[me.index()].push(c.0);
+                }
+            }
+            sh.completed.fetch_add(1, Ordering::AcqRel);
+            return Ok(());
+        }
+        if cache.cacheable(spec) {
+            sh.trace.lock().unwrap().cache_misses += 1;
+        }
+    }
     let start = crate::util::now_ns();
     let outs = sh
         .executor
@@ -147,6 +178,9 @@ fn run_task(sh: &Shared, me: WorkerId, tid: TaskId) -> Result<()> {
         outs.len(),
         spec.n_outputs
     );
+    if let Some(cache) = &sh.cache {
+        cache.insert(spec, &args, &outs);
+    }
     *sh.values[tid.index()].lock().unwrap() = Some(outs);
     sh.trace.lock().unwrap().push(TraceEvent {
         task: tid,
@@ -300,6 +334,20 @@ mod tests {
         let p = b.build().unwrap();
         let r = run_smp(&p, Arc::new(SyntheticExecutor), 2).unwrap();
         assert_eq!(r.outputs[0].as_tensor().unwrap().scalar().unwrap(), 13.0);
+    }
+
+    #[test]
+    fn warm_cache_run_is_bit_identical_and_executes_nothing() {
+        let p = crate::workload::matrix_program(2, 12, false, None);
+        let cache = crate::cache::ResultCache::new_enabled();
+        let r1 = run_smp_cached(&p, Arc::new(HostExecutor), 3, Some(Arc::clone(&cache))).unwrap();
+        r1.trace.validate(&p).unwrap();
+        assert_eq!(r1.trace.cache_hits, 0);
+        let r2 = run_smp_cached(&p, Arc::new(HostExecutor), 3, Some(cache)).unwrap();
+        r2.trace.validate(&p).unwrap();
+        assert_eq!(r1.outputs, r2.outputs, "purity ⇒ bit-identical");
+        assert_eq!(r2.trace.executed_tasks(), 0);
+        assert_eq!(r2.trace.cache_hits as usize, p.len());
     }
 
     #[test]

@@ -28,6 +28,16 @@ pub struct ScheduleTrace {
     pub bytes_transferred: u64,
     /// Wall-clock of the whole run (ns); ≥ max event end.
     pub wall_ns: u64,
+    /// Tasks served from the result cache instead of executing. These have
+    /// no [`TraceEvent`]; `events.len() + cached_tasks.len()` covers the
+    /// whole program when the run completed.
+    pub cached_tasks: Vec<TaskId>,
+    /// Result-cache lookups that hit during this run (always equals
+    /// `cached_tasks.len()`; the simulator's modeled warm cache counts
+    /// here too).
+    pub cache_hits: u64,
+    /// Result-cache lookups that missed during this run.
+    pub cache_misses: u64,
 }
 
 /// Outputs + trace of one engine run.
@@ -40,6 +50,18 @@ pub struct RunResult {
 impl ScheduleTrace {
     pub fn push(&mut self, ev: TraceEvent) {
         self.events.push(ev);
+    }
+
+    /// Record a result-cache hit: `task`'s outputs were served without
+    /// executing it.
+    pub fn record_cache_hit(&mut self, task: TaskId) {
+        self.cached_tasks.push(task);
+        self.cache_hits += 1;
+    }
+
+    /// Tasks that actually executed (cache hits excluded).
+    pub fn executed_tasks(&self) -> usize {
+        self.events.len()
     }
 
     /// Makespan: last end − first start.
@@ -77,25 +99,42 @@ impl ScheduleTrace {
     }
 
     /// Validate against a program:
-    /// 1. every task ran exactly once;
-    /// 2. no task started before all its dependencies ended
-    ///    (allowing equal timestamps — the simulator is discrete);
+    /// 1. every task either ran exactly once or was served from the
+    ///    result cache (never both);
+    /// 2. no executed task started before its *executed* dependencies
+    ///    ended (allowing equal timestamps — the simulator is discrete;
+    ///    cache-served dependencies have no execution interval to order
+    ///    against);
     /// 3. no worker ran two tasks at overlapping times.
     pub fn validate(&self, program: &TaskProgram) -> Result<()> {
+        let cached: std::collections::HashSet<TaskId> =
+            self.cached_tasks.iter().copied().collect();
+        if cached.len() != self.cached_tasks.len() {
+            bail!("a task was served from cache more than once in one run");
+        }
         let mut by_task: HashMap<TaskId, &TraceEvent> = HashMap::new();
         for e in &self.events {
             if by_task.insert(e.task, e).is_some() {
                 bail!("task {} executed more than once", e.task);
+            }
+            if cached.contains(&e.task) {
+                bail!("task {} both executed and served from cache", e.task);
             }
             if e.end_ns < e.start_ns {
                 bail!("task {} ends before it starts", e.task);
             }
         }
         for t in program.tasks() {
+            if cached.contains(&t.id) {
+                continue;
+            }
             let Some(ev) = by_task.get(&t.id) else {
                 bail!("task {} never executed", t.id);
             };
             for d in t.deps() {
+                if cached.contains(&d) {
+                    continue;
+                }
                 let dep_ev = by_task
                     .get(&d)
                     .ok_or_else(|| anyhow::anyhow!("dependency {d} of {} missing", t.id))?;
@@ -220,6 +259,31 @@ mod tests {
         let mut t = ScheduleTrace::default();
         t.push(ev(0, 0, 0, 10));
         t.push(ev(1, 0, 5, 15)); // same worker, overlapping
+        assert!(t.validate(&p).is_err());
+    }
+
+    #[test]
+    fn cache_served_tasks_validate() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.record_cache_hit(TaskId(0));
+        t.push(ev(1, 0, 5, 10));
+        t.validate(&p).unwrap();
+        assert_eq!(t.executed_tasks(), 1);
+        assert_eq!(t.cache_hits, 1);
+
+        // a fully-cached run is also valid
+        let mut t = ScheduleTrace::default();
+        t.record_cache_hit(TaskId(0));
+        t.record_cache_hit(TaskId(1));
+        t.validate(&p).unwrap();
+        assert_eq!(t.executed_tasks(), 0);
+
+        // both executed and cache-served is rejected
+        let mut t = ScheduleTrace::default();
+        t.record_cache_hit(TaskId(0));
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 0, 10, 20));
         assert!(t.validate(&p).is_err());
     }
 

@@ -31,6 +31,12 @@ pub struct CostModel {
     pub latency_ns: u64,
     /// Leader dispatch overhead per assignment (ns).
     pub dispatch_ns: u64,
+    /// Modeled warm-cache behaviour: probability in [0, 1] that a *pure*
+    /// task is served from the leader's result cache instead of executing
+    /// (Figure-2-style sweeps over warm-cache serving). 0 = cold cache.
+    pub cache_hit_rate: f64,
+    /// Leader-side cost of serving one cache hit (key hash + store probe).
+    pub cache_serve_ns: u64,
 }
 
 impl Default for CostModel {
@@ -44,6 +50,8 @@ impl Default for CostModel {
             bytes_per_ns: 2.0,
             latency_ns: 50_000,  // 50 µs per message
             dispatch_ns: 5_000,  // 5 µs leader overhead
+            cache_hit_rate: 0.0, // cold cache unless a sweep models warmth
+            cache_serve_ns: 2_000,
         }
     }
 }
@@ -95,6 +103,8 @@ impl CostModel {
             ("bytes_per_ns", Json::num(self.bytes_per_ns)),
             ("latency_ns", Json::num(self.latency_ns as f64)),
             ("dispatch_ns", Json::num(self.dispatch_ns as f64)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate)),
+            ("cache_serve_ns", Json::num(self.cache_serve_ns as f64)),
             ("measured_ns", Json::Obj(
                 measured
                     .into_iter()
@@ -113,6 +123,14 @@ impl CostModel {
             bytes_per_ns: j.get("bytes_per_ns").and_then(Json::as_f64).unwrap_or(2.0),
             latency_ns: j.get("latency_ns").and_then(Json::as_u64).unwrap_or(50_000),
             dispatch_ns: j.get("dispatch_ns").and_then(Json::as_u64).unwrap_or(5_000),
+            cache_hit_rate: j
+                .get("cache_hit_rate")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            cache_serve_ns: j
+                .get("cache_serve_ns")
+                .and_then(Json::as_u64)
+                .unwrap_or(2_000),
             measured: HashMap::new(),
         };
         if let Some(Json::Obj(m)) = j.get("measured_ns") {
@@ -188,9 +206,13 @@ mod tests {
         cm.set_measured("matmul_256", 42_000);
         cm.set_measured("matgen_64", 9_000);
         cm.flops_per_ns = 3.5;
+        cm.cache_hit_rate = 0.25;
+        cm.cache_serve_ns = 3_000;
         let j = cm.to_json();
         let back = CostModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.measured("matmul_256"), Some(42_000));
         assert_eq!(back.flops_per_ns, 3.5);
+        assert_eq!(back.cache_hit_rate, 0.25);
+        assert_eq!(back.cache_serve_ns, 3_000);
     }
 }

@@ -16,7 +16,7 @@
 //! SMP/shared-memory model (and with one worker, the single-thread model),
 //! so all three Figure-2 engines come out of one simulator.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 use anyhow::Result;
 
@@ -24,6 +24,7 @@ use crate::ir::task::TaskId;
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::{ScheduleTrace, TraceEvent};
 use crate::scheduler::{GreedyState, PlacementPolicy, WorkerId};
+use crate::util::rng::Rng;
 
 use super::costmodel::CostModel;
 
@@ -78,6 +79,9 @@ enum Ev {
     Computed(WorkerId, TaskId),
     /// Leader has the result.
     LeaderSees(WorkerId, TaskId),
+    /// Leader served the task from the modeled warm result cache — no
+    /// dispatch, no compute, no transfer; completes after `cache_serve_ns`.
+    CacheServed(TaskId),
 }
 
 #[derive(PartialEq, Eq)]
@@ -112,6 +116,21 @@ pub fn simulate(program: &TaskProgram, cm: &CostModel, cfg: &SimConfig) -> Resul
     let mut trace = ScheduleTrace::default();
     let mut bytes = 0u64;
 
+    // Modeled warm cache: each pure task is independently a hit with
+    // probability `cache_hit_rate` (fixed seed — the sweep is
+    // deterministic for a given program + model).
+    let hits: HashSet<TaskId> = if cm.cache_hit_rate > 0.0 {
+        let mut rng = Rng::new(0xCAC4E);
+        program
+            .tasks()
+            .iter()
+            .filter(|t| t.is_pure() && rng.chance(cm.cache_hit_rate))
+            .map(|t| t.id)
+            .collect()
+    } else {
+        HashSet::new()
+    };
+
     let push = |heap: &mut BinaryHeap<QEv>, t: u64, ev: Ev, seq: &mut u64| {
         heap.push(QEv { t, seq: *seq, ev });
         *seq += 1;
@@ -120,6 +139,7 @@ pub fn simulate(program: &TaskProgram, cm: &CostModel, cfg: &SimConfig) -> Resul
     // initial assignments
     pump(
         program, cm, cfg, &mut state, &mut inflight, now, &mut heap, &mut seq, &mut bytes,
+        &hits,
     );
 
     while let Some(QEv { t, ev, .. }) = heap.pop() {
@@ -154,7 +174,15 @@ pub fn simulate(program: &TaskProgram, cm: &CostModel, cfg: &SimConfig) -> Resul
                 state.on_done(program, task, w);
                 pump(
                     program, cm, cfg, &mut state, &mut inflight, now, &mut heap, &mut seq,
-                    &mut bytes,
+                    &mut bytes, &hits,
+                );
+            }
+            Ev::CacheServed(task) => {
+                trace.record_cache_hit(task);
+                state.complete_local(program, task);
+                pump(
+                    program, cm, cfg, &mut state, &mut inflight, now, &mut heap, &mut seq,
+                    &mut bytes, &hits,
                 );
             }
         }
@@ -165,6 +193,10 @@ pub fn simulate(program: &TaskProgram, cm: &CostModel, cfg: &SimConfig) -> Resul
         "simulation stalled with {} tasks incomplete",
         program.len() - state.completed()
     );
+    if cm.cache_hit_rate > 0.0 {
+        let pure = program.tasks().iter().filter(|t| t.is_pure()).count() as u64;
+        trace.cache_misses = pure - trace.cache_hits;
+    }
     let makespan = now;
     trace.wall_ns = makespan;
     trace.bytes_transferred = bytes;
@@ -192,6 +224,7 @@ fn pump(
     heap: &mut BinaryHeap<QEv>,
     seq: &mut u64,
     bytes: &mut u64,
+    hits: &HashSet<TaskId>,
 ) {
     let mut dispatch_t = now;
     loop {
@@ -199,7 +232,7 @@ fn pump(
         if !has_capacity || state.n_ready() == 0 {
             return;
         }
-        let Some((task, mut w)) = state.assign_next(program) else {
+        let Some((mut task, mut w)) = state.assign_next(program) else {
             return;
         };
         if inflight[w.index()] >= cfg.pipeline_depth {
@@ -208,10 +241,24 @@ fn pump(
                 .filter(|i| inflight[*i] < cfg.pipeline_depth)
                 .min_by_key(|i| inflight[*i])
                 .unwrap();
-            let Some(_t2) = state.assign_to(program, WorkerId(w2 as u32)) else {
+            // dispatch the (new) top of the heap, pinned to w2 — it may
+            // differ from `task` under priority ties
+            let Some(t2) = state.assign_to(program, WorkerId(w2 as u32)) else {
                 return;
             };
+            task = t2;
             w = WorkerId(w2 as u32);
+        }
+        // modeled warm cache: the leader serves hits without dispatching
+        if hits.contains(&task) {
+            state.abort_assign(w);
+            heap.push(QEv {
+                t: dispatch_t + cm.cache_serve_ns,
+                seq: *seq,
+                ev: Ev::CacheServed(task),
+            });
+            *seq += 1;
+            continue;
         }
         inflight[w.index()] += 1;
         // argument bytes that must travel: inputs whose producer is not w
@@ -397,6 +444,46 @@ mod tests {
             r_loc.bytes_transferred,
             r_ll.bytes_transferred
         );
+    }
+
+    #[test]
+    fn warm_cache_model_shrinks_makespan_and_is_deterministic() {
+        let p = rounds_program(8, 64);
+        let cold = simulate(&p, &CostModel::default(), &SimConfig::cluster(4)).unwrap();
+        assert_eq!(cold.trace.cache_hits, 0);
+
+        let mut half = CostModel::default();
+        half.cache_hit_rate = 0.5;
+        let r_half = simulate(&p, &half, &SimConfig::cluster(4)).unwrap();
+        r_half.trace.validate(&p).unwrap();
+        assert!(r_half.trace.cache_hits > 0, "rate 0.5 over 33 tasks must hit");
+        assert_eq!(
+            r_half.trace.cache_hits + r_half.trace.cache_misses,
+            p.len() as u64,
+            "every task in this all-pure program is accounted hit or miss"
+        );
+        // removing half the work should not meaningfully hurt (small slack
+        // for scheduling anomalies)
+        assert!(
+            r_half.makespan_ns as f64 <= cold.makespan_ns as f64 * 1.1,
+            "half-warm {} vs cold {}",
+            r_half.makespan_ns,
+            cold.makespan_ns
+        );
+
+        let mut full = CostModel::default();
+        full.cache_hit_rate = 1.0;
+        let r_full = simulate(&p, &full, &SimConfig::cluster(4)).unwrap();
+        r_full.trace.validate(&p).unwrap();
+        assert_eq!(r_full.trace.executed_tasks(), 0, "fully warm: nothing executes");
+        assert_eq!(r_full.trace.cache_hits, p.len() as u64);
+        assert_eq!(r_full.bytes_transferred, 0);
+        assert!(r_full.makespan_ns < cold.makespan_ns);
+
+        // deterministic for a fixed (program, model, config)
+        let again = simulate(&p, &half, &SimConfig::cluster(4)).unwrap();
+        assert_eq!(again.makespan_ns, r_half.makespan_ns);
+        assert_eq!(again.trace.cache_hits, r_half.trace.cache_hits);
     }
 
     #[test]

@@ -73,6 +73,12 @@ impl PurityTable {
         self.map.get(name).map(|i| i.io).unwrap_or(false)
     }
 
+    /// Names classified as IO — everything the analysis *cannot* certify
+    /// pure. The result cache's deny list is seeded from this.
+    pub fn io_names(&self) -> impl Iterator<Item = &str> {
+        self.map.values().filter(|i| i.io).map(|i| i.name.as_str())
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }

@@ -109,12 +109,19 @@ impl Writer {
 }
 
 /// Decode error — position + message, never a panic.
-#[derive(Debug, thiserror::Error)]
-#[error("decode error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct DecodeError {
     pub pos: usize,
     pub msg: &'static str,
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Bounds-checked reader over a byte slice.
 pub struct Reader<'a> {

@@ -9,8 +9,8 @@ pub mod rng;
 
 /// Monotonic nanoseconds since an arbitrary process-local epoch.
 pub fn now_ns() -> u64 {
+    use std::sync::OnceLock;
     use std::time::Instant;
-    use once_cell::sync::Lazy;
-    static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
-    EPOCH.elapsed().as_nanos() as u64
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }

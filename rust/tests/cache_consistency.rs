@@ -1,0 +1,177 @@
+//! Result-cache consistency across all four engines.
+//!
+//! The acceptance contract: with the cache enabled, a second identical
+//! run on `single`, `smp`, and `cluster` produces bit-identical outputs
+//! to the first and executes strictly fewer tasks (trace + hit counters
+//! prove it); with the cache disabled, outputs are identical to the
+//! cached runs. The simulator models warm-cache serving through
+//! `CostModel::cache_hit_rate`.
+
+use std::sync::Arc;
+
+use parhask::cache::ResultCache;
+use parhask::config::RunConfig;
+use parhask::engine::{run, run_with_cache};
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::HostExecutor;
+use parhask::workload::matrix_program;
+
+fn cfg(engine: &str, cache_on: bool) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", engine).unwrap();
+    cfg.set("artifacts", "false").unwrap();
+    cfg.set("cache", if cache_on { "on" } else { "off" }).unwrap();
+    cfg
+}
+
+#[test]
+fn second_run_is_bit_identical_and_executes_strictly_fewer_tasks() {
+    let p = matrix_program(3, 16, false, None);
+    for engine in ["single", "smp:3", "cluster:3"] {
+        let cfg = cfg(engine, true);
+        let cache = ResultCache::new(cfg.cache.clone());
+
+        let r1 = run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(Arc::clone(&cache)))
+            .unwrap();
+        r1.trace.validate(&p).unwrap();
+        assert_eq!(r1.trace.cache_hits, 0, "{engine}: first run is cold");
+        assert_eq!(r1.trace.executed_tasks(), p.len(), "{engine}");
+
+        let r2 = run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(Arc::clone(&cache)))
+            .unwrap();
+        r2.trace.validate(&p).unwrap();
+        assert_eq!(r1.outputs, r2.outputs, "{engine}: outputs must be bit-identical");
+        assert!(
+            r2.trace.executed_tasks() < r1.trace.executed_tasks(),
+            "{engine}: warm run must execute strictly fewer tasks \
+             ({} vs {})",
+            r2.trace.executed_tasks(),
+            r1.trace.executed_tasks()
+        );
+        assert!(r2.trace.cache_hits > 0, "{engine}: trace records hits");
+        assert_eq!(
+            r2.trace.executed_tasks() + r2.trace.cached_tasks.len(),
+            p.len(),
+            "{engine}: every task is executed or served"
+        );
+
+        let stats = cache.stats();
+        assert_eq!(stats.hits, r2.trace.cache_hits, "{engine}: counters agree");
+        assert!(stats.insertions > 0, "{engine}");
+    }
+}
+
+#[test]
+fn disabled_cache_matches_cached_outputs_exactly() {
+    let p = matrix_program(3, 16, false, None);
+    for engine in ["single", "smp:3", "cluster:3"] {
+        let off = run(&p, &cfg(engine, false), Arc::new(HostExecutor)).unwrap();
+        off.trace.validate(&p).unwrap();
+        assert_eq!(off.trace.cache_hits, 0);
+        assert!(off.trace.cached_tasks.is_empty());
+
+        let cache = ResultCache::new_enabled();
+        let warmup = run_with_cache(
+            &p,
+            &cfg(engine, true),
+            Arc::new(HostExecutor),
+            Some(Arc::clone(&cache)),
+        )
+        .unwrap();
+        let warm = run_with_cache(
+            &p,
+            &cfg(engine, true),
+            Arc::new(HostExecutor),
+            Some(cache),
+        )
+        .unwrap();
+        assert_eq!(off.outputs, warmup.outputs, "{engine}");
+        assert_eq!(off.outputs, warm.outputs, "{engine}: cache off == warm cache");
+    }
+}
+
+#[test]
+fn cache_is_content_addressed_across_different_programs() {
+    // A 5-round workload shares its first 3 rounds' (op, args) content
+    // with the 3-round workload — hits must transfer across programs.
+    let small = matrix_program(3, 16, false, None);
+    let big = matrix_program(5, 16, false, None);
+    let cache = ResultCache::new_enabled();
+    let cfg = cfg("cluster:2", true);
+
+    let r_small =
+        run_with_cache(&small, &cfg, Arc::new(HostExecutor), Some(Arc::clone(&cache))).unwrap();
+    let r_big = run_with_cache(&big, &cfg, Arc::new(HostExecutor), Some(cache)).unwrap();
+    r_big.trace.validate(&big).unwrap();
+    // 3 shared rounds × 4 tasks each; the final AddScalars differs.
+    assert!(
+        r_big.trace.cache_hits >= 12,
+        "expected ≥ 12 cross-program hits, got {}",
+        r_big.trace.cache_hits
+    );
+    // sanity: both totals are real results
+    assert!(r_small.outputs[0].as_tensor().unwrap().scalar().unwrap() > 0.0);
+    assert!(r_big.outputs[0].as_tensor().unwrap().scalar().unwrap() > 0.0);
+}
+
+#[test]
+fn sim_engine_models_warm_cache_via_hit_rate() {
+    let p = matrix_program(8, 64, true, None);
+    let cold = simulate(&p, &CostModel::default(), &SimConfig::cluster(4)).unwrap();
+
+    let mut warm_cm = CostModel::default();
+    warm_cm.cache_hit_rate = 1.0;
+    let warm = simulate(&p, &warm_cm, &SimConfig::cluster(4)).unwrap();
+    warm.trace.validate(&p).unwrap();
+    assert_eq!(warm.trace.executed_tasks(), 0);
+    assert_eq!(warm.trace.cache_hits, p.len() as u64);
+    assert!(
+        warm.makespan_ns < cold.makespan_ns,
+        "fully warm serving must beat executing: {} vs {}",
+        warm.makespan_ns,
+        cold.makespan_ns
+    );
+
+    // the RunConfig surface reaches the same knob (`--cache_hit_rate`)
+    let mut rc = RunConfig::default();
+    rc.set("engine", "sim:4").unwrap();
+    rc.set("cache_hit_rate", "1.0").unwrap();
+    assert_eq!(rc.sim_cache_hit_rate, Some(1.0));
+}
+
+#[test]
+fn impure_io_chain_is_never_served_from_cache() {
+    use parhask::ir::task::{ArgRef, CostEst, OpKind, Value};
+    use parhask::ir::ProgramBuilder;
+
+    // gen -> io(print-like) chain: the IO tasks must execute in BOTH runs.
+    let mut b = ProgramBuilder::new();
+    let g = b.push(
+        OpKind::HostMatGen { n: 8 },
+        vec![ArgRef::const_i32(1)],
+        1,
+        CostEst::ZERO,
+        "g",
+    );
+    let io = b.push(
+        OpKind::IoAction {
+            label: "log".into(),
+            compute_us: 10,
+        },
+        vec![ArgRef::out(g, 0), ArgRef::Const(Value::Token)],
+        2,
+        CostEst::ZERO,
+        "io",
+    );
+    b.mark_output(ArgRef::out(io, 1));
+    let p = b.build().unwrap();
+
+    let cache = ResultCache::new_enabled();
+    let c = cfg("single", true);
+    let _r1 = run_with_cache(&p, &c, Arc::new(HostExecutor), Some(Arc::clone(&cache))).unwrap();
+    let r2 = run_with_cache(&p, &c, Arc::new(HostExecutor), Some(cache)).unwrap();
+    r2.trace.validate(&p).unwrap();
+    assert_eq!(r2.trace.cache_hits, 1, "only the pure gen task is served");
+    assert_eq!(r2.trace.executed_tasks(), 1, "the IO task re-executes");
+    assert!(r2.trace.events.iter().any(|e| e.task == io));
+}

@@ -4,7 +4,8 @@
 
 use std::sync::Arc;
 
-use parhask::cluster::{run_cluster_inproc, ClusterConfig, FaultPlan};
+use parhask::cache::ResultCache;
+use parhask::cluster::{run_cluster_inproc, run_cluster_inproc_cached, ClusterConfig, FaultPlan};
 use parhask::ir::task::{ArgRef, CombineKind, CostEst, OpKind};
 use parhask::ir::ProgramBuilder;
 use parhask::tasks::HostExecutor;
@@ -101,6 +102,67 @@ fn sole_survivor_finishes_everything() {
         .map(|e| e.worker)
         .collect();
     assert!(survivors.contains(&parhask::scheduler::WorkerId(2)));
+}
+
+#[test]
+fn worker_death_with_warm_cache_recovers_from_cached_partial_results() {
+    // Warm the cache with a 3-round run, then run the 6-round superset
+    // while a worker dies mid-run: the shared 3 rounds are cached partial
+    // results, the rest re-executes (possibly on the survivor), and the
+    // answer must still be exact.
+    let warmup = matrix_program(3, 8, false, None);
+    let full = matrix_program(6, 8, false, None);
+    let cache = ResultCache::new_enabled();
+
+    let r0 = run_cluster_inproc_cached(
+        &warmup,
+        Arc::new(HostExecutor),
+        2,
+        cfg(0),
+        None,
+        Some(Arc::clone(&cache)),
+    )
+    .unwrap();
+    assert_eq!(r0.trace.cache_hits, 0);
+    assert!(cache.len() >= 12, "warmup populated the cache");
+
+    let faults = vec![
+        FaultPlan { die_after_tasks: Some(2) },
+        FaultPlan::default(),
+        FaultPlan::default(),
+    ];
+    let r = run_cluster_inproc_cached(
+        &full,
+        Arc::new(HostExecutor),
+        3,
+        cfg(1),
+        Some(faults),
+        Some(Arc::clone(&cache)),
+    )
+    .unwrap();
+    let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+    let want = expected(6, 8);
+    assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+    // the 3 warm rounds (12 tasks) were served, not re-executed
+    assert!(
+        r.trace.cache_hits >= 12,
+        "expected the warm rounds to be served: {} hits",
+        r.trace.cache_hits
+    );
+    assert!(
+        r.trace.executed_tasks() < full.len(),
+        "cached partial results must shrink the re-execution set"
+    );
+    // and the rerun's results are bit-identical to an uncached reference
+    let reference = run_cluster_inproc(
+        &full,
+        Arc::new(HostExecutor),
+        2,
+        ClusterConfig::default(),
+        None,
+    )
+    .unwrap();
+    assert_eq!(reference.outputs, r.outputs);
 }
 
 #[test]

@@ -7,7 +7,10 @@
 //!    respected, workers serial) on arbitrary DAGs;
 //! 3. engines agree on results for arbitrary pure matrix DAGs;
 //! 4. simulator: makespan ∈ [span, work] under unit transfer costs;
-//! 5. graph analysis: span ≤ work, Brent bound monotone in workers.
+//! 5. graph analysis: span ≤ work, Brent bound monotone in workers;
+//! 6. result cache: keys are stable under reordering-invariant
+//!    canonicalization, the LRU never exceeds its capacity, and a cached
+//!    run is bit-identical to an uncached run on random programs.
 
 use std::sync::Arc;
 
@@ -331,6 +334,110 @@ fn prop_json_value_roundtrip() {
         let text = j.0.to_string();
         let back = Json::parse(&text).map_err(|e| e.to_string())?;
         prop(back == j.0, "parse(print(j)) == j")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Result-cache properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cache_key_stable_under_arg_reordering_canonicalization() {
+    use parhask::cache::key::task_key;
+    use parhask::ir::task::OpKind;
+
+    // (scalar args, a permutation seed)
+    qcheck_seeded(0xCAC4E1, 300, |input: &(Vec<f32>, u64)| {
+        let (xs, seed) = input;
+        let args: Vec<Value> = xs.iter().map(|x| Value::scalar_f32(*x)).collect();
+        let mut shuffled = args.clone();
+        Rng::new(*seed).shuffle(&mut shuffled);
+
+        // commutative op: any reordering maps to one key
+        let add = OpKind::Combine(CombineKind::AddScalars);
+        prop(
+            task_key(&add, &args) == task_key(&add, &shuffled),
+            "commutative key invariant under permutation",
+        )?;
+        // determinism across calls
+        prop(
+            task_key(&add, &args) == task_key(&add, &args),
+            "key is a pure function of (op, args)",
+        )?;
+        // order-sensitive op: a *changed* value changes the key
+        if !xs.is_empty() {
+            let sel = OpKind::Combine(CombineKind::Select(0));
+            let mut bumped = args.clone();
+            bumped[0] = Value::scalar_f32(xs[0] + 1.0);
+            prop(
+                task_key(&sel, &args) != task_key(&sel, &bumped),
+                "changing an argument changes the key",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lru_never_exceeds_capacity() {
+    use parhask::cache::lru::ShardedLru;
+    use parhask::cache::TaskKey;
+
+    // arbitrary insert/get interleavings over a small keyspace
+    qcheck_seeded(0xCAC4E2, 150, |ops: &Vec<(u32, bool)>| {
+        let lru = ShardedLru::new(2, 4096, 8);
+        for (i, (key, is_insert)) in ops.iter().enumerate() {
+            let k = TaskKey {
+                hi: (*key % 32) as u64,
+                lo: i as u64 % 16,
+            };
+            if *is_insert {
+                // 0..3 unit values + sometimes a tensor payload
+                let mut vals = vec![Value::Unit; (key % 3) as usize + 1];
+                if key % 5 == 0 {
+                    vals.push(Value::Tensor(Arc::new(Tensor::zeros(vec![32]))));
+                }
+                lru.insert(k, vals);
+            } else {
+                let _ = lru.get(&k);
+            }
+            prop(
+                lru.len() <= lru.max_entries(),
+                &format!("entries {} ≤ cap {}", lru.len(), lru.max_entries()),
+            )?;
+            prop(
+                lru.bytes() <= lru.capacity_bytes(),
+                &format!("bytes {} ≤ cap {}", lru.bytes(), lru.capacity_bytes()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_run_bit_identical_to_uncached_on_random_programs() {
+    use parhask::baselines::run_single;
+    use parhask::baselines::single::run_single_cached;
+    use parhask::cache::ResultCache;
+    use parhask::tasks::HostExecutor;
+
+    qcheck_seeded(0xCAC4E3, 30, |d: &AnyDag| {
+        let p = &d.0;
+        let plain = run_single(p, &HostExecutor).map_err(|e| format!("plain: {e:#}"))?;
+        let cache = ResultCache::new_enabled();
+        let cold =
+            run_single_cached(p, &HostExecutor, Some(&cache)).map_err(|e| format!("cold: {e:#}"))?;
+        let warm =
+            run_single_cached(p, &HostExecutor, Some(&cache)).map_err(|e| format!("warm: {e:#}"))?;
+        warm.trace
+            .validate(p)
+            .map_err(|e| format!("warm trace: {e:#}"))?;
+        prop(plain.outputs == cold.outputs, "cold cached run == uncached run")?;
+        prop(plain.outputs == warm.outputs, "warm cached run == uncached run")?;
+        prop(
+            warm.trace.executed_tasks() == 0,
+            &format!("{} tasks executed on a fully warm run", warm.trace.executed_tasks()),
+        )
     });
 }
 

@@ -1,0 +1,242 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment for this repo is fully offline (no crates.io), so
+//! this path dependency provides the slice of anyhow's API the crate
+//! actually uses, with the same semantics:
+//!
+//! * [`Error`]: an opaque, `Send + Sync` error with a context chain;
+//! * [`Result<T>`] alias;
+//! * blanket `From<E: std::error::Error>` so `?` converts std errors;
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Formatting matches anyhow's conventions: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain joined with `": "`, and `{:?}`
+//! prints the message plus a `Caused by:` list.
+//!
+//! Not implemented (unused in this repo): downcasting, backtraces,
+//! `Error::chain` iteration.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message with an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The root cause's message (innermost layer).
+    pub fn root_cause_msg(&self) -> &str {
+        let mut cur = self;
+        while let Some(c) = &cur.cause {
+            cur = c;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, outermost first, joined with ": ".
+            write!(f, "{}", self.msg)?;
+            let mut cur = &self.cause;
+            while let Some(c) = cur {
+                write!(f, ": {}", c.msg)?;
+                cur = &c.cause;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = &self.cause;
+            while let Some(c) = cur {
+                write!(f, "\n    {}", c.msg)?;
+                cur = &c.cause;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion that makes `?` work on std errors. `Error` itself
+// deliberately does NOT implement `std::error::Error`, which is what keeps
+// this impl from colliding with the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our chain so `{:#}` keeps the
+        // full story.
+        let mut msgs = Vec::new();
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut cause = None;
+        for m in msgs.into_iter().rev() {
+            cause = Some(Box::new(Error { msg: m, cause }));
+        }
+        Error {
+            msg: e.to_string(),
+            cause,
+        }
+    }
+}
+
+/// Context extension for `Result` and `Option`, mirroring anyhow.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let e: Result<(), std::io::Error> = Err(io_err());
+        let e = e.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: disk on fire");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        let owned = anyhow!(String::from("owned message"));
+        assert_eq!(owned.to_string(), "owned message");
+    }
+}

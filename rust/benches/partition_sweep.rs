@@ -1,0 +1,96 @@
+//! Partition sweep: makespan and bytes moved as the shard count K grows.
+//!
+//! Two views of the same question ("when does intra-op sharding win?"):
+//!
+//! * **simulator** — one matmul-dominated round at several sizes, swept
+//!   over K on 8 workers: shows the U-curve where glue + transfers
+//!   eventually eat the compute win;
+//! * **real in-proc cluster** — the host-op matrix workload at a modest
+//!   size, confirming the simulator's ordering on actual execution.
+//!
+//! ```sh
+//! cargo bench --bench partition_sweep
+//! ```
+
+use std::sync::Arc;
+
+use parhask::cluster::{run_cluster_inproc, ClusterConfig};
+use parhask::metrics::Table;
+use parhask::partition::{partition_program, PartitionConfig};
+use parhask::scheduler::PlacementPolicy;
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::HostExecutor;
+use parhask::workload::{matmul_round_program, matrix_program};
+
+const SWEEP_K: [usize; 5] = [1, 2, 4, 8, 16];
+
+fn main() -> anyhow::Result<()> {
+    sim_sweep()?;
+    cluster_sweep()?;
+    Ok(())
+}
+
+fn sim_sweep() -> anyhow::Result<()> {
+    let cm = CostModel::default();
+    let mut table = Table::new(
+        "simulated matmul round on 8 workers (shard-affinity placement)",
+        &["size", "K", "tasks", "makespan ms", "bytes moved", "speedup"],
+    );
+    for n in [256usize, 512, 1024] {
+        let base = matmul_round_program(n);
+        let mut base_ms = 0.0f64;
+        for k in SWEEP_K {
+            let program = if k <= 1 {
+                base.clone()
+            } else {
+                partition_program(&base, &PartitionConfig::aggressive(k))?.program
+            };
+            let mut cfg = SimConfig::cluster(8);
+            cfg.placement = PlacementPolicy::ShardAffinity;
+            let r = simulate(&program, &cm, &cfg)?;
+            let ms = r.makespan_ns as f64 / 1e6;
+            if k <= 1 {
+                base_ms = ms;
+            }
+            table.row(vec![
+                n.to_string(),
+                k.to_string(),
+                program.len().to_string(),
+                format!("{ms:.3}"),
+                r.bytes_transferred.to_string(),
+                format!("{:.2}x", base_ms / ms),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cluster_sweep() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "real in-proc cluster, 4 workers, 4 rounds @ 96x96 host ops",
+        &["K", "tasks", "wall ms", "arg bytes shipped", "arg bytes saved"],
+    );
+    let base = matrix_program(4, 96, false, None);
+    for k in SWEEP_K {
+        let program = if k <= 1 {
+            base.clone()
+        } else {
+            partition_program(&base, &PartitionConfig::aggressive(k))?.program
+        };
+        let cfg = ClusterConfig {
+            placement: PlacementPolicy::ShardAffinity,
+            ..ClusterConfig::default()
+        };
+        let r = run_cluster_inproc(&program, Arc::new(HostExecutor), 4, cfg, None)?;
+        table.row(vec![
+            k.to_string(),
+            program.len().to_string(),
+            format!("{:.3}", r.trace.wall_ns as f64 / 1e6),
+            r.trace.arg_bytes_shipped.to_string(),
+            r.trace.arg_bytes_saved.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -200,6 +200,39 @@ mod tests {
     }
 
     #[test]
+    fn shard_coordinates_partition_the_keyspace() {
+        // (shard_index, n_shards) live in the op encoding, so a shard's
+        // entry can never alias its siblings', the whole task's, or the
+        // same index at a different partition count — warm partitioned
+        // runs hit without cross-contamination.
+        let seed = [Value::scalar_i32(7)];
+        let whole = task_key(&OpKind::HostMatGen { n: 64 }, &seed);
+        let s0 = task_key(&OpKind::HostMatGenShard { n: 64, row0: 0, rows: 32 }, &seed);
+        let s1 = task_key(&OpKind::HostMatGenShard { n: 64, row0: 32, rows: 32 }, &seed);
+        assert_ne!(whole, s0);
+        assert_ne!(s0, s1);
+
+        let t = Value::tensor(Tensor::uniform(vec![8, 8], 3));
+        let a = task_key(&OpKind::Combine(CombineKind::ShardRows { index: 0, of: 2 }), &[t.clone()]);
+        let b = task_key(&OpKind::Combine(CombineKind::ShardRows { index: 1, of: 2 }), &[t.clone()]);
+        let c = task_key(&OpKind::Combine(CombineKind::ShardRows { index: 0, of: 4 }), &[t]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn concat_is_order_sensitive() {
+        let lo = Value::tensor(Tensor::uniform(vec![2, 4], 1));
+        let hi = Value::tensor(Tensor::uniform(vec![2, 4], 2));
+        let op = OpKind::Combine(CombineKind::Concat);
+        assert!(!is_commutative(&op));
+        assert_ne!(
+            task_key(&op, &[lo.clone(), hi.clone()]),
+            task_key(&op, &[hi, lo])
+        );
+    }
+
+    #[test]
     fn arity_is_part_of_the_key() {
         let op = OpKind::Combine(CombineKind::AddScalars);
         let one = task_key(&op, &[Value::scalar_f32(0.0)]);

@@ -123,7 +123,25 @@ impl ResultCache {
     /// May this task's result ever enter the cache? Purity is the paper's
     /// criterion; the deny list is the operator's.
     pub fn cacheable(&self, spec: &TaskSpec) -> bool {
-        self.cfg.enabled && spec.is_pure() && !self.cfg.deny.contains(&spec.op.label())
+        self.cfg.enabled && spec.is_pure() && !self.denied(&spec.op)
+    }
+
+    /// Label-based denial, extended so a denied whole op also denies its
+    /// partition-pass shards: a matgen shard's label embeds its row range,
+    /// so the operator's `--cache_deny host_matgen_N` must keep applying
+    /// when `--partitions` is on. (Synthetic shards change duration and
+    /// hence label — deny the shard labels directly if that ever matters.)
+    fn denied(&self, op: &crate::ir::task::OpKind) -> bool {
+        if self.cfg.deny.contains(&op.label()) {
+            return true;
+        }
+        if let crate::ir::task::OpKind::HostMatGenShard { n, .. } = op {
+            return self
+                .cfg
+                .deny
+                .contains(&crate::ir::task::OpKind::HostMatGen { n: *n }.label());
+        }
+        false
     }
 
     /// The task's content key within this cache's namespace. The cluster
@@ -232,6 +250,7 @@ mod tests {
             n_outputs: 1,
             est: CostEst::ZERO,
             label: "t".into(),
+            shard: None,
         }
     }
 
@@ -272,6 +291,23 @@ mod tests {
         assert!(c.lookup(&s, &args).is_none());
         assert_eq!(c.len(), 0);
         assert_eq!(c.stats().hits + c.stats().misses, 0, "never counted as cacheable");
+    }
+
+    #[test]
+    fn denying_a_matgen_denies_its_shards() {
+        let mut cfg = CacheConfig {
+            enabled: true,
+            ..CacheConfig::default()
+        };
+        cfg.deny_op("host_matgen_64");
+        let c = ResultCache::new(cfg);
+        let shard = spec(OpKind::HostMatGenShard { n: 64, row0: 16, rows: 16 });
+        c.insert(&shard, &[], &[Value::Unit]);
+        assert!(c.lookup(&shard, &[]).is_none());
+        assert_eq!(c.len(), 0, "a denied whole op denies its shards too");
+        // a different size's shards stay cacheable
+        let other = spec(OpKind::HostMatGenShard { n: 32, row0: 0, rows: 16 });
+        assert!(c.cacheable(&other));
     }
 
     #[test]

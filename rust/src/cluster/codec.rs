@@ -45,12 +45,16 @@ const O_HOST_MATSUM: u8 = 3;
 const O_SYNTHETIC: u8 = 4;
 const O_IO: u8 = 5;
 const O_COMBINE: u8 = 6;
+const O_HOST_MATGEN_SHARD: u8 = 7;
 
 // combine tags
 const C_MEAN: u8 = 0;
 const C_ADD: u8 = 1;
 const C_SELECT: u8 = 2;
 const C_IDENTITY: u8 = 3;
+const C_SHARD_ROWS: u8 = 4;
+const C_CONCAT: u8 = 5;
+const C_TREE_REDUCE: u8 = 6;
 
 /// Encode a message to bytes.
 pub fn encode(msg: &Message) -> Vec<u8> {
@@ -276,6 +280,12 @@ fn put_op(w: &mut Writer, op: &OpKind) {
             w.u8(O_HOST_MATGEN);
             w.varint(*n as u64);
         }
+        OpKind::HostMatGenShard { n, row0, rows } => {
+            w.u8(O_HOST_MATGEN_SHARD);
+            w.varint(*n as u64);
+            w.varint(*row0 as u64);
+            w.varint(*rows as u64);
+        }
         OpKind::HostMatMul => w.u8(O_HOST_MATMUL),
         OpKind::HostMatSum => w.u8(O_HOST_MATSUM),
         OpKind::Synthetic { compute_us } => {
@@ -297,6 +307,13 @@ fn put_op(w: &mut Writer, op: &OpKind) {
                     w.varint(*i as u64);
                 }
                 CombineKind::Identity => w.u8(C_IDENTITY),
+                CombineKind::ShardRows { index, of } => {
+                    w.u8(C_SHARD_ROWS);
+                    w.varint(*index as u64);
+                    w.varint(*of as u64);
+                }
+                CombineKind::Concat => w.u8(C_CONCAT),
+                CombineKind::TreeReduce => w.u8(C_TREE_REDUCE),
             }
         }
     }
@@ -307,6 +324,11 @@ fn get_op(r: &mut Reader) -> Result<OpKind> {
         O_ARTIFACT => OpKind::Artifact { name: r.str()? },
         O_HOST_MATGEN => OpKind::HostMatGen {
             n: r.varint()? as usize,
+        },
+        O_HOST_MATGEN_SHARD => OpKind::HostMatGenShard {
+            n: r.varint()? as usize,
+            row0: r.varint()? as usize,
+            rows: r.varint()? as usize,
         },
         O_HOST_MATMUL => OpKind::HostMatMul,
         O_HOST_MATSUM => OpKind::HostMatSum,
@@ -322,6 +344,12 @@ fn get_op(r: &mut Reader) -> Result<OpKind> {
             C_ADD => CombineKind::AddScalars,
             C_SELECT => CombineKind::Select(r.varint()? as usize),
             C_IDENTITY => CombineKind::Identity,
+            C_SHARD_ROWS => CombineKind::ShardRows {
+                index: r.varint()? as usize,
+                of: r.varint()? as usize,
+            },
+            C_CONCAT => CombineKind::Concat,
+            C_TREE_REDUCE => CombineKind::TreeReduce,
             t => bail!("bad combine tag {t}"),
         }),
         t => bail!("bad op tag {t}"),
@@ -365,6 +393,7 @@ mod tests {
                 name: "matmul_256".into(),
             },
             OpKind::HostMatGen { n: 64 },
+            OpKind::HostMatGenShard { n: 64, row0: 16, rows: 16 },
             OpKind::HostMatMul,
             OpKind::HostMatSum,
             OpKind::Synthetic { compute_us: 123 },
@@ -376,6 +405,9 @@ mod tests {
             OpKind::Combine(CombineKind::AddScalars),
             OpKind::Combine(CombineKind::Select(2)),
             OpKind::Combine(CombineKind::Identity),
+            OpKind::Combine(CombineKind::ShardRows { index: 3, of: 8 }),
+            OpKind::Combine(CombineKind::Concat),
+            OpKind::Combine(CombineKind::TreeReduce),
         ];
         for op in ops {
             roundtrip(Message::Assign {

@@ -272,7 +272,8 @@ impl Leader {
                         alive[t.index()] && inflight[t.index()].len() < self.cfg.pipeline_depth
                     }) {
                         if let Some(t2) = state.assign_to(&program, thief) {
-                            let args = self.build_args(&program, &state, &values, t2, thief)?;
+                            let (args, shipped, saved) =
+                                self.build_args(&program, &state, &values, t2, thief)?;
                             match self.senders[thief.index()].send(&Message::Assign {
                                 task: t2,
                                 op: program.task(t2).op.clone(),
@@ -281,6 +282,8 @@ impl Leader {
                                 Ok(()) => {
                                     inflight[thief.index()].push(t2);
                                     assigned_at.insert(t2, crate::util::now_ns());
+                                    trace.arg_bytes_shipped += shipped;
+                                    trace.arg_bytes_saved += saved;
                                     log_debug!("leader", "steal-assigned {t2} -> {thief}");
                                 }
                                 Err(_) => state.unassign(&program, t2, thief),
@@ -448,7 +451,7 @@ impl Leader {
                     cstate.inflight_keys.insert(key, task);
                 }
             }
-            let args = self.build_args(program, state, values, task, w)?;
+            let (args, shipped, saved) = self.build_args(program, state, values, task, w)?;
             match self.senders[w.index()].send(&Message::Assign {
                 task,
                 op: program.task(task).op.clone(),
@@ -457,6 +460,8 @@ impl Leader {
                 Ok(()) => {
                     inflight[w.index()].push(task);
                     assigned_at.insert(task, crate::util::now_ns());
+                    trace.arg_bytes_shipped += shipped;
+                    trace.arg_bytes_saved += saved;
                     log_debug!("leader", "assigned {task} -> {w}");
                 }
                 Err(e) => {
@@ -469,6 +474,10 @@ impl Leader {
         }
     }
 
+    /// Build the wire args for `task`, charging each argument either to
+    /// the shipped or the saved ledger: a value the target worker already
+    /// holds (per the leader's location table) goes as a `Cached`
+    /// reference, anything else ships inline.
     fn build_args(
         &self,
         program: &TaskProgram,
@@ -476,29 +485,37 @@ impl Leader {
         values: &[Option<Vec<Value>>],
         task: TaskId,
         target: WorkerId,
-    ) -> Result<Vec<ArgSpec>> {
-        program
+    ) -> Result<(Vec<ArgSpec>, u64, u64)> {
+        let mut shipped = 0u64;
+        let mut saved = 0u64;
+        let args = program
             .task(task)
             .args
             .iter()
             .map(|a| match a {
-                ArgRef::Const(v) => Ok(ArgSpec::Inline(v.clone())),
+                ArgRef::Const(v) => {
+                    shipped += v.size_bytes() as u64;
+                    Ok(ArgSpec::Inline(v.clone()))
+                }
                 ArgRef::Output { task: d, index } => {
+                    let outs = values[d.index()]
+                        .as_ref()
+                        .with_context(|| format!("{task} needs unfinished {d}"))?;
+                    let bytes = outs[*index].size_bytes() as u64;
                     if self.cfg.use_cached_args && state.location(*d) == Some(target) {
+                        saved += bytes;
                         Ok(ArgSpec::Cached {
                             task: *d,
                             index: *index,
                         })
                     } else {
-                        let v = values[d.index()]
-                            .as_ref()
-                            .with_context(|| format!("{task} needs unfinished {d}"))?[*index]
-                            .clone();
-                        Ok(ArgSpec::Inline(v))
+                        shipped += bytes;
+                        Ok(ArgSpec::Inline(outs[*index].clone()))
                     }
                 }
             })
-            .collect()
+            .collect::<Result<Vec<_>>>()?;
+        Ok((args, shipped, saved))
     }
 
     /// Leader-mediated work stealing: idle worker + empty ready queue →

@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 
 use crate::cache::CacheConfig;
 use crate::cluster::ClusterConfig;
+use crate::partition::PartitionConfig;
 use crate::scheduler::{PlacementPolicy, StealPolicy};
 
 /// Which execution engine runs the program.
@@ -54,6 +55,13 @@ impl Engine {
 }
 
 /// Full run configuration.
+///
+/// Two option groups cut across every engine: the purity-aware result
+/// [`cache`](Self::cache) (`--cache …`) and the auto-sharding
+/// [`partition`](Self::partition) pass (`--partitions N`,
+/// `--shard-min-bytes B`, `--shard-min-us U`, `--combine-arity A`,
+/// `--shard-artifacts a,b`). Both default to off, preserving the exact
+/// unsharded, uncached execution paths.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub engine: Engine,
@@ -68,6 +76,10 @@ pub struct RunConfig {
     /// Purity-aware result cache (all engines). Disabled by default —
     /// `--cache off` is exactly the pre-cache behavior.
     pub cache: CacheConfig,
+    /// Auto-sharding partition rewrite (all engines): split large pure
+    /// tasks into `--partitions` shards plus a tree-combine before
+    /// scheduling. Disabled by default (`partitions: 0`).
+    pub partition: PartitionConfig,
     /// Simulator-only: model a warm cache at this hit rate (the real
     /// engines measure their hit rate instead of assuming one).
     pub sim_cache_hit_rate: Option<f64>,
@@ -85,15 +97,18 @@ impl Default for RunConfig {
             use_cached_args: true,
             use_artifacts: true,
             cache: CacheConfig::default(),
+            partition: PartitionConfig::default(),
             sim_cache_hit_rate: None,
         }
     }
 }
 
 impl RunConfig {
-    /// Apply a `key=value` override.
+    /// Apply a `key=value` override. Hyphens and underscores in `key` are
+    /// interchangeable (`--shard-min-bytes` == `--shard_min_bytes`).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
+        let key = key.replace('-', "_");
+        match key.as_str() {
             "engine" => self.engine = Engine::parse(value)?,
             "placement" => {
                 self.placement = PlacementPolicy::parse(value)
@@ -134,6 +149,21 @@ impl RunConfig {
                     bail!("cache_hit_rate must be in [0, 1], got {r}");
                 }
                 self.sim_cache_hit_rate = Some(r);
+            }
+            "partitions" => self.partition.partitions = value.parse()?,
+            "shard_min_bytes" => self.partition.shard_min_bytes = value.parse()?,
+            "shard_min_us" => self.partition.shard_min_us = value.parse()?,
+            "combine_arity" => {
+                let a: usize = value.parse()?;
+                if a < 2 {
+                    bail!("combine_arity must be ≥ 2, got {a}");
+                }
+                self.partition.combine_arity = a;
+            }
+            "shard_artifacts" => {
+                for name in value.split(',').filter(|s| !s.is_empty()) {
+                    self.partition.allow_artifact(name.trim());
+                }
             }
             _ => bail!("unknown config key {key:?}"),
         }
@@ -208,5 +238,28 @@ mod tests {
             c.set("cache_mb", "99999999999999").is_err(),
             "oversized byte budget must be rejected, not wrap"
         );
+    }
+
+    #[test]
+    fn partition_overrides() {
+        let mut c = RunConfig::default();
+        assert!(!c.partition.enabled(), "partitioning is off by default");
+        c.set("partitions", "4").unwrap();
+        c.set("shard-min-bytes", "4096").unwrap(); // hyphen form accepted
+        c.set("shard_min_us", "100").unwrap();
+        c.set("combine_arity", "2").unwrap();
+        c.set("shard_artifacts", "matmul_256, matmul_512").unwrap();
+        assert!(c.partition.enabled());
+        assert_eq!(c.partition.partitions, 4);
+        assert_eq!(c.partition.shard_min_bytes, 4096);
+        assert_eq!(c.partition.shard_min_us, 100);
+        assert_eq!(c.partition.combine_arity, 2);
+        assert!(c.partition.shardable_artifacts.contains("matmul_256"));
+        assert!(c.partition.shardable_artifacts.contains("matmul_512"));
+        assert!(c.set("combine_arity", "1").is_err());
+        c.set("partitions", "0").unwrap();
+        assert!(!c.partition.enabled());
+        c.set("placement", "shard").unwrap();
+        assert_eq!(c.placement, PlacementPolicy::ShardAffinity);
     }
 }

@@ -1,8 +1,17 @@
-//! Graphviz DOT emitter — regenerates the paper's Figure 1.
+//! Graphviz DOT emitters.
 //!
-//! IO nodes render as double octagons with the RealWorld chain dashed,
-//! pure nodes as plain boxes; value edges are labelled with the variable
-//! they carry.
+//! [`to_dot`] regenerates the paper's Figure 1 from the frontend
+//! dependency graph: IO nodes render as double octagons with the
+//! RealWorld chain dashed, pure nodes as plain boxes; value edges are
+//! labelled with the variable they carry.
+//!
+//! [`program_to_dot`] renders a lowered [`TaskProgram`], grouping each
+//! partition-rewrite shard family into a `subgraph cluster_*` box so
+//! sharded graphs stay debuggable instead of exploding into flat nodes.
+
+use std::collections::BTreeMap;
+
+use crate::ir::TaskProgram;
 
 use super::graph::{DepGraph, EdgeKind};
 
@@ -59,6 +68,59 @@ pub fn to_dot(g: &DepGraph, title: &str) -> String {
     out
 }
 
+/// Render a lowered task program as DOT. Tasks sharing a shard-family
+/// annotation are grouped into one `subgraph cluster_<family>` labelled
+/// with the source task and shard count.
+pub fn program_to_dot(p: &TaskProgram, title: &str) -> String {
+    let mut out = String::new();
+    out.push_str("digraph taskprogram {\n");
+    out.push_str(&format!("  label=\"{}\";\n", escape(title)));
+    out.push_str("  labelloc=t;\n  rankdir=TB;\n  node [fontname=\"monospace\"];\n");
+    // family -> (source label, shard count, member node lines) in task
+    // order. The cluster is labelled with the *source task's* label (the
+    // prefix before the shard suffix) — the pre-rewrite task id would
+    // point at an unrelated post-rewrite node in the same image.
+    let mut clusters: BTreeMap<u32, (String, u32, Vec<String>)> = BTreeMap::new();
+    for t in p.tasks() {
+        let shape = if t.is_pure() { "box" } else { "doubleoctagon" };
+        let line = format!(
+            "  t{} [label=\"{}\\n{}\", shape={}];\n",
+            t.id.0,
+            escape(&t.label),
+            escape(&t.op.label()),
+            shape
+        );
+        match t.shard {
+            Some(s) => {
+                let entry = clusters.entry(s.family).or_insert_with(|| {
+                    let base = t.label.split(['[', '.']).next().unwrap_or(&t.label);
+                    (base.to_string(), s.of, Vec::new())
+                });
+                entry.2.push(line);
+            }
+            None => out.push_str(&line),
+        }
+    }
+    for (family, (base, of, lines)) in &clusters {
+        out.push_str(&format!("  subgraph cluster_{family} {{\n"));
+        out.push_str(&format!(
+            "    label=\"shards of {} (×{of})\";\n    style=rounded;\n",
+            escape(base)
+        ));
+        for l in lines {
+            out.push_str(&format!("  {l}"));
+        }
+        out.push_str("  }\n");
+    }
+    for t in p.tasks() {
+        for d in t.deps() {
+            out.push_str(&format!("  t{} -> t{};\n", d.0, t.id.0));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
 fn escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -81,6 +143,30 @@ mod tests {
         assert!(dot.contains("world0 -> n0 [style=dashed]"));
         assert!(dot.starts_with("digraph"));
         assert!(dot.ends_with("}\n"));
+    }
+
+    #[test]
+    fn program_dot_groups_shard_families_into_clusters() {
+        use crate::partition::{partition_program, PartitionConfig};
+        use crate::workload::matrix_program;
+        let p = matrix_program(1, 16, false, None);
+        let flat = program_to_dot(&p, "plain");
+        assert!(!flat.contains("subgraph cluster_"), "unsharded graphs stay flat");
+
+        let pp = partition_program(&p, &PartitionConfig::aggressive(4)).unwrap();
+        let dot = program_to_dot(&pp.program, "sharded");
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.ends_with("}\n"));
+        // one cluster per rewritten family, each announcing its shard count
+        let n_clusters = dot.matches("subgraph cluster_").count();
+        assert_eq!(n_clusters, pp.families.len());
+        assert!(dot.contains("(×4)"));
+        // every leaf shard node sits somewhere in the output
+        for f in &pp.families {
+            for l in &f.leaves {
+                assert!(dot.contains(&format!("t{} [", l.0)), "missing node for {l}");
+            }
+        }
     }
 
     #[test]

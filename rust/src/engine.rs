@@ -20,9 +20,18 @@ use crate::tasks::Executor;
 /// outputs are empty and the trace carries simulated times (the cost
 /// model is loaded from the artifact dir when calibrated).
 ///
-/// When `cfg.cache.enabled` a fresh per-run [`ResultCache`] is built, so
-/// hits come from repeats *within* the run; to serve repeated traffic
-/// across runs, build one cache and call [`run_with_cache`].
+/// Two cross-cutting run options apply on every engine before dispatch:
+///
+/// * **partitioning** — with `cfg.partition.enabled()` the auto-sharding
+///   rewrite ([`crate::partition::partition_program`]) splits large pure
+///   tasks into `--partitions` shards plus a tree-combine; outputs are
+///   bit-identical to the unsharded program, but the returned trace
+///   describes the *sharded* task graph (validate it against
+///   [`crate::partition::PartitionedProgram::program`], not the input);
+/// * **caching** — when `cfg.cache.enabled` a fresh per-run
+///   [`ResultCache`] is built, so hits come from repeats *within* the
+///   run; to serve repeated traffic across runs, build one cache and call
+///   [`run_with_cache`].
 pub fn run(program: &TaskProgram, cfg: &RunConfig, executor: Arc<dyn Executor>) -> Result<RunResult> {
     let cache = cfg.cache.enabled.then(|| {
         let mut cc = cfg.cache.clone();
@@ -37,13 +46,23 @@ pub fn run(program: &TaskProgram, cfg: &RunConfig, executor: Arc<dyn Executor>) 
 }
 
 /// [`run`] with a caller-held result cache (shared across requests — the
-/// serving pattern). `None` disables caching regardless of `cfg.cache`.
+/// serving pattern). `None` disables caching regardless of `cfg.cache`;
+/// the partition rewrite still applies per `cfg.partition`.
 pub fn run_with_cache(
     program: &TaskProgram,
     cfg: &RunConfig,
     executor: Arc<dyn Executor>,
     cache: Option<Arc<ResultCache>>,
 ) -> Result<RunResult> {
+    // Auto-sharding rewrite: every engine runs the same partitioned
+    // program, so sharded results stay engine-portable and bit-identical.
+    let partitioned;
+    let program = if cfg.partition.enabled() {
+        partitioned = crate::partition::partition_program(program, &cfg.partition)?;
+        &partitioned.program
+    } else {
+        program
+    };
     match cfg.engine {
         Engine::Single => run_single_cached(program, executor.as_ref(), cache.as_deref()),
         Engine::Smp { threads } => run_smp_cached(program, executor, threads, cache),
@@ -117,6 +136,31 @@ mod tests {
                 "{engine}: warm run must execute strictly fewer tasks"
             );
         }
+    }
+
+    #[test]
+    fn partitioned_runs_match_unsharded_on_every_engine() {
+        let p = matrix_program(2, 12, false, None);
+        for engine in ["single", "smp:2", "cluster:2"] {
+            let mut cfg = RunConfig::default();
+            cfg.set("engine", engine).unwrap();
+            let base = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+            cfg.set("partitions", "3").unwrap();
+            cfg.set("shard_min_bytes", "1").unwrap();
+            let sharded = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+            assert_eq!(base.outputs, sharded.outputs, "{engine}: bit-identical");
+            assert!(
+                sharded.trace.executed_tasks() > p.len(),
+                "{engine}: the sharded plan runs more, smaller tasks"
+            );
+        }
+        // the sim engine rewrites before simulating, too
+        let mut cfg = RunConfig::default();
+        cfg.set("engine", "sim:4").unwrap();
+        cfg.set("partitions", "4").unwrap();
+        cfg.set("shard_min_bytes", "1").unwrap();
+        let r = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+        assert!(r.trace.events.len() > p.len());
     }
 
     #[test]

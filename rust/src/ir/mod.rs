@@ -6,4 +6,4 @@ pub mod program;
 pub mod lower;
 
 pub use program::{ProgramBuilder, TaskProgram};
-pub use task::{ArgRef, CostEst, OpKind, TaskId, TaskSpec, Value};
+pub use task::{ArgRef, CostEst, OpKind, ShardInfo, ShardRole, TaskId, TaskSpec, Value};

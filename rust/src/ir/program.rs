@@ -183,8 +183,15 @@ impl ProgramBuilder {
             n_outputs,
             est,
             label: label.into(),
+            shard: None,
         });
         id
+    }
+
+    /// Attach a shard-family annotation to an already-pushed task (used by
+    /// the partition rewrite; plain programs leave it `None`).
+    pub fn annotate_shard(&mut self, id: TaskId, info: crate::ir::task::ShardInfo) {
+        self.tasks[id.index()].shard = Some(info);
     }
 
     /// Convenience: single-output task, args by (task, 0).
@@ -235,6 +242,7 @@ mod tests {
             n_outputs: 1,
             est: CostEst::ZERO,
             label: "bad".into(),
+            shard: None,
         };
         let t1 = TaskSpec {
             id: TaskId(1),
@@ -243,6 +251,7 @@ mod tests {
             n_outputs: 1,
             est: CostEst::ZERO,
             label: "b".into(),
+            shard: None,
         };
         assert!(TaskProgram::new(vec![t0, t1], vec![]).is_err());
     }

@@ -119,6 +119,18 @@ pub enum CombineKind {
     Select(usize),
     /// Pack all args into multiple outputs unchanged (fan-out regroup).
     Identity,
+    /// Partition-pass slice glue: the `index`-th of `of` contiguous row
+    /// blocks of the single tensor arg (rows `[index·m/of, (index+1)·m/of)`
+    /// of an `m`-row tensor — shape-agnostic, so the rewrite needs no
+    /// static shapes).
+    ShardRows { index: usize, of: usize },
+    /// Concatenate tensor args along axis 0 (inverse of `ShardRows`;
+    /// associative, so a combine *tree* equals the flat concat bit-for-bit).
+    Concat,
+    /// Join shard results whose payload is not row-concatenable: all-`Unit`
+    /// args collapse to `Unit` (synthetic shard barrier); scalar args
+    /// reduce by f64 summation.
+    TreeReduce,
 }
 
 /// What a task *does*. The executor (real PJRT / host / synthetic)
@@ -129,6 +141,10 @@ pub enum OpKind {
     Artifact { name: String },
     /// Host reference implementation of the matrix ops (no PJRT).
     HostMatGen { n: usize },
+    /// Partition-pass shard of `HostMatGen`: rows `[row0, row0+rows)` of
+    /// the same `n×n` matrix, bit-identical to the corresponding slice of
+    /// the whole (the generator stream is skipped, not re-seeded).
+    HostMatGenShard { n: usize, row0: usize, rows: usize },
     HostMatMul,
     HostMatSum,
     /// Pure synthetic compute (spin) — scheduler/bench workloads.
@@ -153,6 +169,9 @@ impl OpKind {
         match self {
             OpKind::Artifact { name } => name.clone(),
             OpKind::HostMatGen { n } => format!("host_matgen_{n}"),
+            OpKind::HostMatGenShard { n, row0, rows } => {
+                format!("host_matgen_{n}_r{row0}+{rows}")
+            }
             OpKind::HostMatMul => "host_matmul".into(),
             OpKind::HostMatSum => "host_matsum".into(),
             OpKind::Synthetic { compute_us } => format!("spin_{compute_us}us"),
@@ -179,6 +198,35 @@ impl CostEst {
     };
 }
 
+/// Role of a task within a shard family created by the partition rewrite.
+/// The shard-affinity placement policy keys off it: `Leaf` stripes,
+/// `Combine` chases producers.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ShardRole {
+    /// A per-partition compute shard — siblings should spread across
+    /// workers.
+    Leaf,
+    /// Shard glue — a `ShardRows` slice or a tree-combine node — which
+    /// should co-locate with its producer(s): a slice reads the *whole*
+    /// operand, so running it where that value lives ships only the
+    /// 1/K slice onward instead of the full operand K times.
+    Combine,
+}
+
+/// Shard-family annotation attached by the partition rewrite. Drives the
+/// shard-affinity placement policy and DOT cluster grouping; absent on
+/// tasks the rewrite left whole.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct ShardInfo {
+    /// Id of the pre-rewrite task this family replaces (unique per family).
+    pub family: u32,
+    /// Shard index for `Leaf` tasks; node counter for `Combine` tasks.
+    pub index: u32,
+    /// Total number of leaf shards in the family.
+    pub of: u32,
+    pub role: ShardRole,
+}
+
 /// One node of the lowered program.
 #[derive(Clone, Debug)]
 pub struct TaskSpec {
@@ -189,6 +237,8 @@ pub struct TaskSpec {
     pub est: CostEst,
     /// Human-readable provenance (DSL variable name / statement).
     pub label: String,
+    /// Set by the partition rewrite on tasks belonging to a shard family.
+    pub shard: Option<ShardInfo>,
 }
 
 impl TaskSpec {
@@ -238,6 +288,7 @@ mod tests {
             n_outputs: 1,
             est: CostEst::ZERO,
             label: "c".into(),
+            shard: None,
         };
         assert_eq!(t.deps(), vec![TaskId(1), TaskId(2)]);
     }
@@ -246,6 +297,8 @@ mod tests {
     fn purity_of_ops() {
         assert!(OpKind::Artifact { name: "matmul_256".into() }.is_pure());
         assert!(OpKind::Synthetic { compute_us: 5 }.is_pure());
+        assert!(OpKind::HostMatGenShard { n: 8, row0: 2, rows: 2 }.is_pure());
+        assert!(OpKind::Combine(CombineKind::Concat).is_pure());
         assert!(!OpKind::IoAction { label: "print".into(), compute_us: 0 }.is_pure());
     }
 }

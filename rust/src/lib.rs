@@ -11,6 +11,8 @@
 //! HaskLite source ──frontend──▶ AST ──types──▶ purity-annotated program
 //!    ──depgraph──▶ data-dependency DAG (RealWorld-threaded)
 //!    ──ir::lower──▶ TaskProgram
+//!    ──partition──▶ sharded TaskProgram (opt-in: K-way splits of large
+//!                   pure ops + tree-combines, bit-identical results)
 //!    ──{baselines | scheduler | cluster | simulator}──▶ results + trace
 //!                         ▲
 //!                 [`cache`] ── purity-aware result cache consulted by
@@ -46,6 +48,7 @@ pub mod types;
 pub mod depgraph;
 pub mod scheduler;
 pub mod cache;
+pub mod partition;
 pub mod cluster;
 pub mod baselines;
 pub mod simulator;

@@ -78,11 +78,18 @@ USAGE:
   parhask calibrate [--reps K]
 
 ENGINES: single | smp:K | cluster:W | sim:W
-KNOBS:   --placement rr|ll|loc  --steal none|random|richest  --depth D
+KNOBS:   --placement rr|ll|loc|shard  --steal none|random|richest  --depth D
          --artifacts true|false (PJRT artifacts vs host reference ops)
 CACHE:   --cache on|off (default off)  --cache_mb MB  --cache_entries N
          --cache_shards S  --cache_deny op1,op2 (never cache these ops)
          --cache_hit_rate R (sim engine: model a warm cache at rate R)
+SHARDS:  --partitions K (default 0 = off): split large pure tasks into K
+         shards + a tree-combine, bit-identical results on every engine
+         --shard-min-bytes B  --shard-min-us U (size floors)
+         --combine-arity A (tree fan-in, default 4)
+         --shard-artifacts a,b (row-shardable artifact names)
+         (pairs best with --placement shard; `matrix --dot out.dot`
+         renders the sharded task graph with families grouped)
 ";
 
 fn read_source(args: &Args) -> Result<(String, String)> {
@@ -205,9 +212,37 @@ fn report(r: &parhask::scheduler::trace::RunResult, show_trace: bool) {
         r.trace.utilization() * 100.0,
         r.trace.bytes_transferred,
     );
+    if r.trace.arg_bytes_saved > 0 {
+        println!(
+            "locality: {} arg bytes shipped, {} saved via cached references",
+            r.trace.arg_bytes_shipped, r.trace.arg_bytes_saved
+        );
+    }
     if show_trace {
         println!("{}", r.trace.gantt(72));
     }
+}
+
+/// Apply the partition rewrite with the standard report line — the one
+/// path every subcommand shares, so `--partitions` behaves identically on
+/// `run`, `matrix`, and `serve`. Returns the program to execute; also
+/// disables the engine-side rewrite (which is idempotent on an
+/// already-sharded program, but re-running it would be a redundant copy).
+fn apply_partition(
+    cfg: &mut RunConfig,
+    program: parhask::ir::TaskProgram,
+) -> Result<parhask::ir::TaskProgram> {
+    if !cfg.partition.enabled() {
+        return Ok(program);
+    }
+    let pp = parhask::partition::partition_program(&program, &cfg.partition)?;
+    println!(
+        "partitioned: {} shard families, {} tasks total",
+        pp.families.len(),
+        pp.program.len()
+    );
+    cfg.partition.partitions = 0;
+    Ok(pp.program)
 }
 
 /// Build the per-run result cache when enabled, and report it after. The
@@ -268,6 +303,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             FunctionRegistry::matrix_host(size),
         )
     };
+    if let Some(svc) = &_svc {
+        // artifacts the AOT layer declares row-shardable join the plan
+        cfg.partition.allow_from_manifest(svc.handle().manifest());
+    }
     let demo = FunctionRegistry::nlp_demo(20_000, 50_000, 30_000);
     for name in ["clean_files", "complex_evaluation", "semantic_analysis"] {
         if registry.get(name).is_none() {
@@ -285,11 +324,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         lowered.program.max_parallel_width(),
         cfg.engine.describe()
     );
+    let program = apply_partition(&mut cfg, lowered.program)?;
     // Never cache anything the signature analysis says is IO (defense in
     // depth on top of the op-kind purity gate).
     cfg.cache.deny_io_from(&checked.purity);
     let cache = build_cache(&cfg);
-    let r = parhask::engine::run_with_cache(&lowered.program, &cfg, executor, cache.clone())?;
+    let r = parhask::engine::run_with_cache(&program, &cfg, executor, cache.clone())?;
     report(&r, args.flag("trace"));
     report_cache(&cache);
     Ok(())
@@ -298,15 +338,30 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_matrix(args: &Args) -> Result<()> {
     let rounds = args.get_usize("rounds", 8)?;
     let size = args.get_usize("size", 256)?;
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
     let (executor, svc) = build_executor(&cfg)?;
     let manifest = svc.as_ref().map(|s| s.handle().manifest().clone());
+    if let Some(m) = manifest.as_ref() {
+        // artifacts the AOT layer declares row-shardable join the plan
+        cfg.partition.allow_from_manifest(m);
+    }
     let program = workload::matrix_program(rounds, size, cfg.use_artifacts, manifest.as_ref());
     println!(
         "matrix workload: {rounds} rounds @ {size}x{size}, {} tasks, engine {}",
         program.len(),
         cfg.engine.describe()
     );
+    let dot_title = if cfg.partition.enabled() {
+        format!("sharded matrix workload (K={})", cfg.partition.partitions)
+    } else {
+        "matrix workload".to_string()
+    };
+    let program = apply_partition(&mut cfg, program)?;
+    if let Some(out) = args.get("dot") {
+        let dot = parhask::depgraph::dot::program_to_dot(&program, &dot_title);
+        std::fs::write(out, dot).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
     let cache = build_cache(&cfg);
     let r = parhask::engine::run_with_cache(&program, &cfg, executor, cache.clone())?;
     if let Some(v) = r.outputs.first() {
@@ -348,16 +403,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
     let registry = if cfg.use_artifacts {
         let svc = RuntimeService::start_default()?;
+        // artifacts the AOT layer declares row-shardable join the plan
+        cfg.partition.allow_from_manifest(svc.handle().manifest());
         FunctionRegistry::matrix_artifacts(size, svc.handle().manifest())?
     } else {
         FunctionRegistry::matrix_host(size)
     };
     let lowered =
         lower(&checked, &registry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+    // serve bypasses engine::run_with_cache, so the shared helper must
+    // run here for `--partitions` to mean anything in serving mode
+    let program = apply_partition(&mut cfg, lowered.program)?;
     cfg.cache.deny_io_from(&checked.purity);
     let cache = build_cache(&cfg);
     let r = parhask::cluster::run_cluster_tcp_cached(
-        &lowered.program,
+        &program,
         bind,
         workers,
         cfg.cluster_config(),

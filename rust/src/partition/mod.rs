@@ -1,0 +1,139 @@
+//! Auto-sharding data plane: intra-op data parallelism for large pure
+//! tasks.
+//!
+//! The paper's auto-parallelizer schedules whole function calls, so one
+//! big pure op (a single `matmul`) can never use more than one worker.
+//! This post-lowering rewrite pass splits such ops into `K` per-partition
+//! shard tasks plus a logarithmic tree-combine, *preserving program
+//! semantics bit-for-bit* — purity (the paper's central property) is
+//! exactly what makes the rewrite sound, and it is why lost shards can be
+//! re-executed after a worker death like any other pure task.
+//!
+//! What shards, and how equivalence is kept exact:
+//!
+//! * **`HostMatMul`** (and declared row-shardable `Artifact`s): the first
+//!   operand is row-sliced by [`CombineKind::ShardRows`] glue, each shard
+//!   multiplies its row block against the full second operand, and a tree
+//!   of [`CombineKind::Concat`] nodes reassembles the product. Every
+//!   output row is computed by the identical per-row loop, and row-concat
+//!   is associative, so the result is bit-identical.
+//! * **`HostMatGen`**: each shard generates rows `[row0, row0+rows)` of
+//!   the same matrix via [`OpKind::HostMatGenShard`], *skipping* the
+//!   generator stream past earlier rows instead of re-seeding — the
+//!   concatenation reproduces the whole-matrix stream exactly.
+//! * **`Synthetic`**: the spin duration splits across shards; a
+//!   [`CombineKind::TreeReduce`] tree joins the `Unit` results.
+//!
+//! Everything downstream is shard-aware: shard tasks carry a
+//! [`crate::ir::task::ShardInfo`] annotation that the shard-affinity
+//! placement policy uses to spread siblings across workers and co-locate
+//! combines with their producers, cost estimates are scaled so the
+//! simulator prices the sharded plan faithfully, and each shard's cache
+//! key incorporates `(shard_index, n_shards)` — through its op encoding
+//! for tensor shards (`HostMatGenShard`, `ShardRows`), and through an
+//! inert shard-index const arg for `Synthetic` shards — so warm
+//! partitioned runs still hit without sibling shards or whole-task
+//! entries ever aliasing.
+
+pub mod rewrite;
+pub mod tree;
+
+use std::collections::BTreeSet;
+
+use crate::runtime::Manifest;
+
+pub use rewrite::{partition_program, PartitionedProgram, ShardFamily};
+
+/// Partition-pass configuration (part of [`crate::config::RunConfig`];
+/// `--partitions N` on the CLI).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionConfig {
+    /// Target shard count `K`. `0` or `1` disables the pass entirely —
+    /// the default, preserving the exact pre-partition execution paths.
+    pub partitions: usize,
+    /// Pure tensor-producing tasks whose estimated output is smaller than
+    /// this stay whole (`--shard-min-bytes`).
+    pub shard_min_bytes: u64,
+    /// Synthetic tasks shorter than this stay whole (`--shard-min-us`).
+    pub shard_min_us: u64,
+    /// Fan-in of each tree-combine node (≥ 2; depth is `log_arity K`).
+    pub combine_arity: usize,
+    /// Artifact names declared row-shardable: the executable must accept
+    /// an arbitrary row count in its first operand (the host fallbacks for
+    /// the `matmul_*` family do; fixed-shape PJRT executables do not).
+    pub shardable_artifacts: BTreeSet<String>,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig {
+            partitions: 0,
+            shard_min_bytes: 64 << 10, // 64 KiB
+            shard_min_us: 2_000,
+            combine_arity: 4,
+            shardable_artifacts: BTreeSet::new(),
+        }
+    }
+}
+
+impl PartitionConfig {
+    /// Is the rewrite active at all?
+    pub fn enabled(&self) -> bool {
+        self.partitions >= 2
+    }
+
+    /// An aggressive config for tests/benches: shard everything eligible
+    /// into `k` partitions regardless of size.
+    pub fn aggressive(k: usize) -> PartitionConfig {
+        PartitionConfig {
+            partitions: k,
+            shard_min_bytes: 1,
+            shard_min_us: 1,
+            ..PartitionConfig::default()
+        }
+    }
+
+    /// Declare one artifact row-shardable.
+    pub fn allow_artifact(&mut self, name: impl Into<String>) {
+        self.shardable_artifacts.insert(name.into());
+    }
+
+    /// Import every artifact the manifest marks `"shardable": true`.
+    pub fn allow_from_manifest(&mut self, manifest: &Manifest) {
+        for e in manifest.entries() {
+            if e.shardable {
+                self.shardable_artifacts.insert(e.name.clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default() {
+        let c = PartitionConfig::default();
+        assert!(!c.enabled());
+        assert!(!PartitionConfig { partitions: 1, ..c.clone() }.enabled());
+        assert!(PartitionConfig { partitions: 2, ..c }.enabled());
+    }
+
+    #[test]
+    fn manifest_shardable_flags_import() {
+        let m = Manifest::parse(
+            r#"{"version": 1, "artifacts": [
+                {"name": "matmul_64", "file": "a", "inputs": [], "outputs": [],
+                 "shardable": true},
+                {"name": "matgen_64", "file": "b", "inputs": [], "outputs": []}
+            ]}"#,
+            std::path::Path::new("/tmp"),
+        )
+        .unwrap();
+        let mut c = PartitionConfig::default();
+        c.allow_from_manifest(&m);
+        assert!(c.shardable_artifacts.contains("matmul_64"));
+        assert!(!c.shardable_artifacts.contains("matgen_64"));
+    }
+}

@@ -1,0 +1,559 @@
+//! The partition rewrite pass: `TaskProgram` → sharded `TaskProgram`.
+//!
+//! Runs after lowering and before any engine sees the program. Tasks the
+//! plan declares shardable are replaced by `K` leaf shards plus a
+//! tree-combine; everything else is copied with its argument references
+//! remapped. Consumers of a sharded task read the family's combine root,
+//! whose single output is bit-identical to the original task's, so the
+//! rewrite is invisible to the rest of the program — including program
+//! outputs, the IO token chain, and the result cache (shard keys embed
+//! `(shard_index, n_shards)` via their op encodings and can never alias
+//! whole-task entries).
+
+use anyhow::Result;
+
+use crate::ir::task::{
+    ArgRef, CombineKind, CostEst, OpKind, ShardInfo, ShardRole, TaskId, TaskSpec, Value,
+};
+use crate::ir::{ProgramBuilder, TaskProgram};
+
+use super::tree::build_combine_tree;
+use super::PartitionConfig;
+
+/// One rewritten task: its pre-rewrite id and the new tasks standing in
+/// for it.
+#[derive(Clone, Debug)]
+pub struct ShardFamily {
+    /// Id of the task in the *input* program that was sharded.
+    pub source: TaskId,
+    /// The family id carried by the members' [`ShardInfo`] annotations.
+    /// Offset past any family ids already present in the input, so
+    /// repeated passes never mint a colliding id.
+    pub family: u32,
+    /// Label of the source task (for reports/DOT).
+    pub label: String,
+    /// New ids of the leaf shard tasks (slices included).
+    pub leaves: Vec<TaskId>,
+    /// New id of the family's combine root — what consumers read.
+    pub combine: TaskId,
+    /// Number of compute shards.
+    pub n_shards: usize,
+}
+
+/// Rewrite outcome: the sharded program plus what was sharded.
+#[derive(Clone, Debug)]
+pub struct PartitionedProgram {
+    pub program: TaskProgram,
+    pub families: Vec<ShardFamily>,
+}
+
+impl PartitionedProgram {
+    /// Did the pass change anything? (A disabled config or a program with
+    /// no eligible task yields a verbatim copy.)
+    pub fn is_rewritten(&self) -> bool {
+        !self.families.is_empty()
+    }
+}
+
+/// How one task splits.
+enum ShardPlan {
+    /// `HostMatGen` → `K` stream-sliced `HostMatGenShard`s + `Concat` tree.
+    MatGen { n: usize, k: usize },
+    /// `HostMatMul` / declared artifact → `K` (`ShardRows` slice, shard
+    /// compute) pairs + `Concat` tree.
+    RowSplit { k: usize },
+    /// `Synthetic` → `K` split-duration spins + `TreeReduce` tree.
+    Synthetic { us: u64, k: usize },
+}
+
+/// RowSplit has no static row count to clamp against (matgen clamps to
+/// `n`, synthetic to its duration), so cap `K` where a shard's estimated
+/// output would fall below a quarter of the size floor — bounding the
+/// task blowup from absurd `--partitions` values on small operands.
+fn clamp_row_split(cfg: &PartitionConfig, bytes_out: u64) -> usize {
+    let per_shard_floor = (cfg.shard_min_bytes / 4).max(1);
+    cfg.partitions.min((bytes_out / per_shard_floor).max(1) as usize)
+}
+
+fn plan(spec: &TaskSpec, cfg: &PartitionConfig) -> Option<ShardPlan> {
+    if !cfg.enabled() || !spec.is_pure() || spec.n_outputs != 1 || spec.shard.is_some() {
+        return None;
+    }
+    let big_enough = spec.est.bytes_out >= cfg.shard_min_bytes;
+    match &spec.op {
+        OpKind::HostMatGen { n } => {
+            let k = cfg.partitions.min(*n);
+            (big_enough && k >= 2).then_some(ShardPlan::MatGen { n: *n, k })
+        }
+        OpKind::HostMatMul => {
+            let k = clamp_row_split(cfg, spec.est.bytes_out);
+            (big_enough && spec.args.len() == 2 && k >= 2).then_some(ShardPlan::RowSplit { k })
+        }
+        OpKind::Artifact { name } => {
+            let k = clamp_row_split(cfg, spec.est.bytes_out);
+            (big_enough
+                && spec.args.len() == 2
+                && k >= 2
+                && cfg.shardable_artifacts.contains(name))
+            .then_some(ShardPlan::RowSplit { k })
+        }
+        OpKind::Synthetic { compute_us } => {
+            let k = cfg.partitions.min(*compute_us as usize);
+            (*compute_us >= cfg.shard_min_us && k >= 2)
+                .then_some(ShardPlan::Synthetic { us: *compute_us, k })
+        }
+        _ => None,
+    }
+}
+
+/// Scale a cost estimate to a `num/den` fraction (cost model seeding for
+/// per-shard tasks — never exact, always proportional).
+fn scale(e: CostEst, num: u64, den: u64) -> CostEst {
+    CostEst {
+        flops: e.flops * num / den,
+        bytes_in: e.bytes_in * num / den,
+        bytes_out: e.bytes_out * num / den,
+    }
+}
+
+/// Apply the partition rewrite. With a disabled config (or nothing
+/// eligible) the result is semantically the input program and
+/// `families` is empty.
+pub fn partition_program(p: &TaskProgram, cfg: &PartitionConfig) -> Result<PartitionedProgram> {
+    let mut b = ProgramBuilder::new();
+    let mut families: Vec<ShardFamily> = Vec::new();
+    // old task id -> new task standing in for it (itself, or the family's
+    // combine root). Output indices are unchanged: sharded tasks are
+    // single-output and so are their combine roots.
+    let mut map: Vec<TaskId> = Vec::with_capacity(p.len());
+    // New family ids start past any preserved ones, so re-partitioning an
+    // already-sharded program (e.g. with a loosened config) can never
+    // merge a new family into a pass-1 cluster / stripe.
+    let family_base = p
+        .tasks()
+        .iter()
+        .filter_map(|t| t.shard.map(|s| s.family + 1))
+        .max()
+        .unwrap_or(0);
+    let remap = |a: &ArgRef, map: &[TaskId]| -> ArgRef {
+        match a {
+            ArgRef::Const(v) => ArgRef::Const(v.clone()),
+            ArgRef::Output { task, index } => ArgRef::Output {
+                task: map[task.index()],
+                index: *index,
+            },
+        }
+    };
+    for spec in p.tasks() {
+        let args: Vec<ArgRef> = spec.args.iter().map(|a| remap(a, &map)).collect();
+        let Some(shard_plan) = plan(spec, cfg) else {
+            let id = b.push(spec.op.clone(), args, spec.n_outputs, spec.est, spec.label.clone());
+            // keep existing annotations so re-partitioning an already
+            // sharded program is a true no-op copy (shard-aware placement
+            // and cost pricing still see the family structure)
+            if let Some(info) = spec.shard {
+                b.annotate_shard(id, info);
+            }
+            map.push(id);
+            continue;
+        };
+        let family = family_base + spec.id.0;
+        let mut leaves: Vec<TaskId> = Vec::new();
+        let mut refs: Vec<(ArgRef, u64)> = Vec::new();
+        let combine_kind;
+        let n_shards;
+        match shard_plan {
+            ShardPlan::MatGen { n, k } => {
+                n_shards = k;
+                combine_kind = CombineKind::Concat;
+                for i in 0..k {
+                    let row0 = i * n / k;
+                    let rows = (i + 1) * n / k - row0;
+                    // the generator has no O(1) jump-ahead: a shard must
+                    // draw-and-discard every element before row0, so its
+                    // compute grows with the END row while its output
+                    // bytes scale with the row COUNT (ROADMAP lists the
+                    // constant-time jump as a follow-on)
+                    let mut est = scale(spec.est, rows as u64, n as u64);
+                    est.flops = spec.est.flops * (row0 + rows) as u64 / n as u64;
+                    let id = b.push(
+                        OpKind::HostMatGenShard { n, row0, rows },
+                        args.clone(),
+                        1,
+                        est,
+                        format!("{}[{i}/{k}]", spec.label),
+                    );
+                    b.annotate_shard(
+                        id,
+                        ShardInfo { family, index: i as u32, of: k as u32, role: ShardRole::Leaf },
+                    );
+                    leaves.push(id);
+                    refs.push((ArgRef::out(id, 0), spec.est.bytes_out * rows as u64 / n as u64));
+                }
+            }
+            ShardPlan::RowSplit { k } => {
+                n_shards = k;
+                combine_kind = CombineKind::Concat;
+                // first operand row-splits; the second ships whole to
+                // every shard (an A-stationary 1-D decomposition)
+                let a_bytes = spec.est.bytes_in / 2;
+                let b_bytes = spec.est.bytes_in - a_bytes;
+                for i in 0..k {
+                    let slice = b.push(
+                        OpKind::Combine(CombineKind::ShardRows { index: i, of: k }),
+                        vec![args[0].clone()],
+                        1,
+                        CostEst {
+                            flops: 0,
+                            bytes_in: a_bytes,
+                            bytes_out: a_bytes / k as u64,
+                        },
+                        format!("{}.slice{i}", spec.label),
+                    );
+                    // slices are glue, not compute: they read the WHOLE
+                    // first operand, so they place like combines (chase
+                    // the producer) and only their 1/K outputs travel to
+                    // the striped compute shards
+                    b.annotate_shard(
+                        slice,
+                        ShardInfo {
+                            family,
+                            index: i as u32,
+                            of: k as u32,
+                            role: ShardRole::Combine,
+                        },
+                    );
+                    let mut est = scale(spec.est, 1, k as u64);
+                    est.bytes_in = a_bytes / k as u64 + b_bytes;
+                    let id = b.push(
+                        spec.op.clone(),
+                        vec![ArgRef::out(slice, 0), args[1].clone()],
+                        1,
+                        est,
+                        format!("{}[{i}/{k}]", spec.label),
+                    );
+                    b.annotate_shard(
+                        id,
+                        ShardInfo { family, index: i as u32, of: k as u32, role: ShardRole::Leaf },
+                    );
+                    leaves.push(slice);
+                    leaves.push(id);
+                    refs.push((ArgRef::out(id, 0), spec.est.bytes_out / k as u64));
+                }
+            }
+            ShardPlan::Synthetic { us, k } => {
+                n_shards = k;
+                combine_kind = CombineKind::TreeReduce;
+                let base = us / k as u64;
+                let extra = us % k as u64;
+                for i in 0..k {
+                    let shard_us = base + u64::from((i as u64) < extra);
+                    // disambiguating tag: sibling spins are otherwise
+                    // content-identical (same op, same args), and the
+                    // result cache / in-flight dedup would collapse K
+                    // parallel shards into one execution. Executors
+                    // ignore Synthetic args, so semantics are unchanged.
+                    let mut shard_args = args.clone();
+                    shard_args.push(ArgRef::Const(Value::scalar_i32(i as i32)));
+                    let id = b.push(
+                        OpKind::Synthetic { compute_us: shard_us },
+                        shard_args,
+                        1,
+                        scale(spec.est, shard_us.max(1), us.max(1)),
+                        format!("{}[{i}/{k}]", spec.label),
+                    );
+                    b.annotate_shard(
+                        id,
+                        ShardInfo { family, index: i as u32, of: k as u32, role: ShardRole::Leaf },
+                    );
+                    leaves.push(id);
+                    refs.push((ArgRef::out(id, 0), 1));
+                }
+            }
+        }
+        let combine = build_combine_tree(
+            &mut b,
+            &combine_kind,
+            refs,
+            cfg.combine_arity,
+            &spec.label,
+            family,
+            n_shards as u32,
+        );
+        map.push(combine);
+        families.push(ShardFamily {
+            source: spec.id,
+            family,
+            label: spec.label.clone(),
+            leaves,
+            combine,
+            n_shards,
+        });
+    }
+    let outputs: Vec<ArgRef> = p.outputs().iter().map(|o| remap(o, &map)).collect();
+    for o in outputs {
+        b.mark_output(o);
+    }
+    Ok(PartitionedProgram { program: b.build()?, families })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::run_single;
+    use crate::tasks::HostExecutor;
+    use crate::workload::matrix_program;
+
+    #[test]
+    fn disabled_config_is_identity() {
+        let p = matrix_program(2, 8, false, None);
+        let pp = partition_program(&p, &PartitionConfig::default()).unwrap();
+        assert!(!pp.is_rewritten());
+        assert_eq!(pp.program.len(), p.len());
+        let a = run_single(&p, &HostExecutor).unwrap();
+        let b = run_single(&pp.program, &HostExecutor).unwrap();
+        assert_eq!(a.outputs, b.outputs);
+    }
+
+    #[test]
+    fn min_bytes_floor_keeps_small_tasks_whole() {
+        let p = matrix_program(2, 8, false, None); // 8×8 = 256-byte tensors
+        let mut cfg = PartitionConfig::aggressive(4);
+        cfg.shard_min_bytes = 1 << 20;
+        let pp = partition_program(&p, &cfg).unwrap();
+        assert!(!pp.is_rewritten());
+        assert_eq!(pp.program.len(), p.len());
+    }
+
+    #[test]
+    fn sharded_matrix_program_is_bit_identical() {
+        let p = matrix_program(2, 13, false, None); // odd size: ragged shards
+        for k in [2usize, 3, 4, 8] {
+            let pp = partition_program(&p, &PartitionConfig::aggressive(k)).unwrap();
+            assert!(pp.is_rewritten());
+            assert!(pp.program.len() > p.len());
+            let a = run_single(&p, &HostExecutor).unwrap();
+            let b = run_single(&pp.program, &HostExecutor).unwrap();
+            assert_eq!(a.outputs, b.outputs, "k={k}");
+        }
+    }
+
+    #[test]
+    fn families_cover_gens_and_muls_not_sums() {
+        let p = matrix_program(2, 16, false, None);
+        let pp = partition_program(&p, &PartitionConfig::aggressive(4)).unwrap();
+        // per round: 2 matgens + 1 matmul shard; matsum and the AddScalars
+        // total stay whole
+        assert_eq!(pp.families.len(), 6);
+        for f in &pp.families {
+            assert_eq!(f.n_shards, 4);
+            assert!(!f.leaves.is_empty());
+            let combine = pp.program.task(f.combine);
+            assert!(matches!(combine.op, OpKind::Combine(ref c)
+                if *c == CombineKind::Concat || *c == CombineKind::TreeReduce));
+            // every leaf is annotated with the family id; compute shards
+            // are Leaf (stripe), slices are Combine (chase the operand)
+            for l in &f.leaves {
+                let t = pp.program.task(*l);
+                let s = t.shard.expect("leaf annotated");
+                assert_eq!(s.family, f.family);
+                let is_slice =
+                    matches!(t.op, OpKind::Combine(CombineKind::ShardRows { .. }));
+                assert_eq!(
+                    s.role,
+                    if is_slice { ShardRole::Combine } else { ShardRole::Leaf }
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_split_k_clamps_to_the_size_floor() {
+        let mut b = ProgramBuilder::new();
+        let g1 = b.push(
+            OpKind::HostMatGen { n: 12 },
+            vec![ArgRef::const_i32(1)],
+            1,
+            CostEst { flops: 0, bytes_in: 4, bytes_out: 576 },
+            "a",
+        );
+        let g2 = b.push(
+            OpKind::HostMatGen { n: 12 },
+            vec![ArgRef::const_i32(2)],
+            1,
+            CostEst { flops: 0, bytes_in: 4, bytes_out: 576 },
+            "b",
+        );
+        let mm = b.push(
+            OpKind::HostMatMul,
+            vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+            1,
+            CostEst { flops: 3456, bytes_in: 1152, bytes_out: 576 },
+            "c",
+        );
+        b.mark_output(ArgRef::out(mm, 0));
+        let p = b.build().unwrap();
+        // floor 256 ⇒ per-shard floor 64 ⇒ 576/64 = 9 shards max, even at
+        // an absurd --partitions value; matgen still clamps to n
+        let cfg = PartitionConfig {
+            partitions: 100_000,
+            shard_min_bytes: 256,
+            shard_min_us: 1,
+            ..PartitionConfig::default()
+        };
+        let pp = partition_program(&p, &cfg).unwrap();
+        let mm_family = pp
+            .families
+            .iter()
+            .find(|f| f.label == "c")
+            .expect("matmul sharded");
+        assert_eq!(mm_family.n_shards, 9);
+        let gen_family = pp.families.iter().find(|f| f.label == "a").unwrap();
+        assert_eq!(gen_family.n_shards, 12);
+        // and the clamped plan still evaluates bit-identically
+        let a = run_single(&p, &HostExecutor).unwrap();
+        let b2 = run_single(&pp.program, &HostExecutor).unwrap();
+        assert_eq!(a.outputs, b2.outputs);
+    }
+
+    #[test]
+    fn repartitioning_a_sharded_program_is_a_noop_copy() {
+        let p = matrix_program(2, 12, false, None);
+        let cfg = PartitionConfig::aggressive(3);
+        let once = partition_program(&p, &cfg).unwrap();
+        let twice = partition_program(&once.program, &cfg).unwrap();
+        assert!(!twice.is_rewritten(), "second pass shards nothing new");
+        assert_eq!(twice.program.len(), once.program.len());
+        // annotations survive the copy, so placement/cost stay shard-aware
+        for (a, b) in once.program.tasks().iter().zip(twice.program.tasks()) {
+            assert_eq!(a.shard, b.shard);
+        }
+    }
+
+    #[test]
+    fn synthetic_durations_split_exactly() {
+        let mut b = ProgramBuilder::new();
+        let t = b.push(
+            OpKind::Synthetic { compute_us: 10 },
+            vec![],
+            1,
+            CostEst { flops: 10, bytes_in: 0, bytes_out: 0 },
+            "spin",
+        );
+        b.mark_output(ArgRef::out(t, 0));
+        let p = b.build().unwrap();
+        let pp = partition_program(&p, &PartitionConfig::aggressive(3)).unwrap();
+        let total: u64 = pp
+            .program
+            .tasks()
+            .iter()
+            .filter_map(|t| match t.op {
+                OpKind::Synthetic { compute_us } => Some(compute_us),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(total, 10, "shard durations conserve total spin time");
+        // sibling spins must not be content-identical, or the result
+        // cache / in-flight dedup would collapse K parallel shards into
+        // one execution (the inert shard-index arg disambiguates them)
+        let spins: Vec<&crate::ir::task::TaskSpec> = pp
+            .program
+            .tasks()
+            .iter()
+            .filter(|t| matches!(t.op, OpKind::Synthetic { .. }))
+            .collect();
+        for (i, a) in spins.iter().enumerate() {
+            for b in &spins[i + 1..] {
+                assert!(
+                    a.op != b.op || a.args != b.args,
+                    "{} and {} are content-identical",
+                    a.id,
+                    b.id
+                );
+            }
+        }
+        let r = run_single(&pp.program, &crate::tasks::SyntheticExecutor).unwrap();
+        assert!(matches!(r.outputs[0], crate::ir::task::Value::Unit));
+    }
+
+    #[test]
+    fn impure_and_multi_output_tasks_never_shard() {
+        let mut b = ProgramBuilder::new();
+        let io = b.push(
+            OpKind::IoAction { label: "log".into(), compute_us: 9_999 },
+            vec![ArgRef::Const(crate::ir::task::Value::Token)],
+            2,
+            CostEst { flops: 0, bytes_in: 1, bytes_out: 1 << 30 },
+            "io",
+        );
+        b.mark_output(ArgRef::out(io, 1));
+        let p = b.build().unwrap();
+        let pp = partition_program(&p, &PartitionConfig::aggressive(4)).unwrap();
+        assert!(!pp.is_rewritten());
+    }
+
+    #[test]
+    fn declared_artifacts_shard_and_match_host_fallback() {
+        let mut b = ProgramBuilder::new();
+        let g1 = b.push(
+            OpKind::HostMatGen { n: 12 },
+            vec![ArgRef::const_i32(1)],
+            1,
+            CostEst { flops: 0, bytes_in: 4, bytes_out: 576 },
+            "a",
+        );
+        let g2 = b.push(
+            OpKind::HostMatGen { n: 12 },
+            vec![ArgRef::const_i32(2)],
+            1,
+            CostEst { flops: 0, bytes_in: 4, bytes_out: 576 },
+            "b",
+        );
+        let mm = b.push(
+            OpKind::Artifact { name: "matmul_12".into() },
+            vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+            1,
+            CostEst { flops: 3456, bytes_in: 1152, bytes_out: 576 },
+            "c",
+        );
+        b.mark_output(ArgRef::out(mm, 0));
+        let p = b.build().unwrap();
+
+        // not declared: the artifact stays whole (only the gens shard)
+        let mut cfg = PartitionConfig::aggressive(3);
+        let pp = partition_program(&p, &cfg).unwrap();
+        assert!(pp
+            .program
+            .tasks()
+            .iter()
+            .any(|t| matches!(&t.op, OpKind::Artifact { name } if name == "matmul_12" )
+                && t.shard.is_none()));
+
+        // declared: it row-splits, and the host fallback agrees bit-for-bit
+        cfg.allow_artifact("matmul_12");
+        let pp = partition_program(&p, &cfg).unwrap();
+        assert_eq!(pp.families.len(), 3);
+        let a = run_single(&p, &HostExecutor).unwrap();
+        let b2 = run_single(&pp.program, &HostExecutor).unwrap();
+        assert_eq!(a.outputs, b2.outputs);
+
+        // two-pass rewrite with a loosened config: sharding the artifact
+        // of an already gens-sharded program must mint a family id past
+        // the preserved ones (no merged DOT clusters / stripe offsets)
+        let pass1 = partition_program(&p, &PartitionConfig::aggressive(3)).unwrap();
+        let pass2 = partition_program(&pass1.program, &cfg).unwrap();
+        assert_eq!(pass2.families.len(), 1, "only the artifact shards in pass 2");
+        let preserved: std::collections::HashSet<u32> = pass1
+            .program
+            .tasks()
+            .iter()
+            .filter_map(|t| t.shard.map(|s| s.family))
+            .collect();
+        assert!(
+            !preserved.contains(&pass2.families[0].family),
+            "pass-2 family id collides with a preserved pass-1 family"
+        );
+        let c = run_single(&pass2.program, &HostExecutor).unwrap();
+        assert_eq!(a.outputs, c.outputs);
+    }
+}

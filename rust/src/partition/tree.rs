@@ -1,0 +1,126 @@
+//! Logarithmic tree-combine builder.
+//!
+//! Shard results are folded through a tree of combine nodes of fan-in
+//! `arity` (depth `⌈log_arity K⌉`), so reassembly latency grows with
+//! `log K` instead of `K` and interior nodes can run on different workers.
+//!
+//! Bit-exactness caveat, per glue kind: `Concat` is associative and
+//! order-preserving, so a concat tree equals the flat concat bit-for-bit
+//! — that is what the partition pass's tensor families rely on.
+//! `TreeReduce` over all-`Unit` shards (the synthetic families) is
+//! trivially exact; its *scalar-sum* path rounds each node's f64
+//! accumulator to f32, so a scalar tree may differ from a flat sum by
+//! ulps — don't build scalar `TreeReduce` trees where the module-level
+//! bit-identity guarantee must hold.
+
+use crate::ir::task::{ArgRef, CombineKind, CostEst, ShardInfo, ShardRole, TaskId};
+use crate::ir::ProgramBuilder;
+
+/// Fold `leaves` (each an arg ref plus its estimated payload bytes) into a
+/// combine tree; returns the root node's id. `leaves` must be non-empty;
+/// a single leaf still gets one combine node so consumers of the original
+/// task always read a family root with the whole value.
+pub fn build_combine_tree(
+    b: &mut ProgramBuilder,
+    kind: &CombineKind,
+    leaves: Vec<(ArgRef, u64)>,
+    arity: usize,
+    label: &str,
+    family: u32,
+    of: u32,
+) -> TaskId {
+    assert!(!leaves.is_empty(), "combine tree needs at least one leaf");
+    let arity = arity.max(2);
+    let mut level = leaves;
+    let mut node_idx = 0u32;
+    loop {
+        let n_groups = level.len().div_ceil(arity);
+        let mut next: Vec<(ArgRef, u64)> = Vec::with_capacity(n_groups);
+        let mut last_node = None;
+        for group in level.chunks(arity) {
+            let in_bytes: u64 = group.iter().map(|(_, b)| b).sum();
+            // Concat materializes everything it reads; TreeReduce emits a
+            // unit/scalar no matter how much shard payload flows in
+            let out_bytes = match kind {
+                CombineKind::Concat => in_bytes,
+                _ => 8,
+            };
+            let id = b.push(
+                crate::ir::task::OpKind::Combine(kind.clone()),
+                group.iter().map(|(a, _)| a.clone()).collect(),
+                1,
+                CostEst { flops: 0, bytes_in: in_bytes, bytes_out: out_bytes },
+                format!("{label}.cmb{node_idx}"),
+            );
+            b.annotate_shard(
+                id,
+                ShardInfo { family, index: node_idx, of, role: ShardRole::Combine },
+            );
+            node_idx += 1;
+            last_node = Some(id);
+            next.push((ArgRef::out(id, 0), out_bytes));
+        }
+        if n_groups == 1 {
+            return last_node.expect("non-empty level produced a node");
+        }
+        level = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::OpKind;
+
+    fn leaves(b: &mut ProgramBuilder, k: usize) -> Vec<(ArgRef, u64)> {
+        (0..k)
+            .map(|i| {
+                let id = b.push(
+                    OpKind::Synthetic { compute_us: 1 },
+                    vec![],
+                    1,
+                    CostEst::ZERO,
+                    format!("leaf{i}"),
+                );
+                (ArgRef::out(id, 0), 8)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tree_depth_is_logarithmic() {
+        for (k, arity, want_nodes) in [(8usize, 2usize, 7usize), (8, 4, 3), (16, 4, 5), (3, 4, 1)] {
+            let mut b = ProgramBuilder::new();
+            let ls = leaves(&mut b, k);
+            let root = build_combine_tree(&mut b, &CombineKind::TreeReduce, ls, arity, "t", 0, k as u32);
+            let p = {
+                let mut bb = b;
+                bb.mark_output(ArgRef::out(root, 0));
+                bb.build().unwrap()
+            };
+            let combines = p
+                .tasks()
+                .iter()
+                .filter(|t| matches!(t.op, OpKind::Combine(_)))
+                .count();
+            assert_eq!(combines, want_nodes, "k={k} arity={arity}");
+            // the root is the last task and every combine is annotated
+            assert_eq!(root, p.tasks().last().unwrap().id);
+            assert!(p
+                .tasks()
+                .iter()
+                .filter(|t| matches!(t.op, OpKind::Combine(_)))
+                .all(|t| t.shard.is_some()));
+        }
+    }
+
+    #[test]
+    fn single_leaf_still_gets_a_root() {
+        let mut b = ProgramBuilder::new();
+        let ls = leaves(&mut b, 1);
+        let root = build_combine_tree(&mut b, &CombineKind::TreeReduce, ls, 4, "t", 0, 1);
+        let p = b.build().unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(root, TaskId(1));
+    }
+}

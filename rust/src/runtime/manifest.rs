@@ -58,6 +58,10 @@ pub struct ArtifactEntry {
     pub bytes_out: u64,
     pub kind: String,
     pub desc: String,
+    /// Declared row-shardable: the executable accepts an arbitrary row
+    /// count in its first operand, so the partition pass may split it.
+    /// Absent/false for fixed-shape executables.
+    pub shardable: bool,
 }
 
 /// Parsed manifest with name index.
@@ -128,6 +132,10 @@ impl Manifest {
                     .and_then(Json::as_str)
                     .unwrap_or("")
                     .to_string(),
+                shardable: a
+                    .get("shardable")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
                 name: name.clone(),
             };
             by_name.insert(name, entries.len());

@@ -104,15 +104,26 @@ impl GreedyState {
     /// Returns `None` when nothing is ready.
     pub fn assign_next(&mut self, program: &TaskProgram) -> Option<(TaskId, WorkerId)> {
         let (_, task) = self.ready.pop()?;
+        let spec = program.task(task);
         // input holders for locality
-        let holders: Vec<WorkerId> = program
-            .task(task)
+        let holders: Vec<WorkerId> = spec
             .deps()
             .iter()
             .filter_map(|d| self.locations.get(d).copied())
             .collect();
-        let w = place(self.policy, task, &self.loads, &holders, &mut self.rr_counter);
-        self.loads[w.index()] += 1;
+        let w = place(
+            self.policy,
+            task,
+            &self.loads,
+            &holders,
+            spec.shard.as_ref(),
+            &mut self.rr_counter,
+        );
+        // never touch a dead worker's MAX marker (placement can still
+        // name one when every worker is dead — the leader bails first)
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] += 1;
+        }
         Some((task, w))
     }
 
@@ -120,7 +131,9 @@ impl GreedyState {
     /// idle worker asks for work — pull model).
     pub fn assign_to(&mut self, _program: &TaskProgram, w: WorkerId) -> Option<TaskId> {
         let (_, task) = self.ready.pop()?;
-        self.loads[w.index()] += 1;
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] += 1;
+        }
         Some(task)
     }
 
@@ -208,7 +221,7 @@ impl GreedyState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::task::{ArgRef, CostEst, OpKind};
+    use crate::ir::task::{ArgRef, CombineKind, CostEst, OpKind, ShardInfo, ShardRole};
     use crate::ir::ProgramBuilder;
 
     fn prog_fan(costs: &[u64]) -> TaskProgram {
@@ -324,6 +337,52 @@ mod tests {
         assert_eq!(t, c);
         s.complete_local(&p, c);
         assert!(s.is_done());
+    }
+
+    #[test]
+    fn shard_affinity_spreads_leaves_and_colocates_combine() {
+        let mut b = ProgramBuilder::new();
+        let mut leaves = Vec::new();
+        for i in 0..4u32 {
+            let id = b.push(
+                OpKind::Synthetic { compute_us: 1 },
+                vec![],
+                1,
+                CostEst { flops: 5, bytes_in: 0, bytes_out: 8 },
+                format!("s{i}"),
+            );
+            b.annotate_shard(
+                id,
+                ShardInfo { family: 0, index: i, of: 4, role: ShardRole::Leaf },
+            );
+            leaves.push(id);
+        }
+        let combine = b.push(
+            OpKind::Combine(CombineKind::TreeReduce),
+            leaves.iter().map(|l| ArgRef::out(*l, 0)).collect(),
+            1,
+            CostEst::ZERO,
+            "cmb",
+        );
+        b.annotate_shard(
+            combine,
+            ShardInfo { family: 0, index: 0, of: 4, role: ShardRole::Combine },
+        );
+        let p = b.build().unwrap();
+        let mut s = GreedyState::new(&p, 4, PlacementPolicy::ShardAffinity);
+        let mut assigned = Vec::new();
+        while let Some(a) = s.assign_next(&p) {
+            assigned.push(a);
+        }
+        let workers: std::collections::HashSet<WorkerId> =
+            assigned.iter().map(|(_, w)| *w).collect();
+        assert_eq!(workers.len(), 4, "siblings spread across all workers");
+        for (t, w) in assigned {
+            s.on_done(&p, t, w);
+        }
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, combine);
+        assert!(workers.contains(&w), "combine co-locates with a producer");
     }
 
     #[test]

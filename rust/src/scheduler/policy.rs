@@ -1,6 +1,6 @@
 //! Placement and stealing policies (Ablations A and B).
 
-use crate::ir::task::TaskId;
+use crate::ir::task::{ShardInfo, ShardRole, TaskId};
 use crate::util::rng::Rng;
 
 use super::WorkerId;
@@ -15,6 +15,11 @@ pub enum PlacementPolicy {
     /// Prefer workers already holding the task's inputs (falls back to
     /// least-loaded among ties) — only meaningful with worker-side caching.
     LocalityAware,
+    /// Shard-aware locality: sibling shards of one partition family spread
+    /// deterministically across live workers, while combines and other
+    /// consumers co-locate with their producers (the `LocalityAware`
+    /// rule). The policy the partition rewrite is designed for.
+    ShardAffinity,
 }
 
 impl PlacementPolicy {
@@ -23,6 +28,7 @@ impl PlacementPolicy {
             "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
             "least-loaded" | "ll" => Some(PlacementPolicy::LeastLoaded),
             "locality" | "loc" => Some(PlacementPolicy::LocalityAware),
+            "shard" | "affinity" => Some(PlacementPolicy::ShardAffinity),
             _ => None,
         }
     }
@@ -32,6 +38,7 @@ impl PlacementPolicy {
             PlacementPolicy::RoundRobin => "round-robin",
             PlacementPolicy::LeastLoaded => "least-loaded",
             PlacementPolicy::LocalityAware => "locality",
+            PlacementPolicy::ShardAffinity => "shard",
         }
     }
 }
@@ -97,13 +104,15 @@ impl StealPolicy {
 
 /// Pick the placement target for a ready task.
 ///
-/// `loads` = queued+running per worker; `holders` = workers already caching
-/// this task's inputs (empty slice when unknown).
+/// `loads` = queued+running per worker (`usize::MAX` marks a dead worker);
+/// `holders` = workers already caching this task's inputs (empty slice
+/// when unknown); `shard` = the task's partition-family annotation, if any.
 pub fn place(
     policy: PlacementPolicy,
     task: TaskId,
     loads: &[usize],
     holders: &[WorkerId],
+    shard: Option<&ShardInfo>,
     rr_counter: &mut usize,
 ) -> WorkerId {
     debug_assert!(!loads.is_empty());
@@ -114,20 +123,41 @@ pub fn place(
             w
         }
         PlacementPolicy::LeastLoaded => least_loaded(loads),
-        PlacementPolicy::LocalityAware => {
-            if holders.is_empty() {
-                least_loaded(loads)
-            } else {
-                // among holders, the least loaded
-                holders
+        PlacementPolicy::LocalityAware => prefer_holders(loads, holders),
+        PlacementPolicy::ShardAffinity => match shard {
+            // sibling leaves stripe across live workers: shard i of family
+            // f always lands on the same worker, distinct i's spread out
+            Some(s) if s.role == ShardRole::Leaf => {
+                let live: Vec<usize> = loads
                     .iter()
-                    .copied()
-                    .min_by_key(|w| loads[w.index()])
-                    .unwrap_or_else(|| least_loaded(loads))
+                    .enumerate()
+                    .filter(|(_, l)| **l != usize::MAX)
+                    .map(|(w, _)| w)
+                    .collect();
+                if live.is_empty() {
+                    least_loaded(loads)
+                } else {
+                    WorkerId(live[(s.family as usize + s.index as usize) % live.len()] as u32)
+                }
             }
-        }
+            // combines (and everything else) chase their inputs
+            _ => prefer_holders(loads, holders),
+        },
     }
     .tap_trace(task)
+}
+
+/// Least-loaded among the *live* input holders, falling back to the
+/// global least-loaded when the inputs' whereabouts are unknown — or when
+/// every holder has died (a dead worker keeps its `locations` entries, so
+/// holders must be re-checked against the `usize::MAX` dead marker).
+fn prefer_holders(loads: &[usize], holders: &[WorkerId]) -> WorkerId {
+    holders
+        .iter()
+        .copied()
+        .filter(|w| loads[w.index()] != usize::MAX)
+        .min_by_key(|w| loads[w.index()])
+        .unwrap_or_else(|| least_loaded(loads))
 }
 
 fn least_loaded(loads: &[usize]) -> WorkerId {
@@ -159,7 +189,7 @@ mod tests {
         let mut ctr = 0;
         let loads = vec![0usize; 3];
         let picks: Vec<u32> = (0..6)
-            .map(|i| place(PlacementPolicy::RoundRobin, TaskId(i), &loads, &[], &mut ctr).0)
+            .map(|i| place(PlacementPolicy::RoundRobin, TaskId(i), &loads, &[], None, &mut ctr).0)
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
@@ -172,6 +202,7 @@ mod tests {
             TaskId(0),
             &[3, 1, 2],
             &[],
+            None,
             &mut ctr,
         );
         assert_eq!(w, WorkerId(1));
@@ -186,6 +217,7 @@ mod tests {
             TaskId(0),
             &[5, 0, 1],
             &holders,
+            None,
             &mut ctr,
         );
         assert_eq!(w, WorkerId(2)); // least-loaded among holders, not global min
@@ -196,6 +228,106 @@ mod tests {
             TaskId(0),
             &[5, 0, 1],
             &[],
+            None,
+            &mut ctr,
+        );
+        assert_eq!(w, WorkerId(1));
+    }
+
+    #[test]
+    fn shard_affinity_spreads_siblings_and_follows_inputs() {
+        let mut ctr = 0;
+        let loads = [0usize, 0, 0, 0];
+        let leaf = |index: u32| ShardInfo {
+            family: 2,
+            index,
+            of: 4,
+            role: ShardRole::Leaf,
+        };
+        // siblings of one family land on four distinct workers...
+        let picks: std::collections::HashSet<WorkerId> = (0..4)
+            .map(|i| {
+                place(
+                    PlacementPolicy::ShardAffinity,
+                    TaskId(10 + i),
+                    &loads,
+                    &[],
+                    Some(&leaf(i)),
+                    &mut ctr,
+                )
+            })
+            .collect();
+        assert_eq!(picks.len(), 4);
+        // ...and the mapping is deterministic
+        let again = place(
+            PlacementPolicy::ShardAffinity,
+            TaskId(10),
+            &loads,
+            &[],
+            Some(&leaf(0)),
+            &mut ctr,
+        );
+        assert!(picks.contains(&again));
+
+        // a dead worker (MAX load) is skipped by the stripe
+        let loads_dead = [0usize, usize::MAX, 0, 0];
+        for i in 0..8 {
+            let w = place(
+                PlacementPolicy::ShardAffinity,
+                TaskId(20 + i),
+                &loads_dead,
+                &[],
+                Some(&leaf(i)),
+                &mut ctr,
+            );
+            assert_ne!(w, WorkerId(1), "shard {i} placed on the dead worker");
+        }
+
+        // a holder that has since died (MAX load) is never chosen — the
+        // placement falls back to the live least-loaded worker
+        let w = place(
+            PlacementPolicy::ShardAffinity,
+            TaskId(29),
+            &[usize::MAX, 3, 1],
+            &[WorkerId(0)],
+            None,
+            &mut ctr,
+        );
+        assert_eq!(w, WorkerId(2));
+        let w = place(
+            PlacementPolicy::LocalityAware,
+            TaskId(29),
+            &[usize::MAX, 3, 1],
+            &[WorkerId(0)],
+            None,
+            &mut ctr,
+        );
+        assert_eq!(w, WorkerId(2));
+
+        // combine nodes co-locate with their producers
+        let combine = ShardInfo {
+            family: 2,
+            index: 0,
+            of: 4,
+            role: ShardRole::Combine,
+        };
+        let w = place(
+            PlacementPolicy::ShardAffinity,
+            TaskId(30),
+            &[5, 0, 1, 9],
+            &[WorkerId(3), WorkerId(2)],
+            Some(&combine),
+            &mut ctr,
+        );
+        assert_eq!(w, WorkerId(2)); // least-loaded holder
+
+        // unannotated tasks behave like locality-aware
+        let w = place(
+            PlacementPolicy::ShardAffinity,
+            TaskId(31),
+            &[5, 0, 1],
+            &[],
+            None,
             &mut ctr,
         );
         assert_eq!(w, WorkerId(1));
@@ -233,6 +365,7 @@ mod tests {
             PlacementPolicy::RoundRobin,
             PlacementPolicy::LeastLoaded,
             PlacementPolicy::LocalityAware,
+            PlacementPolicy::ShardAffinity,
         ] {
             assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
         }

@@ -38,6 +38,13 @@ pub struct ScheduleTrace {
     pub cache_hits: u64,
     /// Result-cache lookups that missed during this run.
     pub cache_misses: u64,
+    /// Argument bytes the leader shipped inline to workers (cluster engine
+    /// only; the leader's value-location table decides what must travel).
+    pub arg_bytes_shipped: u64,
+    /// Argument bytes saved by `Cached` references — the value already
+    /// lived on the target worker, so locality placement turned a ship
+    /// into a no-op.
+    pub arg_bytes_saved: u64,
 }
 
 /// Outputs + trace of one engine run.

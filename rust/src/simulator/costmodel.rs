@@ -27,6 +27,10 @@ pub struct CostModel {
     pub flops_per_ns: f64,
     /// Network bandwidth (bytes per ns). 1 GB/s = 1.074 bytes/ns.
     pub bytes_per_ns: f64,
+    /// Host memory bandwidth for combine glue (bytes per ns). Prices the
+    /// partition pass's slice/concat nodes per byte moved, so sharded vs
+    /// unsharded tradeoffs stay predictable instead of glue being free.
+    pub membw_bytes_per_ns: f64,
     /// Per-message latency (ns).
     pub latency_ns: u64,
     /// Leader dispatch overhead per assignment (ns).
@@ -48,6 +52,8 @@ impl Default for CostModel {
             flops_per_ns: 2.0,
             // ~2 GB/s loopback-ish
             bytes_per_ns: 2.0,
+            // ~10 GB/s single-thread memcpy
+            membw_bytes_per_ns: 10.0,
             latency_ns: 50_000,  // 50 µs per message
             dispatch_ns: 5_000,  // 5 µs leader overhead
             cache_hit_rate: 0.0, // cold cache unless a sweep models warmth
@@ -71,14 +77,27 @@ impl CostModel {
     }
 
     /// Simulated compute time of one task (ns).
+    ///
+    /// Partition-pass shard tasks never take the measured path: a
+    /// calibrated per-op time describes the *whole* op, while a shard
+    /// (which reuses the op verbatim) runs a 1/K row slice of it — so
+    /// shards price analytically from their scaled estimates instead
+    /// (`flops_per_ns` is itself calibrated, keeping the units honest).
     pub fn task_cost_ns(&self, spec: &TaskSpec) -> u64 {
-        if let Some(ns) = self.measured.get(&Self::key(&spec.op)) {
-            return (*ns).max(1);
+        if spec.shard.is_none() {
+            if let Some(ns) = self.measured.get(&Self::key(&spec.op)) {
+                return (*ns).max(1);
+            }
         }
         match &spec.op {
             OpKind::Synthetic { compute_us } => (*compute_us * 1_000).max(1),
             OpKind::IoAction { compute_us, .. } => (*compute_us * 1_000).max(1),
-            OpKind::Combine(_) => 1_000, // 1 µs of leader glue
+            // 1 µs of dispatch glue + per-byte memcpy of the inputs
+            // (slice/concat shards carry real byte estimates; classic
+            // zero-estimate combines price at the old flat 1 µs)
+            OpKind::Combine(_) => {
+                1_000 + (spec.est.bytes_in as f64 / self.membw_bytes_per_ns) as u64
+            }
             _ => ((spec.est.flops as f64 / self.flops_per_ns) as u64).max(1),
         }
     }
@@ -101,6 +120,7 @@ impl CostModel {
             ("version", Json::num(1.0)),
             ("flops_per_ns", Json::num(self.flops_per_ns)),
             ("bytes_per_ns", Json::num(self.bytes_per_ns)),
+            ("membw_bytes_per_ns", Json::num(self.membw_bytes_per_ns)),
             ("latency_ns", Json::num(self.latency_ns as f64)),
             ("dispatch_ns", Json::num(self.dispatch_ns as f64)),
             ("cache_hit_rate", Json::num(self.cache_hit_rate)),
@@ -121,6 +141,10 @@ impl CostModel {
                 .and_then(Json::as_f64)
                 .unwrap_or(2.0),
             bytes_per_ns: j.get("bytes_per_ns").and_then(Json::as_f64).unwrap_or(2.0),
+            membw_bytes_per_ns: j
+                .get("membw_bytes_per_ns")
+                .and_then(Json::as_f64)
+                .unwrap_or(10.0),
             latency_ns: j.get("latency_ns").and_then(Json::as_u64).unwrap_or(50_000),
             dispatch_ns: j.get("dispatch_ns").and_then(Json::as_u64).unwrap_or(5_000),
             cache_hit_rate: j
@@ -171,6 +195,7 @@ mod tests {
             n_outputs: 1,
             est: CostEst { flops, bytes_in: 0, bytes_out: 0 },
             label: "t".into(),
+            shard: None,
         }
     }
 
@@ -182,6 +207,21 @@ mod tests {
         cm.set_measured("matmul_256", 123_456);
         assert_eq!(cm.task_cost_ns(&s), 123_456);
         assert_ne!(analytic, 123_456);
+    }
+
+    #[test]
+    fn shard_tasks_ignore_whole_op_measurements() {
+        use crate::ir::task::{ShardInfo, ShardRole};
+        let mut cm = CostModel::default();
+        cm.set_measured("matmul_256", 100_000_000);
+        let mut s = spec(
+            OpKind::Artifact { name: "matmul_256".into() },
+            2 * 256u64.pow(3) / 4, // a 1/4 row shard's scaled estimate
+        );
+        s.shard = Some(ShardInfo { family: 0, index: 1, of: 4, role: ShardRole::Leaf });
+        let cost = cm.task_cost_ns(&s);
+        assert_ne!(cost, 100_000_000, "shard must not be priced as the whole op");
+        assert_eq!(cost, ((s.est.flops as f64 / cm.flops_per_ns) as u64).max(1));
     }
 
     #[test]
@@ -206,13 +246,25 @@ mod tests {
         cm.set_measured("matmul_256", 42_000);
         cm.set_measured("matgen_64", 9_000);
         cm.flops_per_ns = 3.5;
+        cm.membw_bytes_per_ns = 12.5;
         cm.cache_hit_rate = 0.25;
         cm.cache_serve_ns = 3_000;
         let j = cm.to_json();
         let back = CostModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.measured("matmul_256"), Some(42_000));
         assert_eq!(back.flops_per_ns, 3.5);
+        assert_eq!(back.membw_bytes_per_ns, 12.5);
         assert_eq!(back.cache_hit_rate, 0.25);
         assert_eq!(back.cache_serve_ns, 3_000);
+    }
+
+    #[test]
+    fn combine_cost_scales_with_input_bytes() {
+        let cm = CostModel::default();
+        let cheap = spec(OpKind::Combine(crate::ir::task::CombineKind::AddScalars), 0);
+        assert_eq!(cm.task_cost_ns(&cheap), 1_000, "zero-estimate glue keeps the flat price");
+        let mut big = spec(OpKind::Combine(crate::ir::task::CombineKind::Concat), 0);
+        big.est.bytes_in = 1 << 20;
+        assert!(cm.task_cost_ns(&big) > 100_000, "a 1 MiB concat is not free");
     }
 }

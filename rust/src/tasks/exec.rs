@@ -45,6 +45,30 @@ fn run_combine(kind: &CombineKind, args: &[Value]) -> Result<Vec<Value>> {
             Ok(vec![v.clone()])
         }
         CombineKind::Identity => Ok(args.to_vec()),
+        CombineKind::ShardRows { index, of } => {
+            let t = args
+                .first()
+                .context("shard_rows needs one tensor arg")?
+                .as_tensor()?;
+            Ok(vec![Value::tensor(t.slice_row_block(*index, *of)?)])
+        }
+        CombineKind::Concat => {
+            let tensors: Vec<&Tensor> = args
+                .iter()
+                .map(|v| v.as_tensor())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(vec![Value::tensor(Tensor::concat_rows(&tensors)?)])
+        }
+        CombineKind::TreeReduce => {
+            if args.iter().all(|a| matches!(a, Value::Unit)) {
+                return Ok(vec![Value::Unit]);
+            }
+            let mut acc = 0.0f64;
+            for v in args {
+                acc += v.as_tensor()?.scalar()? as f64;
+            }
+            Ok(vec![Value::scalar_f32(acc as f32)])
+        }
     }
 }
 
@@ -121,6 +145,14 @@ impl Executor for HostExecutor {
                     .as_tensor()?
                     .scalar()? as u64;
                 Ok(vec![Value::tensor(Tensor::uniform(vec![*n, *n], seed))])
+            }
+            OpKind::HostMatGenShard { n, row0, rows } => {
+                let seed = args
+                    .first()
+                    .context("host_matgen shard needs a seed arg")?
+                    .as_tensor()?
+                    .scalar()? as u64;
+                Ok(vec![Value::tensor(Tensor::uniform_rows(*n, *row0, *rows, seed))])
             }
             OpKind::HostMatMul => {
                 let (a, b) = (args[0].as_tensor()?, args[1].as_tensor()?);
@@ -286,6 +318,66 @@ mod tests {
             .unwrap();
         assert!(matches!(out[0], Value::Unit));
         assert!(matches!(out[1], Value::Token));
+    }
+
+    #[test]
+    fn matgen_shards_reassemble_bit_exactly() {
+        let ex = HostExecutor;
+        let seed = Value::scalar_i32(9);
+        let whole = ex
+            .execute(&OpKind::HostMatGen { n: 10 }, &[seed.clone()])
+            .unwrap();
+        let parts: Vec<Value> = (0..3)
+            .map(|k| {
+                let row0 = k * 10 / 3;
+                let rows = (k + 1) * 10 / 3 - row0;
+                ex.execute(
+                    &OpKind::HostMatGenShard { n: 10, row0, rows },
+                    &[seed.clone()],
+                )
+                .unwrap()
+                .remove(0)
+            })
+            .collect();
+        let back = ex
+            .execute(&OpKind::Combine(CombineKind::Concat), &parts)
+            .unwrap();
+        assert_eq!(back[0], whole[0]);
+    }
+
+    #[test]
+    fn shard_rows_and_tree_reduce_glue() {
+        let ex = SyntheticExecutor;
+        let t = Value::tensor(Tensor::uniform(vec![6, 2], 4));
+        let lo = ex
+            .execute(&OpKind::Combine(CombineKind::ShardRows { index: 0, of: 2 }), &[t.clone()])
+            .unwrap();
+        let hi = ex
+            .execute(&OpKind::Combine(CombineKind::ShardRows { index: 1, of: 2 }), &[t.clone()])
+            .unwrap();
+        let back = ex
+            .execute(
+                &OpKind::Combine(CombineKind::Concat),
+                &[lo[0].clone(), hi[0].clone()],
+            )
+            .unwrap();
+        assert_eq!(back[0], t);
+
+        // TreeReduce: unit barrier and scalar sum
+        let u = ex
+            .execute(
+                &OpKind::Combine(CombineKind::TreeReduce),
+                &[Value::Unit, Value::Unit],
+            )
+            .unwrap();
+        assert!(matches!(u[0], Value::Unit));
+        let s = ex
+            .execute(
+                &OpKind::Combine(CombineKind::TreeReduce),
+                &[Value::scalar_f32(1.5), Value::scalar_f32(2.0)],
+            )
+            .unwrap();
+        assert_eq!(s[0].as_tensor().unwrap().scalar().unwrap(), 3.5);
     }
 
     #[test]

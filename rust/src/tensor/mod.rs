@@ -110,6 +110,19 @@ impl Tensor {
         }
     }
 
+    /// Rows `[row0, row0+rows)` of `uniform(vec![n, n], seed)`, bit-for-bit:
+    /// the generator stream is advanced past the preceding rows rather than
+    /// re-seeded, so concatenating all row blocks reproduces the whole
+    /// matrix exactly (the partition pass's matgen shards rely on this).
+    pub fn uniform_rows(n: usize, row0: usize, rows: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        rng.skip(row0 * n);
+        Tensor {
+            shape: vec![rows, n],
+            data: Data::F32((0..rows * n).map(|_| rng.f32_pm1()).collect()),
+        }
+    }
+
     // ---- accessors ---------------------------------------------------------
 
     pub fn shape(&self) -> &[usize] {
@@ -240,6 +253,86 @@ impl Tensor {
             .fold(0.0f32, f32::max))
     }
 
+    /// Rows `[start, start+rows)` along axis 0 (any rank ≥ 1; for rank 1
+    /// a "row" is one element). Zero-row slices are valid.
+    pub fn slice_rows(&self, start: usize, rows: usize) -> Result<Tensor> {
+        if self.rank() == 0 {
+            bail!("slice_rows on rank-0 tensor");
+        }
+        let m = self.shape[0];
+        if start + rows > m {
+            bail!("slice_rows [{start}, {}) out of range for {m} rows", start + rows);
+        }
+        let row_size: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        let (a, b) = (start * row_size, (start + rows) * row_size);
+        match &self.data {
+            Data::F32(v) => Tensor::f32(shape, v[a..b].to_vec()),
+            Data::I32(v) => Tensor::i32(shape, v[a..b].to_vec()),
+        }
+    }
+
+    /// The `index`-th of `of` contiguous row blocks: rows
+    /// `[index·m/of, (index+1)·m/of)`. The blocks tile the tensor exactly,
+    /// so `concat_rows` of all blocks round-trips bit-for-bit.
+    pub fn slice_row_block(&self, index: usize, of: usize) -> Result<Tensor> {
+        if of == 0 || index >= of {
+            bail!("slice_row_block {index}/{of} is ill-formed");
+        }
+        if self.rank() == 0 {
+            bail!("slice_row_block on rank-0 tensor");
+        }
+        let m = self.shape[0];
+        let start = index * m / of;
+        let end = (index + 1) * m / of;
+        self.slice_rows(start, end - start)
+    }
+
+    /// Concatenate along axis 0. All parts must share dtype and trailing
+    /// dims; zero-row parts are allowed.
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        let Some(first) = parts.first() else {
+            bail!("concat_rows: empty input");
+        };
+        if first.rank() == 0 {
+            bail!("concat_rows on rank-0 tensors");
+        }
+        let tail = &first.shape[1..];
+        let mut rows = 0usize;
+        for p in parts {
+            if p.rank() == 0 || &p.shape[1..] != tail {
+                bail!(
+                    "concat_rows shape mismatch: {:?} vs {:?}",
+                    first.shape,
+                    p.shape
+                );
+            }
+            if p.dtype() != first.dtype() {
+                bail!("concat_rows dtype mismatch");
+            }
+            rows += p.shape[0];
+        }
+        let mut shape = first.shape.clone();
+        shape[0] = rows;
+        match first.dtype() {
+            DType::F32 => {
+                let mut data = Vec::with_capacity(rows * tail.iter().product::<usize>().max(1));
+                for p in parts {
+                    data.extend_from_slice(p.as_f32()?);
+                }
+                Tensor::f32(shape, data)
+            }
+            DType::I32 => {
+                let mut data = Vec::with_capacity(rows * tail.iter().product::<usize>().max(1));
+                for p in parts {
+                    data.extend_from_slice(p.as_i32()?);
+                }
+                Tensor::i32(shape, data)
+            }
+        }
+    }
+
     /// Relative allclose (numpy-style `|a-b| <= atol + rtol*|b|`).
     pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
         if self.shape != other.shape || self.dtype() != other.dtype() {
@@ -333,6 +426,50 @@ mod tests {
         let b = Tensor::uniform(vec![16, 16], 9);
         assert_eq!(a, b);
         assert!(a.as_f32().unwrap().iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn uniform_rows_matches_whole_matrix() {
+        let n = 13;
+        let whole = Tensor::uniform(vec![n, n], 77);
+        for of in [1usize, 2, 3, 5, 13] {
+            let blocks: Vec<Tensor> = (0..of)
+                .map(|k| {
+                    let row0 = k * n / of;
+                    let rows = (k + 1) * n / of - row0;
+                    Tensor::uniform_rows(n, row0, rows, 77)
+                })
+                .collect();
+            let refs: Vec<&Tensor> = blocks.iter().collect();
+            let back = Tensor::concat_rows(&refs).unwrap();
+            assert_eq!(back, whole, "of={of}");
+        }
+    }
+
+    #[test]
+    fn slice_blocks_roundtrip_via_concat() {
+        let t = Tensor::uniform(vec![7, 3], 5);
+        let blocks: Vec<Tensor> = (0..4).map(|k| t.slice_row_block(k, 4).unwrap()).collect();
+        assert_eq!(blocks.iter().map(|b| b.shape()[0]).sum::<usize>(), 7);
+        let refs: Vec<&Tensor> = blocks.iter().collect();
+        assert_eq!(Tensor::concat_rows(&refs).unwrap(), t);
+        // more blocks than rows: some are empty, roundtrip still exact
+        let blocks: Vec<Tensor> = (0..10).map(|k| t.slice_row_block(k, 10).unwrap()).collect();
+        let refs: Vec<&Tensor> = blocks.iter().collect();
+        assert_eq!(Tensor::concat_rows(&refs).unwrap(), t);
+    }
+
+    #[test]
+    fn slice_and_concat_reject_bad_shapes() {
+        let t = Tensor::uniform(vec![4, 4], 1);
+        assert!(t.slice_rows(3, 2).is_err());
+        assert!(t.slice_row_block(4, 4).is_err());
+        assert!(Tensor::scalar_f32(1.0).slice_rows(0, 0).is_err());
+        let other = Tensor::uniform(vec![2, 3], 1);
+        assert!(Tensor::concat_rows(&[&t, &other]).is_err());
+        let ints = Tensor::i32(vec![1, 4], vec![1, 2, 3, 4]).unwrap();
+        assert!(Tensor::concat_rows(&[&t, &ints]).is_err());
+        assert!(Tensor::concat_rows(&[]).is_err());
     }
 
     #[test]

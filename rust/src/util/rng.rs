@@ -64,6 +64,15 @@ impl Rng {
         (self.next_u64() >> 32) as u32
     }
 
+    /// Advance the stream by `n` draws (each equivalent to one
+    /// [`Self::next_u64`]) — lets a shard resume mid-stream so a sliced
+    /// generation is bit-identical to slicing the whole.
+    pub fn skip(&mut self, n: usize) {
+        for _ in 0..n {
+            self.next_u64();
+        }
+    }
+
     /// Uniform in `[0, bound)` (Lemire's method, bias-free enough for tests).
     #[inline]
     pub fn below(&mut self, bound: u64) -> u64 {
@@ -133,6 +142,19 @@ mod tests {
         let mut b = root.split(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn skip_matches_discarded_draws() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        a.skip(37);
+        for _ in 0..37 {
+            b.next_u64();
+        }
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

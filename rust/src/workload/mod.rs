@@ -130,6 +130,23 @@ pub fn matrix_program(
     b.build().expect("matrix program is well-formed")
 }
 
+/// One round (gen, gen, mul, sum) at size `n` on host ops — the smallest
+/// workload where intra-op sharding matters: a single big `matmul`
+/// dominates and, unsharded, can never use more than one worker.
+pub fn matmul_round_program(n: usize) -> TaskProgram {
+    matrix_program(1, n, false, None)
+}
+
+/// [`matrix_program`] with the auto-sharding rewrite applied at `k`
+/// partitions (host ops, no size floor — every eligible task shards).
+/// Bit-identical outputs to the unsharded program on every engine.
+pub fn sharded_matrix_program(t: usize, n: usize, k: usize) -> TaskProgram {
+    let base = matrix_program(t, n, false, None);
+    crate::partition::partition_program(&base, &crate::partition::PartitionConfig::aggressive(k))
+        .expect("matrix program shards cleanly")
+        .program
+}
+
 /// Fused-granularity variant: each round is ONE `matround_N` artifact
 /// (Ablation C — task granularity at fixed FLOPs).
 pub fn matrix_program_fused(t: usize, n: usize, manifest: Option<&Manifest>) -> TaskProgram {
@@ -292,6 +309,22 @@ mod tests {
         // 12 ops + 1 n-ary combine (no print in direct form)
         assert_eq!(direct.len(), 13);
         assert_eq!(direct.roots().len(), 6);
+    }
+
+    #[test]
+    fn sharded_builder_matches_plain_builder_bitwise() {
+        use crate::baselines::run_single;
+        use crate::tasks::HostExecutor;
+        let plain = matrix_program(2, 10, false, None);
+        let sharded = sharded_matrix_program(2, 10, 4);
+        assert!(sharded.len() > plain.len());
+        assert!(
+            sharded.max_parallel_width() > plain.max_parallel_width(),
+            "sharding widens the DAG"
+        );
+        let a = run_single(&plain, &HostExecutor).unwrap();
+        let b = run_single(&sharded, &HostExecutor).unwrap();
+        assert_eq!(a.outputs, b.outputs);
     }
 
     #[test]

@@ -173,6 +173,27 @@ fn matrix_sim_engine_completes() {
 }
 
 #[test]
+fn matrix_partitioned_run_reports_families_and_writes_clustered_dot() {
+    let dir = std::env::temp_dir();
+    let dot = dir.join("cli_sharded.dot");
+    let out = parhask()
+        .args([
+            "matrix", "--rounds", "2", "--size", "32", "--engine", "cluster:2",
+            "--artifacts", "false", "--partitions", "4", "--shard-min-bytes", "1",
+            "--placement", "shard", "--dot", dot.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // 2 rounds × (2 matgens + 1 matmul) shard; matsum/total stay whole
+    assert!(stdout.contains("partitioned: 6 shard families"), "{stdout}");
+    assert!(stdout.contains("done:"), "{stdout}");
+    let dot_text = std::fs::read_to_string(&dot).unwrap();
+    assert!(dot_text.contains("subgraph cluster_"), "{dot_text}");
+}
+
+#[test]
 fn bad_source_reports_caret_diagnostic() {
     let dir = std::env::temp_dir();
     let f = dir.join("bad.hs");

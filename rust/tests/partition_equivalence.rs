@@ -1,0 +1,155 @@
+//! Partition-pass integration: the auto-sharding rewrite must be
+//! invisible to results on every engine (bit-for-bit), while the cluster
+//! demonstrably executes more, smaller tasks and the simulator prices the
+//! sharded plan at a lower makespan once a big op dominates.
+
+use std::sync::Arc;
+
+use parhask::cache::ResultCache;
+use parhask::config::RunConfig;
+use parhask::engine::{run, run_with_cache};
+use parhask::partition::{partition_program, PartitionConfig};
+use parhask::scheduler::PlacementPolicy;
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::HostExecutor;
+use parhask::workload::{matmul_round_program, matrix_program};
+
+#[test]
+fn sharded_output_is_bit_identical_on_all_four_engines() {
+    let p = matrix_program(3, 14, false, None); // 14: ragged shards at K=4
+    // derive pp from exactly the config the engine will use (partitions=4,
+    // shard_min_bytes=1, everything else default), so trace validation
+    // below compares against the graph the engine really ran
+    let pcfg = PartitionConfig {
+        partitions: 4,
+        shard_min_bytes: 1,
+        ..PartitionConfig::default()
+    };
+    let pp = partition_program(&p, &pcfg).unwrap();
+    assert!(pp.is_rewritten());
+
+    for engine in ["single", "smp:3", "cluster:3"] {
+        let mut cfg = RunConfig::default();
+        cfg.set("engine", engine).unwrap();
+        let base = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+        cfg.set("partitions", "4").unwrap();
+        cfg.set("shard_min_bytes", "1").unwrap();
+        let sharded = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+        assert_eq!(
+            base.outputs, sharded.outputs,
+            "{engine}: sharded == unsharded, bit-for-bit"
+        );
+        assert!(
+            sharded.trace.executed_tasks() > p.len(),
+            "{engine}: the cluster of shards executes more tasks ({} vs {})",
+            sharded.trace.executed_tasks(),
+            p.len()
+        );
+        sharded.trace.validate(&pp.program).unwrap();
+    }
+
+    // sim engine: runs the rewritten graph (no values computed)
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "sim:4").unwrap();
+    cfg.set("partitions", "4").unwrap();
+    cfg.set("shard_min_bytes", "1").unwrap();
+    let sim = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+    sim.trace.validate(&pp.program).unwrap();
+    assert_eq!(sim.trace.events.len(), pp.program.len());
+}
+
+#[test]
+fn simulator_prices_sharded_matmul_round_lower_on_four_workers() {
+    // One round at 512²: the matmul dominates, so splitting it 4 ways
+    // must beat the whole-op schedule on ≥4 workers even after paying
+    // slice/concat glue and the extra transfers.
+    let p = matmul_round_program(512);
+    let pp = partition_program(&p, &PartitionConfig::aggressive(4)).unwrap();
+    let cm = CostModel::default();
+    for workers in [4usize, 8] {
+        let mut cfg = SimConfig::cluster(workers);
+        cfg.placement = PlacementPolicy::ShardAffinity;
+        let whole = simulate(&p, &cm, &cfg).unwrap();
+        let sharded = simulate(&pp.program, &cm, &cfg).unwrap();
+        whole.trace.validate(&p).unwrap();
+        sharded.trace.validate(&pp.program).unwrap();
+        assert!(
+            sharded.makespan_ns < whole.makespan_ns,
+            "{workers} workers: sharded {} !< whole {}",
+            sharded.makespan_ns,
+            whole.makespan_ns
+        );
+    }
+}
+
+#[test]
+fn shard_affinity_placement_beats_or_matches_round_robin_on_bytes() {
+    // Round-robin is maximally locality-oblivious; shard-affinity
+    // co-locates each compute shard with its slice and lets combines
+    // chase their producers, so on a sharded program it can only move
+    // fewer (or equal) bytes.
+    let p = matrix_program(4, 128, false, None);
+    let pp = partition_program(&p, &PartitionConfig::aggressive(4)).unwrap();
+    let cm = CostModel::default();
+    let mut rr = SimConfig::cluster(4);
+    rr.placement = PlacementPolicy::RoundRobin;
+    let mut aff = SimConfig::cluster(4);
+    aff.placement = PlacementPolicy::ShardAffinity;
+    let r_rr = simulate(&pp.program, &cm, &rr).unwrap();
+    let r_aff = simulate(&pp.program, &cm, &aff).unwrap();
+    assert!(
+        r_aff.bytes_transferred <= r_rr.bytes_transferred,
+        "affinity {} vs round-robin {}",
+        r_aff.bytes_transferred,
+        r_rr.bytes_transferred
+    );
+}
+
+#[test]
+fn warm_partitioned_runs_hit_the_result_cache() {
+    // Shard cache keys embed (shard_index, n_shards): a warm re-run of the
+    // same partitioned program is served, and a previously-warmed
+    // *unsharded* run shares no entries with the sharded plan's shards.
+    let p = matrix_program(2, 12, false, None);
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "single").unwrap();
+    cfg.set("cache", "on").unwrap();
+    cfg.set("partitions", "3").unwrap();
+    cfg.set("shard_min_bytes", "1").unwrap();
+
+    let cache = ResultCache::new(cfg.cache.clone());
+    let r1 = run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(Arc::clone(&cache))).unwrap();
+    assert_eq!(r1.trace.cache_hits, 0, "cold");
+    let r2 = run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(Arc::clone(&cache))).unwrap();
+    assert_eq!(r1.outputs, r2.outputs);
+    assert_eq!(r2.trace.executed_tasks(), 0, "fully warm sharded run executes nothing");
+
+    // unsharded run against the same cache: whole-task keys are distinct
+    // from shard keys, so nothing aliases (it must execute, then agree)
+    let mut whole_cfg = RunConfig::default();
+    whole_cfg.set("engine", "single").unwrap();
+    whole_cfg.set("cache", "on").unwrap();
+    let r3 =
+        run_with_cache(&p, &whole_cfg, Arc::new(HostExecutor), Some(cache)).unwrap();
+    assert!(r3.trace.executed_tasks() > 0, "whole-task keys never alias shard keys");
+    assert_eq!(r3.outputs, r1.outputs);
+}
+
+#[test]
+fn cluster_ships_fewer_arg_bytes_with_affinity_placement() {
+    let p = matrix_program(3, 32, false, None);
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "cluster:3").unwrap();
+    cfg.set("partitions", "3").unwrap();
+    cfg.set("shard_min_bytes", "1").unwrap();
+    cfg.set("placement", "shard").unwrap();
+    let r = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+    // the leader's location table must have produced at least one Cached
+    // reference (combine chasing its producer / mm reading its slice)
+    assert!(
+        r.trace.arg_bytes_saved > 0,
+        "expected some locality savings, shipped={} saved={}",
+        r.trace.arg_bytes_shipped,
+        r.trace.arg_bytes_saved
+    );
+}

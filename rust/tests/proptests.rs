@@ -243,6 +243,60 @@ fn prop_engines_yield_valid_traces_and_equal_results() {
     });
 }
 
+/// A random pure DAG plus a random partition count.
+#[derive(Clone, Debug)]
+struct DagAndK(AnyDag, usize);
+
+impl Arbitrary for DagAndK {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        let k = rng.range(2, 9);
+        DagAndK(AnyDag::arbitrary(rng), k)
+    }
+}
+
+#[test]
+fn prop_partition_rewrite_preserves_semantics() {
+    use parhask::baselines::run_single;
+    use parhask::partition::{partition_program, PartitionConfig};
+    use parhask::tasks::HostExecutor;
+
+    qcheck_seeded(0x5AADED, 50, |dk: &DagAndK| {
+        let p = &dk.0 .0;
+        let pp = partition_program(p, &PartitionConfig::aggressive(dk.1))
+            .map_err(|e| format!("rewrite: {e:#}"))?;
+        let a = run_single(p, &HostExecutor).map_err(|e| format!("plain: {e:#}"))?;
+        let b = run_single(&pp.program, &HostExecutor)
+            .map_err(|e| format!("sharded: {e:#}"))?;
+        b.trace
+            .validate(&pp.program)
+            .map_err(|e| format!("sharded trace: {e:#}"))?;
+        prop(
+            a.outputs == b.outputs,
+            &format!("K={}: sharded output == unsharded output, bit-for-bit", dk.1),
+        )
+    });
+}
+
+#[test]
+fn prop_partition_is_noop_below_size_floors() {
+    use parhask::partition::{partition_program, PartitionConfig};
+
+    qcheck_seeded(0x5AADF0, 50, |dk: &DagAndK| {
+        let p = &dk.0 .0;
+        let cfg = PartitionConfig {
+            partitions: dk.1,
+            shard_min_bytes: u64::MAX,
+            shard_min_us: u64::MAX,
+            ..PartitionConfig::default()
+        };
+        let pp = partition_program(p, &cfg).map_err(|e| format!("rewrite: {e:#}"))?;
+        prop(
+            !pp.is_rewritten() && pp.program.len() == p.len(),
+            "every task below --shard-min-bytes ⇒ the rewrite is a no-op",
+        )
+    });
+}
+
 #[test]
 fn prop_simulator_makespan_bounded_by_work_and_span() {
     use parhask::simulator::{simulate, CostModel, SimConfig};

@@ -1,0 +1,164 @@
+//! Machine-readable bench snapshot: one JSON file per PR so perf moves
+//! are diffable across the PR sequence instead of living in prose.
+//!
+//! Re-runs the load-bearing measurements from `micro_substrate` (codec,
+//! deque, leader round-trip) and `partition_sweep` (simulated and real
+//! shard sweeps) and writes them as a single deterministic-keyed JSON
+//! object. The schema is documented in README.md ("Bench snapshots").
+//!
+//! ```sh
+//! cargo bench --bench bench_snapshot           # writes BENCH_pr6.json
+//! BENCH_OUT=/tmp/b.json cargo bench --bench bench_snapshot
+//! ```
+
+use std::sync::Arc;
+
+use parhask::cluster::message::Message;
+use parhask::cluster::{codec, run_cluster_inproc, ClusterConfig};
+use parhask::ir::task::{CostEst, OpKind, TaskId, Value};
+use parhask::ir::ProgramBuilder;
+use parhask::partition::{partition_program, PartitionConfig};
+use parhask::scheduler::deque::WorkDeque;
+use parhask::scheduler::PlacementPolicy;
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::{HostExecutor, SyntheticExecutor};
+use parhask::tensor::Tensor;
+use parhask::util::json::Json;
+use parhask::workload::{matmul_round_program, matrix_program};
+
+const SWEEP_K: [usize; 4] = [1, 2, 4, 8];
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // one warmup batch, then timed
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn substrate() -> anyhow::Result<Json> {
+    let msg = Message::TaskDone {
+        task: TaskId(7),
+        outputs: vec![Value::tensor(Tensor::uniform(vec![256, 256], 1))],
+        compute_ns: 12345,
+    };
+    let encoded = codec::encode(&msg);
+    let enc_ns = bench(200, || {
+        std::hint::black_box(codec::encode(&msg));
+    });
+    let dec_ns = bench(200, || {
+        std::hint::black_box(codec::decode(&encoded).unwrap());
+    });
+
+    let d = WorkDeque::<u32>::with_capacity(1024);
+    let pp_ns = bench(1000, || {
+        for i in 0..64u32 {
+            d.push(i);
+        }
+        while d.pop().is_some() {}
+    }) / 128.0;
+    for i in 0..512u32 {
+        d.push(i);
+    }
+    let steal_ns = bench(512, || {
+        let _ = std::hint::black_box(d.steal());
+    });
+
+    // leader round-trip overhead per (empty) task
+    let n_tasks = 200usize;
+    let mut b = ProgramBuilder::new();
+    for i in 0..n_tasks {
+        b.push(
+            OpKind::Synthetic { compute_us: 0 },
+            vec![],
+            1,
+            CostEst { flops: 1, bytes_in: 0, bytes_out: 1 },
+            format!("t{i}"),
+        );
+    }
+    let p = b.build().unwrap();
+    let mut rt_ns = f64::MAX;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        let r = run_cluster_inproc(&p, Arc::new(SyntheticExecutor), 2, ClusterConfig::default(), None)?;
+        let dt = t0.elapsed().as_nanos() as f64;
+        assert_eq!(r.trace.events.len(), n_tasks);
+        rt_ns = rt_ns.min(dt / n_tasks as f64);
+    }
+
+    Ok(Json::obj(vec![
+        ("codec_encode_ns", Json::Num(enc_ns)),
+        ("codec_decode_ns", Json::Num(dec_ns)),
+        ("codec_msg_bytes", Json::Num(encoded.len() as f64)),
+        ("deque_push_pop_ns", Json::Num(pp_ns)),
+        ("deque_steal_ns", Json::Num(steal_ns)),
+        ("cluster_roundtrip_ns_per_task", Json::Num(rt_ns)),
+    ]))
+}
+
+fn sim_sweep() -> anyhow::Result<Json> {
+    let cm = CostModel::default();
+    let mut rows = Vec::new();
+    for n in [256usize, 512, 1024] {
+        let base = matmul_round_program(n);
+        for k in SWEEP_K {
+            let program = if k <= 1 {
+                base.clone()
+            } else {
+                partition_program(&base, &PartitionConfig::aggressive(k))?.program
+            };
+            let mut cfg = SimConfig::cluster(8);
+            cfg.placement = PlacementPolicy::ShardAffinity;
+            let r = simulate(&program, &cm, &cfg)?;
+            rows.push(Json::obj(vec![
+                ("size", Json::Num(n as f64)),
+                ("k", Json::Num(k as f64)),
+                ("tasks", Json::Num(program.len() as f64)),
+                ("makespan_ns", Json::Num(r.makespan_ns as f64)),
+                ("bytes_moved", Json::Num(r.bytes_transferred as f64)),
+            ]));
+        }
+    }
+    Ok(Json::Arr(rows))
+}
+
+fn cluster_sweep() -> anyhow::Result<Json> {
+    let base = matrix_program(4, 96, false, None);
+    let mut rows = Vec::new();
+    for k in SWEEP_K {
+        let program = if k <= 1 {
+            base.clone()
+        } else {
+            partition_program(&base, &PartitionConfig::aggressive(k))?.program
+        };
+        let cfg = ClusterConfig {
+            placement: PlacementPolicy::ShardAffinity,
+            ..ClusterConfig::default()
+        };
+        let r = run_cluster_inproc(&program, Arc::new(HostExecutor), 4, cfg, None)?;
+        rows.push(Json::obj(vec![
+            ("k", Json::Num(k as f64)),
+            ("tasks", Json::Num(program.len() as f64)),
+            ("wall_ns", Json::Num(r.trace.wall_ns as f64)),
+            ("arg_bytes_shipped", Json::Num(r.trace.arg_bytes_shipped as f64)),
+            ("arg_bytes_saved", Json::Num(r.trace.arg_bytes_saved as f64)),
+        ]));
+    }
+    Ok(Json::Arr(rows))
+}
+
+fn main() -> anyhow::Result<()> {
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr6.json".to_string());
+    let report = Json::obj(vec![
+        ("schema", Json::str("parhask-bench-snapshot/1")),
+        ("snapshot", Json::str("pr6")),
+        ("substrate", substrate()?),
+        ("sim_partition_sweep", sim_sweep()?),
+        ("cluster_partition_sweep", cluster_sweep()?),
+    ]);
+    std::fs::write(&out, format!("{report}\n"))?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -11,7 +11,7 @@
 //! ```
 
 use parhask::depgraph::{build_depgraph, dot, EdgeKind};
-use parhask::frontend::parse_program;
+use parhask::frontend::{parse_program, render_all};
 use parhask::types::check_program;
 
 const PROGRAM: &str = r#"
@@ -39,7 +39,8 @@ main = do
 
 fn main() -> anyhow::Result<()> {
     let ast = parse_program(PROGRAM).map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
-    let checked = check_program(&ast, "main").map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
+    let checked =
+        check_program(&ast, "main").map_err(|e| anyhow::anyhow!(render_all(&e, PROGRAM)))?;
     let g = build_depgraph(&checked).map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
 
     // --- assert the exact Figure 1 structure --------------------------------

@@ -1,0 +1,34 @@
+-- The Figure-2 matrix workload in HaskLite: three independent rounds of
+-- generate → multiply → reduce, joined by a pure sum. Every round is
+-- pure, so the auto-parallelizer runs them concurrently; `parhask check
+-- examples/hasklite/matrix.hs --partitions 4` additionally verifies the
+-- sharded task graph the partition rewrite produces.
+
+matgen :: Int -> Matrix
+matgen s = prim
+
+matmul :: Matrix -> Matrix -> Matrix
+matmul a b = prim
+
+matsum :: Matrix -> Double
+matsum c = prim
+
+prim :: Int
+prim = 0
+
+main :: IO ()
+main = do
+  let a0 = matgen 1
+  let b0 = matgen 2
+  let c0 = matmul a0 b0
+  let s0 = matsum c0
+  let a1 = matgen 3
+  let b1 = matgen 4
+  let c1 = matmul a1 b1
+  let s1 = matsum c1
+  let a2 = matgen 5
+  let b2 = matgen 6
+  let c2 = matmul a2 b2
+  let s2 = matsum c2
+  let total = s0 + s1 + s2
+  print total

@@ -1,0 +1,26 @@
+-- The paper's §2 NLP pipeline: two IO stages bracketing a pure analysis.
+-- `parhask check examples/hasklite/nlp.hs` proves the purity story
+-- statically: clean_files/semantic_analysis are IO (ordered by the
+-- RealWorld token chain), complex_evaluation is pure and free to run in
+-- parallel with semantic_analysis once its input is ready.
+
+data Summary = Opaque
+
+clean_files :: IO Summary
+clean_files = primitive
+
+complex_evaluation :: Summary -> Int
+complex_evaluation x = primitive
+
+semantic_analysis :: IO Int
+semantic_analysis = primitive
+
+primitive :: Int
+primitive = 0
+
+main :: IO ()
+main = do
+  x <- clean_files
+  let y = complex_evaluation x
+  z <- semantic_analysis
+  print (y, z)

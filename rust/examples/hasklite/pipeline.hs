@@ -1,0 +1,26 @@
+-- Helper-abstracted pipeline: `score` has no type signature, so the
+-- checker infers its purity transitively from its body (pure — it only
+-- reaches matgen/matmul/matsum). The inliner then flattens it so the
+-- dependency graph exposes the intra-round parallelism.
+
+matgen :: Int -> Matrix
+matgen s = prim
+
+matmul :: Matrix -> Matrix -> Matrix
+matmul a b = prim
+
+matsum :: Matrix -> Double
+matsum c = prim
+
+prim :: Int
+prim = 0
+
+score p q = matsum (matmul (matgen p) (matgen q))
+
+main :: IO ()
+main = do
+  let s0 = score 11 12
+  let s1 = score 21 22
+  let s2 = score 31 32
+  let total = s0 + s1 + s2
+  print total

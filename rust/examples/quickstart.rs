@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use parhask::config::RunConfig;
 use parhask::depgraph::{analyze, build_depgraph};
-use parhask::frontend::parse_program;
+use parhask::frontend::{parse_program, render_all};
 use parhask::ir::lower::lower;
 use parhask::tasks::{FunctionRegistry, SyntheticExecutor};
 use parhask::types::check_program;
@@ -48,7 +48,8 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Check types + purity (clean_files/semantic_analysis are IO;
     //    complex_evaluation is pure — straight off the signatures).
-    let checked = check_program(&ast, "main").map_err(|e| anyhow::anyhow!(e.render(PROGRAM)))?;
+    let checked =
+        check_program(&ast, "main").map_err(|e| anyhow::anyhow!(render_all(&e, PROGRAM)))?;
     for f in ["clean_files", "complex_evaluation", "semantic_analysis"] {
         println!(
             "  {f}: {}",

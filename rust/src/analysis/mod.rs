@@ -1,0 +1,32 @@
+//! Static analysis: the three-layer correctness tooling behind
+//! `parhask check` and the `--verify-ir` gate.
+//!
+//! The paper's auto-parallelizer is sound exactly as long as one property
+//! holds — purity, as declared by type signatures — and as long as every
+//! transformation (lowering, the partition rewrite) preserves the task
+//! graph's invariants. This module *checks* instead of assuming:
+//!
+//! * [`purity`] — **Layer 1**: transitive purity inference over function
+//!   bodies. A fixpoint dataflow pass classifies unsigned helpers, turns
+//!   IO-laundering (a pure-signed function whose body transitively reaches
+//!   an IO action) into a hard error with a spanned call chain, and lints
+//!   the parallelized section for dead `let`-bindings and discarded pure
+//!   results.
+//! * [`verify`] — **Layer 2**: a structural verifier over the lowered task
+//!   IR. DAG acyclicity, no dangling task/output refs, matrix shape
+//!   consistency across edges, shard-family invariants from the partition
+//!   rewrite, token-chain well-formedness, and a cache-key determinism
+//!   lint. Runs automatically after lowering and after the partition
+//!   rewrite in debug builds, and behind `--verify-ir` in release.
+//! * [`race`] — **Layer 3**: a post-run auditor over the scheduler trace
+//!   that reconstructs happens-before and reports premature starts,
+//!   replayed IO, per-worker overlap, and use-after-eviction — the
+//!   machine-checked safety argument speculative re-execution needs.
+
+pub mod purity;
+pub mod race;
+pub mod verify;
+
+pub use purity::{infer_purity, lint_parallel_section};
+pub use race::{audit_trace, Race, RaceKind};
+pub use verify::{verify_program, verify_program_with, verify_tasks, VerifyOpts, Violation, ViolationKind};

@@ -1,0 +1,332 @@
+//! Layer 1: transitive purity inference over function bodies.
+//!
+//! The signature rule ([`crate::types::purity`]) classifies only *signed*
+//! functions. This pass closes the gap with a fixpoint dataflow analysis
+//! over bodies:
+//!
+//! * unsigned helpers get an **inferred** classification — IO if the body
+//!   is a `do`-block (the only monad in HaskLite is IO) or transitively
+//!   references anything IO — and join the [`PurityTable`] so the section
+//!   checker can enforce `let`/`<-` discipline and arity on them too;
+//! * **IO-laundering** — a pure-signed function whose body transitively
+//!   reaches an IO action — is a hard error carrying the full call chain
+//!   as spanned notes. This is the hole the result cache and speculative
+//!   re-execution cannot survive: a "pure" task that secretly prints would
+//!   be cached, deduplicated, and replayed.
+//!
+//! The fixpoint is monotone (purity only ever rises to IO), so it
+//! terminates in ≤ n·e steps and is safe on recursive and mutually
+//! recursive definitions.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::frontend::ast::{Body, Expr, Program, Stmt};
+use crate::frontend::diag::Diagnostic;
+use crate::frontend::span::Span;
+use crate::types::purity::PurityTable;
+
+/// A function definition's body references, in source order.
+struct DefRefs {
+    refs: Vec<(String, Span)>,
+    is_do: bool,
+}
+
+/// Run the inference over `program`, inserting inferred entries for
+/// unsigned definitions into `table`. Returns IO-laundering errors (with
+/// their note chains); an empty vec means every signature is honest.
+pub fn infer_purity(program: &Program, table: &mut PurityTable) -> Vec<Diagnostic> {
+    // Collect per-definition references, excluding params and do-locals.
+    let mut defs: Vec<(&str, usize)> = Vec::new(); // (name, arity)
+    let mut refs: HashMap<&str, DefRefs> = HashMap::new();
+    for (name, params, body) in program.fun_defs() {
+        let mut locals: HashSet<&str> = params.iter().map(|s| s.as_str()).collect();
+        let mut out = Vec::new();
+        let is_do = matches!(body, Body::Do(_));
+        match body {
+            Body::Expr(e) => collect_refs(e, &locals, &mut out),
+            Body::Do(stmts) => {
+                for s in stmts {
+                    collect_refs(s.expr(), &locals, &mut out);
+                    if let Some(n) = s.bound_name() {
+                        locals.insert(n);
+                    }
+                }
+            }
+        }
+        if refs.insert(name, DefRefs { refs: out, is_do }).is_none() {
+            defs.push((name, params.len()));
+        }
+    }
+
+    let signed: HashSet<&str> = program.type_sigs().map(|(n, _)| n).collect();
+
+    // Seed: declared classification for everything already in the table
+    // (signatures + builtins); unsigned defs start at their body's direct
+    // evidence (a do-block is IO by construction).
+    let mut io_now: HashMap<&str, bool> = HashMap::new();
+    for &(name, _) in &defs {
+        if signed.contains(name) {
+            io_now.insert(name, table.is_io(name));
+        } else {
+            io_now.insert(name, refs[name].is_do);
+        }
+    }
+
+    // Fixpoint: an unsigned def is IO if it references anything IO.
+    // Signed defs keep their declared classification during propagation —
+    // a dishonest signature is reported *at* the laundering boundary, not
+    // re-propagated to every caller.
+    loop {
+        let mut changed = false;
+        for &(name, _) in &defs {
+            if signed.contains(name) || io_now[name] {
+                continue;
+            }
+            let reaches_io = refs[name]
+                .refs
+                .iter()
+                .any(|(callee, _)| is_io_name(callee, &io_now, table));
+            if reaches_io {
+                io_now.insert(name, true);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // IO-laundering: signed-pure definitions whose bodies reach IO.
+    let mut diags = Vec::new();
+    for &(name, _) in &defs {
+        if !signed.contains(name) || table.is_io(name) {
+            continue;
+        }
+        let body_io = refs[name].is_do
+            || refs[name]
+                .refs
+                .iter()
+                .any(|(callee, _)| is_io_name(callee, &io_now, table));
+        if !body_io {
+            continue;
+        }
+        diags.extend(laundering_chain(name, &refs, &io_now, table));
+    }
+
+    // Publish inferred classifications for unsigned defs (insert_inferred
+    // never overwrites signature entries).
+    for &(name, arity) in &defs {
+        if !signed.contains(name) {
+            table.insert_inferred(name, arity, io_now[name]);
+        }
+    }
+
+    diags
+}
+
+fn is_io_name(name: &str, io_now: &HashMap<&str, bool>, table: &PurityTable) -> bool {
+    io_now.get(name).copied().unwrap_or_else(|| table.is_io(name))
+}
+
+/// Build the error + note chain for one laundering site: follow the first
+/// IO-reaching reference from `name` down to a declared IO action.
+fn laundering_chain(
+    name: &str,
+    refs: &HashMap<&str, DefRefs>,
+    io_now: &HashMap<&str, bool>,
+    table: &PurityTable,
+) -> Vec<Diagnostic> {
+    let mut chain: Vec<(String, String, Span)> = Vec::new(); // (caller, callee, at)
+    let mut cur = name.to_string();
+    let mut visited: HashSet<String> = HashSet::new();
+    while visited.insert(cur.clone()) {
+        let Some(r) = refs.get(cur.as_str()) else { break };
+        let Some((callee, span)) = r
+            .refs
+            .iter()
+            .find(|(c, _)| is_io_name(c, io_now, table))
+        else {
+            break;
+        };
+        chain.push((cur.clone(), callee.clone(), *span));
+        // `table` holds only signatures + builtins here (inferred entries
+        // are published after error construction), so a table-IO callee is
+        // a *declared* IO source — the end of the chain. Anything else is
+        // an unsigned helper whose taint we keep following.
+        if table.is_io(callee) {
+            break;
+        }
+        cur = callee.clone();
+    }
+    let mut diags = Vec::new();
+    if chain.is_empty() {
+        // Body is a bare do-block with no IO references (e.g. `f = do ...`
+        // over pure lets): still effectful by construction.
+        diags.push(Diagnostic::new(
+            format!("`{name}` is declared pure but its body is a `do` block (IO)"),
+            Span::DUMMY,
+        ));
+        return diags;
+    }
+    let mut path: Vec<&str> = vec![chain[0].0.as_str()];
+    for (_, callee, _) in &chain {
+        path.push(callee);
+    }
+    let sink = path.last().copied().unwrap_or_default().to_string();
+    diags.push(Diagnostic::new(
+        format!(
+            "`{name}` is declared pure but its body reaches IO action `{sink}` (call chain: {})",
+            path.join(" -> ")
+        ),
+        chain[0].2,
+    ));
+    for (caller, callee, span) in chain.iter().skip(1) {
+        diags.push(Diagnostic::note(
+            format!("`{caller}` calls `{callee}` here"),
+            *span,
+        ));
+    }
+    diags
+}
+
+/// Collect variable references of `e` in source order, skipping `locals`.
+fn collect_refs<'a>(e: &'a Expr, locals: &HashSet<&str>, out: &mut Vec<(String, Span)>) {
+    match e {
+        Expr::Var { name, span } => {
+            if !locals.contains(name.as_str()) {
+                out.push((name.clone(), *span));
+            }
+        }
+        Expr::App { func, args, .. } => {
+            collect_refs(func, locals, out);
+            for a in args {
+                collect_refs(a, locals, out);
+            }
+        }
+        Expr::BinOp { lhs, rhs, .. } => {
+            collect_refs(lhs, locals, out);
+            collect_refs(rhs, locals, out);
+        }
+        Expr::Tuple { items, .. } => {
+            for i in items {
+                collect_refs(i, locals, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Lint the parallelized section (the entry's do-block): dead
+/// `let`-bindings and discarded pure results. Warnings only — the program
+/// still runs, it just does provably useless work.
+pub fn lint_parallel_section(stmts: &[Stmt], purity: &PurityTable) -> Vec<Diagnostic> {
+    let mut warnings = Vec::new();
+    for (i, s) in stmts.iter().enumerate() {
+        if let Stmt::Let { name, span, .. } = s {
+            let used_later = stmts[i + 1..]
+                .iter()
+                .any(|later| later.expr().vars().contains(&name.as_str()));
+            if !used_later {
+                warnings.push(Diagnostic::warning(
+                    format!("`{name}` is bound but never used in the parallelized section"),
+                    *span,
+                ));
+            }
+        }
+        if let Stmt::Expr { expr, span } = s {
+            if let Some((head, _)) = expr.as_call() {
+                if let Some(info) = purity.get(head) {
+                    if !info.io {
+                        warnings.push(Diagnostic::warning(
+                            format!(
+                                "result of pure call `{head}` is discarded; bind it with `let` or remove the statement"
+                            ),
+                            *span,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    warnings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_program;
+
+    fn run(src: &str) -> (PurityTable, Vec<Diagnostic>) {
+        let p = parse_program(src).unwrap();
+        let mut t = PurityTable::from_program(&p).unwrap();
+        let d = infer_purity(&p, &mut t);
+        (t, d)
+    }
+
+    #[test]
+    fn unsigned_pure_helper_is_inferred_pure() {
+        let (t, d) = run("square m = m * m\nmain :: IO ()\nmain = do\n  print 1\n");
+        assert!(d.is_empty(), "{d:?}");
+        assert!(!t.is_io("square"));
+        assert_eq!(t.get("square").unwrap().arity, 1);
+    }
+
+    #[test]
+    fn unsigned_helper_touching_print_is_inferred_io() {
+        let (t, d) = run("shout x = print x\nmain :: IO ()\nmain = do\n  print 2\n");
+        assert!(d.is_empty(), "inference alone is not an error: {d:?}");
+        assert!(t.is_io("shout"));
+    }
+
+    #[test]
+    fn io_taint_propagates_transitively() {
+        let src = "a x = b x\nb x = c x\nc x = print x\nmain :: IO ()\nmain = do\n  print 3\n";
+        let (t, d) = run(src);
+        assert!(d.is_empty());
+        assert!(t.is_io("a") && t.is_io("b") && t.is_io("c"));
+    }
+
+    #[test]
+    fn laundering_is_an_error_with_chain() {
+        let src = "f :: Int -> Int\nf x = helper x\nhelper x = print x\nmain :: IO ()\nmain = do\n  print 4\n";
+        let (_, d) = run(src);
+        assert!(!d.is_empty());
+        assert!(d[0].msg.contains("declared pure"), "{}", d[0].msg);
+        assert!(d[0].msg.contains("f -> helper -> print"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn honest_io_signature_is_fine() {
+        // signed-IO with a pure body is a safe over-approximation, not an
+        // error (the paper's own `clean_files = prim` pattern).
+        let src = "prim :: Int\nprim = 0\nclean_files :: IO Summary\nclean_files = prim\nmain :: IO ()\nmain = do\n  print 5\n";
+        let (_, d) = run(src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn recursion_terminates() {
+        let src = "a x = b x\nb x = a x\nmain :: IO ()\nmain = do\n  print 6\n";
+        let (t, d) = run(src);
+        assert!(d.is_empty());
+        assert!(!t.is_io("a") && !t.is_io("b"));
+    }
+
+    #[test]
+    fn dead_let_and_discarded_pure_result_warn() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f 1\n  let b = f 2\n  f 3\n  print b\n";
+        let p = parse_program(src).unwrap();
+        let mut t = PurityTable::from_program(&p).unwrap();
+        let d = infer_purity(&p, &mut t);
+        assert!(d.is_empty());
+        let (_, body) = p.find_fun("main").unwrap();
+        let stmts = match body {
+            crate::frontend::ast::Body::Do(s) => s.clone(),
+            _ => unreachable!(),
+        };
+        let w = lint_parallel_section(&stmts, &t);
+        assert_eq!(w.len(), 2, "{w:?}");
+        assert!(w[0].msg.contains("`a` is bound but never used"), "{}", w[0].msg);
+        assert!(w[1].msg.contains("result of pure call `f` is discarded"), "{}", w[1].msg);
+    }
+}

@@ -1,0 +1,310 @@
+//! Layer 3: post-run trace auditing — reconstruct happens-before from a
+//! [`ScheduleTrace`] and report every ordering violation.
+//!
+//! This differs from [`ScheduleTrace::validate`] in three ways that matter
+//! for what ROADMAP items 2–3 are building:
+//!
+//! * it reports **all** findings, not just the first (an auditor, not a
+//!   gate);
+//! * it allows a *pure* task to execute more than once — exactly the
+//!   freedom speculative re-execution after a worker failure needs — while
+//!   still proving that an **IO task never replays** and that every
+//!   consumer start is covered by *some* completed producer execution;
+//! * it understands **evictions** ([`EvictionEvent`]): once a producer's
+//!   value is dropped, a later consumer start is a use-after-eviction
+//!   unless the producer re-executed (re-materializing the value) in
+//!   between.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::task::TaskId;
+use crate::ir::TaskProgram;
+use crate::scheduler::trace::{ScheduleTrace, TraceEvent};
+use crate::scheduler::WorkerId;
+
+/// Classification of a trace finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RaceKind {
+    /// A task execution started before any completed execution of one of
+    /// its producers.
+    PrematureStart,
+    /// An IO task executed more than once (or was served from cache).
+    IoReplay,
+    /// One worker ran two tasks at overlapping times.
+    WorkerOverlap,
+    /// A task neither executed nor was served from cache.
+    MissingExecution,
+    /// An event ends before it starts.
+    NegativeInterval,
+    /// A task both executed and was served from cache in the same run.
+    CacheExecOverlap,
+    /// A consumer started after its producer's value was evicted, with no
+    /// re-execution re-materializing it in between.
+    UseAfterEviction,
+}
+
+/// One audited finding.
+#[derive(Clone, Debug)]
+pub struct Race {
+    pub kind: RaceKind,
+    pub task: TaskId,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Race {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{:?}] {}: {}", self.kind, self.task, self.msg)
+    }
+}
+
+/// Audit `trace` against `program`. An empty result is the machine-checked
+/// statement "this schedule respected every dependency, serialized IO, and
+/// never consumed an evicted value".
+pub fn audit_trace(program: &TaskProgram, trace: &ScheduleTrace) -> Vec<Race> {
+    let mut races = Vec::new();
+    let cached: HashSet<TaskId> = trace.cached_tasks.iter().copied().collect();
+    let mut events: HashMap<TaskId, Vec<&TraceEvent>> = HashMap::new();
+    for e in &trace.events {
+        events.entry(e.task).or_default().push(e);
+        if e.end_ns < e.start_ns {
+            races.push(Race {
+                kind: RaceKind::NegativeInterval,
+                task: e.task,
+                msg: format!("interval [{}, {}) ends before it starts", e.start_ns, e.end_ns),
+            });
+        }
+    }
+
+    for t in program.tasks() {
+        let evs = events.get(&t.id).map(Vec::as_slice).unwrap_or(&[]);
+        let is_cached = cached.contains(&t.id);
+        if is_cached && !evs.is_empty() {
+            races.push(Race {
+                kind: RaceKind::CacheExecOverlap,
+                task: t.id,
+                msg: "both executed and served from cache in one run".into(),
+            });
+        }
+        if !is_cached && evs.is_empty() {
+            races.push(Race {
+                kind: RaceKind::MissingExecution,
+                task: t.id,
+                msg: "never executed and not served from cache".into(),
+            });
+        }
+        if !t.is_pure() {
+            if evs.len() > 1 {
+                races.push(Race {
+                    kind: RaceKind::IoReplay,
+                    task: t.id,
+                    msg: format!("IO task executed {} times; effects must run exactly once", evs.len()),
+                });
+            }
+            if is_cached {
+                races.push(Race {
+                    kind: RaceKind::IoReplay,
+                    task: t.id,
+                    msg: "IO task served from the result cache; effects must actually run".into(),
+                });
+            }
+        }
+        // happens-before: every execution of t must start at or after some
+        // completed execution of each producer (pure producers may have
+        // several executions — any completed one covers the read).
+        for d in t.deps() {
+            if cached.contains(&d) {
+                continue;
+            }
+            let Some(dep_evs) = events.get(&d) else {
+                continue; // reported as MissingExecution on the producer
+            };
+            let earliest_done = dep_evs.iter().map(|e| e.end_ns).min().unwrap_or(u64::MAX);
+            for e in evs {
+                if e.start_ns < earliest_done
+                    && !dep_evs.iter().any(|de| de.end_ns <= e.start_ns)
+                {
+                    races.push(Race {
+                        kind: RaceKind::PrematureStart,
+                        task: t.id,
+                        msg: format!(
+                            "started at {} before producer {d} finished (earliest completion {})",
+                            e.start_ns, earliest_done
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // per-worker serial execution
+    let mut per_worker: HashMap<WorkerId, Vec<&TraceEvent>> = HashMap::new();
+    for e in &trace.events {
+        per_worker.entry(e.worker).or_default().push(e);
+    }
+    let mut workers: Vec<WorkerId> = per_worker.keys().copied().collect();
+    workers.sort_by_key(|w| w.index());
+    for w in workers {
+        let evs = per_worker.get_mut(&w).unwrap();
+        evs.sort_by_key(|e| (e.start_ns, e.end_ns));
+        for pair in evs.windows(2) {
+            if pair[1].start_ns < pair[0].end_ns {
+                races.push(Race {
+                    kind: RaceKind::WorkerOverlap,
+                    task: pair[1].task,
+                    msg: format!(
+                        "overlaps {} on the same worker ([{}, {}) vs [{}, {}))",
+                        pair[0].task,
+                        pair[0].start_ns,
+                        pair[0].end_ns,
+                        pair[1].start_ns,
+                        pair[1].end_ns
+                    ),
+                });
+            }
+        }
+    }
+
+    // use-after-eviction: a consumer starting after the producer's last
+    // eviction needs a producer re-execution completing in between.
+    for ev in &trace.evictions {
+        let Some(consumers) = program
+            .tasks()
+            .get(ev.task.index())
+            .map(|_| program.consumers(ev.task))
+        else {
+            continue;
+        };
+        let dep_evs = events.get(&ev.task).map(Vec::as_slice).unwrap_or(&[]);
+        for &c in consumers {
+            for e in events.get(&c).map(Vec::as_slice).unwrap_or(&[]) {
+                if e.start_ns >= ev.at_ns {
+                    let rematerialized = dep_evs
+                        .iter()
+                        .any(|de| de.end_ns >= ev.at_ns && de.end_ns <= e.start_ns);
+                    if !rematerialized {
+                        races.push(Race {
+                            kind: RaceKind::UseAfterEviction,
+                            task: c,
+                            msg: format!(
+                                "started at {} but {}'s value was evicted at {} and never re-materialized",
+                                e.start_ns, ev.task, ev.at_ns
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    races
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{ArgRef, CostEst, OpKind, Value};
+    use crate::ir::ProgramBuilder;
+    use crate::scheduler::trace::EvictionEvent;
+
+    fn chain2() -> TaskProgram {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+        let _c = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[a], "c");
+        b.build().unwrap()
+    }
+
+    fn ev(task: u32, worker: u32, s: u64, e: u64) -> TraceEvent {
+        TraceEvent { task: TaskId(task), worker: WorkerId(worker), start_ns: s, end_ns: e }
+    }
+
+    #[test]
+    fn clean_trace_audits_empty() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 1, 10, 25));
+        assert!(audit_trace(&p, &t).is_empty());
+    }
+
+    #[test]
+    fn fabricated_premature_start_is_flagged() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 1, 5, 25)); // starts before its producer finishes
+        let races = audit_trace(&p, &t);
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].kind, RaceKind::PrematureStart);
+        assert_eq!(races[0].task, TaskId(1));
+    }
+
+    #[test]
+    fn pure_reexecution_is_allowed_when_ordered() {
+        // speculative re-execution: task 0 runs twice; the consumer starts
+        // after the first completion — legal.
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(0, 2, 12, 20)); // re-execution elsewhere
+        t.push(ev(1, 1, 10, 25));
+        assert!(audit_trace(&p, &t).is_empty());
+    }
+
+    #[test]
+    fn io_replay_is_flagged_even_when_ordered() {
+        let mut b = ProgramBuilder::new();
+        let io = b.push(
+            OpKind::IoAction { label: "log".into(), compute_us: 1 },
+            vec![ArgRef::Const(Value::Token)],
+            2,
+            CostEst::ZERO,
+            "io",
+        );
+        b.mark_output(ArgRef::out(io, 1));
+        let p = b.build().unwrap();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(0, 0, 20, 30));
+        let races = audit_trace(&p, &t);
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].kind, RaceKind::IoReplay);
+    }
+
+    #[test]
+    fn use_after_eviction_flagged_unless_rematerialized() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 1, 50, 60));
+        t.evictions.push(EvictionEvent { task: TaskId(0), at_ns: 20 });
+        let races = audit_trace(&p, &t);
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].kind, RaceKind::UseAfterEviction);
+
+        // re-materialize between eviction and consumption: clean
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(0, 0, 25, 30)); // re-execution after the eviction
+        t.push(ev(1, 1, 50, 60));
+        t.evictions.push(EvictionEvent { task: TaskId(0), at_ns: 20 });
+        assert!(audit_trace(&p, &t).is_empty());
+    }
+
+    #[test]
+    fn worker_overlap_and_missing_execution_flagged() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 0, 5, 15)); // overlap AND premature
+        let races = audit_trace(&p, &t);
+        let kinds: HashSet<RaceKind> = races.iter().map(|r| r.kind).collect();
+        assert!(kinds.contains(&RaceKind::WorkerOverlap), "{races:?}");
+        assert!(kinds.contains(&RaceKind::PrematureStart), "{races:?}");
+
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        let races = audit_trace(&p, &t);
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].kind, RaceKind::MissingExecution);
+    }
+}

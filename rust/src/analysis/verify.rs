@@ -1,0 +1,914 @@
+//! Layer 2: structural verification of the lowered task IR.
+//!
+//! [`verify_tasks`] re-checks everything `TaskProgram::new` enforces — on a
+//! *raw* task slice, so seeded-fault tests can verify graphs the builder
+//! would refuse — and then goes further than the builder can:
+//!
+//! * **acyclicity** — cycles are reported as cycles (one violation per
+//!   strongly connected component), not as a pile of forward-edge errors;
+//! * **dangling refs** — task and output-index references, including the
+//!   program outputs;
+//! * **token chain** — IO tasks have exactly the (value, token) output
+//!   pair, exactly one token input, and form a single linear chain;
+//! * **shape consistency** — an abstract interpretation over tensor
+//!   shapes (unknowns stay unknown; known shapes must agree across every
+//!   edge: matmul inner dims, concat tails, mean/add arities, shard row
+//!   algebra);
+//! * **shard families** — the partition rewrite's invariants: consistent
+//!   `of`, contiguous leaf indices, exactly one combine root per family,
+//!   no family-internal value escaping except through the root, combine
+//!   arity within `--combine-arity`, slice ops agreeing with their
+//!   annotations, and gen-shard row ranges tiling `[0, n)` exactly;
+//! * **cache-key determinism** — two encodings of the same op must be
+//!   byte-equal, and two *different* ops must never share an encoding
+//!   (the result cache's keys hash `codec::encode_op`; an aliased or
+//!   unstable encoding silently poisons the cache).
+//!
+//! Wired in automatically after lowering and after the partition rewrite
+//! in debug builds, and behind `--verify-ir` (engine entry) in release.
+
+use std::collections::HashMap;
+
+use crate::cluster::codec::encode_op;
+use crate::ir::task::{ArgRef, CombineKind, OpKind, ShardRole, TaskId, TaskSpec, Value};
+use crate::ir::TaskProgram;
+
+/// What kind of invariant a [`Violation`] breaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ViolationKind {
+    /// Task ids are not dense/positional.
+    NonDenseId,
+    /// A task declares zero outputs.
+    ZeroOutputs,
+    /// An arg or program output references a task that does not exist.
+    DanglingTask,
+    /// An arg or program output references an out-of-range output index.
+    DanglingOutput,
+    /// A reference to a non-earlier task that is *not* part of a cycle.
+    ForwardRef,
+    /// A dependency cycle (reported once per strongly connected component).
+    Cycle,
+    /// IO token chain malformed (outputs, token inputs, or chain shape).
+    TokenChain,
+    /// Tensor shapes disagree across an edge.
+    ShapeMismatch,
+    /// A shard-family invariant from the partition rewrite is broken.
+    ShardFamily,
+    /// An op encoding is unstable or aliases a different op's encoding.
+    CacheKeyAlias,
+}
+
+/// One broken invariant, anchored to a task where possible.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    pub task: Option<TaskId>,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.task {
+            Some(t) => write!(f, "[{:?}] {}: {}", self.kind, t, self.msg),
+            None => write!(f, "[{:?}] {}", self.kind, self.msg),
+        }
+    }
+}
+
+/// Verifier options.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyOpts {
+    /// When set, combine tree nodes may take at most this many args
+    /// (the `--combine-arity` the rewrite was configured with).
+    pub combine_arity: Option<usize>,
+}
+
+/// Verify a validated program with default options.
+pub fn verify_program(p: &TaskProgram) -> Vec<Violation> {
+    verify_tasks(p.tasks(), p.outputs(), &VerifyOpts::default())
+}
+
+/// Verify a validated program with explicit options.
+pub fn verify_program_with(p: &TaskProgram, opts: &VerifyOpts) -> Vec<Violation> {
+    verify_tasks(p.tasks(), p.outputs(), opts)
+}
+
+/// Abstract value flowing along one edge during shape checking.
+#[derive(Clone, Debug, PartialEq)]
+enum Abs {
+    /// Known tensor shape (`[]` = scalar).
+    Tensor(Vec<usize>),
+    Unit,
+    Token,
+    Unknown,
+}
+
+fn abs_of_value(v: &Value) -> Abs {
+    match v {
+        Value::Tensor(t) => Abs::Tensor(t.shape().to_vec()),
+        Value::Unit => Abs::Unit,
+        Value::Token => Abs::Token,
+    }
+}
+
+/// Verify a raw task slice + designated outputs. This is the full pass;
+/// the `verify_program*` wrappers just feed it a validated program.
+pub fn verify_tasks(tasks: &[TaskSpec], outputs: &[ArgRef], opts: &VerifyOpts) -> Vec<Violation> {
+    let mut v: Vec<Violation> = Vec::new();
+    let n = tasks.len();
+    let at = |kind, task: Option<TaskId>, msg: String| Violation { kind, task, msg };
+
+    // -- structure: dense ids, nonzero outputs, reference validity --------
+    for (i, t) in tasks.iter().enumerate() {
+        if t.id.index() != i {
+            v.push(at(
+                ViolationKind::NonDenseId,
+                Some(t.id),
+                format!("task id {} at position {i} (ids must be dense and positional)", t.id),
+            ));
+        }
+        if t.n_outputs == 0 {
+            v.push(at(
+                ViolationKind::ZeroOutputs,
+                Some(t.id),
+                "declares zero outputs".into(),
+            ));
+        }
+        for a in &t.args {
+            if let ArgRef::Output { task, index } = a {
+                if task.index() >= n {
+                    v.push(at(
+                        ViolationKind::DanglingTask,
+                        Some(t.id),
+                        format!("references non-existent task {task}"),
+                    ));
+                } else if *index >= tasks[task.index()].n_outputs {
+                    v.push(at(
+                        ViolationKind::DanglingOutput,
+                        Some(t.id),
+                        format!(
+                            "reads output {index} of {task}, which has {}",
+                            tasks[task.index()].n_outputs
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for o in outputs {
+        if let ArgRef::Output { task, index } = o {
+            if task.index() >= n {
+                v.push(at(
+                    ViolationKind::DanglingTask,
+                    None,
+                    format!("program output references non-existent task {task}"),
+                ));
+            } else if *index >= tasks[task.index()].n_outputs {
+                v.push(at(
+                    ViolationKind::DanglingOutput,
+                    None,
+                    format!(
+                        "program output reads output {index} of {task}, which has {}",
+                        tasks[task.index()].n_outputs
+                    ),
+                ));
+            }
+        }
+    }
+
+    // -- acyclicity -------------------------------------------------------
+    // Dependency edges over positions (valid refs only). A well-formed
+    // program has only backward edges; forward edges either close a cycle
+    // (report the cycle once) or are plain forward refs.
+    let deps_of = |i: usize| -> Vec<usize> {
+        let mut d: Vec<usize> = tasks[i]
+            .args
+            .iter()
+            .filter_map(|a| a.dep())
+            .map(|t| t.index())
+            .filter(|&t| t < n)
+            .collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    };
+    let scc = scc_ids(n, &deps_of);
+    let mut scc_members: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, &c) in scc.iter().enumerate() {
+        scc_members.entry(c).or_default().push(i);
+    }
+    let mut cyclic: Vec<&Vec<usize>> = scc_members
+        .values()
+        .filter(|m| m.len() > 1 || deps_of(m[0]).contains(&m[0]))
+        .collect();
+    cyclic.sort_by_key(|m| m[0]);
+    for members in cyclic {
+        let path = members
+            .iter()
+            .map(|&i| tasks[i].id.to_string())
+            .collect::<Vec<_>>()
+            .join(" -> ");
+        v.push(at(
+            ViolationKind::Cycle,
+            Some(tasks[members[0]].id),
+            format!("dependency cycle: {path}"),
+        ));
+    }
+    for (i, t) in tasks.iter().enumerate() {
+        for d in deps_of(i) {
+            if d >= i && scc[d] != scc[i] {
+                v.push(at(
+                    ViolationKind::ForwardRef,
+                    Some(t.id),
+                    format!("references non-earlier task {} (forward edge)", tasks[d].id),
+                ));
+            }
+        }
+    }
+
+    // -- token chain ------------------------------------------------------
+    let is_io = |i: usize| !tasks[i].op.is_pure();
+    let mut chain_starts = 0usize;
+    for (i, t) in tasks.iter().enumerate() {
+        if !is_io(i) {
+            continue;
+        }
+        if t.n_outputs != 2 {
+            v.push(at(
+                ViolationKind::TokenChain,
+                Some(t.id),
+                format!("IO task must have 2 outputs (value, token), has {}", t.n_outputs),
+            ));
+        }
+        let token_sources: Vec<&ArgRef> = t
+            .args
+            .iter()
+            .filter(|a| match a {
+                ArgRef::Const(Value::Token) => true,
+                ArgRef::Output { task, index } => {
+                    *index == 1 && task.index() < n && !tasks[task.index()].op.is_pure()
+                }
+                _ => false,
+            })
+            .collect();
+        if token_sources.len() != 1 {
+            v.push(at(
+                ViolationKind::TokenChain,
+                Some(t.id),
+                format!("IO task has {} token inputs; exactly one required", token_sources.len()),
+            ));
+        } else if matches!(token_sources[0], ArgRef::Const(Value::Token)) {
+            chain_starts += 1;
+        }
+    }
+    if chain_starts > 1 {
+        v.push(at(
+            ViolationKind::TokenChain,
+            None,
+            format!("{chain_starts} IO tasks start a token chain; IO must form a single chain"),
+        ));
+    }
+    // each IO task's token output feeds at most one IO successor
+    let mut token_consumers: HashMap<usize, usize> = HashMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        if !is_io(i) {
+            continue;
+        }
+        for a in &t.args {
+            if let ArgRef::Output { task, index } = a {
+                if *index == 1 && task.index() < n && !tasks[task.index()].op.is_pure() {
+                    *token_consumers.entry(task.index()).or_default() += 1;
+                }
+            }
+        }
+    }
+    let mut forked: Vec<usize> = token_consumers
+        .iter()
+        .filter(|(_, &c)| c > 1)
+        .map(|(&p, _)| p)
+        .collect();
+    forked.sort_unstable();
+    for p in forked {
+        v.push(at(
+            ViolationKind::TokenChain,
+            Some(tasks[p].id),
+            format!(
+                "token output consumed by {} IO tasks; the chain must be linear",
+                token_consumers[&p]
+            ),
+        ));
+    }
+
+    // -- shape consistency ------------------------------------------------
+    shape_pass(tasks, &mut v);
+
+    // -- shard families ---------------------------------------------------
+    family_pass(tasks, outputs, opts, &mut v);
+
+    // -- cache-key determinism lint ---------------------------------------
+    let mut by_encoding: HashMap<Vec<u8>, usize> = HashMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        let e1 = encode_op(&t.op);
+        let e2 = encode_op(&t.op);
+        if e1 != e2 {
+            v.push(at(
+                ViolationKind::CacheKeyAlias,
+                Some(t.id),
+                format!("op encoding is not deterministic ({})", t.op.label()),
+            ));
+            continue;
+        }
+        match by_encoding.get(&e1) {
+            Some(&j) if tasks[j].op != t.op => {
+                v.push(at(
+                    ViolationKind::CacheKeyAlias,
+                    Some(t.id),
+                    format!(
+                        "op encoding aliases {}: `{}` and `{}` encode identically",
+                        tasks[j].id,
+                        tasks[j].op.label(),
+                        t.op.label()
+                    ),
+                ));
+            }
+            Some(_) => {}
+            None => {
+                by_encoding.insert(e1, i);
+            }
+        }
+    }
+
+    v
+}
+
+/// Kosaraju strongly-connected components over `n` nodes; `deps_of` gives
+/// the forward adjacency (task → dependency). Returns a component id per
+/// node.
+fn scc_ids(n: usize, deps_of: &dyn Fn(usize) -> Vec<usize>) -> Vec<usize> {
+    // pass 1: finish order on the dep graph
+    let mut visited = vec![false; n];
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    for s in 0..n {
+        if visited[s] {
+            continue;
+        }
+        // iterative DFS with an explicit phase marker
+        let mut stack: Vec<(usize, bool)> = vec![(s, false)];
+        while let Some((u, processed)) = stack.pop() {
+            if processed {
+                order.push(u);
+                continue;
+            }
+            if visited[u] {
+                continue;
+            }
+            visited[u] = true;
+            stack.push((u, true));
+            for d in deps_of(u) {
+                if !visited[d] {
+                    stack.push((d, false));
+                }
+            }
+        }
+    }
+    // reverse graph
+    let mut rev: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for u in 0..n {
+        for d in deps_of(u) {
+            rev[d].push(u);
+        }
+    }
+    // pass 2: components in reverse finish order
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0usize;
+    for &s in order.iter().rev() {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        let mut stack = vec![s];
+        while let Some(u) = stack.pop() {
+            if comp[u] != usize::MAX {
+                continue;
+            }
+            comp[u] = next;
+            for &w in &rev[u] {
+                if comp[w] == usize::MAX {
+                    stack.push(w);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+/// Abstract shape interpretation: known shapes must agree; unknowns are
+/// never flagged (artifacts and IO values are opaque).
+fn shape_pass(tasks: &[TaskSpec], v: &mut Vec<Violation>) {
+    let n = tasks.len();
+    let mut outs: Vec<Vec<Abs>> = Vec::with_capacity(n);
+    let mut push = |v: &mut Vec<Violation>, id: TaskId, msg: String| {
+        v.push(Violation { kind: ViolationKind::ShapeMismatch, task: Some(id), msg })
+    };
+    for (i, t) in tasks.iter().enumerate() {
+        let arg = |k: usize| -> Abs {
+            match t.args.get(k) {
+                Some(ArgRef::Const(val)) => abs_of_value(val),
+                Some(ArgRef::Output { task, index }) => {
+                    // forward/dangling refs were reported above; shape-wise
+                    // they are opaque
+                    if task.index() < i {
+                        outs[task.index()].get(*index).cloned().unwrap_or(Abs::Unknown)
+                    } else {
+                        Abs::Unknown
+                    }
+                }
+                None => Abs::Unknown,
+            }
+        };
+        let args: Vec<Abs> = (0..t.args.len()).map(arg).collect();
+        let tensor_args = || -> Vec<Option<&Vec<usize>>> {
+            args.iter()
+                .map(|a| match a {
+                    Abs::Tensor(s) => Some(s),
+                    _ => None,
+                })
+                .collect()
+        };
+        let mut out: Vec<Abs> = vec![Abs::Unknown; t.n_outputs.max(1)];
+        match &t.op {
+            OpKind::Artifact { .. } => {}
+            OpKind::HostMatGen { n } => out[0] = Abs::Tensor(vec![*n, *n]),
+            OpKind::HostMatGenShard { n, row0, rows } => {
+                if row0 + rows > *n || *rows == 0 {
+                    push(v, t.id, format!("gen shard rows [{row0}, {}) outside matrix of {n} rows", row0 + rows));
+                }
+                out[0] = Abs::Tensor(vec![*rows, *n]);
+            }
+            OpKind::HostMatMul => {
+                if t.args.len() != 2 {
+                    push(v, t.id, format!("matmul takes 2 args, got {}", t.args.len()));
+                }
+                for (k, a) in args.iter().enumerate() {
+                    if matches!(a, Abs::Unit | Abs::Token) {
+                        push(v, t.id, format!("matmul arg {k} is {a:?}, not a tensor"));
+                    }
+                }
+                let ta = tensor_args();
+                if let (Some(Some(a)), Some(Some(b))) = (ta.first(), ta.get(1)) {
+                    if a.len() != 2 || b.len() != 2 {
+                        push(v, t.id, format!("matmul args must be rank-2, got {a:?} × {b:?}"));
+                    } else if a[1] != b[0] {
+                        push(v, t.id, format!("matmul inner dims disagree: {a:?} × {b:?}"));
+                    } else {
+                        out[0] = Abs::Tensor(vec![a[0], b[1]]);
+                    }
+                } else if let Some(Some(a)) = ta.first() {
+                    if a.len() == 2 {
+                        // rhs unknown: rows are still known
+                        out[0] = Abs::Unknown;
+                    }
+                }
+            }
+            OpKind::HostMatSum => {
+                if let Some(Abs::Unit | Abs::Token) = args.first() {
+                    push(v, t.id, "matsum arg is not a tensor".into());
+                }
+                out[0] = Abs::Tensor(vec![]);
+            }
+            OpKind::Synthetic { .. } => out[0] = Abs::Unit,
+            OpKind::IoAction { .. } => {
+                // value output opaque; token output is the RealWorld token
+                if t.n_outputs >= 2 {
+                    out[1] = Abs::Token;
+                }
+            }
+            OpKind::Combine(kind) => match kind {
+                CombineKind::MeanTensors => {
+                    let known: Vec<&Vec<usize>> = tensor_args().into_iter().flatten().collect();
+                    if let Some(first) = known.first() {
+                        if known.iter().any(|s| s != first) {
+                            push(v, t.id, format!("mean over differing shapes: {known:?}"));
+                        } else {
+                            out[0] = Abs::Tensor((*first).clone());
+                        }
+                    }
+                }
+                CombineKind::AddScalars => {
+                    for (k, a) in args.iter().enumerate() {
+                        if let Abs::Tensor(s) = a {
+                            if !s.is_empty() {
+                                push(v, t.id, format!("add-scalars arg {k} has shape {s:?}, expected scalar"));
+                            }
+                        }
+                    }
+                    out[0] = Abs::Tensor(vec![]);
+                }
+                CombineKind::Select(idx) => {
+                    if *idx >= t.args.len() {
+                        push(v, t.id, format!("select({idx}) of {} args", t.args.len()));
+                    } else {
+                        out[0] = args[*idx].clone();
+                    }
+                }
+                CombineKind::Identity => {
+                    if t.n_outputs != t.args.len() {
+                        push(v, t.id, format!("identity regroup: {} args but {} outputs", t.args.len(), t.n_outputs));
+                    }
+                    for (k, a) in args.iter().enumerate().take(t.n_outputs) {
+                        out[k] = a.clone();
+                    }
+                }
+                CombineKind::ShardRows { index, of } => {
+                    if index >= of || *of == 0 {
+                        push(v, t.id, format!("shard-rows index {index} of {of}"));
+                    }
+                    if t.args.len() != 1 {
+                        push(v, t.id, format!("shard-rows takes 1 arg, got {}", t.args.len()));
+                    }
+                    match args.first() {
+                        Some(Abs::Tensor(s)) if !s.is_empty() && *of > 0 && index < of => {
+                            let m = s[0];
+                            let row0 = index * m / of;
+                            let rows = (index + 1) * m / of - row0;
+                            let mut sh = s.clone();
+                            sh[0] = rows;
+                            out[0] = Abs::Tensor(sh);
+                        }
+                        Some(Abs::Tensor(s)) if s.is_empty() => {
+                            push(v, t.id, "shard-rows of a scalar".into());
+                        }
+                        Some(Abs::Unit | Abs::Token) => {
+                            push(v, t.id, "shard-rows arg is not a tensor".into());
+                        }
+                        _ => {}
+                    }
+                }
+                CombineKind::Concat => {
+                    let known: Vec<&Vec<usize>> = tensor_args().into_iter().flatten().collect();
+                    for (k, a) in args.iter().enumerate() {
+                        if matches!(a, Abs::Unit | Abs::Token) {
+                            push(v, t.id, format!("concat arg {k} is {a:?}, not a tensor"));
+                        }
+                    }
+                    if !known.is_empty() {
+                        let tail = &known[0][1..];
+                        if known.iter().any(|s| s.is_empty() || &s[1..] != tail) {
+                            push(v, t.id, format!("concat over incompatible shapes: {known:?}"));
+                        } else if known.len() == args.len() {
+                            let rows: usize = known.iter().map(|s| s[0]).sum();
+                            let mut sh = known[0].clone();
+                            sh[0] = rows;
+                            out[0] = Abs::Tensor(sh);
+                        }
+                    }
+                }
+                CombineKind::TreeReduce => {
+                    let mut saw_unit = false;
+                    let mut saw_scalar = false;
+                    for (k, a) in args.iter().enumerate() {
+                        match a {
+                            Abs::Unit => saw_unit = true,
+                            Abs::Tensor(s) if s.is_empty() => saw_scalar = true,
+                            Abs::Tensor(s) => push(
+                                v,
+                                t.id,
+                                format!("tree-reduce arg {k} has shape {s:?}; only scalars or Unit reduce"),
+                            ),
+                            Abs::Token => push(v, t.id, format!("tree-reduce arg {k} is a token")),
+                            Abs::Unknown => {}
+                        }
+                    }
+                    if saw_unit && saw_scalar {
+                        push(v, t.id, "tree-reduce mixes Unit and scalar args".into());
+                    } else if saw_unit {
+                        out[0] = Abs::Unit;
+                    } else if saw_scalar {
+                        out[0] = Abs::Tensor(vec![]);
+                    }
+                }
+            },
+        }
+        out.truncate(t.n_outputs.max(1));
+        outs.push(out);
+    }
+}
+
+/// Shard-family invariants from the partition rewrite.
+fn family_pass(tasks: &[TaskSpec], outputs: &[ArgRef], opts: &VerifyOpts, v: &mut Vec<Violation>) {
+    let n = tasks.len();
+    let mut fams: HashMap<u32, Vec<usize>> = HashMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        if let Some(s) = &t.shard {
+            fams.entry(s.family).or_default().push(i);
+        }
+    }
+    if fams.is_empty() {
+        return;
+    }
+    // consumer map over valid refs, plus program-output reads
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut is_program_output = vec![false; n];
+    for (i, t) in tasks.iter().enumerate() {
+        for a in &t.args {
+            if let Some(d) = a.dep() {
+                if d.index() < n {
+                    consumers[d.index()].push(i);
+                }
+            }
+        }
+    }
+    for o in outputs {
+        if let Some(d) = o.dep() {
+            if d.index() < n {
+                is_program_output[d.index()] = true;
+            }
+        }
+    }
+    let is_tree_node = |i: usize| {
+        matches!(
+            tasks[i].op,
+            OpKind::Combine(CombineKind::Concat) | OpKind::Combine(CombineKind::TreeReduce)
+        ) && tasks[i].shard.is_some()
+    };
+    let mut fam_ids: Vec<u32> = fams.keys().copied().collect();
+    fam_ids.sort_unstable();
+    for fam in fam_ids {
+        let members = &fams[&fam];
+        let push = |v: &mut Vec<Violation>, task: Option<TaskId>, msg: String| {
+            v.push(Violation { kind: ViolationKind::ShardFamily, task, msg })
+        };
+        // consistent `of`
+        let ofs: Vec<u32> = {
+            let mut o: Vec<u32> = members.iter().map(|&i| tasks[i].shard.unwrap().of).collect();
+            o.sort_unstable();
+            o.dedup();
+            o
+        };
+        if ofs.len() != 1 {
+            push(v, None, format!("family {fam}: members disagree on shard count: {ofs:?}"));
+            continue;
+        }
+        let of = ofs[0] as usize;
+        // contiguous leaf indices
+        let mut leaf_idx: Vec<u32> = members
+            .iter()
+            .filter(|&&i| tasks[i].shard.unwrap().role == ShardRole::Leaf)
+            .map(|&i| tasks[i].shard.unwrap().index)
+            .collect();
+        leaf_idx.sort_unstable();
+        let expect: Vec<u32> = (0..of as u32).collect();
+        if leaf_idx != expect {
+            push(
+                v,
+                None,
+                format!("family {fam}: leaf shard indices {leaf_idx:?} are not exactly 0..{of}"),
+            );
+        }
+        // exactly one combine root; nothing else escapes the family
+        let in_family = |i: usize| tasks[i].shard.map(|s| s.family) == Some(fam);
+        let roots: Vec<usize> = members
+            .iter()
+            .copied()
+            .filter(|&i| !consumers[i].iter().any(|&c| in_family(c)))
+            .collect();
+        match roots.as_slice() {
+            [root] => {
+                if !is_tree_node(*root) {
+                    push(
+                        v,
+                        Some(tasks[*root].id),
+                        format!(
+                            "family {fam}: root is `{}`, not a combine tree node",
+                            tasks[*root].op.label()
+                        ),
+                    );
+                }
+                for &m in members {
+                    if m == *root {
+                        continue;
+                    }
+                    let escapes = consumers[m].iter().any(|&c| !in_family(c));
+                    if escapes || is_program_output[m] {
+                        push(
+                            v,
+                            Some(tasks[m].id),
+                            format!(
+                                "family {fam}: non-root member is read outside the family (the rewrite must be invisible past the combine root)"
+                            ),
+                        );
+                    }
+                }
+            }
+            _ => push(
+                v,
+                None,
+                format!("family {fam}: {} combine roots (expected exactly one)", roots.len()),
+            ),
+        }
+        // combine tree arity + slice-op/annotation agreement
+        for &m in members {
+            let t = &tasks[m];
+            if is_tree_node(m) {
+                if let Some(arity) = opts.combine_arity {
+                    if t.args.len() > arity.max(2) {
+                        push(
+                            v,
+                            Some(t.id),
+                            format!(
+                                "family {fam}: combine node takes {} args, over --combine-arity {arity}",
+                                t.args.len()
+                            ),
+                        );
+                    }
+                }
+                if t.args.is_empty() {
+                    push(v, Some(t.id), format!("family {fam}: combine node with no args"));
+                }
+            }
+            if let OpKind::Combine(CombineKind::ShardRows { index, of: op_of }) = &t.op {
+                let s = t.shard.unwrap();
+                if *index != s.index as usize || *op_of != s.of as usize {
+                    push(
+                        v,
+                        Some(t.id),
+                        format!(
+                            "family {fam}: slice op shard-rows {index}/{op_of} disagrees with annotation {}/{}",
+                            s.index, s.of
+                        ),
+                    );
+                }
+            }
+        }
+        // gen-shard row ranges must tile [0, n) exactly
+        let gen_leaves: Vec<&TaskSpec> = members
+            .iter()
+            .map(|&i| &tasks[i])
+            .filter(|t| {
+                matches!(t.op, OpKind::HostMatGenShard { .. })
+                    && t.shard.unwrap().role == ShardRole::Leaf
+            })
+            .collect();
+        if !gen_leaves.is_empty() {
+            let mut ranges: Vec<(usize, usize, usize)> = gen_leaves
+                .iter()
+                .map(|t| match t.op {
+                    OpKind::HostMatGenShard { n, row0, rows } => (row0, rows, n),
+                    _ => unreachable!(),
+                })
+                .collect();
+            ranges.sort_unstable();
+            let mn = ranges[0].2;
+            let mut cursor = 0usize;
+            let mut ok = ranges.iter().all(|&(_, _, rn)| rn == mn);
+            for &(row0, rows, _) in &ranges {
+                if row0 != cursor {
+                    ok = false;
+                    break;
+                }
+                cursor += rows;
+            }
+            if !ok || cursor != mn {
+                push(
+                    v,
+                    None,
+                    format!(
+                        "family {fam}: gen-shard row ranges {:?} do not tile [0, {mn}) exactly",
+                        ranges.iter().map(|&(a, b, _)| (a, a + b)).collect::<Vec<_>>()
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::CostEst;
+    use crate::ir::ProgramBuilder;
+    use crate::partition::{partition_program, PartitionConfig};
+    use crate::workload::matrix_program;
+
+    fn spec(id: u32, op: OpKind, args: Vec<ArgRef>, n_outputs: usize) -> TaskSpec {
+        TaskSpec {
+            id: TaskId(id),
+            op,
+            args,
+            n_outputs,
+            est: CostEst::ZERO,
+            label: format!("t{id}"),
+            shard: None,
+        }
+    }
+
+    fn spin() -> OpKind {
+        OpKind::Synthetic { compute_us: 1 }
+    }
+
+    #[test]
+    fn clean_matrix_program_verifies() {
+        let p = matrix_program(3, 16, false, None);
+        assert!(verify_program(&p).is_empty());
+    }
+
+    #[test]
+    fn partitioned_program_verifies_with_arity() {
+        let p = matrix_program(2, 16, false, None);
+        let cfg = PartitionConfig::aggressive(4);
+        let pp = partition_program(&p, &cfg).unwrap();
+        assert!(pp.is_rewritten());
+        let opts = VerifyOpts { combine_arity: Some(cfg.combine_arity) };
+        let violations = verify_program_with(&pp.program, &opts);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn injected_cycle_is_exactly_one_cycle_violation() {
+        let t0 = spec(0, spin(), vec![ArgRef::out(TaskId(1), 0)], 1);
+        let t1 = spec(1, spin(), vec![ArgRef::out(TaskId(0), 0)], 1);
+        let v = verify_tasks(&[t0, t1], &[], &VerifyOpts::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].kind, ViolationKind::Cycle);
+    }
+
+    #[test]
+    fn dangling_ref_is_exactly_one_violation() {
+        let t0 = spec(0, spin(), vec![ArgRef::out(TaskId(5), 0)], 1);
+        let v = verify_tasks(&[t0], &[], &VerifyOpts::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].kind, ViolationKind::DanglingTask);
+    }
+
+    #[test]
+    fn plain_forward_edge_is_forward_ref() {
+        let t0 = spec(0, spin(), vec![ArgRef::out(TaskId(1), 0)], 1);
+        let t1 = spec(1, spin(), vec![], 1);
+        let v = verify_tasks(&[t0, t1], &[], &VerifyOpts::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].kind, ViolationKind::ForwardRef);
+    }
+
+    #[test]
+    fn shape_mismatch_on_matmul_inner_dims() {
+        let mut b = ProgramBuilder::new();
+        let g1 = b.push(OpKind::HostMatGen { n: 8 }, vec![], 1, CostEst::ZERO, "a");
+        let g2 = b.push(OpKind::HostMatGen { n: 16 }, vec![], 1, CostEst::ZERO, "b");
+        let mm = b.push(
+            OpKind::HostMatMul,
+            vec![ArgRef::out(g1, 0), ArgRef::out(g2, 0)],
+            1,
+            CostEst::ZERO,
+            "c",
+        );
+        b.mark_output(ArgRef::out(mm, 0));
+        let p = b.build().unwrap();
+        let v = verify_program(&p);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].kind, ViolationKind::ShapeMismatch);
+        assert!(v[0].msg.contains("inner dims"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn tampered_shard_index_is_exactly_one_family_violation() {
+        let p = matrix_program(1, 16, false, None);
+        let pp = partition_program(&p, &PartitionConfig::aggressive(4)).unwrap();
+        let mut tasks = pp.program.tasks().to_vec();
+        // duplicate a gen-shard leaf index
+        let leaf = tasks
+            .iter()
+            .position(|t| {
+                matches!(t.op, OpKind::HostMatGenShard { .. })
+                    && t.shard.map(|s| s.index) == Some(1)
+            })
+            .unwrap();
+        tasks[leaf].shard.as_mut().unwrap().index = 0;
+        let v = verify_tasks(&tasks, pp.program.outputs(), &VerifyOpts::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].kind, ViolationKind::ShardFamily);
+        assert!(v[0].msg.contains("not exactly 0..4"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn broken_token_chain_detected() {
+        // IO task with no token input and a single output
+        let io = spec(
+            0,
+            OpKind::IoAction { label: "log".into(), compute_us: 1 },
+            vec![],
+            1,
+        );
+        let v = verify_tasks(&[io], &[], &VerifyOpts::default());
+        let kinds: Vec<ViolationKind> = v.iter().map(|x| x.kind).collect();
+        assert!(kinds.iter().all(|k| *k == ViolationKind::TokenChain), "{v:?}");
+        assert_eq!(kinds.len(), 2, "missing output pair + missing token input: {v:?}");
+    }
+
+    #[test]
+    fn zero_output_task_detected() {
+        let t0 = spec(0, spin(), vec![], 0);
+        let v = verify_tasks(&[t0], &[], &VerifyOpts::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].kind, ViolationKind::ZeroOutputs);
+    }
+}

@@ -83,6 +83,11 @@ pub struct RunConfig {
     /// Simulator-only: model a warm cache at this hit rate (the real
     /// engines measure their hit rate instead of assuming one).
     pub sim_cache_hit_rate: Option<f64>,
+    /// Verify the task IR before and after the partition rewrite and audit
+    /// the schedule trace after the run (`--verify-ir`). Debug builds
+    /// always verify; this flag opts release builds in (off by default so
+    /// benchmark numbers exclude verifier overhead).
+    pub verify_ir: bool,
 }
 
 impl Default for RunConfig {
@@ -99,6 +104,7 @@ impl Default for RunConfig {
             cache: CacheConfig::default(),
             partition: PartitionConfig::default(),
             sim_cache_hit_rate: None,
+            verify_ir: false,
         }
     }
 }
@@ -160,6 +166,13 @@ impl RunConfig {
                 }
                 self.partition.combine_arity = a;
             }
+            "verify_ir" => {
+                self.verify_ir = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    _ => bail!("bad --verify-ir value {value:?} (on | off)"),
+                }
+            }
             "shard_artifacts" => {
                 for name in value.split(',').filter(|s| !s.is_empty()) {
                     self.partition.allow_artifact(name.trim());
@@ -210,6 +223,13 @@ mod tests {
         assert_eq!(c.placement, PlacementPolicy::LocalityAware);
         assert_eq!(c.pipeline_depth, 5);
         assert!(c.set("bogus", "1").is_err());
+
+        assert!(!c.verify_ir, "IR verification is opt-in for release runs");
+        c.set("verify_ir", "on").unwrap();
+        assert!(c.verify_ir);
+        c.set("verify-ir", "off").unwrap(); // hyphen form accepted
+        assert!(!c.verify_ir);
+        assert!(c.set("verify_ir", "maybe").is_err());
     }
 
     #[test]

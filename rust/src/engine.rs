@@ -54,15 +54,65 @@ pub fn run_with_cache(
     executor: Arc<dyn Executor>,
     cache: Option<Arc<ResultCache>>,
 ) -> Result<RunResult> {
+    // Static analysis at the engine boundary: debug builds always verify;
+    // release builds opt in with `--verify-ir` so bench numbers exclude
+    // verifier overhead.
+    let verify = cfg.verify_ir || cfg!(debug_assertions);
+    if verify {
+        fail_on_violations("input program", crate::analysis::verify_program(program))?;
+    }
     // Auto-sharding rewrite: every engine runs the same partitioned
     // program, so sharded results stay engine-portable and bit-identical.
     let partitioned;
     let program = if cfg.partition.enabled() {
         partitioned = crate::partition::partition_program(program, &cfg.partition)?;
+        if verify {
+            let opts = crate::analysis::VerifyOpts {
+                combine_arity: Some(cfg.partition.combine_arity),
+            };
+            fail_on_violations(
+                "partitioned program",
+                crate::analysis::verify_program_with(&partitioned.program, &opts),
+            )?;
+        }
         &partitioned.program
     } else {
         program
     };
+    let result = dispatch(program, cfg, executor, cache)?;
+    if verify {
+        let races = crate::analysis::audit_trace(program, &result.trace);
+        if !races.is_empty() {
+            anyhow::bail!(
+                "trace race audit found {} violation(s): {}",
+                races.len(),
+                races.iter().map(|r| r.to_string()).collect::<Vec<_>>().join("; ")
+            );
+        }
+    }
+    Ok(result)
+}
+
+fn fail_on_violations(
+    stage: &str,
+    violations: Vec<crate::analysis::Violation>,
+) -> Result<()> {
+    if violations.is_empty() {
+        return Ok(());
+    }
+    anyhow::bail!(
+        "IR verification of the {stage} found {} violation(s): {}",
+        violations.len(),
+        violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("; ")
+    )
+}
+
+fn dispatch(
+    program: &TaskProgram,
+    cfg: &RunConfig,
+    executor: Arc<dyn Executor>,
+    cache: Option<Arc<ResultCache>>,
+) -> Result<RunResult> {
     match cfg.engine {
         Engine::Single => run_single_cached(program, executor.as_ref(), cache.as_deref()),
         Engine::Smp { threads } => run_smp_cached(program, executor, threads, cache),
@@ -161,6 +211,23 @@ mod tests {
         cfg.set("shard_min_bytes", "1").unwrap();
         let r = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
         assert!(r.trace.events.len() > p.len());
+    }
+
+    #[test]
+    fn verify_ir_enabled_runs_clean_on_all_four_engines() {
+        // `--verify-ir` on + partitioning: the pre-rewrite program, the
+        // partitioned program, and the resulting schedule trace must all
+        // pass the analysis layers with zero violations, on every engine.
+        let p = matrix_program(2, 12, false, None);
+        for engine in ["single", "smp:2", "cluster:2", "sim:2"] {
+            let mut cfg = RunConfig::default();
+            cfg.set("engine", engine).unwrap();
+            cfg.set("verify_ir", "on").unwrap();
+            cfg.set("partitions", "3").unwrap();
+            cfg.set("shard_min_bytes", "1").unwrap();
+            let r = run(&p, &cfg, Arc::new(HostExecutor)).unwrap();
+            assert!(!r.trace.events.is_empty(), "{engine}");
+        }
     }
 
     #[test]

@@ -1,12 +1,40 @@
 //! Diagnostics: errors with source spans, rendered with a caret line.
+//!
+//! A [`Diagnostic`] carries a [`Severity`] so one checking pass can report
+//! hard errors, warnings (e.g. a dead `let`-binding), and attached notes
+//! (e.g. the call chain that launders IO through a "pure" signature).
+//! [`render_all`] renders a batch in source order, keeping the caret line
+//! per entry.
 
 use super::span::Span;
 
-/// A frontend error (lex, parse, type, or lowering) tied to a span.
+/// How serious a diagnostic is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Rejects the program.
+    Error,
+    /// Suspicious but accepted (fatal under `--deny-warnings`).
+    Warning,
+    /// Supporting context attached to a preceding error or warning.
+    Note,
+}
+
+impl Severity {
+    fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Note => "note",
+        }
+    }
+}
+
+/// A frontend message (lex, parse, type, or lowering) tied to a span.
 #[derive(Clone, Debug)]
 pub struct Diagnostic {
     pub msg: String,
     pub span: Span,
+    pub severity: Severity,
 }
 
 impl std::fmt::Display for Diagnostic {
@@ -22,7 +50,28 @@ impl Diagnostic {
         Diagnostic {
             msg: msg.into(),
             span,
+            severity: Severity::Error,
         }
+    }
+
+    pub fn warning(msg: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic {
+            msg: msg.into(),
+            span,
+            severity: Severity::Warning,
+        }
+    }
+
+    pub fn note(msg: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic {
+            msg: msg.into(),
+            span,
+            severity: Severity::Note,
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        self.severity == Severity::Error
     }
 
     /// Render with the offending source line and a caret.
@@ -34,7 +83,7 @@ impl Diagnostic {
     ///   |            ^
     /// ```
     pub fn render(&self, source: &str) -> String {
-        let mut out = format!("error: {} at {}\n", self.msg, self.span);
+        let mut out = format!("{}: {} at {}\n", self.severity.label(), self.msg, self.span);
         if self.span.line == 0 {
             return out;
         }
@@ -56,6 +105,45 @@ impl Diagnostic {
     }
 }
 
+/// Render a batch of diagnostics in source order (notes keep their position
+/// immediately after the diagnostic they annotate — the checker emits them
+/// adjacent and the sort is stable on equal keys only when spans differ, so
+/// notes are ordered with their parent by construction: a note's span is the
+/// call site it explains, which follows the parent error in the source).
+pub fn render_all(diags: &[Diagnostic], source: &str) -> String {
+    let mut order: Vec<usize> = (0..diags.len()).collect();
+    // Stable sort: primary key is source position of the *anchor* — for a
+    // note that's the position of the diagnostic it follows, so error+note
+    // groups travel together.
+    let anchor: Vec<(u32, u32, usize)> = {
+        let mut a = Vec::with_capacity(diags.len());
+        let mut cur = (0u32, 0u32, 0usize);
+        for d in diags {
+            if d.severity != Severity::Note {
+                cur = (d.span.line, d.span.col, d.span.start);
+            }
+            a.push(cur);
+        }
+        a
+    };
+    order.sort_by_key(|&i| anchor[i]);
+    let mut out = String::new();
+    for i in order {
+        out.push_str(&diags[i].render(source));
+    }
+    out
+}
+
+/// Join diagnostic messages into one line each — `Display`-style, for
+/// contexts without the source text at hand.
+pub fn join_msgs(diags: &[Diagnostic]) -> String {
+    diags
+        .iter()
+        .map(|d| format!("{}: {}", d.severity.label(), d))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +158,37 @@ mod tests {
         let caret_line = r.lines().last().unwrap();
         // prefix is "  | " (pad=1 + " | " = 4 chars), then col-1 spaces
         assert_eq!(caret_line.find('^'), Some(4 + 9));
+    }
+
+    #[test]
+    fn severity_prefixes_render() {
+        let d = Diagnostic::warning("`x` is never used", Span::new(0, 1, 1, 1));
+        assert!(d.render("x = 1\n").starts_with("warning:"));
+        let n = Diagnostic::note("required by `f`", Span::new(0, 1, 1, 1));
+        assert!(n.render("x = 1\n").starts_with("note:"));
+    }
+
+    #[test]
+    fn render_all_orders_by_source_position() {
+        let src = "a = 1\nb = 2\nc = 3\n";
+        let d1 = Diagnostic::new("late", Span::new(12, 13, 3, 1));
+        let d2 = Diagnostic::new("early", Span::new(0, 1, 1, 1));
+        let out = render_all(&[d1, d2], src);
+        let early = out.find("early").unwrap();
+        let late = out.find("late").unwrap();
+        assert!(early < late, "{out}");
+    }
+
+    #[test]
+    fn notes_travel_with_their_parent() {
+        let src = "a = 1\nb = 2\nc = 3\n";
+        let err_late = Diagnostic::new("late error", Span::new(12, 13, 3, 1));
+        let note_for_late = Diagnostic::note("its note", Span::new(0, 1, 1, 1));
+        let err_early = Diagnostic::new("early error", Span::new(0, 1, 1, 1));
+        let out = render_all(&[err_late, note_for_late, err_early], src);
+        let early = out.find("early error").unwrap();
+        let late = out.find("late error").unwrap();
+        let note = out.find("its note").unwrap();
+        assert!(early < late && late < note, "{out}");
     }
 }

@@ -30,6 +30,6 @@ pub mod span;
 pub mod token;
 
 pub use ast::{Body, Decl, Expr, Program, Stmt, TypeExpr};
-pub use diag::Diagnostic;
+pub use diag::{join_msgs, render_all, Diagnostic, Severity};
 pub use inline::inline_stmts;
 pub use parser::parse_program;

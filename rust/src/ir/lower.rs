@@ -61,6 +61,21 @@ pub fn lower(checked: &CheckedProgram, registry: &FunctionRegistry) -> Result<Lo
     let program = b
         .build()
         .map_err(|e| Diagnostic::new(format!("internal lowering error: {e}"), Span::DUMMY))?;
+    // Rewrite-boundary verification (debug/test builds): lowering must
+    // produce a verifier-clean program — a violation here is a compiler
+    // bug, not a user error. Release builds verify at the engine boundary
+    // behind `--verify-ir` instead.
+    #[cfg(debug_assertions)]
+    {
+        let violations = crate::analysis::verify_program(&program);
+        if !violations.is_empty() {
+            let msgs: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+            return Err(Diagnostic::new(
+                format!("internal: lowering produced malformed IR: {}", msgs.join("; ")),
+                Span::DUMMY,
+            ));
+        }
+    }
     Ok(Lowered {
         program,
         var_outputs,

@@ -37,8 +37,20 @@
 //! cached; `--cache off` (the default) is exactly the pre-cache engine
 //! behavior. See the "Result cache" section in the top-level README for
 //! keys, purity gating and the CLI flags.
+//!
+//! ## Static analysis
+//!
+//! Everything above *assumes* purity and graph well-formedness; the
+//! [`analysis`] module *checks* them. Layer 1 ([`analysis::purity`]) runs
+//! a transitive purity inference inside `types::check`, Layer 2
+//! ([`analysis::verify`]) re-verifies the task IR after lowering and after
+//! the partition rewrite (automatic in debug builds, `--verify-ir` in
+//! release), and Layer 3 ([`analysis::race`]) audits scheduler traces for
+//! happens-before violations, replayed IO, and use-after-eviction. The
+//! `parhask check` subcommand surfaces all three on the CLI.
 
 pub mod util;
+pub mod analysis;
 pub mod tensor;
 pub mod ir;
 pub mod runtime;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! parhask parse   <file.hs> [--pretty]            parse + dump/pretty-print
+//! parhask check   <file.hs> [--deny-warnings]     static analysis: purity + IR verify
 //! parhask graph   <file.hs> [--entry f] [--dot p] dependency graph + stats
 //! parhask run     <file.hs> [--engine E] [...]    full pipeline on a source file
 //! parhask matrix  [--rounds T] [--size N] [...]   the Figure-2 workload
@@ -20,7 +21,7 @@ use anyhow::{bail, Context, Result};
 use parhask::cli::Args;
 use parhask::config::RunConfig;
 use parhask::depgraph::{analyze, build_depgraph, dot};
-use parhask::frontend::{parse_program, pretty};
+use parhask::frontend::{parse_program, pretty, render_all};
 use parhask::ir::lower::lower;
 use parhask::runtime::RuntimeService;
 use parhask::scheduler::WorkerId;
@@ -44,6 +45,7 @@ fn main() {
     }
     let r = match args.subcommand.as_str() {
         "parse" => cmd_parse(&args),
+        "check" => cmd_check(&args),
         "graph" => cmd_graph(&args),
         "run" => cmd_run(&args),
         "matrix" => cmd_matrix(&args),
@@ -70,6 +72,7 @@ parhask — auto-parallelizer for distributed computing (paper reproduction)
 
 USAGE:
   parhask parse   <file.hs> [--pretty]
+  parhask check   <file.hs> [--entry main] [--deny-warnings] [--partitions K]
   parhask graph   <file.hs> [--entry main] [--dot out.dot]
   parhask run     <file.hs> [--entry main] [--size N] [--engine E] [--trace]
   parhask matrix  [--rounds T] [--size N] [--engine E] [--trace]
@@ -90,6 +93,13 @@ SHARDS:  --partitions K (default 0 = off): split large pure tasks into K
          --shard-artifacts a,b (row-shardable artifact names)
          (pairs best with --placement shard; `matrix --dot out.dot`
          renders the sharded task graph with families grouped)
+CHECK:   parhask check = static analysis without executing: transitive
+         purity inference + lints on the source, then IR verification of
+         the lowered (and, with --partitions K, partitioned) task graph;
+         --deny-warnings turns warnings into failures
+         --verify-ir (run/matrix/serve): verify the task IR before and
+         after the partition rewrite and audit the schedule trace after
+         the run (debug builds always do this; release builds opt in)
 ";
 
 fn read_source(args: &Args) -> Result<(String, String)> {
@@ -130,13 +140,113 @@ fn kind_of(d: &parhask::frontend::Decl) -> &'static str {
     }
 }
 
+/// `parhask check`: the full static-analysis stack without executing
+/// anything. Layer 1 (transitive purity inference + lints) runs inside
+/// `check_program`; Layer 2 (the IR verifier) runs on the lowered task
+/// graph and, when `--partitions K` is given, again on the partitioned
+/// graph with the configured combine arity. Exit status 1 on any error
+/// or violation; `--deny-warnings` promotes warnings to failures.
+fn cmd_check(args: &Args) -> Result<()> {
+    let (path, src) = read_source(args)?;
+    let entry = args.get_or("entry", "main");
+    let size = args.get_usize("size", 256)?;
+    let inline_depth = args.get_usize("inline", 8)?;
+    let cfg = build_config(args)?;
+
+    let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+    let mut checked = match check_program(&program, &entry) {
+        Ok(c) => c,
+        Err(diags) => {
+            eprint!("{}", render_all(&diags, &src));
+            let n = diags.iter().filter(|d| d.is_error()).count();
+            bail!("{path}: check failed with {n} error(s)");
+        }
+    };
+    let n_warnings = checked.warnings.len();
+    if n_warnings > 0 {
+        eprint!("{}", render_all(&checked.warnings, &src));
+        if args.flag("deny-warnings") || args.flag("deny_warnings") {
+            bail!("{path}: {n_warnings} warning(s) denied by --deny-warnings");
+        }
+    }
+
+    if inline_depth > 0 {
+        let keep = ["matgen", "matmul", "matsum", "matround",
+                    "clean_files", "complex_evaluation", "semantic_analysis"];
+        checked.main_stmts = parhask::frontend::inline_stmts(
+            &program,
+            &checked.main_stmts,
+            &keep,
+            inline_depth,
+        )
+        .map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+    }
+    // check is purely static, so the host registry always suffices — no
+    // PJRT runtime is spun up even when artifacts are installed
+    let mut registry = FunctionRegistry::matrix_host(size);
+    let demo = FunctionRegistry::nlp_demo(20_000, 50_000, 30_000);
+    for name in ["clean_files", "complex_evaluation", "semantic_analysis"] {
+        if registry.get(name).is_none() {
+            if let Some(e) = demo.get(name) {
+                registry.bind(name, e.clone());
+            }
+        }
+    }
+    let lowered =
+        lower(&checked, &registry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+    report_violations(&path, "lowered IR", &parhask::analysis::verify_program(&lowered.program))?;
+    let mut n_tasks = lowered.program.len();
+
+    if cfg.partition.enabled() {
+        let pp = parhask::partition::partition_program(&lowered.program, &cfg.partition)?;
+        let opts = parhask::analysis::VerifyOpts {
+            combine_arity: Some(cfg.partition.combine_arity),
+        };
+        report_violations(
+            &path,
+            "partitioned IR",
+            &parhask::analysis::verify_program_with(&pp.program, &opts),
+        )?;
+        println!(
+            "partitioned: {} shard families, {} tasks total",
+            pp.families.len(),
+            pp.program.len()
+        );
+        n_tasks = pp.program.len();
+    }
+    println!(
+        "{path}: check passed — {} declaration(s), {} task(s), {} warning(s), 0 violations",
+        program.decls.len(),
+        n_tasks,
+        n_warnings
+    );
+    Ok(())
+}
+
+fn report_violations(
+    path: &str,
+    stage: &str,
+    violations: &[parhask::analysis::Violation],
+) -> Result<()> {
+    if violations.is_empty() {
+        return Ok(());
+    }
+    for v in violations {
+        eprintln!("violation: {v}");
+    }
+    bail!(
+        "{path}: {stage} failed verification with {} violation(s)",
+        violations.len()
+    )
+}
+
 fn cmd_graph(args: &Args) -> Result<()> {
     let (_, src) = read_source(args)?;
     let entry = args.get_or("entry", "main");
     let inline_depth = args.get_usize("inline", 0)?;
     let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
     let mut checked =
-        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", render_all(&e, &src)))?;
     if inline_depth > 0 {
         // paper future-work: deeper parsing changes the graph granularity
         let keep = ["matgen", "matmul", "matsum", "matround"];
@@ -182,11 +292,19 @@ fn build_config(args: &Args) -> Result<RunConfig> {
                 | "workers"
                 | "reps"
                 | "out"
+                | "deny-warnings"
+                | "deny_warnings"
         ) {
             continue;
         }
         cfg.set(k, v)
             .with_context(|| format!("bad option --{k} {v}"))?;
+    }
+    // bare `--verify-ir` (no value) opts in, same as `--verify-ir on`
+    for k in ["verify-ir", "verify_ir"] {
+        if args.flag(k) && args.get(k).is_none() {
+            cfg.verify_ir = true;
+        }
     }
     Ok(cfg)
 }
@@ -275,7 +393,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
     let mut checked =
-        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", render_all(&e, &src)))?;
     if inline_depth > 0 {
         let keep = ["matgen", "matmul", "matsum", "matround",
                     "clean_files", "complex_evaluation", "semantic_analysis"];
@@ -400,7 +518,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
     let checked =
-        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", render_all(&e, &src)))?;
     let registry = if cfg.use_artifacts {
         let svc = RuntimeService::start_default()?;
         // artifacts the AOT layer declares row-shardable join the plan

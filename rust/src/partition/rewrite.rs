@@ -294,7 +294,26 @@ pub fn partition_program(p: &TaskProgram, cfg: &PartitionConfig) -> Result<Parti
     for o in outputs {
         b.mark_output(o);
     }
-    Ok(PartitionedProgram { program: b.build()?, families })
+    let program = b.build()?;
+    // Rewrite-boundary verification (debug/test builds): the rewrite must
+    // not introduce IR violations — shard families, shapes, and the token
+    // chain all have to survive. Skipped when the *input* already violated
+    // (that is the caller's bug, not the rewrite's). Release builds verify
+    // at the engine boundary behind `--verify-ir` instead.
+    #[cfg(debug_assertions)]
+    if crate::analysis::verify_program(p).is_empty() {
+        let opts = crate::analysis::VerifyOpts { combine_arity: Some(cfg.combine_arity) };
+        let violations = crate::analysis::verify_program_with(&program, &opts);
+        if !violations.is_empty() {
+            let msgs: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+            anyhow::bail!(
+                "partition rewrite produced a malformed program ({} violation(s)): {}",
+                violations.len(),
+                msgs.join("; ")
+            );
+        }
+    }
+    Ok(PartitionedProgram { program, families })
 }
 
 #[cfg(test)]

@@ -19,7 +19,7 @@ pub mod trace;
 
 pub use greedy::GreedyState;
 pub use policy::{PlacementPolicy, StealPolicy};
-pub use trace::{RunResult, ScheduleTrace, TraceEvent};
+pub use trace::{EvictionEvent, RunResult, ScheduleTrace, TraceEvent};
 
 /// Worker identifier (0-based, dense).
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]

@@ -20,6 +20,20 @@ pub struct TraceEvent {
     pub end_ns: u64,
 }
 
+/// A value eviction: `task`'s outputs were dropped from wherever they were
+/// held (result cache tier or worker-resident store) at `at_ns`.
+///
+/// No engine evicts today — values live for the whole run — so current
+/// traces carry an empty list. The field exists so the race auditor
+/// (`analysis::race`) can prove the use-after-eviction property the planned
+/// distributed cache tier and speculative re-execution (ROADMAP items 2–3)
+/// must preserve: once they evict, they must record it here.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvictionEvent {
+    pub task: TaskId,
+    pub at_ns: u64,
+}
+
 /// Full schedule trace of one run.
 #[derive(Clone, Debug, Default)]
 pub struct ScheduleTrace {
@@ -45,6 +59,9 @@ pub struct ScheduleTrace {
     /// lived on the target worker, so locality placement turned a ship
     /// into a no-op.
     pub arg_bytes_saved: u64,
+    /// Value evictions, if the executing tier dropped any results mid-run
+    /// (empty on every current engine; see [`EvictionEvent`]).
+    pub evictions: Vec<EvictionEvent>,
 }
 
 /// Outputs + trace of one engine run.

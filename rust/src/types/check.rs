@@ -11,9 +11,20 @@
 //! * `let`-binding an IO call or `<-`-binding a pure call (the classic
 //!   confusion the purity rule exists to prevent);
 //! * duplicate bindings (shadowing within one block is rejected).
+//!
+//! Layer 1 of the static analysis ([`crate::analysis::purity`]) runs
+//! first: unsigned helpers get *inferred* purity (so the rules above apply
+//! to them too), IO-laundering through a pure signature is a hard error,
+//! and the section is linted for dead `let`-bindings and discarded pure
+//! results (reported in [`CheckedProgram::warnings`]).
+//!
+//! All diagnostics are accumulated — the result is `Err(Vec<Diagnostic>)`
+//! carrying every error (plus attached notes), renderable in source order
+//! via [`crate::frontend::diag::render_all`].
 
 use std::collections::HashSet;
 
+use crate::analysis::purity::{infer_purity, lint_parallel_section};
 use crate::frontend::ast::{Body, Expr, Program, Stmt};
 use crate::frontend::diag::Diagnostic;
 use crate::types::purity::PurityTable;
@@ -25,25 +36,34 @@ pub struct CheckedProgram {
     pub purity: PurityTable,
     /// Statements of the parallelized section (a copy of `main`'s block).
     pub main_stmts: Vec<Stmt>,
+    /// Non-fatal findings (dead bindings, discarded pure results). The
+    /// program is still runnable; `check --deny-warnings` promotes these.
+    pub warnings: Vec<Diagnostic>,
 }
 
 /// Check `program`, focusing on the section to parallelize (`entry`,
 /// normally `"main"` — the prototype scope in the paper; any function name
 /// works, covering their "arbitrary function" future-work note).
-pub fn check_program(program: &Program, entry: &str) -> Result<CheckedProgram, Diagnostic> {
-    let purity = PurityTable::from_program(program)?;
+///
+/// On failure returns *all* diagnostics (errors with their notes), not
+/// just the first.
+pub fn check_program(program: &Program, entry: &str) -> Result<CheckedProgram, Vec<Diagnostic>> {
+    let mut purity = PurityTable::from_program(program).map_err(|e| vec![e])?;
+    let mut diags = infer_purity(program, &mut purity);
 
     let Some((params, body)) = program.find_fun(entry) else {
-        return Err(Diagnostic::new(
+        diags.push(Diagnostic::new(
             format!("entry function `{entry}` is not defined"),
             crate::frontend::span::Span::DUMMY,
         ));
+        return Err(diags);
     };
     if !params.is_empty() {
-        return Err(Diagnostic::new(
+        diags.push(Diagnostic::new(
             format!("entry function `{entry}` must be nullary to parallelize"),
             crate::frontend::span::Span::DUMMY,
         ));
+        return Err(diags);
     }
     let stmts: Vec<Stmt> = match body {
         Body::Do(stmts) => stmts.clone(),
@@ -57,14 +77,14 @@ pub fn check_program(program: &Program, entry: &str) -> Result<CheckedProgram, D
     let mut bound: HashSet<String> = HashSet::new();
 
     for stmt in &stmts {
-        check_expr(stmt.expr(), &purity, &defined, &bound)?;
+        check_expr(stmt.expr(), &purity, &defined, &bound, &mut diags);
 
         match stmt {
             Stmt::Bind { name, expr, span } => {
                 // `x <- e`: e must be an IO call.
                 if let Some((head, _)) = expr.as_call() {
                     if !purity.is_io(head) && purity.get(head).is_some() {
-                        return Err(Diagnostic::new(
+                        diags.push(Diagnostic::new(
                             format!(
                                 "`{name} <- {head} ...` binds a pure call; use `let {name} = ...`"
                             ),
@@ -72,13 +92,13 @@ pub fn check_program(program: &Program, entry: &str) -> Result<CheckedProgram, D
                         ));
                     }
                 }
-                insert_unique(&mut bound, name, *span)?;
+                insert_unique(&mut bound, name, *span, &mut diags);
             }
             Stmt::Let { name, expr, span } => {
                 // `let x = e`: e must not be an IO call.
                 if let Some((head, _)) = expr.as_call() {
                     if purity.is_io(head) {
-                        return Err(Diagnostic::new(
+                        diags.push(Diagnostic::new(
                             format!(
                                 "`let {name} = {head} ...` binds an IO action; use `{name} <- ...`"
                             ),
@@ -86,16 +106,22 @@ pub fn check_program(program: &Program, entry: &str) -> Result<CheckedProgram, D
                         ));
                     }
                 }
-                insert_unique(&mut bound, name, *span)?;
+                insert_unique(&mut bound, name, *span, &mut diags);
             }
             Stmt::Expr { .. } => {}
         }
     }
 
+    if diags.iter().any(|d| d.is_error()) {
+        return Err(diags);
+    }
+
+    let warnings = lint_parallel_section(&stmts, &purity);
     Ok(CheckedProgram {
         program: program.clone(),
         purity,
         main_stmts: stmts,
+        warnings,
     })
 }
 
@@ -103,14 +129,14 @@ fn insert_unique(
     bound: &mut HashSet<String>,
     name: &str,
     span: crate::frontend::span::Span,
-) -> Result<(), Diagnostic> {
+    diags: &mut Vec<Diagnostic>,
+) {
     if !bound.insert(name.to_string()) {
-        return Err(Diagnostic::new(
+        diags.push(Diagnostic::new(
             format!("`{name}` is bound twice in the same do-block"),
             span,
         ));
     }
-    Ok(())
 }
 
 fn check_expr(
@@ -118,12 +144,13 @@ fn check_expr(
     purity: &PurityTable,
     defined: &HashSet<&str>,
     bound: &HashSet<String>,
-) -> Result<(), Diagnostic> {
+    diags: &mut Vec<Diagnostic>,
+) {
     match e {
         Expr::Var { name, span } => {
             if !bound.contains(name) && purity.get(name).is_none() && !defined.contains(name.as_str())
             {
-                return Err(Diagnostic::new(
+                diags.push(Diagnostic::new(
                     format!("`{name}` is not bound, declared, or defined"),
                     *span,
                 ));
@@ -134,7 +161,7 @@ fn check_expr(
             if let Expr::Var { name, .. } = func.as_ref() {
                 if let Some(info) = purity.get(name) {
                     if args.len() != info.arity {
-                        return Err(Diagnostic::new(
+                        diags.push(Diagnostic::new(
                             format!(
                                 "`{name}` expects {} argument(s), got {} (partial application is outside HaskLite's parallelized fragment)",
                                 info.arity,
@@ -144,47 +171,45 @@ fn check_expr(
                         ));
                     }
                 } else if !bound.contains(name) && !defined.contains(name.as_str()) {
-                    return Err(Diagnostic::new(
+                    diags.push(Diagnostic::new(
                         format!("call to unknown function `{name}`"),
                         *span,
                     ));
                 }
                 // IO calls may not be nested inside argument expressions.
                 for a in args {
-                    check_no_io(a, purity)?;
-                    check_expr(a, purity, defined, bound)?;
+                    check_no_io(a, purity, diags);
+                    check_expr(a, purity, defined, bound, diags);
                 }
             } else {
-                return Err(Diagnostic::new(
+                diags.push(Diagnostic::new(
                     "only named functions can be applied in the parallelized section",
                     *span,
                 ));
             }
         }
         Expr::BinOp { lhs, rhs, .. } => {
-            check_expr(lhs, purity, defined, bound)?;
-            check_expr(rhs, purity, defined, bound)?;
+            check_expr(lhs, purity, defined, bound, diags);
+            check_expr(rhs, purity, defined, bound, diags);
         }
         Expr::Tuple { items, .. } => {
             for i in items {
-                check_expr(i, purity, defined, bound)?;
+                check_expr(i, purity, defined, bound, diags);
             }
         }
         _ => {}
     }
-    Ok(())
 }
 
-fn check_no_io(e: &Expr, purity: &PurityTable) -> Result<(), Diagnostic> {
+fn check_no_io(e: &Expr, purity: &PurityTable, diags: &mut Vec<Diagnostic>) {
     if let Some((head, _)) = e.as_call() {
         if purity.is_io(head) {
-            return Err(Diagnostic::new(
+            diags.push(Diagnostic::new(
                 format!("IO action `{head}` cannot appear nested in an argument; bind it with `<-` first"),
                 e.span(),
             ));
         }
     }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -213,7 +238,7 @@ main = do
   print (y, z)
 "#;
 
-    fn check(src: &str) -> Result<CheckedProgram, Diagnostic> {
+    fn check(src: &str) -> Result<CheckedProgram, Vec<Diagnostic>> {
         let p = parse_program(src).unwrap();
         check_program(&p, "main")
     }
@@ -222,60 +247,63 @@ main = do
     fn accepts_paper_example() {
         let c = check(OK).unwrap();
         assert_eq!(c.main_stmts.len(), 4);
+        assert!(c.warnings.is_empty(), "{:?}", c.warnings);
     }
 
     #[test]
     fn missing_entry() {
-        let err = check("f :: Int\nf = 1\n").unwrap_err();
-        assert!(err.msg.contains("`main` is not defined"), "{err}");
+        let errs = check("f :: Int\nf = 1\n").unwrap_err();
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].msg.contains("`main` is not defined"), "{}", errs[0]);
     }
 
     #[test]
     fn unknown_function_rejected() {
-        let err = check("main :: IO ()\nmain = do\n  let y = mystery 1\n").unwrap_err();
-        assert!(err.msg.contains("mystery"), "{err}");
+        let errs = check("main :: IO ()\nmain = do\n  let y = mystery 1\n").unwrap_err();
+        assert!(errs.iter().any(|e| e.msg.contains("mystery")), "{errs:?}");
     }
 
     #[test]
     fn arity_mismatch_rejected() {
         let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let y = f 1 2\n  print y\n";
-        let err = check(src).unwrap_err();
-        assert!(err.msg.contains("expects 1 argument"), "{err}");
+        let errs = check(src).unwrap_err();
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].msg.contains("expects 1 argument"), "{}", errs[0]);
     }
 
     #[test]
     fn let_of_io_rejected() {
         let src = "g :: IO Int\ng = g\nmain :: IO ()\nmain = do\n  let y = g\n  print y\n";
-        let err = check(src).unwrap_err();
-        assert!(err.msg.contains("binds an IO action"), "{err}");
+        let errs = check(src).unwrap_err();
+        assert!(errs.iter().any(|e| e.msg.contains("binds an IO action")), "{errs:?}");
     }
 
     #[test]
     fn bind_of_pure_rejected() {
         let src = "f :: Int\nf = 1\nmain :: IO ()\nmain = do\n  y <- f\n  print y\n";
-        let err = check(src).unwrap_err();
-        assert!(err.msg.contains("binds a pure call"), "{err}");
+        let errs = check(src).unwrap_err();
+        assert!(errs.iter().any(|e| e.msg.contains("binds a pure call")), "{errs:?}");
     }
 
     #[test]
     fn use_before_bind_rejected() {
         let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f b\n  let b = f 1\n  print a\n";
-        let err = check(src).unwrap_err();
-        assert!(err.msg.contains("`b` is not bound"), "{err}");
+        let errs = check(src).unwrap_err();
+        assert!(errs.iter().any(|e| e.msg.contains("`b` is not bound")), "{errs:?}");
     }
 
     #[test]
     fn duplicate_binding_rejected() {
         let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f 1\n  let a = f 2\n  print a\n";
-        let err = check(src).unwrap_err();
-        assert!(err.msg.contains("bound twice"), "{err}");
+        let errs = check(src).unwrap_err();
+        assert!(errs.iter().any(|e| e.msg.contains("bound twice")), "{errs:?}");
     }
 
     #[test]
     fn nested_io_in_args_rejected() {
         let src = "g :: IO Int\ng = g\nf :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let y = f g\n  print y\n";
-        let err = check(src).unwrap_err();
-        assert!(err.msg.contains("nested"), "{err}");
+        let errs = check(src).unwrap_err();
+        assert!(errs.iter().any(|e| e.msg.contains("nested")), "{errs:?}");
     }
 
     #[test]
@@ -284,5 +312,47 @@ main = do
         let p = parse_program(src).unwrap();
         let c = check_program(&p, "pipeline").unwrap();
         assert_eq!(c.main_stmts.len(), 2);
+    }
+
+    #[test]
+    fn multiple_errors_accumulate() {
+        // three independent mistakes in one block: all reported at once
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let a = f 1 2\n  let a = f 3\n  let b = mystery 4\n  print a\n";
+        let errs = check(src).unwrap_err();
+        assert_eq!(errs.len(), 3, "{errs:?}");
+        assert!(errs[0].msg.contains("expects 1 argument"), "{}", errs[0]);
+        assert!(errs[1].msg.contains("bound twice"), "{}", errs[1]);
+        assert!(errs[2].msg.contains("mystery"), "{}", errs[2]);
+    }
+
+    #[test]
+    fn io_laundering_rejected_via_layer1() {
+        let src = "f :: Int -> Int\nf x = helper x\nhelper x = print x\nmain :: IO ()\nmain = do\n  let y = f 1\n  print y\n";
+        let errs = check(src).unwrap_err();
+        assert!(
+            errs.iter().any(|e| e.msg.contains("declared pure")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn unsigned_io_helper_enforces_bind_discipline() {
+        // `shout` has no signature, but its body reaches `print`, so the
+        // inference classifies it IO and `let` of it is rejected.
+        let src = "shout x = print x\nmain :: IO ()\nmain = do\n  let y = shout 1\n  print y\n";
+        let errs = check(src).unwrap_err();
+        assert!(
+            errs.iter().any(|e| e.msg.contains("binds an IO action")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn warnings_for_dead_let_and_discarded_result() {
+        let src = "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let dead = f 1\n  let live = f 2\n  f 9\n  print live\n";
+        let c = check(src).unwrap();
+        assert_eq!(c.warnings.len(), 2, "{:?}", c.warnings);
+        assert!(c.warnings[0].msg.contains("`dead` is bound but never used"));
+        assert!(c.warnings[1].msg.contains("discarded"));
     }
 }

@@ -69,6 +69,38 @@ impl PurityTable {
         self.map.get(name)
     }
 
+    /// Record an *inferred* classification for an unsigned definition
+    /// (Layer-1 transitive purity inference, `analysis::purity`). The
+    /// synthesized type is fully polymorphic apart from the IO marker —
+    /// the inference only establishes arity and effectfulness. Never
+    /// overwrites a signature-derived entry.
+    pub fn insert_inferred(&mut self, name: &str, arity: usize, io: bool) {
+        use TypeExpr as T;
+        if self.map.contains_key(name) {
+            return;
+        }
+        let mut ty = if io {
+            T::Con {
+                name: "IO".into(),
+                args: vec![T::Var("r".into())],
+            }
+        } else {
+            T::Var("r".into())
+        };
+        for i in (0..arity).rev() {
+            ty = T::Arrow(Box::new(T::Var(format!("a{i}"))), Box::new(ty));
+        }
+        self.map.insert(
+            name.to_string(),
+            FnInfo {
+                name: name.to_string(),
+                ty,
+                arity,
+                io,
+            },
+        );
+    }
+
     pub fn is_io(&self, name: &str) -> bool {
         self.map.get(name).map(|i| i.io).unwrap_or(false)
     }

@@ -1,0 +1,302 @@
+//! Seeded-fault detection: each fault class is injected through the public
+//! API and must be caught by exactly the analysis layer built for it.
+//!
+//! * graph faults (cycle, dangling ref, shape mismatch, broken token
+//!   chain, malformed shard family) → the Layer-2 IR verifier;
+//! * source faults (IO laundering) → the Layer-1 purity inference;
+//! * schedule faults (premature start, IO replay, use-after-eviction) →
+//!   the Layer-3 trace race auditor;
+//! * and the engine boundary rejects a malformed program outright when
+//!   verification is on.
+
+use std::sync::Arc;
+
+use parhask::analysis::{
+    audit_trace, verify_program, verify_program_with, verify_tasks, RaceKind, VerifyOpts,
+    ViolationKind,
+};
+use parhask::cache::ResultCache;
+use parhask::config::RunConfig;
+use parhask::ir::task::{
+    ArgRef, CostEst, OpKind, ShardInfo, ShardRole, TaskId, TaskSpec, Value,
+};
+use parhask::ir::ProgramBuilder;
+use parhask::scheduler::trace::{EvictionEvent, ScheduleTrace, TraceEvent};
+use parhask::scheduler::WorkerId;
+use parhask::tasks::HostExecutor;
+use parhask::workload::sharded_matrix_program;
+
+fn spec(id: u32, op: OpKind, args: Vec<ArgRef>, n_outputs: usize) -> TaskSpec {
+    TaskSpec {
+        id: TaskId(id),
+        op,
+        args,
+        n_outputs,
+        est: CostEst::ZERO,
+        label: format!("t{id}"),
+        shard: None,
+    }
+}
+
+fn ev(task: u32, worker: u32, start_ns: u64, end_ns: u64) -> TraceEvent {
+    TraceEvent {
+        task: TaskId(task),
+        worker: WorkerId(worker),
+        start_ns,
+        end_ns,
+    }
+}
+
+#[test]
+fn injected_cycle_is_exactly_one_cycle_violation() {
+    // t0 and t1 reference each other — impossible to build through
+    // TaskProgram::new, which is why verify_tasks takes raw slices.
+    let tasks = vec![
+        spec(0, OpKind::Synthetic { compute_us: 1 }, vec![ArgRef::out(TaskId(1), 0)], 1),
+        spec(1, OpKind::Synthetic { compute_us: 1 }, vec![ArgRef::out(TaskId(0), 0)], 1),
+    ];
+    let outputs = vec![ArgRef::out(TaskId(1), 0)];
+    let violations = verify_tasks(&tasks, &outputs, &VerifyOpts::default());
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert_eq!(violations[0].kind, ViolationKind::Cycle, "{violations:?}");
+}
+
+#[test]
+fn dangling_reference_is_exactly_one_violation() {
+    let tasks = vec![spec(
+        0,
+        OpKind::Synthetic { compute_us: 1 },
+        vec![ArgRef::out(TaskId(5), 0)],
+        1,
+    )];
+    let outputs = vec![ArgRef::out(TaskId(0), 0)];
+    let violations = verify_tasks(&tasks, &outputs, &VerifyOpts::default());
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert_eq!(violations[0].kind, ViolationKind::DanglingTask, "{violations:?}");
+}
+
+#[test]
+fn matmul_shape_mismatch_is_exactly_one_violation() {
+    // an 8×8 times a 4×4: inner dimensions disagree
+    let mut b = ProgramBuilder::new();
+    let g8 = b.push(
+        OpKind::HostMatGen { n: 8 },
+        vec![ArgRef::const_i32(1)],
+        1,
+        CostEst::ZERO,
+        "g8",
+    );
+    let g4 = b.push(
+        OpKind::HostMatGen { n: 4 },
+        vec![ArgRef::const_i32(2)],
+        1,
+        CostEst::ZERO,
+        "g4",
+    );
+    let mm = b.push(
+        OpKind::HostMatMul,
+        vec![ArgRef::out(g8, 0), ArgRef::out(g4, 0)],
+        1,
+        CostEst::ZERO,
+        "mm",
+    );
+    b.mark_output(ArgRef::out(mm, 0));
+    let p = b.build().unwrap();
+    let violations = verify_program(&p);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert_eq!(violations[0].kind, ViolationKind::ShapeMismatch, "{violations:?}");
+}
+
+#[test]
+fn two_token_sources_break_the_io_chain() {
+    let tasks = vec![
+        spec(
+            0,
+            OpKind::IoAction { label: "a".into(), compute_us: 1 },
+            vec![ArgRef::Const(Value::Token)],
+            2,
+        ),
+        spec(
+            1,
+            OpKind::IoAction { label: "b".into(), compute_us: 1 },
+            vec![ArgRef::Const(Value::Token)],
+            2,
+        ),
+    ];
+    let outputs = vec![ArgRef::out(TaskId(1), 1)];
+    let violations = verify_tasks(&tasks, &outputs, &VerifyOpts::default());
+    assert!(!violations.is_empty());
+    assert!(
+        violations.iter().all(|v| v.kind == ViolationKind::TokenChain),
+        "{violations:?}"
+    );
+}
+
+#[test]
+fn tampered_shard_index_in_real_rewrite_output_is_caught() {
+    // take the genuine partition-rewrite output and knock one leaf's
+    // shard index out of range — the family invariants must catch it
+    let p = sharded_matrix_program(2, 12, 3);
+    let mut tasks = p.tasks().to_vec();
+    let victim = tasks
+        .iter_mut()
+        .find(|t| matches!(t.shard, Some(s) if s.role == ShardRole::Leaf))
+        .expect("rewrite output has shard leaves");
+    let mut info = victim.shard.unwrap();
+    info.index = info.of; // out of range
+    victim.shard = Some(info);
+    let violations = verify_tasks(&tasks, p.outputs(), &VerifyOpts::default());
+    assert!(!violations.is_empty());
+    assert!(
+        violations.iter().all(|v| v.kind == ViolationKind::ShardFamily),
+        "{violations:?}"
+    );
+
+    // untampered, the same program is clean — including the arity check
+    let clean = verify_program_with(
+        &p,
+        &VerifyOpts {
+            combine_arity: Some(4),
+        },
+    );
+    assert!(clean.is_empty(), "{clean:?}");
+}
+
+#[test]
+fn engine_boundary_rejects_malformed_shard_family() {
+    // a lone task claiming to be shard 1-of-3 of family 7, with no
+    // siblings and no combine root: builds fine, verifies dirty
+    let mut b = ProgramBuilder::new();
+    let g = b.push(
+        OpKind::HostMatGen { n: 8 },
+        vec![ArgRef::const_i32(1)],
+        1,
+        CostEst::ZERO,
+        "fake-shard",
+    );
+    b.annotate_shard(
+        g,
+        ShardInfo {
+            family: 7,
+            index: 1,
+            of: 3,
+            role: ShardRole::Leaf,
+        },
+    );
+    b.mark_output(ArgRef::out(g, 0));
+    let p = b.build().unwrap();
+
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "single").unwrap();
+    cfg.set("artifacts", "false").unwrap();
+    cfg.set("verify_ir", "on").unwrap();
+    let err = parhask::engine::run_with_cache(&p, &cfg, Arc::new(HostExecutor), None)
+        .expect_err("malformed program must be rejected at the engine boundary");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("IR verification of the input program"), "{msg}");
+    assert!(msg.contains("ShardFamily"), "{msg}");
+}
+
+#[test]
+fn io_laundering_source_is_rejected_by_layer1() {
+    let src = "f :: Int -> Int\nf x = helper x\nhelper x = print x\n\
+               main :: IO ()\nmain = do\n  let y = f 1\n  print y\n";
+    let p = parhask::frontend::parse_program(src).unwrap();
+    let errs = parhask::types::check_program(&p, "main").unwrap_err();
+    assert!(
+        errs.iter()
+            .any(|d| d.msg.contains("declared pure") && d.msg.contains("call chain")),
+        "{errs:?}"
+    );
+}
+
+fn chain2() -> parhask::ir::TaskProgram {
+    let mut b = ProgramBuilder::new();
+    let a = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+    let c = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[a], "c");
+    b.mark_output(ArgRef::out(c, 0));
+    b.build().unwrap()
+}
+
+#[test]
+fn fabricated_premature_start_is_flagged() {
+    let p = chain2();
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(1, 1, 5, 15)); // consumer starts before its producer ends
+    let races = audit_trace(&p, &t);
+    assert_eq!(races.len(), 1, "{races:?}");
+    assert_eq!(races[0].kind, RaceKind::PrematureStart, "{races:?}");
+    assert_eq!(races[0].task, TaskId(1), "{races:?}");
+
+    // the corrected trace is clean
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(1, 1, 10, 20));
+    assert!(audit_trace(&p, &t).is_empty());
+}
+
+#[test]
+fn io_executed_twice_is_flagged_even_when_serialized() {
+    let mut b = ProgramBuilder::new();
+    let io = b.push(
+        OpKind::IoAction { label: "log".into(), compute_us: 1 },
+        vec![ArgRef::Const(Value::Token)],
+        2,
+        CostEst::ZERO,
+        "io",
+    );
+    b.mark_output(ArgRef::out(io, 1));
+    let p = b.build().unwrap();
+
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(0, 1, 20, 30)); // replayed — even though non-overlapping
+    let races = audit_trace(&p, &t);
+    assert_eq!(races.len(), 1, "{races:?}");
+    assert_eq!(races[0].kind, RaceKind::IoReplay, "{races:?}");
+    assert_eq!(races[0].task, io, "{races:?}");
+}
+
+#[test]
+fn value_consumed_after_eviction_is_flagged() {
+    let p = chain2();
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(1, 1, 20, 30));
+    t.evictions.push(EvictionEvent {
+        task: TaskId(0),
+        at_ns: 15, // producer's value dropped before the consumer started
+    });
+    let races = audit_trace(&p, &t);
+    assert_eq!(races.len(), 1, "{races:?}");
+    assert_eq!(races[0].kind, RaceKind::UseAfterEviction, "{races:?}");
+
+    // eviction after the consumer finished is harmless
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(1, 1, 10, 20));
+    t.evictions.push(EvictionEvent {
+        task: TaskId(0),
+        at_ns: 25,
+    });
+    assert!(audit_trace(&p, &t).is_empty());
+}
+
+#[test]
+fn real_cached_run_audits_clean() {
+    // end-to-end sanity for the auditor: a genuine warm cluster run
+    // (cache hits + executions mixed) must produce zero races
+    let p = parhask::workload::matrix_program(2, 10, false, None);
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "cluster:2").unwrap();
+    cfg.set("artifacts", "false").unwrap();
+    cfg.set("cache", "on").unwrap();
+    cfg.set("verify_ir", "on").unwrap();
+    let cache = ResultCache::new(cfg.cache.clone());
+    let _r1 = parhask::engine::run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(Arc::clone(&cache)))
+        .unwrap();
+    let r2 = parhask::engine::run_with_cache(&p, &cfg, Arc::new(HostExecutor), Some(cache)).unwrap();
+    assert!(r2.trace.cache_hits > 0);
+    assert!(audit_trace(&p, &r2.trace).is_empty());
+}

@@ -204,6 +204,98 @@ fn bad_source_reports_caret_diagnostic() {
     assert!(stderr.contains('^'), "{stderr}");
 }
 
+fn example(name: &str) -> String {
+    format!("{}/examples/hasklite/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn check_accepts_every_shipped_example_warning_free() {
+    for name in ["nlp.hs", "matrix.hs", "pipeline.hs"] {
+        let out = parhask()
+            .args(["check", &example(name), "--deny-warnings"])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{name}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("check passed"), "{name}: {stdout}");
+        assert!(stdout.contains("0 violations"), "{name}: {stdout}");
+    }
+}
+
+#[test]
+fn check_partitioned_verifies_the_sharded_graph() {
+    let out = parhask()
+        .args([
+            "check", &example("matrix.hs"), "--deny-warnings",
+            "--partitions", "4", "--shard-min-bytes", "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("partitioned:"), "{stdout}");
+    assert!(stdout.contains("check passed"), "{stdout}");
+}
+
+#[test]
+fn check_rejects_io_laundering_with_exit_1() {
+    let dir = std::env::temp_dir();
+    let f = dir.join("cli_launder.hs");
+    std::fs::write(
+        &f,
+        "f :: Int -> Int\nf x = helper x\nhelper x = print x\n\
+         main :: IO ()\nmain = do\n  let y = f 1\n  print y\n",
+    )
+    .unwrap();
+    let out = parhask().args(["check", f.to_str().unwrap()]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("declared pure"), "{stderr}");
+    assert!(stderr.contains("call chain"), "{stderr}");
+    assert!(stderr.contains('^'), "{stderr}");
+}
+
+#[test]
+fn check_deny_warnings_turns_lints_into_failures() {
+    let dir = std::env::temp_dir();
+    let f = dir.join("cli_deadlet.hs");
+    std::fs::write(
+        &f,
+        "f :: Int -> Int\nf x = x\nmain :: IO ()\nmain = do\n  let dead = f 1\n  let live = f 2\n  print live\n",
+    )
+    .unwrap();
+    let ok = parhask().args(["check", f.to_str().unwrap()]).output().unwrap();
+    assert!(ok.status.success(), "{}", String::from_utf8_lossy(&ok.stderr));
+    let denied = parhask()
+        .args(["check", f.to_str().unwrap(), "--deny-warnings"])
+        .output()
+        .unwrap();
+    assert_eq!(denied.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&denied.stderr);
+    assert!(stderr.contains("never used"), "{stderr}");
+}
+
+#[test]
+fn run_with_verify_ir_flag_completes() {
+    // release builds skip the rewrite-boundary verifier unless asked;
+    // the bare flag must opt it back in without disturbing the run
+    let dir = std::env::temp_dir();
+    let f = write_demo(&dir);
+    let out = parhask()
+        .args([
+            "run", f.to_str().unwrap(), "--engine", "smp:2",
+            "--artifacts", "false", "--size", "16", "--verify-ir",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("done:"));
+}
+
 #[test]
 fn unknown_subcommand_exits_2() {
     let out = parhask().args(["frobnicate"]).output().unwrap();

@@ -70,7 +70,8 @@ fn valid_programs_parse_check_and_roundtrip() {
     use parhask::types::check_program;
     qcheck_seeded(0x600D, 80, |v: &ValidProgram| {
         let p1 = parse_program(&v.0).map_err(|e| format!("parse: {e}\n{}", v.0))?;
-        check_program(&p1, "main").map_err(|e| format!("check: {e}"))?;
+        check_program(&p1, "main")
+            .map_err(|e| format!("check: {}", parhask::frontend::join_msgs(&e)))?;
         let printed = pretty::program(&p1);
         let p2 = parse_program(&printed).map_err(|e| format!("reparse: {e}\n{printed}"))?;
         prop(
@@ -88,7 +89,7 @@ fn valid_programs_lower_and_run() {
     use parhask::types::check_program;
     qcheck_seeded(0x60, 30, |v: &ValidProgram| {
         let p = parse_program(&v.0).map_err(|e| e.to_string())?;
-        let c = check_program(&p, "main").map_err(|e| e.to_string())?;
+        let c = check_program(&p, "main").map_err(|e| parhask::frontend::join_msgs(&e))?;
         let reg = FunctionRegistry::matrix_host(8);
         let l = lower(&c, &reg).map_err(|e| e.to_string())?;
         let r = run_single(&l.program, &HostExecutor).map_err(|e| format!("{e:#}"))?;
@@ -135,7 +136,7 @@ fn prop_inliner_preserves_results() {
 
     let total_of = |src: &str, inline: bool| -> Result<f32, String> {
         let p = parse_program(src).map_err(|e| e.to_string())?;
-        let mut c = check_program(&p, "main").map_err(|e| e.to_string())?;
+        let mut c = check_program(&p, "main").map_err(|e| parhask::frontend::join_msgs(&e))?;
         if inline {
             c.main_stmts =
                 inline_stmts(&p, &c.main_stmts, &["matgen", "matmul", "matsum"], 8)

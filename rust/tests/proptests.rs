@@ -298,6 +298,31 @@ fn prop_partition_is_noop_below_size_floors() {
 }
 
 #[test]
+fn prop_partition_rewrite_is_verifier_clean() {
+    use parhask::analysis::{verify_program, verify_program_with, VerifyOpts};
+    use parhask::partition::{partition_program, PartitionConfig};
+
+    qcheck_seeded(0x5AADF1, 50, |dk: &DagAndK| {
+        let p = &dk.0 .0;
+        let base = verify_program(p);
+        prop(base.is_empty(), &format!("generated DAG verifies clean: {base:?}"))?;
+
+        let cfg = PartitionConfig::aggressive(dk.1);
+        let pp = partition_program(p, &cfg).map_err(|e| format!("rewrite: {e:#}"))?;
+        let v = verify_program_with(
+            &pp.program,
+            &VerifyOpts {
+                combine_arity: Some(cfg.combine_arity),
+            },
+        );
+        prop(
+            v.is_empty(),
+            &format!("K={}: rewrite output verifies clean: {v:?}", dk.1),
+        )
+    });
+}
+
+#[test]
 fn prop_simulator_makespan_bounded_by_work_and_span() {
     use parhask::simulator::{simulate, CostModel, SimConfig};
     qcheck_seeded(0x51AB, 60, |d: &AnyDag| {

@@ -7,20 +7,23 @@
 //! object. The schema is documented in README.md ("Bench snapshots").
 //!
 //! ```sh
-//! cargo bench --bench bench_snapshot           # writes BENCH_pr6.json
+//! cargo bench --bench bench_snapshot           # writes BENCH_pr7.json
 //! BENCH_OUT=/tmp/b.json cargo bench --bench bench_snapshot
 //! ```
+//!
+//! `tools/compare_bench.py` diffs the two most recent `BENCH_*.json`
+//! and fails on >10% regression of any matched metric.
 
 use std::sync::Arc;
 
 use parhask::cluster::message::Message;
-use parhask::cluster::{codec, run_cluster_inproc, ClusterConfig};
-use parhask::ir::task::{CostEst, OpKind, TaskId, Value};
+use parhask::cluster::{codec, run_cluster_inproc, ClusterConfig, FaultPlan, PoissonRates};
+use parhask::ir::task::{ArgRef, CostEst, OpKind, TaskId, Value};
 use parhask::ir::ProgramBuilder;
 use parhask::partition::{partition_program, PartitionConfig};
 use parhask::scheduler::deque::WorkDeque;
 use parhask::scheduler::PlacementPolicy;
-use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::simulator::{simulate, simulate_with_faults, CostModel, SimConfig};
 use parhask::tasks::{HostExecutor, SyntheticExecutor};
 use parhask::tensor::Tensor;
 use parhask::util::json::Json;
@@ -149,14 +152,78 @@ fn cluster_sweep() -> anyhow::Result<Json> {
     Ok(Json::Arr(rows))
 }
 
+fn churn_sweep() -> anyhow::Result<Json> {
+    // fault-tolerance tax: the same wide layered program simulated on a
+    // healthy 64-worker cluster vs the identical cluster under seeded
+    // Poisson churn. Both runs are deterministic, so the rows diff
+    // cleanly across PRs like every other metric here.
+    let layers = 3usize;
+    let width = 256usize;
+    let mut b = ProgramBuilder::new();
+    let mut prev: Vec<TaskId> = Vec::new();
+    for l in 0..layers {
+        let mut cur = Vec::new();
+        for i in 0..width {
+            let args = if l == 0 {
+                vec![ArgRef::const_i32(i as i32)]
+            } else {
+                vec![ArgRef::out(prev[i], 0)]
+            };
+            cur.push(b.push(
+                OpKind::Synthetic { compute_us: 50 },
+                args,
+                1,
+                CostEst { flops: 0, bytes_in: 8, bytes_out: 8 },
+                format!("l{l}_{i}"),
+            ));
+        }
+        prev = cur;
+    }
+    b.mark_output(ArgRef::out(prev[0], 0));
+    let p = b.build().unwrap();
+
+    let cm = CostModel::default();
+    let cfg = SimConfig::cluster(64);
+    let healthy = simulate(&p, &cm, &cfg)?;
+    // a generous immortal floor keeps the plan viable for any seed
+    let rates = PoissonRates {
+        mean_lifetime_tasks: 20.0,
+        immortal_fraction: 0.25,
+        ..PoissonRates::default()
+    };
+    let plan = FaultPlan::poisson(0x1000, 64, p.len() as u64, &rates);
+    let churned = simulate_with_faults(&p, &cm, &cfg, &plan, 5_000_000)?;
+    let re_executed = churned.trace.attempts.len().saturating_sub(p.len());
+    Ok(Json::obj(vec![
+        ("tasks", Json::Num(p.len() as f64)),
+        ("healthy_makespan_ns", Json::Num(healthy.makespan_ns as f64)),
+        ("churn_makespan_ns", Json::Num(churned.makespan_ns as f64)),
+        ("churn_reexecuted_tasks", Json::Num(re_executed as f64)),
+        (
+            "churn_expired_leases",
+            Json::Num(
+                churned
+                    .trace
+                    .leases
+                    .iter()
+                    .filter(|l| {
+                        l.kind == parhask::scheduler::trace::LeaseKind::Expired
+                    })
+                    .count() as f64,
+            ),
+        ),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
-    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr6.json".to_string());
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr7.json".to_string());
     let report = Json::obj(vec![
         ("schema", Json::str("parhask-bench-snapshot/1")),
-        ("snapshot", Json::str("pr6")),
+        ("snapshot", Json::str("pr7")),
         ("substrate", substrate()?),
         ("sim_partition_sweep", sim_sweep()?),
         ("cluster_partition_sweep", cluster_sweep()?),
+        ("sim_churn", churn_sweep()?),
     ]);
     std::fs::write(&out, format!("{report}\n"))?;
     println!("wrote {out}");

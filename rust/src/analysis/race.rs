@@ -14,12 +14,27 @@
 //!   value is dropped, a later consumer start is a use-after-eviction
 //!   unless the producer re-executed (re-materializing the value) in
 //!   between.
+//!
+//! With PR 7's elastic cluster it additionally audits the fault-tolerance
+//! protocol itself:
+//!
+//! * **first-result-wins** ([`RaceKind::DoubleCommit`]): however many
+//!   speculative duplicate attempts a task had, exactly one may be marked
+//!   as committed;
+//! * **membership leases** ([`RaceKind::UseAfterLeaseExpiry`]): no trace
+//!   event may start on a worker whose most recent lease transition was
+//!   an expiry — an expired worker is dead to the leader, and accepting
+//!   its late results would resurrect it;
+//! * **ledger resume**: a task served from the execution ledger counts as
+//!   covered (like a cache hit), and a *resumed* IO task is legal — its
+//!   effect ran in the previous leader incarnation — unless it also
+//!   re-executed in this run, which is an IO replay.
 
 use std::collections::{HashMap, HashSet};
 
 use crate::ir::task::TaskId;
 use crate::ir::TaskProgram;
-use crate::scheduler::trace::{ScheduleTrace, TraceEvent};
+use crate::scheduler::trace::{LeaseEvent, LeaseKind, ScheduleTrace, TraceEvent};
 use crate::scheduler::WorkerId;
 
 /// Classification of a trace finding.
@@ -41,6 +56,13 @@ pub enum RaceKind {
     /// A consumer started after its producer's value was evicted, with no
     /// re-execution re-materializing it in between.
     UseAfterEviction,
+    /// More than one attempt of a task was marked as committed —
+    /// first-result-wins admits exactly one winner per task.
+    DoubleCommit,
+    /// A trace event started on a worker whose most recent lease
+    /// transition was an expiry: the leader used work from a member it
+    /// had already declared dead.
+    UseAfterLeaseExpiry,
 }
 
 /// One audited finding.
@@ -63,6 +85,7 @@ impl std::fmt::Display for Race {
 pub fn audit_trace(program: &TaskProgram, trace: &ScheduleTrace) -> Vec<Race> {
     let mut races = Vec::new();
     let cached: HashSet<TaskId> = trace.cached_tasks.iter().copied().collect();
+    let resumed: HashSet<TaskId> = trace.resumed_tasks.iter().copied().collect();
     let mut events: HashMap<TaskId, Vec<&TraceEvent>> = HashMap::new();
     for e in &trace.events {
         events.entry(e.task).or_default().push(e);
@@ -85,11 +108,12 @@ pub fn audit_trace(program: &TaskProgram, trace: &ScheduleTrace) -> Vec<Race> {
                 msg: "both executed and served from cache in one run".into(),
             });
         }
-        if !is_cached && evs.is_empty() {
+        let is_resumed = resumed.contains(&t.id);
+        if !is_cached && !is_resumed && evs.is_empty() {
             races.push(Race {
                 kind: RaceKind::MissingExecution,
                 task: t.id,
-                msg: "never executed and not served from cache".into(),
+                msg: "never executed and not served from cache or ledger".into(),
             });
         }
         if !t.is_pure() {
@@ -107,13 +131,22 @@ pub fn audit_trace(program: &TaskProgram, trace: &ScheduleTrace) -> Vec<Race> {
                     msg: "IO task served from the result cache; effects must actually run".into(),
                 });
             }
+            // a *resumed* IO task is legal — the effect ran in the
+            // previous leader incarnation — unless it also re-ran here
+            if is_resumed && !evs.is_empty() {
+                races.push(Race {
+                    kind: RaceKind::IoReplay,
+                    task: t.id,
+                    msg: "IO task resumed from the ledger and re-executed".into(),
+                });
+            }
         }
         // happens-before: every execution of t must start at or after some
         // completed execution of each producer (pure producers may have
         // several executions — any completed one covers the read).
         for d in t.deps() {
-            if cached.contains(&d) {
-                continue;
+            if cached.contains(&d) || resumed.contains(&d) {
+                continue; // value materialized at the leader, not timed
             }
             let Some(dep_evs) = events.get(&d) else {
                 continue; // reported as MissingExecution on the producer
@@ -192,6 +225,55 @@ pub fn audit_trace(program: &TaskProgram, trace: &ScheduleTrace) -> Vec<Race> {
                         });
                     }
                 }
+            }
+        }
+    }
+
+    // first-result-wins: at most one attempt per task may be marked as
+    // committed. (Multiple *attempts* are fine — that's speculation —
+    // and multiple *events* of a pure task are fine — that's recovery.)
+    let mut won_counts: HashMap<TaskId, usize> = HashMap::new();
+    for a in &trace.attempts {
+        if a.won {
+            *won_counts.entry(a.task).or_default() += 1;
+        }
+    }
+    let mut doubled: Vec<(TaskId, usize)> =
+        won_counts.into_iter().filter(|(_, n)| *n > 1).collect();
+    doubled.sort_by_key(|(t, _)| t.index());
+    for (t, n) in doubled {
+        races.push(Race {
+            kind: RaceKind::DoubleCommit,
+            task: t,
+            msg: format!("{n} attempts marked as committed; first-result-wins admits exactly one"),
+        });
+    }
+
+    // membership leases: no event may start on a worker whose most
+    // recent lease transition (at or before the event's start) was an
+    // expiry. A later Granted (the id would have to be reused, which the
+    // leader never does) would reinstate it.
+    let mut leases: HashMap<WorkerId, Vec<&LeaseEvent>> = HashMap::new();
+    for l in &trace.leases {
+        leases.entry(l.worker).or_default().push(l);
+    }
+    for ls in leases.values_mut() {
+        ls.sort_by_key(|l| l.at_ns);
+    }
+    for e in &trace.events {
+        let Some(ls) = leases.get(&e.worker) else {
+            continue; // run without lease tracking: nothing to audit
+        };
+        if let Some(l) = ls.iter().rev().find(|l| l.at_ns <= e.start_ns) {
+            if l.kind == LeaseKind::Expired {
+                races.push(Race {
+                    kind: RaceKind::UseAfterLeaseExpiry,
+                    task: e.task,
+                    msg: format!(
+                        "started on {} at {} but that worker's lease expired at {}",
+                        e.worker, e.start_ns, l.at_ns
+                    ),
+                });
             }
         }
     }
@@ -288,6 +370,79 @@ mod tests {
         t.push(ev(1, 1, 50, 60));
         t.evictions.push(EvictionEvent { task: TaskId(0), at_ns: 20 });
         assert!(audit_trace(&p, &t).is_empty());
+    }
+
+    #[test]
+    fn double_commit_flagged_once_per_task() {
+        use crate::scheduler::trace::AttemptEvent;
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 1, 10, 25));
+        // legitimate speculation: two attempts, one winner — clean
+        t.attempts.push(AttemptEvent { task: TaskId(0), worker: WorkerId(0), speculative: false, won: true, at_ns: 0 });
+        t.attempts.push(AttemptEvent { task: TaskId(0), worker: WorkerId(2), speculative: true, won: false, at_ns: 2 });
+        t.attempts.push(AttemptEvent { task: TaskId(1), worker: WorkerId(1), speculative: false, won: true, at_ns: 10 });
+        assert!(audit_trace(&p, &t).is_empty());
+
+        // fabricate a protocol bug: both attempts of task 0 committed
+        t.attempts[1].won = true;
+        let races = audit_trace(&p, &t);
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].kind, RaceKind::DoubleCommit);
+        assert_eq!(races[0].task, TaskId(0));
+    }
+
+    #[test]
+    fn use_after_lease_expiry_flagged() {
+        use crate::scheduler::trace::{LeaseEvent, LeaseKind};
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 0, 20, 30)); // starts after w0's lease expired
+        t.leases.push(LeaseEvent { worker: WorkerId(0), kind: LeaseKind::Granted, at_ns: 0, lost: vec![] });
+        t.leases.push(LeaseEvent { worker: WorkerId(0), kind: LeaseKind::Expired, at_ns: 15, lost: vec![TaskId(1)] });
+        let races = audit_trace(&p, &t);
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].kind, RaceKind::UseAfterLeaseExpiry);
+        assert_eq!(races[0].task, TaskId(1));
+
+        // same events all inside the lease: clean
+        let mut t = ScheduleTrace::default();
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 0, 10, 14));
+        t.leases.push(LeaseEvent { worker: WorkerId(0), kind: LeaseKind::Granted, at_ns: 0, lost: vec![] });
+        t.leases.push(LeaseEvent { worker: WorkerId(0), kind: LeaseKind::Expired, at_ns: 15, lost: vec![] });
+        assert!(audit_trace(&p, &t).is_empty());
+    }
+
+    #[test]
+    fn ledger_resumed_tasks_are_covered() {
+        // task 0 resumed from the ledger (no event), task 1 executed:
+        // no MissingExecution, no PrematureStart against the resumed dep.
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.resumed_tasks.push(TaskId(0));
+        t.push(ev(1, 0, 5, 15));
+        assert!(audit_trace(&p, &t).is_empty());
+
+        // a resumed IO task that also re-executed is a replay
+        let mut b = ProgramBuilder::new();
+        let io = b.push(
+            OpKind::IoAction { label: "log".into(), compute_us: 1 },
+            vec![ArgRef::Const(Value::Token)],
+            1,
+            CostEst::ZERO,
+            "io",
+        );
+        b.mark_output(ArgRef::out(io, 0));
+        let p = b.build().unwrap();
+        let mut t = ScheduleTrace::default();
+        t.resumed_tasks.push(TaskId(0));
+        t.push(ev(0, 0, 0, 10));
+        let races = audit_trace(&p, &t);
+        assert_eq!(races.len(), 1, "{races:?}");
+        assert_eq!(races[0].kind, RaceKind::IoReplay);
     }
 
     #[test]

@@ -30,6 +30,7 @@ const T_ASSIGN: u8 = 8;
 const T_REVOKE: u8 = 9;
 const T_PING: u8 = 10;
 const T_SHUTDOWN: u8 = 11;
+const T_HEARTBEAT: u8 = 12;
 
 // value tags
 const V_TENSOR_F32: u8 = 0;
@@ -92,6 +93,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u32(task.0);
         }
         Message::Pong => w.u8(T_PONG),
+        Message::Heartbeat { worker } => {
+            w.u8(T_HEARTBEAT);
+            w.u32(worker.0);
+        }
         Message::Bye { worker } => {
             w.u8(T_BYE);
             w.u32(worker.0);
@@ -162,6 +167,9 @@ pub fn decode(bytes: &[u8]) -> Result<Message> {
             task: TaskId(r.u32()?),
         },
         T_PONG => Message::Pong,
+        T_HEARTBEAT => Message::Heartbeat {
+            worker: WorkerId(r.u32()?),
+        },
         T_BYE => Message::Bye {
             worker: WorkerId(r.u32()?),
         },
@@ -212,6 +220,17 @@ pub fn encode_op(op: &OpKind) -> Vec<u8> {
     let mut w = Writer::with_capacity(16);
     put_op(&mut w, op);
     w.into_vec()
+}
+
+/// Stream one value into `w` — the streaming form of [`encode_value`],
+/// used by the execution ledger's on-disk records.
+pub(crate) fn write_value(w: &mut Writer, v: &Value) {
+    put_value(w, v);
+}
+
+/// Decode one value from `r` — the inverse of [`write_value`].
+pub(crate) fn read_value(r: &mut Reader) -> Result<Value> {
+    get_value(r)
 }
 
 fn put_value(w: &mut Writer, v: &Value) {
@@ -376,6 +395,9 @@ mod tests {
         roundtrip(Message::Shutdown);
         roundtrip(Message::Bye {
             worker: WorkerId(0),
+        });
+        roundtrip(Message::Heartbeat {
+            worker: WorkerId(41),
         });
         roundtrip(Message::Revoke { task: TaskId(9) });
         roundtrip(Message::Revoked { task: TaskId(9) });

@@ -6,9 +6,21 @@
 //!   pipeline capacity (placement policy decides *which* worker);
 //! * **steal** — when a worker idles and nothing is ready, revoke a queued
 //!   task from a victim (steal policy decides *whom*) and reroute it;
-//! * **recover** — a disconnected worker's in-flight tasks are requeued and
+//! * **recover** — a worker that disconnects *or goes silent past its
+//!   membership lease* is expired: its in-flight tasks are requeued and
 //!   re-executed elsewhere; purity (checked at lowering) makes this safe,
-//!   which is precisely the paper's fault-tolerance argument.
+//!   which is precisely the paper's fault-tolerance argument;
+//! * **join** — workers may join mid-run (elastic membership): a
+//!   [`Spawner`] admits new links on a commit-step schedule, and the
+//!   scheduler grows its worker set with fresh, never-reused ids;
+//! * **speculate** — the leader tracks per-op runtime medians and
+//!   launches duplicate attempts of stragglers on idle workers.
+//!   First-result-wins: the committing attempt is marked `won` in the
+//!   trace, the loser is revoked (or its late result dropped). Purity
+//!   makes the duplicate race free;
+//! * **checkpoint** — with a ledger attached, every committed result is
+//!   appended to an on-disk execution ledger; a restarted leader serves
+//!   ledgered tasks instead of re-executing them (resume-after-crash).
 //!
 //! The leader owns the object store: task outputs return with `TaskDone`
 //! and argument values ship inline — unless the target worker already
@@ -16,6 +28,7 @@
 //! (what locality-aware placement is for).
 
 use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
@@ -23,13 +36,14 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::cache::{ResultCache, TaskKey};
-use crate::ir::task::{ArgRef, TaskId, Value};
+use crate::ir::task::{ArgRef, OpKind, TaskId, Value};
 use crate::ir::TaskProgram;
-use crate::scheduler::trace::{RunResult, ScheduleTrace, TraceEvent};
+use crate::scheduler::trace::{LeaseKind, RunResult, ScheduleTrace, TraceEvent};
 use crate::scheduler::{GreedyState, PlacementPolicy, StealPolicy, WorkerId};
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info, log_warn};
 
+use super::ledger::Ledger;
 use super::message::{ArgSpec, Message};
 use super::transport::{MsgReceiver, MsgSender};
 
@@ -46,6 +60,23 @@ pub struct ClusterConfig {
     pub max_failures: usize,
     /// Ship `Cached` references for args the target worker already holds.
     pub use_cached_args: bool,
+    /// Membership lease: a worker silent for this long is expired exactly
+    /// like a disconnect (its in-flight work requeues, its failure counts
+    /// against the budget). `Duration::ZERO` disables lease expiry.
+    pub lease: Duration,
+    /// Launch speculative duplicate attempts of straggler tasks on idle
+    /// workers (first-result-wins).
+    pub speculate: bool,
+    /// Straggler threshold: a task in flight longer than
+    /// `speculate_factor` × the per-op median runtime is a straggler.
+    pub speculate_factor: f64,
+    /// Append-only execution-ledger path. When set, every committed
+    /// result is checkpointed, and a restarted leader pointed at the same
+    /// path resumes without re-executing ledgered tasks.
+    pub ledger_path: Option<PathBuf>,
+    /// Fault injection: abort the leader after committing this many task
+    /// results (exercises the ledger resume path deterministically).
+    pub kill_at_step: Option<u64>,
 }
 
 impl Default for ClusterConfig {
@@ -57,6 +88,11 @@ impl Default for ClusterConfig {
             heartbeat: Duration::from_millis(200),
             max_failures: 0,
             use_cached_args: true,
+            lease: Duration::ZERO,
+            speculate: false,
+            speculate_factor: 2.0,
+            ledger_path: None,
+            kill_at_step: None,
         }
     }
 }
@@ -66,16 +102,26 @@ enum Event {
     Disconnected(WorkerId),
 }
 
+/// Produces a connected transport link for a worker joining mid-run
+/// (elastic membership). In-proc this spawns a worker thread; over TCP it
+/// accepts a pending connection.
+pub type Spawner =
+    Box<dyn FnMut(WorkerId) -> Result<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)>>;
+
 /// The leader endpoint. Owns the senders; receivers run on reader threads.
 pub struct Leader {
     program: TaskProgram,
     cfg: ClusterConfig,
     senders: Vec<Box<dyn MsgSender>>,
     events: mpsc::Receiver<Event>,
+    events_tx: mpsc::Sender<Event>,
     _readers: Vec<std::thread::JoinHandle<()>>,
     /// Purity-aware result cache. When set, the leader short-circuits
     /// dispatch of content-hits and deduplicates identical in-flight tasks.
     cache: Option<Arc<ResultCache>>,
+    /// Elastic membership: link factory + commit-step join schedule.
+    spawner: Option<Spawner>,
+    join_plan: Vec<u64>,
 }
 
 /// Leader-side cache bookkeeping: which key each dispatched task carries,
@@ -98,6 +144,56 @@ impl CacheState {
     }
 }
 
+/// Mutable state of one `run()` — grouped so the loop's helpers (pump,
+/// steal, lease expiry, joins, speculation, commit) can borrow it
+/// alongside `&mut Leader` without threading a dozen parameters.
+struct RunState {
+    state: GreedyState,
+    values: Vec<Option<Vec<Value>>>,
+    /// Per-worker in-flight tasks (same task may appear under several
+    /// workers while a speculative duplicate races).
+    inflight: Vec<Vec<TaskId>>,
+    alive: Vec<bool>,
+    /// Per-worker last message time — the membership lease clock.
+    last_seen: Vec<u64>,
+    /// Per-worker last trace end: TaskDones arrive in execution order
+    /// (FIFO transport), so clamping start to this preserves the
+    /// worker's serial execution in the reconstructed trace.
+    last_end: Vec<u64>,
+    revoking: HashSet<TaskId>,
+    /// task -> thief that requested the steal (assigned there on Revoked).
+    pending_steals: HashMap<TaskId, WorkerId>,
+    /// Dispatch timestamps: trace starts are clamped to these so the
+    /// reconstructed schedule respects the causal order the leader saw.
+    assigned_at: HashMap<TaskId, u64>,
+    /// Committed tasks whose losing duplicate attempts are being revoked.
+    cancels: HashSet<TaskId>,
+    /// Per-op runtime samples (key: wire encoding of the op) feeding the
+    /// straggler-detection median.
+    samples: HashMap<Vec<u8>, Vec<u64>>,
+    trace: ScheduleTrace,
+    failures: usize,
+    bytes_in: u64,
+    cstate: CacheState,
+    /// Results committed so far — the clock join schedules and
+    /// `kill_at_step` run on.
+    commit_count: u64,
+    /// Next unadmitted index into `Leader::join_plan`.
+    next_join: usize,
+    ledger: Option<Ledger>,
+    rng: Rng,
+}
+
+impl RunState {
+    /// Is some *other* live worker still running an attempt of `task`?
+    fn has_other_live_attempt(&self, task: TaskId, not: WorkerId) -> bool {
+        self.inflight
+            .iter()
+            .enumerate()
+            .any(|(i, q)| i != not.index() && self.alive[i] && q.contains(&task))
+    }
+}
+
 impl Leader {
     /// Build a leader over already-connected transports (one per worker).
     pub fn new(
@@ -106,39 +202,21 @@ impl Leader {
         cfg: ClusterConfig,
     ) -> Leader {
         let (ev_tx, events) = mpsc::channel();
-        let mut senders = Vec::new();
-        let mut readers = Vec::new();
-        for (i, (tx, mut rx)) in links.into_iter().enumerate() {
-            let w = WorkerId(i as u32);
-            senders.push(tx);
-            let ev_tx = ev_tx.clone();
-            readers.push(
-                std::thread::Builder::new()
-                    .name(format!("leader-rx-{w}"))
-                    .spawn(move || loop {
-                        match rx.recv() {
-                            Ok(m) => {
-                                if ev_tx.send(Event::Msg(w, m)).is_err() {
-                                    return;
-                                }
-                            }
-                            Err(_) => {
-                                let _ = ev_tx.send(Event::Disconnected(w));
-                                return;
-                            }
-                        }
-                    })
-                    .expect("spawn reader"),
-            );
-        }
-        Leader {
+        let mut leader = Leader {
             program,
             cfg,
-            senders,
+            senders: Vec::new(),
             events,
-            _readers: readers,
+            events_tx: ev_tx,
+            _readers: Vec::new(),
             cache: None,
+            spawner: None,
+            join_plan: Vec::new(),
+        };
+        for (tx, rx) in links {
+            leader.add_link(tx, rx);
         }
+        leader
     }
 
     /// Attach a result cache (shared across runs by the caller).
@@ -147,49 +225,107 @@ impl Leader {
         self
     }
 
+    /// Enable elastic membership: `spawner` admits one new worker link
+    /// each time a `joins` commit-step threshold is reached (or earlier,
+    /// if every current worker is dead and work remains).
+    pub fn with_spawner(mut self, spawner: Spawner, mut joins: Vec<u64>) -> Leader {
+        joins.sort_unstable();
+        self.spawner = Some(spawner);
+        self.join_plan = joins;
+        self
+    }
+
+    /// Register a connected worker link and start its reader thread.
+    /// Worker ids are assigned densely and never reused.
+    fn add_link(&mut self, tx: Box<dyn MsgSender>, mut rx: Box<dyn MsgReceiver>) -> WorkerId {
+        let w = WorkerId(self.senders.len() as u32);
+        self.senders.push(tx);
+        let ev_tx = self.events_tx.clone();
+        self._readers.push(
+            std::thread::Builder::new()
+                .name(format!("leader-rx-{w}"))
+                .spawn(move || loop {
+                    match rx.recv() {
+                        Ok(m) => {
+                            if ev_tx.send(Event::Msg(w, m)).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            let _ = ev_tx.send(Event::Disconnected(w));
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn reader"),
+        );
+        w
+    }
+
     /// Drive the program to completion; returns outputs + trace.
     pub fn run(mut self) -> Result<RunResult> {
         let n_workers = self.senders.len();
         anyhow::ensure!(n_workers > 0, "cluster needs at least one worker");
         let program = self.program.clone();
-        let mut state = GreedyState::new(&program, n_workers, self.cfg.placement);
-        let mut values: Vec<Option<Vec<Value>>> = vec![None; program.len()];
-        let mut inflight: Vec<Vec<TaskId>> = vec![Vec::new(); n_workers];
-        let mut alive = vec![true; n_workers];
-        let mut revoking: HashSet<TaskId> = HashSet::new();
-        // task -> thief that requested the steal (assigned there on Revoked)
-        let mut pending_steals: std::collections::HashMap<TaskId, WorkerId> =
-            std::collections::HashMap::new();
-        // dispatch timestamps: trace starts are clamped to these so the
-        // reconstructed schedule respects the causal order the leader saw
-        let mut assigned_at: std::collections::HashMap<TaskId, u64> =
-            std::collections::HashMap::new();
-        // per-worker last trace end: TaskDones arrive in execution order
-        // (FIFO transport), so clamping start to this preserves the
-        // worker's serial execution in the reconstructed trace
-        let mut last_end = vec![0u64; n_workers];
-        let mut trace = ScheduleTrace::default();
-        let mut failures = 0usize;
-        let mut rng = Rng::new(0x5EED);
-        let mut bytes_in = 0u64; // worker->leader payload estimate
-        let mut cstate = CacheState::default();
         let t0 = crate::util::now_ns();
+        let ledger = match &self.cfg.ledger_path {
+            Some(p) => Some(Ledger::open(p)?),
+            None => None,
+        };
+        let mut rs = RunState {
+            state: GreedyState::new(&program, n_workers, self.cfg.placement),
+            values: vec![None; program.len()],
+            inflight: vec![Vec::new(); n_workers],
+            alive: vec![true; n_workers],
+            last_seen: vec![t0; n_workers],
+            last_end: vec![0u64; n_workers],
+            revoking: HashSet::new(),
+            pending_steals: HashMap::new(),
+            assigned_at: HashMap::new(),
+            cancels: HashSet::new(),
+            samples: HashMap::new(),
+            trace: ScheduleTrace::default(),
+            failures: 0,
+            bytes_in: 0,
+            cstate: CacheState::default(),
+            commit_count: 0,
+            next_join: 0,
+            ledger,
+            rng: Rng::new(0x5EED),
+        };
+        for w in 0..n_workers {
+            rs.trace
+                .record_lease(WorkerId(w as u32), LeaseKind::Granted, t0, Vec::new());
+        }
 
         // Wait for Hellos (workers announce themselves) — but in-proc
         // workers start instantly; just process them as normal events.
 
-        self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
+        self.process_joins(&program, &mut rs)?; // step-0 joins
+        self.pump(&program, &mut rs)?;
 
-        while !state.is_done() {
-            // try stealing for idle workers
-            self.try_steal(&mut state, &inflight, &alive, &mut revoking, &mut pending_steals, &mut rng)?;
+        // Block at most this long per iteration so lease expiry is
+        // detected promptly even on a quiet cluster.
+        let tick = if self.cfg.lease.is_zero() {
+            self.cfg.heartbeat
+        } else {
+            self.cfg
+                .heartbeat
+                .min(self.cfg.lease / 2)
+                .max(Duration::from_millis(1))
+        };
 
-            let ev = match self.events.recv_timeout(self.cfg.heartbeat) {
+        while !rs.state.is_done() {
+            self.try_steal(&mut rs)?;
+            self.check_leases(&program, &mut rs)?;
+            self.maybe_speculate(&program, &mut rs)?;
+
+            let ev = match self.events.recv_timeout(tick) {
                 Ok(ev) => ev,
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     // liveness probe
                     for (w, s) in self.senders.iter_mut().enumerate() {
-                        if alive[w] {
+                        if rs.alive[w] {
                             let _ = s.send(&Message::Ping);
                         }
                     }
@@ -200,238 +336,497 @@ impl Leader {
                 }
             };
 
-            match ev {
-                Event::Msg(w, Message::Hello { .. }) => {
+            let (w, msg) = match ev {
+                Event::Disconnected(w) => {
+                    self.handle_worker_loss(&program, &mut rs, w, "died")?;
+                    continue;
+                }
+                Event::Msg(w, msg) => (w, msg),
+            };
+            if !rs.alive[w.index()] {
+                // An expired worker is dead to the leader: accepting its
+                // late results would put trace events after its recorded
+                // lease expiry (exactly what the race auditor flags).
+                log_debug!("leader", "dropping {} from expired {w}", msg.kind());
+                continue;
+            }
+            // any message renews the membership lease
+            rs.last_seen[w.index()] = crate::util::now_ns();
+
+            match msg {
+                Message::Hello { .. } => {
                     log_debug!("leader", "{w} connected");
                 }
-                Event::Msg(w, Message::TaskDone { task, outputs, compute_ns }) => {
-                    bytes_in += outputs.iter().map(|v| v.size_bytes() as u64).sum::<u64>();
-                    let end = crate::util::now_ns();
-                    let assign_t = assigned_at.get(&task).copied().unwrap_or(0);
-                    let start = end
-                        .saturating_sub(compute_ns)
-                        .max(assign_t)
-                        .max(last_end[w.index()]);
-                    let end = end.max(start);
-                    last_end[w.index()] = end;
-                    trace.push(TraceEvent {
-                        task,
-                        worker: w,
-                        start_ns: start,
-                        end_ns: end,
-                    });
-                    inflight[w.index()].retain(|t| *t != task);
-                    if values[task.index()].is_none() {
-                        // result cache: store the result and serve any
-                        // identical tasks that were parked on this one
-                        if let Some(cache) = &self.cache {
-                            let spec = program.task(task);
-                            if cache.cacheable(spec) {
-                                let key = match cstate.task_keys.remove(&task) {
-                                    Some(k) => k,
-                                    // dispatched via a path that skipped
-                                    // registration (steal re-assign)
-                                    None => {
-                                        let args = gather_arg_values(&program, &values, task)?;
-                                        cache.key_for(spec, &args)
-                                    }
-                                };
-                                cstate.inflight_keys.remove(&key);
-                                cache.insert_by_key(key, &outputs);
-                                for t in cstate.waiting.remove(&key).unwrap_or_default() {
-                                    values[t.index()] = Some(outputs.clone());
-                                    cache.note_dedup_hit();
-                                    trace.record_cache_hit(t);
-                                    state.complete_local(&program, t);
-                                    log_debug!("leader", "dedup: served {t} from completed {task}");
-                                }
-                            }
-                        }
-                        values[task.index()] = Some(outputs);
-                        state.on_done(&program, task, w);
+                Message::Heartbeat { .. } => {}
+                Message::TaskDone {
+                    task,
+                    outputs,
+                    compute_ns,
+                } => {
+                    rs.bytes_in += outputs.iter().map(|v| v.size_bytes() as u64).sum::<u64>();
+                    rs.samples
+                        .entry(super::codec::encode_op(&program.task(task).op))
+                        .or_default()
+                        .push(compute_ns);
+                    rs.inflight[w.index()].retain(|t| *t != task);
+                    if rs.values[task.index()].is_some() {
+                        // losing duplicate attempt (speculation or a
+                        // post-revoke race): result already committed —
+                        // release the load charge and drop the bytes.
+                        rs.cancels.remove(&task);
+                        rs.state.abort_assign(w);
+                        log_debug!("leader", "{task} from {w} lost the first-result race");
+                        self.pump(&program, &mut rs)?;
                     } else {
-                        // duplicate completion (e.g. post-revoke race) — ignore
-                        log_debug!("leader", "duplicate completion of {task} from {w}");
+                        self.commit(&program, &mut rs, w, task, outputs, compute_ns)?;
                     }
-                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
                 }
-                Event::Msg(w, Message::TaskFailed { task, error }) => {
+                Message::TaskFailed { task, error } => {
                     bail!("task {task} failed on {w}: {error}");
                 }
-                Event::Msg(w, Message::Revoked { task }) => {
-                    revoking.remove(&task);
-                    inflight[w.index()].retain(|t| *t != task);
-                    cstate.forget(task);
-                    state.unassign(&program, task, w);
+                Message::Revoked { task } => {
+                    rs.revoking.remove(&task);
+                    if rs.cancels.remove(&task) || rs.values[task.index()].is_some() {
+                        // cancelled losing attempt handed back before it
+                        // started: drop it, the committed result stands
+                        rs.inflight[w.index()].retain(|t| *t != task);
+                        rs.pending_steals.remove(&task);
+                        rs.state.abort_assign(w);
+                        log_debug!("leader", "cancelled losing attempt of {task} on {w}");
+                        self.pump(&program, &mut rs)?;
+                        continue;
+                    }
+                    rs.inflight[w.index()].retain(|t| *t != task);
+                    rs.cstate.forget(task);
+                    rs.state.unassign(&program, task, w);
                     log_debug!("leader", "stole {task} back from {w}");
                     // hand the stolen task straight to the thief that asked
                     // (placement would otherwise bounce it back to the busy
                     // victim under locality-aware policy)
-                    let thief = pending_steals.remove(&task);
+                    let thief = rs.pending_steals.remove(&task);
                     if let Some(thief) = thief.filter(|t| {
-                        alive[t.index()] && inflight[t.index()].len() < self.cfg.pipeline_depth
+                        rs.alive[t.index()]
+                            && rs.inflight[t.index()].len() < self.cfg.pipeline_depth
                     }) {
-                        if let Some(t2) = state.assign_to(&program, thief) {
+                        if let Some(t2) = rs.state.assign_to(&program, thief) {
                             let (args, shipped, saved) =
-                                self.build_args(&program, &state, &values, t2, thief)?;
+                                self.build_args(&program, &rs.state, &rs.values, t2, thief)?;
                             match self.senders[thief.index()].send(&Message::Assign {
                                 task: t2,
                                 op: program.task(t2).op.clone(),
                                 args,
                             }) {
                                 Ok(()) => {
-                                    inflight[thief.index()].push(t2);
-                                    assigned_at.insert(t2, crate::util::now_ns());
-                                    trace.arg_bytes_shipped += shipped;
-                                    trace.arg_bytes_saved += saved;
+                                    let now = crate::util::now_ns();
+                                    rs.inflight[thief.index()].push(t2);
+                                    rs.assigned_at.insert(t2, now);
+                                    rs.trace.record_attempt(t2, thief, false, now);
+                                    rs.trace.arg_bytes_shipped += shipped;
+                                    rs.trace.arg_bytes_saved += saved;
                                     log_debug!("leader", "steal-assigned {t2} -> {thief}");
                                 }
-                                Err(_) => state.unassign(&program, t2, thief),
+                                Err(_) => rs.state.unassign(&program, t2, thief),
                             }
                         }
                     }
-                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
+                    self.pump(&program, &mut rs)?;
                 }
-                Event::Msg(_, Message::RevokeDenied { task }) => {
-                    revoking.remove(&task);
-                    pending_steals.remove(&task);
+                Message::RevokeDenied { task } => {
+                    rs.revoking.remove(&task);
+                    rs.pending_steals.remove(&task);
+                    // a denied cancel means the loser already started; its
+                    // late TaskDone is dropped by the duplicate path
+                    rs.cancels.remove(&task);
                 }
-                Event::Msg(_, Message::Pong) => {}
-                Event::Msg(w, Message::Bye { .. }) => {
+                Message::Pong => {}
+                Message::Bye { .. } => {
                     log_debug!("leader", "{w} said bye");
                 }
-                Event::Msg(w, other) => {
+                other => {
                     log_warn!("leader", "unexpected {} from {w}", other.kind());
-                }
-                Event::Disconnected(w) => {
-                    if !alive[w.index()] {
-                        continue;
-                    }
-                    alive[w.index()] = false;
-                    failures += 1;
-                    let lost: Vec<TaskId> = std::mem::take(&mut inflight[w.index()]);
-                    for t in &lost {
-                        revoking.remove(t);
-                        pending_steals.remove(t);
-                        // a lost task is no longer in flight: identical
-                        // tasks must not park behind it (they will be
-                        // served when its re-execution completes)
-                        cstate.forget(*t);
-                    }
-                    log_info!(
-                        "leader",
-                        "{w} died with {} task(s) in flight; requeueing (failure {failures}/{})",
-                        lost.len(),
-                        self.cfg.max_failures
-                    );
-                    if failures > self.cfg.max_failures {
-                        bail!(
-                            "worker {w} died ({} in flight) and failure budget ({}) is exhausted",
-                            lost.len(),
-                            self.cfg.max_failures
-                        );
-                    }
-                    if !alive.iter().any(|a| *a) {
-                        bail!("all workers dead");
-                    }
-                    state.requeue(&program, &lost, w);
-                    state.mark_dead(w);
-                    self.pump(&program, &mut state, &mut values, &mut inflight, &alive, &mut assigned_at, &mut trace, &mut cstate)?;
                 }
             }
         }
 
         // graceful shutdown
         for (w, s) in self.senders.iter_mut().enumerate() {
-            if alive[w] {
+            if rs.alive[w] {
                 let _ = s.send(&Message::Shutdown);
             }
         }
         // brief drain of Byes so workers exit cleanly
         while self.events.recv_timeout(Duration::from_millis(50)).is_ok() {}
 
-        trace.wall_ns = crate::util::now_ns() - t0;
-        trace.bytes_transferred =
-            self.senders.iter().map(|s| s.bytes_sent()).sum::<u64>() + bytes_in;
+        rs.trace.wall_ns = crate::util::now_ns() - t0;
+        rs.trace.bytes_transferred =
+            self.senders.iter().map(|s| s.bytes_sent()).sum::<u64>() + rs.bytes_in;
 
         let outputs = program
             .outputs()
             .iter()
             .map(|o| match o {
                 ArgRef::Const(v) => Ok(v.clone()),
-                ArgRef::Output { task, index } => Ok(values[task.index()]
+                ArgRef::Output { task, index } => Ok(rs.values[task.index()]
                     .as_ref()
                     .with_context(|| format!("output task {task} never completed"))?[*index]
                     .clone()),
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(RunResult { outputs, trace })
+        Ok(RunResult {
+            outputs,
+            trace: rs.trace,
+        })
+    }
+
+    /// Commit the first-arriving result of `task`: record the trace event
+    /// and winning attempt, store/serve through the result cache, cancel
+    /// losing duplicate attempts, checkpoint to the ledger, and advance
+    /// the commit clock (joins + kill-at-step fault injection).
+    fn commit(
+        &mut self,
+        program: &TaskProgram,
+        rs: &mut RunState,
+        w: WorkerId,
+        task: TaskId,
+        outputs: Vec<Value>,
+        compute_ns: u64,
+    ) -> Result<()> {
+        let end = crate::util::now_ns();
+        let assign_t = rs.assigned_at.get(&task).copied().unwrap_or(0);
+        let start = end
+            .saturating_sub(compute_ns)
+            .max(assign_t)
+            .max(rs.last_end[w.index()]);
+        let end = end.max(start);
+        rs.last_end[w.index()] = end;
+        rs.trace.push(TraceEvent {
+            task,
+            worker: w,
+            start_ns: start,
+            end_ns: end,
+        });
+        rs.trace.mark_attempt_won(task, w);
+
+        // result cache: store the result and serve any identical tasks
+        // that were parked on this one. The content-addressed key doubles
+        // as the ledger record's key (zero when uncacheable).
+        let mut key = TaskKey { hi: 0, lo: 0 };
+        if let Some(cache) = &self.cache {
+            let spec = program.task(task);
+            if cache.cacheable(spec) {
+                let k = match rs.cstate.task_keys.remove(&task) {
+                    Some(k) => k,
+                    // dispatched via a path that skipped registration
+                    // (steal re-assign, speculative duplicate)
+                    None => {
+                        let args = gather_arg_values(program, &rs.values, task)?;
+                        cache.key_for(spec, &args)
+                    }
+                };
+                rs.cstate.inflight_keys.remove(&k);
+                cache.insert_by_key(k, &outputs);
+                key = k;
+                for t in rs.cstate.waiting.remove(&k).unwrap_or_default() {
+                    rs.values[t.index()] = Some(outputs.clone());
+                    cache.note_dedup_hit();
+                    rs.trace.record_cache_hit(t);
+                    rs.state.complete_local(program, t);
+                    log_debug!("leader", "dedup: served {t} from completed {task}");
+                }
+            }
+        }
+
+        // first-result-wins: revoke the losing duplicate attempts (a
+        // loser already past queued stage denies and its late result is
+        // dropped by the duplicate-completion path)
+        for i in 0..rs.inflight.len() {
+            if i != w.index() && rs.alive[i] && rs.inflight[i].contains(&task) {
+                rs.cancels.insert(task);
+                log_debug!("leader", "revoking losing attempt of {task} on w{i}");
+                let _ = self.senders[i].send(&Message::Revoke { task });
+            }
+        }
+
+        if let Some(led) = rs.ledger.as_mut() {
+            led.append(task, key, &outputs)?;
+        }
+        rs.values[task.index()] = Some(outputs);
+        rs.state.on_done(program, task, w);
+        rs.commit_count += 1;
+        if let Some(k) = self.cfg.kill_at_step {
+            if rs.commit_count >= k {
+                bail!("leader killed at step {} (fault injection)", rs.commit_count);
+            }
+        }
+        self.process_joins(program, rs)?;
+        self.pump(program, rs)
+    }
+
+    /// Expire leases of workers silent longer than `cfg.lease`.
+    fn check_leases(&mut self, program: &TaskProgram, rs: &mut RunState) -> Result<()> {
+        if self.cfg.lease.is_zero() {
+            return Ok(());
+        }
+        let lease_ns = self.cfg.lease.as_nanos() as u64;
+        let now = crate::util::now_ns();
+        let expired: Vec<WorkerId> = (0..rs.alive.len())
+            .filter(|i| rs.alive[*i] && now.saturating_sub(rs.last_seen[*i]) >= lease_ns)
+            .map(|i| WorkerId(i as u32))
+            .collect();
+        for w in expired {
+            self.handle_worker_loss(program, rs, w, "lease expired")?;
+        }
+        Ok(())
+    }
+
+    /// Shared loss path for disconnects and lease expiries: expire the
+    /// worker, requeue the work only it was running, and count the
+    /// failure against the budget. A pending join may replace it.
+    fn handle_worker_loss(
+        &mut self,
+        program: &TaskProgram,
+        rs: &mut RunState,
+        w: WorkerId,
+        cause: &str,
+    ) -> Result<()> {
+        if !rs.alive[w.index()] {
+            return Ok(()); // late disconnect of an already-expired worker
+        }
+        rs.alive[w.index()] = false;
+        rs.failures += 1;
+        let taken: Vec<TaskId> = std::mem::take(&mut rs.inflight[w.index()]);
+        // Only work actually *lost* requeues: a committed task's result
+        // stands, and a task with another live attempt (speculation) will
+        // be committed by that attempt — requeueing either would
+        // double-execute.
+        let mut lost = Vec::new();
+        for t in taken {
+            rs.revoking.remove(&t);
+            rs.pending_steals.remove(&t);
+            if rs.values[t.index()].is_some() {
+                rs.cancels.remove(&t);
+                continue;
+            }
+            if rs.has_other_live_attempt(t, w) {
+                continue;
+            }
+            // a lost task is no longer in flight: identical tasks must
+            // not park behind it (they will be served when its
+            // re-execution completes)
+            rs.cstate.forget(t);
+            lost.push(t);
+        }
+        rs.trace
+            .record_lease(w, LeaseKind::Expired, crate::util::now_ns(), lost.clone());
+        log_info!(
+            "leader",
+            "{w} {cause} with {} task(s) lost; requeueing (failure {}/{})",
+            lost.len(),
+            rs.failures,
+            self.cfg.max_failures
+        );
+        if rs.failures > self.cfg.max_failures {
+            bail!(
+                "worker {w} {cause} ({} in flight) and failure budget ({}) is exhausted",
+                lost.len(),
+                self.cfg.max_failures
+            );
+        }
+        // a scheduled join can replace the dead worker immediately
+        self.process_joins(program, rs)?;
+        if !rs.alive.iter().any(|a| *a) {
+            bail!("all workers dead");
+        }
+        rs.state.requeue(program, &lost, w);
+        rs.state.mark_dead(w);
+        self.pump(program, rs)
+    }
+
+    /// Admit every scheduled join whose commit-step threshold has been
+    /// reached — or, if every current worker is dead, pull the next join
+    /// forward so the program can still finish.
+    fn process_joins(&mut self, program: &TaskProgram, rs: &mut RunState) -> Result<()> {
+        if self.spawner.is_none() {
+            return Ok(());
+        }
+        let mut admitted = false;
+        loop {
+            let due = rs.next_join < self.join_plan.len()
+                && (self.join_plan[rs.next_join] <= rs.commit_count
+                    || !rs.alive.iter().any(|a| *a));
+            if !due {
+                break;
+            }
+            let id = WorkerId(self.senders.len() as u32);
+            let mut spawner = self.spawner.take().expect("spawner presence checked");
+            let link = spawner(id);
+            self.spawner = Some(spawner);
+            let (tx, rx) = link.with_context(|| format!("admitting joining worker {id}"))?;
+            let added = self.add_link(tx, rx);
+            debug_assert_eq!(added, id);
+            let joined = rs.state.add_worker();
+            debug_assert_eq!(joined, id);
+            let now = crate::util::now_ns();
+            rs.inflight.push(Vec::new());
+            rs.alive.push(true);
+            rs.last_seen.push(now);
+            rs.last_end.push(0);
+            rs.trace.record_lease(id, LeaseKind::Granted, now, Vec::new());
+            rs.next_join += 1;
+            admitted = true;
+            log_info!("leader", "{id} joined at commit step {}", rs.commit_count);
+        }
+        if admitted {
+            self.pump(program, rs)?;
+        }
+        Ok(())
+    }
+
+    /// Launch speculative duplicate attempts of stragglers on idle
+    /// workers. A task qualifies when it has exactly one live attempt,
+    /// nothing else is ready to run, and it has been in flight longer
+    /// than `speculate_factor` × the per-op median runtime (≥ 3 samples).
+    fn maybe_speculate(&mut self, program: &TaskProgram, rs: &mut RunState) -> Result<()> {
+        if !self.cfg.speculate || rs.state.n_ready() > 0 || rs.state.is_done() {
+            return Ok(());
+        }
+        loop {
+            let Some(idle) = (0..self.senders.len())
+                .find(|i| rs.alive[*i] && rs.inflight[*i].is_empty())
+            else {
+                return Ok(());
+            };
+            let now = crate::util::now_ns();
+            // oldest straggler with a single live attempt
+            let mut best: Option<(u64, TaskId)> = None;
+            for wi in 0..rs.inflight.len() {
+                if !rs.alive[wi] || wi == idle {
+                    continue;
+                }
+                for &t in &rs.inflight[wi] {
+                    if rs.values[t.index()].is_some()
+                        || rs.revoking.contains(&t)
+                        || rs.cancels.contains(&t)
+                        || rs.has_other_live_attempt(t, WorkerId(wi as u32))
+                    {
+                        continue;
+                    }
+                    let Some(&t0) = rs.assigned_at.get(&t) else { continue };
+                    let Some(p50) = median_sample(&rs.samples, &program.task(t).op) else {
+                        continue;
+                    };
+                    let threshold = ((p50 as f64) * self.cfg.speculate_factor) as u64;
+                    if now.saturating_sub(t0) > threshold.max(1)
+                        && best.map_or(true, |(bt, _)| t0 < bt)
+                    {
+                        best = Some((t0, t));
+                    }
+                }
+            }
+            let Some((_, task)) = best else {
+                return Ok(());
+            };
+            let target = WorkerId(idle as u32);
+            let (args, shipped, saved) =
+                self.build_args(program, &rs.state, &rs.values, task, target)?;
+            match self.senders[idle].send(&Message::Assign {
+                task,
+                op: program.task(task).op.clone(),
+                args,
+            }) {
+                Ok(()) => {
+                    rs.state.force_assign(task, target);
+                    rs.inflight[idle].push(task);
+                    rs.trace.record_attempt(task, target, true, now);
+                    rs.trace.arg_bytes_shipped += shipped;
+                    rs.trace.arg_bytes_saved += saved;
+                    log_info!(
+                        "leader",
+                        "speculating {task} on idle {target} (straggler elsewhere)"
+                    );
+                }
+                // a dying target; its Disconnected event settles accounts
+                Err(_) => return Ok(()),
+            }
+        }
     }
 
     /// Assign ready tasks while capacity remains.
     ///
-    /// With a result cache attached, each ready task is first resolved
-    /// against the cache: content hits complete at the leader without any
-    /// dispatch, and a task identical to one already in flight parks until
-    /// that one completes instead of executing twice.
+    /// Each ready task is resolved in order against (1) the execution
+    /// ledger — a restarted leader serves checkpointed results without
+    /// dispatch, IO included, because the effect ran in the previous
+    /// incarnation — and (2) the result cache: content hits complete at
+    /// the leader, and a task identical to one already in flight parks
+    /// until that one completes instead of executing twice.
     ///
     /// A failed send means the worker is dying: the task is requeued and
     /// the worker excluded for the rest of this pump; the authoritative
     /// death accounting happens when its `Disconnected` event arrives.
-    #[allow(clippy::too_many_arguments)]
-    fn pump(
-        &mut self,
-        program: &TaskProgram,
-        state: &mut GreedyState,
-        values: &mut [Option<Vec<Value>>],
-        inflight: &mut [Vec<TaskId>],
-        alive: &[bool],
-        assigned_at: &mut std::collections::HashMap<TaskId, u64>,
-        trace: &mut ScheduleTrace,
-        cstate: &mut CacheState,
-    ) -> Result<()> {
+    fn pump(&mut self, program: &TaskProgram, rs: &mut RunState) -> Result<()> {
         let mut skip: HashSet<usize> = HashSet::new();
         loop {
             let usable = |w: usize, skip: &HashSet<usize>, inflight: &[Vec<TaskId>]| {
-                alive[w] && !skip.contains(&w) && inflight[w].len() < self.cfg.pipeline_depth
+                rs.alive[w] && !skip.contains(&w) && inflight[w].len() < self.cfg.pipeline_depth
             };
-            let has_capacity = (0..self.senders.len()).any(|w| usable(w, &skip, inflight));
-            if !has_capacity || state.n_ready() == 0 {
+            let has_capacity = (0..self.senders.len()).any(|w| usable(w, &skip, &rs.inflight));
+            if !has_capacity || rs.state.n_ready() == 0 {
                 return Ok(());
             }
-            let Some((task, w)) = state.assign_next(program) else {
+            let Some((task, w)) = rs.state.assign_next(program) else {
                 return Ok(());
             };
-            let (task, w) = if usable(w.index(), &skip, inflight) {
+            let (task, w) = if usable(w.index(), &skip, &rs.inflight) {
                 (task, w)
             } else {
                 // policy picked a bad target; reroute to most-idle usable worker
-                state.unassign(program, task, w);
+                rs.state.unassign(program, task, w);
                 let Some(w2) = (0..self.senders.len())
-                    .filter(|i| usable(*i, &skip, inflight))
-                    .min_by_key(|i| inflight[*i].len())
+                    .filter(|i| usable(*i, &skip, &rs.inflight))
+                    .min_by_key(|i| rs.inflight[*i].len())
                 else {
                     return Ok(());
                 };
                 let w2 = WorkerId(w2 as u32);
                 // pop the (new) top of the heap and pin it to w2
-                let Some(t2) = state.assign_to(program, w2) else {
+                let Some(t2) = rs.state.assign_to(program, w2) else {
                     return Ok(());
                 };
                 (t2, w2)
             };
+            // execution ledger: a restarted leader resumes checkpointed
+            // results instead of recomputing them
+            let resumed = rs
+                .ledger
+                .as_ref()
+                .and_then(|l| l.get(task))
+                .map(|e| (e.key, e.outputs.clone()));
+            if let Some((key, outs)) = resumed {
+                rs.state.abort_assign(w);
+                if let Some(cache) = &self.cache {
+                    // re-seed the cache under the original key
+                    if (key.hi | key.lo) != 0 && cache.cacheable(program.task(task)) {
+                        cache.insert_by_key(key, &outs);
+                    }
+                }
+                rs.values[task.index()] = Some(outs);
+                rs.trace.record_resumed(task);
+                rs.state.complete_local(program, task);
+                log_debug!("leader", "{task} resumed from the execution ledger");
+                continue;
+            }
             // result cache: resolve at the leader before paying dispatch
             if let Some(cache) = &self.cache {
                 let spec = program.task(task);
                 if cache.cacheable(spec) {
-                    let arg_vals = gather_arg_values(program, values, task)?;
+                    let arg_vals = gather_arg_values(program, &rs.values, task)?;
                     let key = cache.key_for(spec, &arg_vals);
                     // dedup first: while the provider is in flight its key
                     // cannot be in the store, and parking is neither a
                     // store hit nor a miss — it becomes a hit when served
-                    if let Some(&provider) = cstate.inflight_keys.get(&key) {
-                        state.abort_assign(w);
-                        cstate.waiting.entry(key).or_default().push(task);
+                    if let Some(&provider) = rs.cstate.inflight_keys.get(&key) {
+                        rs.state.abort_assign(w);
+                        rs.cstate.waiting.entry(key).or_default().push(task);
                         log_debug!(
                             "leader",
                             "dedup: {task} parked behind identical in-flight {provider}"
@@ -439,35 +834,37 @@ impl Leader {
                         continue;
                     }
                     if let Some(outs) = cache.lookup_key(&key) {
-                        state.abort_assign(w);
-                        values[task.index()] = Some(outs);
-                        trace.record_cache_hit(task);
-                        state.complete_local(program, task);
+                        rs.state.abort_assign(w);
+                        rs.values[task.index()] = Some(outs);
+                        rs.trace.record_cache_hit(task);
+                        rs.state.complete_local(program, task);
                         log_debug!("leader", "cache hit: {task} served at the leader");
                         continue;
                     }
-                    trace.cache_misses += 1;
-                    cstate.task_keys.insert(task, key);
-                    cstate.inflight_keys.insert(key, task);
+                    rs.trace.cache_misses += 1;
+                    rs.cstate.task_keys.insert(task, key);
+                    rs.cstate.inflight_keys.insert(key, task);
                 }
             }
-            let (args, shipped, saved) = self.build_args(program, state, values, task, w)?;
+            let (args, shipped, saved) = self.build_args(program, &rs.state, &rs.values, task, w)?;
             match self.senders[w.index()].send(&Message::Assign {
                 task,
                 op: program.task(task).op.clone(),
                 args,
             }) {
                 Ok(()) => {
-                    inflight[w.index()].push(task);
-                    assigned_at.insert(task, crate::util::now_ns());
-                    trace.arg_bytes_shipped += shipped;
-                    trace.arg_bytes_saved += saved;
+                    let now = crate::util::now_ns();
+                    rs.inflight[w.index()].push(task);
+                    rs.assigned_at.insert(task, now);
+                    rs.trace.record_attempt(task, w, false, now);
+                    rs.trace.arg_bytes_shipped += shipped;
+                    rs.trace.arg_bytes_saved += saved;
                     log_debug!("leader", "assigned {task} -> {w}");
                 }
                 Err(e) => {
                     log_info!("leader", "send to {w} failed ({e:#}); requeueing {task}");
-                    cstate.forget(task);
-                    state.unassign(program, task, w);
+                    rs.cstate.forget(task);
+                    rs.state.unassign(program, task, w);
                     skip.insert(w.index());
                 }
             }
@@ -520,31 +917,25 @@ impl Leader {
 
     /// Leader-mediated work stealing: idle worker + empty ready queue →
     /// revoke a queued task from a victim.
-    fn try_steal(
-        &mut self,
-        state: &mut GreedyState,
-        inflight: &[Vec<TaskId>],
-        alive: &[bool],
-        revoking: &mut HashSet<TaskId>,
-        pending_steals: &mut std::collections::HashMap<TaskId, WorkerId>,
-        rng: &mut Rng,
-    ) -> Result<()> {
-        if self.cfg.steal == StealPolicy::None || state.n_ready() > 0 || state.is_done() {
+    fn try_steal(&mut self, rs: &mut RunState) -> Result<()> {
+        if self.cfg.steal == StealPolicy::None || rs.state.n_ready() > 0 || rs.state.is_done() {
             return Ok(());
         }
-        if !revoking.is_empty() {
+        if !rs.revoking.is_empty() {
             return Ok(()); // one steal in flight at a time — no storms
         }
-        let idle_exists = (0..self.senders.len()).any(|w| alive[w] && inflight[w].is_empty());
+        let idle_exists =
+            (0..self.senders.len()).any(|w| rs.alive[w] && rs.inflight[w].is_empty());
         if !idle_exists {
             return Ok(());
         }
         // victims: workers with >1 in flight (≥1 queued beyond the running one)
-        let depths: Vec<usize> = inflight
+        let depths: Vec<usize> = rs
+            .inflight
             .iter()
             .enumerate()
             .map(|(w, q)| {
-                if alive[w] && q.len() > 1 {
+                if rs.alive[w] && q.len() > 1 {
                     q.len()
                 } else {
                     0
@@ -554,28 +945,45 @@ impl Leader {
         // thief is the first idle worker
         let thief = WorkerId(
             (0..self.senders.len())
-                .find(|w| alive[*w] && inflight[*w].is_empty())
+                .find(|w| rs.alive[*w] && rs.inflight[*w].is_empty())
                 .unwrap() as u32,
         );
-        let Some(victim) = self.cfg.steal.pick_victim(thief, &depths, rng) else {
+        let Some(victim) = self.cfg.steal.pick_victim(thief, &depths, &mut rs.rng) else {
             return Ok(());
         };
-        // steal the most recently queued (last) task not already revoking
-        let Some(&task) = inflight[victim.index()]
+        // steal the most recently queued (last) task that is not already
+        // being revoked, being cancelled, or committed elsewhere
+        let Some(&task) = rs.inflight[victim.index()]
             .iter()
             .rev()
-            .find(|t| !revoking.contains(t))
+            .find(|t| {
+                !rs.revoking.contains(t)
+                    && !rs.cancels.contains(t)
+                    && rs.values[t.index()].is_none()
+            })
         else {
             return Ok(());
         };
-        revoking.insert(task);
-        pending_steals.insert(task, thief);
+        rs.revoking.insert(task);
+        rs.pending_steals.insert(task, thief);
         log_debug!("leader", "revoking {task} from {victim} for {thief}");
         self.senders[victim.index()]
             .send(&Message::Revoke { task })
             .with_context(|| format!("revoking {task} from {victim}"))?;
         Ok(())
     }
+}
+
+/// Median of the recorded runtime samples for `op`, requiring at least 3
+/// samples before straggler detection trusts it.
+fn median_sample(samples: &HashMap<Vec<u8>, Vec<u64>>, op: &OpKind) -> Option<u64> {
+    let v = samples.get(&super::codec::encode_op(op))?;
+    if v.len() < 3 {
+        return None;
+    }
+    let mut s = v.clone();
+    s.sort_unstable();
+    Some(s[s.len() / 2])
 }
 
 /// Concrete input values of a ready task (every dependency has completed,

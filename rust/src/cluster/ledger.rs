@@ -1,0 +1,275 @@
+//! Leader execution ledger: an append-only on-disk checkpoint of
+//! committed task results.
+//!
+//! Every result the leader commits is appended as one record
+//! `(task id, content-addressed cache key, output values)` and flushed,
+//! so a leader that dies mid-run (crash, `kill_at_step` fault injection)
+//! leaves a prefix of the program's results on disk. A restarted leader
+//! opens the same path and *resumes*: ledgered tasks are served straight
+//! from the checkpoint — never re-executed, IO included, because the
+//! effect already ran in the previous incarnation — and their values
+//! seed the result cache under the original content-addressed keys.
+//!
+//! Format: `"PHLG" magic | version u8`, then per record
+//! `len u32 | payload`, payload = `task u32 | key hi u64 | key lo u64 |
+//! n_outputs varint | value bytes…` using the wire codec's value
+//! encoding. A torn final record (crash mid-append) is detected on open
+//! and truncated away — everything before it is intact by construction.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cache::TaskKey;
+use crate::ir::task::{TaskId, Value};
+use crate::util::bytes::{Reader, Writer};
+
+use super::codec::{read_value, write_value};
+
+const MAGIC: &[u8; 4] = b"PHLG";
+const VERSION: u8 = 1;
+
+/// One committed result as recorded on disk.
+#[derive(Clone, Debug)]
+pub struct LedgerEntry {
+    pub task: TaskId,
+    /// The result cache's content-addressed key, or `hi == lo == 0` when
+    /// the task was not cacheable (no cache configured, or impure op the
+    /// key namespace refuses) — the outputs are still resumable either
+    /// way; the key only gates re-seeding the cache.
+    pub key: TaskKey,
+    pub outputs: Vec<Value>,
+}
+
+/// Append-only execution ledger, hash-indexed by task id in memory.
+pub struct Ledger {
+    file: File,
+    entries: HashMap<TaskId, LedgerEntry>,
+}
+
+impl Ledger {
+    /// Open (creating if absent) the ledger at `path`, loading every
+    /// intact record. A torn trailing record is truncated away with a
+    /// warning; corruption anywhere earlier is an error.
+    pub fn open(path: &Path) -> Result<Ledger> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("open ledger {}", path.display()))?;
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read ledger {}", path.display()))?;
+
+        let mut entries = HashMap::new();
+        let good_len = if bytes.is_empty() {
+            file.write_all(MAGIC)?;
+            file.write_all(&[VERSION])?;
+            file.flush()?;
+            (MAGIC.len() + 1) as u64
+        } else {
+            if bytes.len() < MAGIC.len() + 1 || &bytes[..MAGIC.len()] != MAGIC {
+                bail!("{} is not a parhask ledger (bad magic)", path.display());
+            }
+            let v = bytes[MAGIC.len()];
+            if v != VERSION {
+                bail!("ledger version mismatch: got {v}, want {VERSION}");
+            }
+            let mut off = MAGIC.len() + 1;
+            loop {
+                if off == bytes.len() {
+                    break;
+                }
+                if bytes.len() - off < 4 {
+                    break; // torn length prefix
+                }
+                let len =
+                    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+                if bytes.len() - off - 4 < len {
+                    break; // torn payload
+                }
+                let payload = &bytes[off + 4..off + 4 + len];
+                let entry = decode_entry(payload).with_context(|| {
+                    format!("corrupt ledger record at byte {off} in {}", path.display())
+                })?;
+                // later records win: a re-append after a resumed run is
+                // legal and simply refreshes the entry
+                entries.insert(entry.task, entry);
+                off += 4 + len;
+            }
+            if off != bytes.len() {
+                crate::log_warn!(
+                    "ledger",
+                    "dropping {} torn trailing bytes from {} (crash mid-append)",
+                    bytes.len() - off,
+                    path.display()
+                );
+            }
+            off as u64
+        };
+        // drop any torn tail so future appends start on a record boundary
+        file.set_len(good_len)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(Ledger { file, entries })
+    }
+
+    /// Load every intact record without keeping the file open for
+    /// appends (read-only inspection, used by tests and tooling).
+    pub fn load(path: &Path) -> Result<Vec<LedgerEntry>> {
+        let ledger = Ledger::open(path)?;
+        let mut out: Vec<LedgerEntry> = ledger.entries.into_values().collect();
+        out.sort_by_key(|e| e.task.index());
+        Ok(out)
+    }
+
+    pub fn get(&self, task: TaskId) -> Option<&LedgerEntry> {
+        self.entries.get(&task)
+    }
+
+    pub fn contains(&self, task: TaskId) -> bool {
+        self.entries.contains_key(&task)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append one committed result and flush it to disk before the
+    /// leader acknowledges the commit anywhere else.
+    pub fn append(&mut self, task: TaskId, key: TaskKey, outputs: &[Value]) -> Result<()> {
+        let mut w = Writer::with_capacity(32);
+        w.u32(task.0);
+        w.u64(key.hi);
+        w.u64(key.lo);
+        w.varint(outputs.len() as u64);
+        for v in outputs {
+            write_value(&mut w, v);
+        }
+        let payload = w.into_vec();
+        self.file.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.file.write_all(&payload)?;
+        self.file.flush()?;
+        self.entries.insert(
+            task,
+            LedgerEntry {
+                task,
+                key,
+                outputs: outputs.to_vec(),
+            },
+        );
+        Ok(())
+    }
+}
+
+fn decode_entry(payload: &[u8]) -> Result<LedgerEntry> {
+    let mut r = Reader::new(payload);
+    let task = TaskId(r.u32()?);
+    let key = TaskKey {
+        hi: r.u64()?,
+        lo: r.u64()?,
+    };
+    let n = r.varint()? as usize;
+    if n > 4096 {
+        bail!("ledger record claims {n} outputs");
+    }
+    let outputs = (0..n).map(|_| read_value(&mut r)).collect::<Result<_>>()?;
+    if !r.is_done() {
+        bail!("{} trailing bytes in ledger record", r.remaining());
+    }
+    Ok(LedgerEntry { task, key, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("parhask-ledger-test-{}-{name}.bin", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn append_then_reopen_roundtrips() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let t = Value::tensor(Tensor::uniform(vec![4, 3], 9));
+        {
+            let mut led = Ledger::open(&path).unwrap();
+            assert!(led.is_empty());
+            led.append(TaskId(2), TaskKey { hi: 1, lo: 2 }, &[t.clone(), Value::Unit])
+                .unwrap();
+            led.append(TaskId(0), TaskKey { hi: 0, lo: 0 }, &[Value::Token])
+                .unwrap();
+        }
+        let led = Ledger::open(&path).unwrap();
+        assert_eq!(led.len(), 2);
+        let e = led.get(TaskId(2)).unwrap();
+        assert_eq!(e.key, TaskKey { hi: 1, lo: 2 });
+        assert_eq!(e.outputs, vec![t, Value::Unit]);
+        assert!(led.contains(TaskId(0)));
+        assert!(!led.contains(TaskId(1)));
+
+        let listed = Ledger::load(&path).unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(listed[0].task, TaskId(0), "load() sorts by task id");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut led = Ledger::open(&path).unwrap();
+            led.append(TaskId(1), TaskKey { hi: 7, lo: 7 }, &[Value::Unit])
+                .unwrap();
+        }
+        // simulate a crash mid-append: bolt half a record onto the end
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[99, 0, 0, 0, 1, 2, 3]).unwrap();
+        }
+        let mut led = Ledger::open(&path).unwrap();
+        assert_eq!(led.len(), 1, "intact prefix survives");
+        // and the file is clean again: appends land on a record boundary
+        led.append(TaskId(2), TaskKey { hi: 0, lo: 0 }, &[Value::Unit])
+            .unwrap();
+        drop(led);
+        assert_eq!(Ledger::open(&path).unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reappend_of_same_task_takes_the_newer_record() {
+        let path = tmp("reappend");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut led = Ledger::open(&path).unwrap();
+            led.append(TaskId(5), TaskKey { hi: 1, lo: 1 }, &[Value::Unit])
+                .unwrap();
+            led.append(TaskId(5), TaskKey { hi: 2, lo: 2 }, &[Value::Token])
+                .unwrap();
+        }
+        let led = Ledger::open(&path).unwrap();
+        assert_eq!(led.len(), 1);
+        assert_eq!(led.get(TaskId(5)).unwrap().key, TaskKey { hi: 2, lo: 2 });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_ledger_file_is_rejected() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"not a ledger at all").unwrap();
+        assert!(Ledger::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

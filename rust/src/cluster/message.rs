@@ -32,6 +32,10 @@ pub enum Message {
     /// Response to `Revoke` when the task already started (or finished).
     RevokeDenied { task: TaskId },
     Pong,
+    /// Membership lease renewal: an idle worker proves liveness between
+    /// assignments. Any message renews the lease; this one exists so a
+    /// healthy-but-idle worker is never mistaken for a dead one.
+    Heartbeat { worker: WorkerId },
     /// Graceful shutdown acknowledgement.
     Bye { worker: WorkerId },
 
@@ -58,6 +62,7 @@ impl Message {
             Message::Revoked { .. } => "revoked",
             Message::RevokeDenied { .. } => "revoke_denied",
             Message::Pong => "pong",
+            Message::Heartbeat { .. } => "heartbeat",
             Message::Bye { .. } => "bye",
             Message::Assign { .. } => "assign",
             Message::Revoke { .. } => "revoke",

@@ -8,22 +8,34 @@
 //! * [`codec`] — binary wire format (every message is serialized even on
 //!   the in-proc transport, so communication cost is real in both modes);
 //! * [`transport`] — in-proc channels and TCP, behind one trait pair;
-//! * [`worker`] — worker loop: receive, execute, reply (+ fault injection);
+//! * [`worker`] — worker loop: receive, execute, reply (+ fault injection
+//!   and membership-lease heartbeats);
 //! * [`leader`] — the coordinator: greedy dispatch, pipelined assignment,
-//!   leader-mediated work stealing, failure detection and re-execution;
-//! * [`node`] — assembly helpers (in-proc cluster, TCP serve/connect).
+//!   leader-mediated work stealing, lease-based failure detection and
+//!   re-execution, elastic joins, speculative duplicate attempts, and
+//!   execution-ledger checkpoints;
+//! * [`ledger`] — the append-only on-disk checkpoint a restarted leader
+//!   resumes from;
+//! * [`node`] — assembly helpers (in-proc cluster, churn harness, TCP
+//!   serve/connect).
+//!
+//! Fault *schedules* live in [`crate::fault`]; re-exported here for
+//! convenience.
 
 pub mod codec;
 pub mod leader;
+pub mod ledger;
 pub mod message;
 pub mod node;
 pub mod transport;
 pub mod worker;
 
-pub use leader::{ClusterConfig, Leader};
+pub use crate::fault::{FaultPlan, PoissonRates, WorkerFaults};
+pub use leader::{ClusterConfig, Leader, Spawner};
+pub use ledger::{Ledger, LedgerEntry};
 pub use message::{ArgSpec, Message};
 pub use node::{
-    run_cluster_inproc, run_cluster_inproc_cached, run_cluster_tcp, run_cluster_tcp_cached,
-    serve_worker,
+    run_cluster_churn, run_cluster_inproc, run_cluster_inproc_cached, run_cluster_tcp,
+    run_cluster_tcp_cached, serve_worker,
 };
-pub use worker::{FaultPlan, Worker};
+pub use worker::Worker;

@@ -1,12 +1,15 @@
-//! Cluster assembly: in-proc clusters (the paper's simulated-workers mode)
-//! and real TCP clusters (`parhask worker` processes).
+//! Cluster assembly: in-proc clusters (the paper's simulated-workers mode),
+//! the elastic churn harness, and real TCP clusters (`parhask worker`
+//! processes).
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::cache::ResultCache;
+use crate::fault::{FaultPlan, WorkerFaults};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::RunResult;
 use crate::scheduler::WorkerId;
@@ -15,7 +18,17 @@ use crate::log_info;
 
 use super::leader::{ClusterConfig, Leader};
 use super::transport::{inproc_pair, tcp_split, MsgReceiver, MsgSender};
-use super::worker::{FaultPlan, Worker};
+use super::worker::Worker;
+
+/// Worker-side lease-renewal interval for a given leader lease: renew
+/// well inside the lease so an idle-but-healthy worker is never expired.
+fn lease_heartbeat(cfg: &ClusterConfig) -> Option<Duration> {
+    if cfg.lease.is_zero() {
+        None
+    } else {
+        Some((cfg.lease / 4).max(Duration::from_millis(1)))
+    }
+}
 
 /// Run `program` on an in-process cluster of `n_workers` worker threads
 /// exchanging fully-serialized messages — the paper's Cloud-Haskell-style
@@ -27,7 +40,7 @@ pub fn run_cluster_inproc(
     executor: Arc<dyn Executor>,
     n_workers: usize,
     cfg: ClusterConfig,
-    faults: Option<Vec<FaultPlan>>,
+    faults: Option<Vec<WorkerFaults>>,
 ) -> Result<RunResult> {
     run_cluster_inproc_cached(program, executor, n_workers, cfg, faults, None)
 }
@@ -40,10 +53,11 @@ pub fn run_cluster_inproc_cached(
     executor: Arc<dyn Executor>,
     n_workers: usize,
     cfg: ClusterConfig,
-    faults: Option<Vec<FaultPlan>>,
+    faults: Option<Vec<WorkerFaults>>,
     cache: Option<Arc<ResultCache>>,
 ) -> Result<RunResult> {
     anyhow::ensure!(n_workers >= 1, "need at least one worker");
+    let hb = lease_heartbeat(&cfg);
     let mut links: Vec<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)> = Vec::new();
     let mut worker_handles = Vec::new();
     for i in 0..n_workers {
@@ -58,7 +72,10 @@ pub fn run_cluster_inproc_cached(
             std::thread::Builder::new()
                 .name(format!("worker-{i}"))
                 .spawn(move || {
-                    let w = Worker::new(WorkerId(i as u32), w_tx, w_rx, ex).with_fault(fault);
+                    let mut w = Worker::new(WorkerId(i as u32), w_tx, w_rx, ex).with_fault(fault);
+                    if let Some(hb) = hb {
+                        w = w.with_heartbeat(hb);
+                    }
                     if let Err(e) = w.run() {
                         crate::log_warn!("worker", "w{i} error: {e:#}");
                     }
@@ -74,6 +91,77 @@ pub fn run_cluster_inproc_cached(
     result
 }
 
+/// Run `program` on an *elastic* in-process cluster driven by a
+/// deterministic [`FaultPlan`]: `plan.initial_workers` threads start up
+/// front, one more joins at each `plan.joins` commit step, and every
+/// worker misbehaves exactly as `plan.faults` dictates (deaths, mutes,
+/// straggler slowdowns). `plan.kill_leader_at_step` aborts the leader
+/// mid-run to exercise ledger resume (`cfg.ledger_path`).
+///
+/// The same plan drives [`crate::simulator`]'s churn mode, which is what
+/// lets tests cross-check a real churning run against its simulation.
+pub fn run_cluster_churn(
+    program: &TaskProgram,
+    executor: Arc<dyn Executor>,
+    mut cfg: ClusterConfig,
+    plan: &FaultPlan,
+    cache: Option<Arc<ResultCache>>,
+) -> Result<RunResult> {
+    anyhow::ensure!(
+        plan.initial_workers >= 1,
+        "churn plan needs at least one initial worker"
+    );
+    cfg.kill_at_step = cfg.kill_at_step.or(plan.kill_leader_at_step);
+    let hb = lease_heartbeat(&cfg);
+    let handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let faults: Vec<WorkerFaults> =
+        (0..plan.total_workers()).map(|i| plan.worker(i)).collect();
+
+    let mut spawn_worker = {
+        let handles = Arc::clone(&handles);
+        let executor = Arc::clone(&executor);
+        move |id: WorkerId| -> Result<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)> {
+            let ((l_tx, l_rx), (w_tx, w_rx)) = inproc_pair();
+            let ex = Arc::clone(&executor);
+            let fault = faults.get(id.index()).copied().unwrap_or_default();
+            let h = std::thread::Builder::new()
+                .name(format!("worker-{id}"))
+                .spawn(move || {
+                    let mut w = Worker::new(id, w_tx, w_rx, ex).with_fault(fault);
+                    if let Some(hb) = hb {
+                        w = w.with_heartbeat(hb);
+                    }
+                    if let Err(e) = w.run() {
+                        crate::log_warn!("worker", "{id} error: {e:#}");
+                    }
+                })
+                .context("spawning worker thread")?;
+            handles.lock().unwrap().push(h);
+            Ok((
+                Box::new(l_tx) as Box<dyn MsgSender>,
+                Box::new(l_rx) as Box<dyn MsgReceiver>,
+            ))
+        }
+    };
+
+    let mut links = Vec::new();
+    for i in 0..plan.initial_workers {
+        links.push(spawn_worker(WorkerId(i as u32))?);
+    }
+    let leader = Leader::new(program.clone(), links, cfg)
+        .with_cache(cache)
+        .with_spawner(Box::new(spawn_worker), plan.joins.clone());
+    let result = leader.run();
+    // leader (and its sender halves) dropped by run(): every worker —
+    // joined, muted, or idle — sees the channel close and exits
+    let hs: Vec<_> = std::mem::take(&mut *handles.lock().unwrap());
+    for h in hs {
+        let _ = h.join();
+    }
+    result
+}
+
 /// Serve one worker over TCP: connect to the leader at `leader_addr`,
 /// announce with `id`, execute until shutdown. This is the body of the
 /// `parhask worker` subcommand.
@@ -81,7 +169,7 @@ pub fn serve_worker(
     leader_addr: &str,
     id: WorkerId,
     executor: Arc<dyn Executor>,
-    fault: FaultPlan,
+    fault: WorkerFaults,
 ) -> Result<()> {
     let stream = TcpStream::connect(leader_addr)
         .with_context(|| format!("connecting to leader at {leader_addr}"))?;
@@ -252,11 +340,9 @@ mod tests {
         };
         // worker 0 dies after 2 tasks
         let faults = vec![
-            FaultPlan {
-                die_after_tasks: Some(2),
-            },
-            FaultPlan::default(),
-            FaultPlan::default(),
+            WorkerFaults::dies_after(2),
+            WorkerFaults::default(),
+            WorkerFaults::default(),
         ];
         let r = run_cluster_inproc(&p, Arc::new(HostExecutor), 3, cfg, Some(faults)).unwrap();
         let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
@@ -267,6 +353,36 @@ mod tests {
     }
 
     #[test]
+    fn elastic_join_plan_completes() {
+        use crate::scheduler::trace::LeaseKind;
+        let p = matrix_program(5, 8);
+        // one worker at startup, two more join at commit steps 2 and 4
+        let plan = FaultPlan {
+            initial_workers: 1,
+            joins: vec![2, 4],
+            faults: vec![WorkerFaults::default(); 3],
+            kill_leader_at_step: None,
+        };
+        let cfg = ClusterConfig {
+            lease: Duration::from_millis(500),
+            max_failures: 3,
+            ..Default::default()
+        };
+        let r = run_cluster_churn(&p, Arc::new(HostExecutor), cfg, &plan, None).unwrap();
+        r.trace.validate(&p).unwrap();
+        let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+        let want = expected_total(5, 8);
+        assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+        let grants = r
+            .trace
+            .leases
+            .iter()
+            .filter(|l| l.kind == LeaseKind::Granted)
+            .count();
+        assert_eq!(grants, 3, "every member (joiners included) got a lease");
+    }
+
+    #[test]
     fn failure_budget_exhaustion_errors() {
         let p = matrix_program(6, 8);
         let cfg = ClusterConfig {
@@ -274,12 +390,7 @@ mod tests {
             heartbeat: std::time::Duration::from_millis(50),
             ..Default::default()
         };
-        let faults = vec![
-            FaultPlan {
-                die_after_tasks: Some(1),
-            },
-            FaultPlan::default(),
-        ];
+        let faults = vec![WorkerFaults::dies_after(1), WorkerFaults::default()];
         let err =
             run_cluster_inproc(&p, Arc::new(HostExecutor), 2, cfg, Some(faults)).unwrap_err();
         assert!(format!("{err:#}").contains("failure budget"), "{err:#}");
@@ -395,7 +506,7 @@ mod tests {
                             &addr_s,
                             WorkerId(i),
                             Arc::new(HostExecutor),
-                            FaultPlan::default(),
+                            WorkerFaults::default(),
                         ) {
                             Ok(()) => return,
                             Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),

@@ -2,15 +2,22 @@
 //!
 //! Holds an output cache so the leader can send `ArgSpec::Cached`
 //! references instead of re-shipping tensors (what makes the
-//! locality-aware placement policy worth having). Supports fault
-//! injection — dying abruptly after N tasks — used by the fault-tolerance
-//! tests and the recovery ablation.
+//! locality-aware placement policy worth having). When configured with a
+//! heartbeat interval, an idle worker periodically renews its membership
+//! lease so the leader can tell "idle" from "gone".
+//!
+//! Supports deterministic fault injection ([`WorkerFaults`]): dying
+//! abruptly after N tasks, going mute (alive but silent — a network
+//! partition as the leader sees it), and straggler slowdowns. Used by
+//! the fault-tolerance tests and the recovery ablation.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::fault::WorkerFaults;
 use crate::ir::task::{TaskId, Value};
 use crate::scheduler::WorkerId;
 use crate::tasks::Executor;
@@ -18,14 +25,6 @@ use crate::{log_debug, log_info};
 
 use super::message::{ArgSpec, Message};
 use super::transport::{MsgReceiver, MsgSender};
-
-/// Fault injection plan for a worker.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct FaultPlan {
-    /// Die (drop the connection without a `Bye`) after completing this
-    /// many tasks.
-    pub die_after_tasks: Option<usize>,
-}
 
 /// A worker endpoint. Generic over transport halves.
 pub struct Worker<S: MsgSender, R: MsgReceiver> {
@@ -37,7 +36,13 @@ pub struct Worker<S: MsgSender, R: MsgReceiver> {
     cache: HashMap<TaskId, Vec<Value>>,
     /// tasks assigned but not yet started (revocable).
     queue: VecDeque<(TaskId, crate::ir::task::OpKind, Vec<ArgSpec>)>,
-    fault: FaultPlan,
+    fault: WorkerFaults,
+    /// Injected partition: alive but silent, ignoring all work.
+    muted: bool,
+    /// Renew the membership lease with a `Heartbeat` after this much
+    /// idle time. `None` (the default) never heartbeats — correct for
+    /// clusters without lease expiry.
+    heartbeat: Option<Duration>,
     completed: usize,
 }
 
@@ -50,17 +55,25 @@ impl<S: MsgSender, R: MsgReceiver> Worker<S, R> {
             executor,
             cache: HashMap::new(),
             queue: VecDeque::new(),
-            fault: FaultPlan::default(),
+            fault: WorkerFaults::default(),
+            muted: false,
+            heartbeat: None,
             completed: 0,
         }
     }
 
-    pub fn with_fault(mut self, fault: FaultPlan) -> Self {
+    pub fn with_fault(mut self, fault: WorkerFaults) -> Self {
         self.fault = fault;
         self
     }
 
-    /// Main loop: runs until `Shutdown` (graceful) or injected death.
+    pub fn with_heartbeat(mut self, interval: Duration) -> Self {
+        self.heartbeat = Some(interval);
+        self
+    }
+
+    /// Main loop: runs until `Shutdown` (graceful), injected death, or
+    /// the leader's side of the transport goes away.
     pub fn run(mut self) -> Result<()> {
         self.tx
             .send(&Message::Hello { worker: self.id })
@@ -68,41 +81,78 @@ impl<S: MsgSender, R: MsgReceiver> Worker<S, R> {
         log_info!("worker", "{} up", self.id);
         loop {
             // Drain queued work before blocking on the next message.
-            if let Some((task, op, args)) = self.queue.pop_front() {
-                self.execute_task(task, op, args)?;
-                if let Some(k) = self.fault.die_after_tasks {
-                    if self.completed >= k {
-                        log_info!("worker", "{} injected death after {k} tasks", self.id);
-                        return Ok(()); // drop connection without Bye
+            if !self.muted {
+                if let Some((task, op, args)) = self.queue.pop_front() {
+                    self.execute_task(task, op, args)?;
+                    if let Some(k) = self.fault.die_after_tasks {
+                        if self.completed >= k {
+                            log_info!("worker", "{} injected death after {k} tasks", self.id);
+                            return Ok(()); // drop connection without Bye
+                        }
                     }
-                }
-                // Between tasks, ingest pending control messages (revokes,
-                // new assignments) without blocking. Zero-duration drain:
-                // a 1ms poll here was the dominant per-task overhead
-                // (≈555µs/task → ≈40µs/task, see EXPERIMENTS.md §Perf).
-                while let Ok(Some(m)) = self.rx.recv_timeout(std::time::Duration::ZERO) {
-                    if !self.handle(m)? {
-                        return Ok(());
+                    if let Some(k) = self.fault.mute_after_tasks {
+                        if self.completed >= k {
+                            log_info!(
+                                "worker",
+                                "{} injected mute after {k} tasks (alive, silent)",
+                                self.id
+                            );
+                            self.muted = true;
+                            self.queue.clear();
+                        }
                     }
+                    // Between tasks, ingest pending control messages (revokes,
+                    // new assignments) without blocking. Zero-duration drain:
+                    // a 1ms poll here was the dominant per-task overhead
+                    // (≈555µs/task → ≈40µs/task, see EXPERIMENTS.md §Perf).
+                    while let Ok(Some(m)) = self.rx.recv_timeout(Duration::ZERO) {
+                        if !self.handle(m)? {
+                            return Ok(());
+                        }
+                    }
+                    continue;
                 }
-                continue;
             }
-            match self.rx.recv() {
-                Ok(msg) => {
-                    if !self.handle(msg)? {
+            // Idle (or muted): block for the next message. With a
+            // heartbeat configured, wake periodically to renew the
+            // membership lease — a muted worker pointedly does not.
+            let msg = match self.heartbeat.filter(|_| !self.muted) {
+                Some(hb) => match self.rx.recv_timeout(hb) {
+                    Ok(Some(m)) => m,
+                    Ok(None) => {
+                        if self.tx.send(&Message::Heartbeat { worker: self.id }).is_err() {
+                            log_info!("worker", "{} leader gone; exiting", self.id);
+                            return Ok(());
+                        }
+                        continue;
+                    }
+                    Err(e) => {
+                        log_info!("worker", "{} leader gone: {e:#}", self.id);
                         return Ok(());
                     }
-                }
-                Err(e) => {
-                    log_info!("worker", "{} leader gone: {e:#}", self.id);
-                    return Ok(());
-                }
+                },
+                None => match self.rx.recv() {
+                    Ok(m) => m,
+                    Err(e) => {
+                        log_info!("worker", "{} leader gone: {e:#}", self.id);
+                        return Ok(());
+                    }
+                },
+            };
+            if !self.handle(msg)? {
+                return Ok(());
             }
         }
     }
 
     /// Returns false to stop.
     fn handle(&mut self, msg: Message) -> Result<bool> {
+        if self.muted {
+            // A partitioned worker hears nothing and says nothing; only
+            // Shutdown ends the thread (so in-proc tests can join it —
+            // a real partition would simply never deliver it).
+            return Ok(!matches!(msg, Message::Shutdown));
+        }
         match msg {
             Message::Assign { task, op, args } => {
                 self.queue.push_back((task, op, args));
@@ -149,6 +199,14 @@ impl<S: MsgSender, R: MsgReceiver> Worker<S, R> {
             .collect();
         let t0 = crate::util::now_ns();
         let result = resolved.and_then(|vals| self.executor.execute(&op, &vals));
+        // Injected straggler: stretch execution to slow_factor × its real
+        // runtime. The reported compute_ns includes the stretch — the
+        // leader's straggler detector must see the slow wall-clock.
+        if self.fault.slow_factor > 1.0 {
+            let real = crate::util::now_ns() - t0;
+            let extra = (real as f64 * (self.fault.slow_factor - 1.0)) as u64;
+            std::thread::sleep(Duration::from_nanos(extra));
+        }
         let compute_ns = crate::util::now_ns() - t0;
         match result {
             Ok(outputs) => {

@@ -88,6 +88,23 @@ pub struct RunConfig {
     /// always verify; this flag opts release builds in (off by default so
     /// benchmark numbers exclude verifier overhead).
     pub verify_ir: bool,
+    /// Cluster membership lease (`--lease-ms`). 0 disables lease-based
+    /// failure detection (workers are then only declared dead on
+    /// disconnect).
+    pub lease_ms: u64,
+    /// Speculatively duplicate straggler tasks onto idle workers
+    /// (`--speculate`). First result wins; the loser is revoked.
+    pub speculate: bool,
+    /// A task is a straggler once it has run `speculate_factor` × the
+    /// median observed runtime of its op kind (`--speculate-factor`).
+    pub speculate_factor: f64,
+    /// Execution-ledger checkpoint path (`--ledger`). The leader appends
+    /// every committed result; a restarted leader pointed at the same
+    /// file resumes without recomputing ledgered tasks.
+    pub ledger: Option<String>,
+    /// Fault injection: kill the leader after this many commits
+    /// (`--kill-at-step`), exercising ledger resume.
+    pub kill_at_step: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -105,6 +122,11 @@ impl Default for RunConfig {
             partition: PartitionConfig::default(),
             sim_cache_hit_rate: None,
             verify_ir: false,
+            lease_ms: 0,
+            speculate: false,
+            speculate_factor: 2.0,
+            ledger: None,
+            kill_at_step: None,
         }
     }
 }
@@ -178,6 +200,23 @@ impl RunConfig {
                     self.partition.allow_artifact(name.trim());
                 }
             }
+            "lease_ms" => self.lease_ms = value.parse()?,
+            "speculate" => {
+                self.speculate = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    _ => bail!("bad --speculate value {value:?} (on | off)"),
+                }
+            }
+            "speculate_factor" => {
+                let f: f64 = value.parse()?;
+                if !(1.0..).contains(&f) {
+                    bail!("speculate_factor must be ≥ 1, got {f}");
+                }
+                self.speculate_factor = f;
+            }
+            "ledger" => self.ledger = Some(value.to_string()),
+            "kill_at_step" => self.kill_at_step = Some(value.parse()?),
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -191,6 +230,11 @@ impl RunConfig {
             heartbeat: Duration::from_millis(self.heartbeat_ms),
             max_failures: self.max_failures,
             use_cached_args: self.use_cached_args,
+            lease: Duration::from_millis(self.lease_ms),
+            speculate: self.speculate,
+            speculate_factor: self.speculate_factor,
+            ledger_path: self.ledger.as_ref().map(std::path::PathBuf::from),
+            kill_at_step: self.kill_at_step,
         }
     }
 }
@@ -258,6 +302,34 @@ mod tests {
             c.set("cache_mb", "99999999999999").is_err(),
             "oversized byte budget must be rejected, not wrap"
         );
+    }
+
+    #[test]
+    fn fault_tolerance_overrides() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.lease_ms, 0, "leases are off by default");
+        assert!(!c.speculate, "speculation is off by default");
+        c.set("lease-ms", "250").unwrap(); // hyphen form accepted
+        c.set("speculate", "on").unwrap();
+        c.set("speculate_factor", "3.5").unwrap();
+        c.set("ledger", "/tmp/run.ledger").unwrap();
+        c.set("kill_at_step", "7").unwrap();
+        assert_eq!(c.lease_ms, 250);
+        assert!(c.speculate);
+        assert_eq!(c.speculate_factor, 3.5);
+        assert_eq!(c.ledger.as_deref(), Some("/tmp/run.ledger"));
+        assert_eq!(c.kill_at_step, Some(7));
+        assert!(c.set("speculate_factor", "0.5").is_err());
+        assert!(c.set("speculate", "maybe").is_err());
+
+        let cc = c.cluster_config();
+        assert_eq!(cc.lease, Duration::from_millis(250));
+        assert!(cc.speculate);
+        assert_eq!(
+            cc.ledger_path.as_deref(),
+            Some(std::path::Path::new("/tmp/run.ledger"))
+        );
+        assert_eq!(cc.kill_at_step, Some(7));
     }
 
     #[test]

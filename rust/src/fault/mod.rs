@@ -1,0 +1,252 @@
+//! Deterministic fault-injection harness.
+//!
+//! A [`FaultPlan`] is a *seeded, pre-computed* schedule of cluster
+//! misbehaviour — worker joins, deaths, mutes (a worker that keeps
+//! running but stops talking, which is what a network partition looks
+//! like from the leader), straggler slowdowns, and a leader
+//! kill-at-step. The same plan drives the discrete-event simulator,
+//! the real in-proc cluster, and unit tests, so every churn scenario
+//! is reproducible from a single `u64` seed: no sleeps, no wall-clock
+//! races, no flaky tests.
+//!
+//! Schedules are expressed in *commit steps* (the leader's count of
+//! committed task results), not wall time — the one clock that is
+//! identical between the simulator and a real run.
+
+use crate::util::rng::Rng;
+
+/// Per-worker fault behaviour. `Default` is a healthy worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerFaults {
+    /// Exit silently (thread death, no `Bye`) after completing this
+    /// many tasks.
+    pub die_after_tasks: Option<usize>,
+    /// Stop sending *anything* (results, heartbeats) after completing
+    /// this many tasks, but keep the process alive: the leader can only
+    /// find out through lease expiry.
+    pub mute_after_tasks: Option<usize>,
+    /// Straggler factor: execution takes `slow_factor` times as long.
+    /// `1.0` is a healthy worker; values below 1 are clamped to 1.
+    pub slow_factor: f64,
+}
+
+impl Default for WorkerFaults {
+    fn default() -> Self {
+        WorkerFaults {
+            die_after_tasks: None,
+            mute_after_tasks: None,
+            slow_factor: 1.0,
+        }
+    }
+}
+
+impl WorkerFaults {
+    /// Shorthand for the classic single-fault case: a worker that dies
+    /// after completing `k` tasks.
+    pub fn dies_after(k: usize) -> Self {
+        WorkerFaults {
+            die_after_tasks: Some(k),
+            ..Default::default()
+        }
+    }
+
+    /// Completion count after which the worker stops contributing
+    /// (dies or mutes), whichever comes first.
+    pub fn stops_after(&self) -> Option<usize> {
+        match (self.die_after_tasks, self.mute_after_tasks) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+/// Rates for [`FaultPlan::poisson`]. All schedules derive from these
+/// plus a seed, so a plan is fully described by `(seed, rates)`.
+#[derive(Clone, Copy, Debug)]
+pub struct PoissonRates {
+    /// Expected worker joins per commit step (Poisson arrivals).
+    pub join_rate: f64,
+    /// Mean number of tasks a mortal worker completes before dying
+    /// (exponential lifetime). `0.0` disables deaths.
+    pub mean_lifetime_tasks: f64,
+    /// Fraction of workers that are immortal regardless of
+    /// `mean_lifetime_tasks` — a floor that guarantees forward
+    /// progress under arbitrarily vicious churn.
+    pub immortal_fraction: f64,
+    /// Fraction of workers that are stragglers.
+    pub straggler_fraction: f64,
+    /// Slowdown applied to stragglers.
+    pub straggler_factor: f64,
+}
+
+impl Default for PoissonRates {
+    fn default() -> Self {
+        PoissonRates {
+            join_rate: 0.02,
+            mean_lifetime_tasks: 40.0,
+            immortal_fraction: 0.1,
+            straggler_fraction: 0.05,
+            straggler_factor: 4.0,
+        }
+    }
+}
+
+/// A deterministic cluster-level fault schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Workers present at startup (ids `0..initial_workers`).
+    pub initial_workers: usize,
+    /// Commit-step thresholds at which one new worker joins, sorted
+    /// ascending. Entry `i` corresponds to worker id
+    /// `initial_workers + i`.
+    pub joins: Vec<u64>,
+    /// Per-worker fault behaviour, indexed by worker id (initial
+    /// workers first, then joiners). Missing entries mean healthy.
+    pub faults: Vec<WorkerFaults>,
+    /// Kill the leader after it commits this many task results
+    /// (exercises the execution-ledger resume path).
+    pub kill_leader_at_step: Option<u64>,
+}
+
+impl FaultPlan {
+    /// A faultless fixed-size cluster — the degenerate plan every
+    /// pre-churn code path is equivalent to.
+    pub fn fixed(n_workers: usize) -> FaultPlan {
+        FaultPlan {
+            initial_workers: n_workers,
+            ..Default::default()
+        }
+    }
+
+    /// Total workers that will ever exist under this plan.
+    pub fn total_workers(&self) -> usize {
+        self.initial_workers + self.joins.len()
+    }
+
+    /// Fault behaviour for worker `i` (healthy when unspecified).
+    pub fn worker(&self, i: usize) -> WorkerFaults {
+        self.faults.get(i).copied().unwrap_or_default()
+    }
+
+    /// Sample a churn schedule: Poisson worker arrivals over
+    /// `horizon_steps` commit steps, exponential lifetimes (in
+    /// completed tasks) and straggler slowdowns for every worker.
+    /// Identical `(seed, initial_workers, horizon_steps, rates)`
+    /// always yields an identical plan.
+    pub fn poisson(
+        seed: u64,
+        initial_workers: usize,
+        horizon_steps: u64,
+        rates: &PoissonRates,
+    ) -> FaultPlan {
+        let mut join_rng = Rng::new(seed).split(0x4A01);
+        let mut fate_rng = Rng::new(seed).split(0xFA7E);
+
+        let mut joins = Vec::new();
+        if rates.join_rate > 0.0 {
+            // Exponential inter-arrival times give a Poisson process.
+            let mut t = 0.0f64;
+            loop {
+                let u = join_rng.f64();
+                t += -(1.0 - u).ln() / rates.join_rate;
+                if t >= horizon_steps as f64 {
+                    break;
+                }
+                joins.push(t as u64);
+            }
+        }
+
+        let total = initial_workers + joins.len();
+        let mut faults = Vec::with_capacity(total);
+        for _ in 0..total {
+            let mut f = WorkerFaults::default();
+            let immortal = fate_rng.chance(rates.immortal_fraction);
+            if !immortal && rates.mean_lifetime_tasks > 0.0 {
+                let u = fate_rng.f64();
+                let life = -(1.0 - u).ln() * rates.mean_lifetime_tasks;
+                f.die_after_tasks = Some(1 + life as usize);
+            }
+            if fate_rng.chance(rates.straggler_fraction) {
+                f.slow_factor = rates.straggler_factor.max(1.0);
+            }
+            faults.push(f);
+        }
+
+        FaultPlan {
+            initial_workers,
+            joins,
+            faults,
+            kill_leader_at_step: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_plan_is_deterministic() {
+        let rates = PoissonRates::default();
+        let a = FaultPlan::poisson(42, 8, 500, &rates);
+        let b = FaultPlan::poisson(42, 8, 500, &rates);
+        assert_eq!(a, b);
+        let c = FaultPlan::poisson(43, 8, 500, &rates);
+        assert_ne!(a, c, "different seeds should sample different plans");
+    }
+
+    #[test]
+    fn poisson_plan_shape_is_consistent() {
+        let rates = PoissonRates {
+            join_rate: 0.1,
+            mean_lifetime_tasks: 10.0,
+            immortal_fraction: 0.2,
+            straggler_fraction: 0.3,
+            straggler_factor: 3.0,
+        };
+        let plan = FaultPlan::poisson(7, 4, 1000, &rates);
+        assert_eq!(plan.initial_workers, 4);
+        assert!(!plan.joins.is_empty(), "rate 0.1 over 1000 steps joins someone");
+        assert!(plan.joins.windows(2).all(|w| w[0] <= w[1]), "joins sorted");
+        assert!(plan.joins.iter().all(|j| *j < 1000));
+        assert_eq!(plan.faults.len(), plan.total_workers());
+        assert!(plan.faults.iter().any(|f| f.die_after_tasks.is_some()));
+        assert!(plan.faults.iter().any(|f| f.die_after_tasks.is_none()));
+        assert!(plan.faults.iter().any(|f| f.slow_factor > 1.0));
+        assert!(plan
+            .faults
+            .iter()
+            .all(|f| f.die_after_tasks.map_or(true, |k| k >= 1)));
+    }
+
+    #[test]
+    fn zero_rates_mean_no_faults() {
+        let rates = PoissonRates {
+            join_rate: 0.0,
+            mean_lifetime_tasks: 0.0,
+            immortal_fraction: 0.0,
+            straggler_fraction: 0.0,
+            straggler_factor: 1.0,
+        };
+        let plan = FaultPlan::poisson(1, 3, 100, &rates);
+        assert_eq!(plan.joins, Vec::<u64>::new());
+        assert_eq!(plan.faults, vec![WorkerFaults::default(); 3]);
+        assert_eq!(plan, {
+            let mut fixed = FaultPlan::fixed(3);
+            fixed.faults = vec![WorkerFaults::default(); 3];
+            fixed
+        });
+    }
+
+    #[test]
+    fn stops_after_takes_the_earlier_fault() {
+        let f = WorkerFaults {
+            die_after_tasks: Some(5),
+            mute_after_tasks: Some(3),
+            slow_factor: 1.0,
+        };
+        assert_eq!(f.stops_after(), Some(3));
+        assert_eq!(WorkerFaults::default().stops_after(), None);
+        assert_eq!(WorkerFaults::dies_after(2).stops_after(), Some(2));
+    }
+}

@@ -61,6 +61,7 @@ pub mod depgraph;
 pub mod scheduler;
 pub mod cache;
 pub mod partition;
+pub mod fault;
 pub mod cluster;
 pub mod baselines;
 pub mod simulator;

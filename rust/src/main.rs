@@ -93,6 +93,16 @@ SHARDS:  --partitions K (default 0 = off): split large pure tasks into K
          --shard-artifacts a,b (row-shardable artifact names)
          (pairs best with --placement shard; `matrix --dot out.dot`
          renders the sharded task graph with families grouped)
+FAULTS:  --lease-ms L (cluster: membership lease; 0 = off): workers
+         heartbeat, the leader expires silent members and re-executes
+         their lost work  --max-failures F (failure budget)
+         --speculate on|off (duplicate stragglers onto idle workers,
+         first result wins)  --speculate-factor X (straggler = running
+         X * median of its op, default 2)
+         --ledger PATH (append-only execution checkpoint; a restarted
+         leader pointed at the same file resumes without recomputing)
+         --kill-at-step K (fault injection: kill the leader after K
+         commits, for exercising --ledger resume)
 CHECK:   parhask check = static analysis without executing: transitive
          purity inference + lints on the source, then IR verification of
          the lowered (and, with --partitions K, partitioned) task graph;
@@ -502,8 +512,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
         leader,
         WorkerId(id as u32),
         executor,
-        parhask::cluster::FaultPlan {
-            die_after_tasks: die_after,
+        match die_after {
+            Some(k) => parhask::cluster::WorkerFaults::dies_after(k),
+            None => parhask::cluster::WorkerFaults::default(),
         },
     )
 }

@@ -216,6 +216,18 @@ impl GreedyState {
     pub fn mark_dead(&mut self, w: WorkerId) {
         self.loads[w.index()] = usize::MAX;
     }
+
+    /// Admit a new worker mid-run (elastic membership). Returns its id —
+    /// ids are never reused, so a joiner always gets a fresh one.
+    pub fn add_worker(&mut self) -> WorkerId {
+        self.loads.push(0);
+        WorkerId((self.loads.len() - 1) as u32)
+    }
+
+    /// Total workers ever admitted (dead ones included).
+    pub fn n_workers(&self) -> usize {
+        self.loads.len()
+    }
 }
 
 #[cfg(test)]
@@ -310,6 +322,25 @@ mod tests {
         let (t, w) = s.assign_next(&p).unwrap();
         assert_eq!(t, t0);
         assert_ne!(w, w0); // least-loaded never picks the dead (MAX-load) worker
+    }
+
+    #[test]
+    fn elastic_join_gets_a_fresh_id_and_takes_load() {
+        let p = prog_fan(&[1, 1, 1]);
+        let mut s = GreedyState::new(&p, 1, PlacementPolicy::LeastLoaded);
+        assert_eq!(s.n_workers(), 1);
+        let (_, w0) = s.assign_next(&p).unwrap();
+        assert_eq!(w0, WorkerId(0));
+        let joined = s.add_worker();
+        assert_eq!(joined, WorkerId(1));
+        assert_eq!(s.n_workers(), 2);
+        // least-loaded now prefers the empty joiner
+        let (_, w) = s.assign_next(&p).unwrap();
+        assert_eq!(w, joined);
+        // a joiner replacing a dead worker keeps progress possible
+        s.mark_dead(WorkerId(0));
+        let (_, w) = s.assign_next(&p).unwrap();
+        assert_eq!(w, joined);
     }
 
     #[test]

@@ -34,6 +34,45 @@ pub struct EvictionEvent {
     pub at_ns: u64,
 }
 
+/// One dispatch *attempt* of a task to a worker. A task may have several
+/// attempts — after a lease expiry its work is requeued, and speculative
+/// re-execution deliberately races a duplicate — but exactly one attempt
+/// per task may have `won == true`: the one whose result the leader
+/// committed (first-result-wins; purity makes the race free).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttemptEvent {
+    pub task: TaskId,
+    pub worker: WorkerId,
+    /// True for a speculative duplicate launched against a straggler,
+    /// false for a primary (first or post-requeue) dispatch.
+    pub speculative: bool,
+    /// The leader committed this attempt's result.
+    pub won: bool,
+    pub at_ns: u64,
+}
+
+/// Membership lease transition for one worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseKind {
+    /// Worker admitted to the cluster (startup or elastic join).
+    Granted,
+    /// Lease expired (silence or disconnect); the worker is dead to the
+    /// leader from `at_ns` on.
+    Expired,
+}
+
+/// One membership-lease event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaseEvent {
+    pub worker: WorkerId,
+    pub kind: LeaseKind,
+    pub at_ns: u64,
+    /// For `Expired`: in-flight tasks lost with the worker and requeued.
+    /// Every re-executed task must appear in some expiry's `lost` list —
+    /// that is the auditor's "re-execution only of lost work" property.
+    pub lost: Vec<TaskId>,
+}
+
 /// Full schedule trace of one run.
 #[derive(Clone, Debug, Default)]
 pub struct ScheduleTrace {
@@ -62,6 +101,14 @@ pub struct ScheduleTrace {
     /// Value evictions, if the executing tier dropped any results mid-run
     /// (empty on every current engine; see [`EvictionEvent`]).
     pub evictions: Vec<EvictionEvent>,
+    /// Every dispatch attempt (primary, requeue, speculative) with its
+    /// first-result-wins outcome. Empty on engines without churn.
+    pub attempts: Vec<AttemptEvent>,
+    /// Membership-lease grants and expiries, in leader observation order.
+    pub leases: Vec<LeaseEvent>,
+    /// Tasks served from the execution ledger on leader restart instead
+    /// of executing. Like `cached_tasks`, these carry no [`TraceEvent`].
+    pub resumed_tasks: Vec<TaskId>,
 }
 
 /// Outputs + trace of one engine run.
@@ -81,6 +128,45 @@ impl ScheduleTrace {
     pub fn record_cache_hit(&mut self, task: TaskId) {
         self.cached_tasks.push(task);
         self.cache_hits += 1;
+    }
+
+    /// Record a dispatch attempt (not yet won — see
+    /// [`ScheduleTrace::mark_attempt_won`]).
+    pub fn record_attempt(&mut self, task: TaskId, worker: WorkerId, speculative: bool, at_ns: u64) {
+        self.attempts.push(AttemptEvent {
+            task,
+            worker,
+            speculative,
+            won: false,
+            at_ns,
+        });
+    }
+
+    /// Mark the latest attempt of `task` on `worker` as the committed one.
+    pub fn mark_attempt_won(&mut self, task: TaskId, worker: WorkerId) {
+        if let Some(a) = self
+            .attempts
+            .iter_mut()
+            .rev()
+            .find(|a| a.task == task && a.worker == worker)
+        {
+            a.won = true;
+        }
+    }
+
+    /// Record a membership-lease transition.
+    pub fn record_lease(&mut self, worker: WorkerId, kind: LeaseKind, at_ns: u64, lost: Vec<TaskId>) {
+        self.leases.push(LeaseEvent {
+            worker,
+            kind,
+            at_ns,
+            lost,
+        });
+    }
+
+    /// Record a task served from the execution ledger (leader resume).
+    pub fn record_resumed(&mut self, task: TaskId) {
+        self.resumed_tasks.push(task);
     }
 
     /// Tasks that actually executed (cache hits excluded).
@@ -123,12 +209,13 @@ impl ScheduleTrace {
     }
 
     /// Validate against a program:
-    /// 1. every task either ran exactly once or was served from the
-    ///    result cache (never both);
+    /// 1. every task either ran exactly once, was served from the result
+    ///    cache, or was resumed from the execution ledger (never more
+    ///    than one of these);
     /// 2. no executed task started before its *executed* dependencies
     ///    ended (allowing equal timestamps — the simulator is discrete;
-    ///    cache-served dependencies have no execution interval to order
-    ///    against);
+    ///    cache-served and ledger-resumed dependencies have no execution
+    ///    interval to order against);
     /// 3. no worker ran two tasks at overlapping times.
     pub fn validate(&self, program: &TaskProgram) -> Result<()> {
         let cached: std::collections::HashSet<TaskId> =
@@ -136,6 +223,17 @@ impl ScheduleTrace {
         if cached.len() != self.cached_tasks.len() {
             bail!("a task was served from cache more than once in one run");
         }
+        let resumed: std::collections::HashSet<TaskId> =
+            self.resumed_tasks.iter().copied().collect();
+        if resumed.len() != self.resumed_tasks.len() {
+            bail!("a task was resumed from the ledger more than once in one run");
+        }
+        if let Some(t) = cached.intersection(&resumed).next() {
+            bail!("task {t} both cache-served and ledger-resumed");
+        }
+        // served tasks have results without an execution interval
+        let served: std::collections::HashSet<TaskId> =
+            cached.union(&resumed).copied().collect();
         let mut by_task: HashMap<TaskId, &TraceEvent> = HashMap::new();
         for e in &self.events {
             if by_task.insert(e.task, e).is_some() {
@@ -144,19 +242,22 @@ impl ScheduleTrace {
             if cached.contains(&e.task) {
                 bail!("task {} both executed and served from cache", e.task);
             }
+            if resumed.contains(&e.task) {
+                bail!("task {} both executed and resumed from the ledger", e.task);
+            }
             if e.end_ns < e.start_ns {
                 bail!("task {} ends before it starts", e.task);
             }
         }
         for t in program.tasks() {
-            if cached.contains(&t.id) {
+            if served.contains(&t.id) {
                 continue;
             }
             let Some(ev) = by_task.get(&t.id) else {
                 bail!("task {} never executed", t.id);
             };
             for d in t.deps() {
-                if cached.contains(&d) {
+                if served.contains(&d) {
                     continue;
                 }
                 let dep_ev = by_task
@@ -309,6 +410,42 @@ mod tests {
         t.push(ev(0, 0, 0, 10));
         t.push(ev(1, 0, 10, 20));
         assert!(t.validate(&p).is_err());
+    }
+
+    #[test]
+    fn ledger_resumed_tasks_validate() {
+        let p = chain2();
+        let mut t = ScheduleTrace::default();
+        t.record_resumed(TaskId(0));
+        t.push(ev(1, 0, 5, 10));
+        t.validate(&p).unwrap();
+
+        // resumed and executed is rejected
+        let mut t = ScheduleTrace::default();
+        t.record_resumed(TaskId(0));
+        t.push(ev(0, 0, 0, 10));
+        t.push(ev(1, 0, 10, 20));
+        assert!(t.validate(&p).is_err());
+
+        // resumed and cache-served is rejected
+        let mut t = ScheduleTrace::default();
+        t.record_resumed(TaskId(0));
+        t.record_cache_hit(TaskId(0));
+        t.push(ev(1, 0, 10, 20));
+        assert!(t.validate(&p).is_err());
+    }
+
+    #[test]
+    fn attempt_won_marks_the_latest_matching_attempt() {
+        let mut t = ScheduleTrace::default();
+        t.record_attempt(TaskId(3), WorkerId(0), false, 10);
+        t.record_attempt(TaskId(3), WorkerId(1), true, 20);
+        t.record_attempt(TaskId(3), WorkerId(0), false, 30);
+        t.mark_attempt_won(TaskId(3), WorkerId(0));
+        assert!(!t.attempts[0].won, "earlier attempt on w0 stays lost");
+        assert!(!t.attempts[1].won);
+        assert!(t.attempts[2].won, "latest w0 attempt is the committed one");
+        assert!(t.attempts[1].speculative);
     }
 
     #[test]

@@ -14,4 +14,4 @@ pub mod costmodel;
 pub mod sim;
 
 pub use costmodel::CostModel;
-pub use sim::{simulate, SimConfig, SimResult};
+pub use sim::{simulate, simulate_with_faults, SimConfig, SimResult};

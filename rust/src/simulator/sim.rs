@@ -20,9 +20,10 @@ use std::collections::{BinaryHeap, HashSet};
 
 use anyhow::Result;
 
+use crate::fault::FaultPlan;
 use crate::ir::task::TaskId;
 use crate::ir::TaskProgram;
-use crate::scheduler::trace::{ScheduleTrace, TraceEvent};
+use crate::scheduler::trace::{LeaseKind, ScheduleTrace, TraceEvent};
 use crate::scheduler::{GreedyState, PlacementPolicy, WorkerId};
 use crate::util::rng::Rng;
 
@@ -294,6 +295,386 @@ fn pump(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Churn mode: the same virtual-time machine under a deterministic FaultPlan.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum FEv {
+    /// Assignment lands in the worker queue (void if the epoch is stale).
+    Arrive(WorkerId, TaskId, u32),
+    /// Worker finished computing at `end`; void if the epoch is stale
+    /// (the worker stopped while this task was queued behind its last).
+    Computed {
+        w: WorkerId,
+        task: TaskId,
+        start: u64,
+        end: u64,
+        epoch: u32,
+    },
+    /// Leader has the result.
+    LeaderSees(WorkerId, TaskId),
+    /// Leader served the task from the modeled warm result cache.
+    CacheServed(TaskId),
+    /// The worker's membership lease runs out: the leader declares it
+    /// dead and requeues everything still pending on it.
+    Expire(WorkerId),
+}
+
+#[derive(PartialEq, Eq)]
+struct FQEv {
+    t: u64,
+    seq: u64,
+    ev: FEv,
+}
+
+impl Ord for FQEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+impl PartialOrd for FQEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct ChurnSim<'a> {
+    program: &'a TaskProgram,
+    cm: &'a CostModel,
+    cfg: &'a SimConfig,
+    plan: &'a FaultPlan,
+    lease_ns: u64,
+    state: GreedyState,
+    heap: BinaryHeap<FQEv>,
+    seq: u64,
+    free_at: Vec<u64>,
+    inflight: Vec<usize>,
+    /// Tasks dispatched to a worker whose results have not left it yet —
+    /// exactly the work at risk if the worker goes silent.
+    pending: Vec<Vec<TaskId>>,
+    /// Worker went silent (died or muted); the leader doesn't know yet.
+    stopped: Vec<bool>,
+    /// Lease expired: the leader declared the worker dead.
+    dead: Vec<bool>,
+    /// Bumped when a worker stops; voids its scheduled compute events.
+    epoch: Vec<u32>,
+    /// Results each worker has produced (the fault plan's clock).
+    done: Vec<usize>,
+    trace: ScheduleTrace,
+    bytes: u64,
+    /// Results the leader has committed (the join schedule's clock).
+    commits: u64,
+    next_join: usize,
+    hits: HashSet<TaskId>,
+}
+
+impl<'a> ChurnSim<'a> {
+    fn n_workers(&self) -> usize {
+        self.free_at.len()
+    }
+
+    fn push_ev(&mut self, t: u64, ev: FEv) {
+        self.heap.push(FQEv {
+            t,
+            seq: self.seq,
+            ev,
+        });
+        self.seq += 1;
+    }
+
+    fn any_alive(&self) -> bool {
+        self.dead.iter().any(|d| !*d)
+    }
+
+    /// The worker goes silent: later compute events are void and the
+    /// leader will find out when the lease runs out. (The result being
+    /// committed right now was already sent — the real worker sends its
+    /// TaskDone before the injected death/mute takes effect.)
+    fn stop_worker(&mut self, w: WorkerId, now: u64) {
+        self.stopped[w.index()] = true;
+        self.epoch[w.index()] += 1;
+        self.push_ev(now + self.lease_ns, FEv::Expire(w));
+    }
+
+    /// Admit every scheduled join whose commit threshold has passed.
+    fn process_joins(&mut self, now: u64) {
+        while self.next_join < self.plan.joins.len()
+            && self.plan.joins[self.next_join] <= self.commits
+        {
+            self.admit_join(now);
+        }
+    }
+
+    fn admit_join(&mut self, now: u64) {
+        let id = self.state.add_worker();
+        self.free_at.push(now);
+        self.inflight.push(0);
+        self.pending.push(Vec::new());
+        self.stopped.push(false);
+        self.dead.push(false);
+        self.epoch.push(0);
+        self.done.push(0);
+        self.trace.record_lease(id, LeaseKind::Granted, now, Vec::new());
+        self.next_join += 1;
+    }
+
+    /// Assign ready tasks to live workers with spare pipeline capacity.
+    /// A *stopped* (but not yet expired) worker still receives work — the
+    /// leader can't tell silent from idle until the lease runs out; that
+    /// work is recovered at expiry.
+    fn pump(&mut self, now: u64) {
+        let mut dispatch_t = now;
+        loop {
+            let usable: Vec<bool> = (0..self.n_workers())
+                .map(|w| !self.dead[w] && self.inflight[w] < self.cfg.pipeline_depth)
+                .collect();
+            if !usable.iter().any(|u| *u) || self.state.n_ready() == 0 {
+                return;
+            }
+            let Some((mut task, mut w)) = self.state.assign_next(self.program) else {
+                return;
+            };
+            if !usable[w.index()] {
+                self.state.unassign(self.program, task, w);
+                let w2 = (0..self.n_workers())
+                    .filter(|i| usable[*i])
+                    .min_by_key(|i| self.inflight[*i])
+                    .unwrap();
+                let Some(t2) = self.state.assign_to(self.program, WorkerId(w2 as u32)) else {
+                    return;
+                };
+                task = t2;
+                w = WorkerId(w2 as u32);
+            }
+            if self.hits.contains(&task) {
+                self.state.abort_assign(w);
+                self.push_ev(dispatch_t + self.cm.cache_serve_ns, FEv::CacheServed(task));
+                continue;
+            }
+            self.inflight[w.index()] += 1;
+            self.pending[w.index()].push(task);
+            self.trace.record_attempt(task, w, false, dispatch_t);
+            let arrive = if self.cfg.transfer_free {
+                dispatch_t
+            } else {
+                dispatch_t += self.cm.dispatch_ns;
+                let spec = self.program.task(task);
+                let mut wire_bytes = 0u64;
+                for a in &spec.args {
+                    if let crate::ir::task::ArgRef::Output { task: d, .. } = a {
+                        if self.state.location(*d) != Some(w) {
+                            wire_bytes += self.program.task(*d).est.bytes_out;
+                        }
+                    }
+                }
+                wire_bytes += spec
+                    .args
+                    .iter()
+                    .filter(|a| matches!(a, crate::ir::task::ArgRef::Const(_)))
+                    .count() as u64
+                    * 8;
+                self.bytes += wire_bytes;
+                dispatch_t + self.cm.transfer_ns(wire_bytes)
+            };
+            let ep = self.epoch[w.index()];
+            self.push_ev(arrive, FEv::Arrive(w, task, ep));
+        }
+    }
+}
+
+/// [`simulate`] under a deterministic [`FaultPlan`]: workers join at the
+/// plan's commit steps, go silent after their fated task counts (death
+/// and mute are indistinguishable in virtual time — both end in lease
+/// expiry after `lease_ns`), and stragglers run `slow_factor`× slow.
+///
+/// The trace records every dispatch attempt, lease grant/expiry with the
+/// work lost, and one execution event per *delivered* result — so
+/// [`crate::analysis::race::audit_trace`] can machine-check that
+/// recovery re-executed exactly the lost work and nothing ran on an
+/// expired member. `plan.kill_leader_at_step` is ignored here: leader
+/// checkpointing is a real-cluster concern (see the execution ledger).
+///
+/// Deterministic for a given `(program, model, config, plan, lease)`;
+/// `cfg.n_workers` is superseded by `plan.initial_workers`.
+pub fn simulate_with_faults(
+    program: &TaskProgram,
+    cm: &CostModel,
+    cfg: &SimConfig,
+    plan: &FaultPlan,
+    lease_ns: u64,
+) -> Result<SimResult> {
+    anyhow::ensure!(
+        plan.initial_workers >= 1,
+        "churn plan needs at least one initial worker"
+    );
+    anyhow::ensure!(lease_ns > 0, "churn simulation needs a nonzero lease");
+    let n0 = plan.initial_workers;
+    let hits: HashSet<TaskId> = if cm.cache_hit_rate > 0.0 {
+        let mut rng = Rng::new(0xCAC4E);
+        program
+            .tasks()
+            .iter()
+            .filter(|t| t.is_pure() && rng.chance(cm.cache_hit_rate))
+            .map(|t| t.id)
+            .collect()
+    } else {
+        HashSet::new()
+    };
+    let mut sim = ChurnSim {
+        program,
+        cm,
+        cfg,
+        plan,
+        lease_ns,
+        state: GreedyState::new(program, n0, cfg.placement),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        free_at: vec![0; n0],
+        inflight: vec![0; n0],
+        pending: vec![Vec::new(); n0],
+        stopped: vec![false; n0],
+        dead: vec![false; n0],
+        epoch: vec![0; n0],
+        done: vec![0; n0],
+        trace: ScheduleTrace::default(),
+        bytes: 0,
+        commits: 0,
+        next_join: 0,
+        hits,
+    };
+    for w in 0..n0 {
+        sim.trace
+            .record_lease(WorkerId(w as u32), LeaseKind::Granted, 0, Vec::new());
+    }
+    sim.process_joins(0); // step-0 joins
+    sim.pump(0);
+
+    let mut now = 0u64;
+    while let Some(FQEv { t, ev, .. }) = sim.heap.pop() {
+        debug_assert!(t >= now, "time went backwards");
+        now = t;
+        match ev {
+            FEv::Arrive(w, task, ep) => {
+                if ep != sim.epoch[w.index()] || sim.stopped[w.index()] {
+                    continue; // sits unexecuted in a silent worker's queue
+                }
+                let slow = sim.plan.worker(w.index()).slow_factor.max(1.0);
+                let cost =
+                    (sim.cm.task_cost_ns(sim.program.task(task)) as f64 * slow) as u64;
+                let start = now.max(sim.free_at[w.index()]);
+                let end = start + cost;
+                sim.free_at[w.index()] = end;
+                sim.push_ev(
+                    end,
+                    FEv::Computed {
+                        w,
+                        task,
+                        start,
+                        end,
+                        epoch: ep,
+                    },
+                );
+            }
+            FEv::Computed {
+                w,
+                task,
+                start,
+                end,
+                epoch: ep,
+            } => {
+                if ep != sim.epoch[w.index()] {
+                    continue; // queued behind the worker's final task
+                }
+                // the result leaves the worker: no longer at risk
+                sim.pending[w.index()].retain(|t| *t != task);
+                sim.trace.push(TraceEvent {
+                    task,
+                    worker: w,
+                    start_ns: start,
+                    end_ns: end,
+                });
+                sim.done[w.index()] += 1;
+                let out_bytes = sim.program.task(task).est.bytes_out;
+                let dt = if sim.cfg.transfer_free {
+                    0
+                } else {
+                    sim.bytes += out_bytes;
+                    sim.cm.transfer_ns(out_bytes)
+                };
+                sim.push_ev(now + dt, FEv::LeaderSees(w, task));
+                if let Some(k) = sim.plan.worker(w.index()).stops_after() {
+                    if sim.done[w.index()] >= k && !sim.stopped[w.index()] {
+                        sim.stop_worker(w, now);
+                    }
+                }
+            }
+            FEv::LeaderSees(w, task) => {
+                // A result sent before the silent exit still lands (the
+                // real worker's TaskDone precedes its injected death).
+                if sim.inflight[w.index()] > 0 {
+                    sim.inflight[w.index()] -= 1;
+                }
+                sim.trace.mark_attempt_won(task, w);
+                sim.state.on_done(sim.program, task, w);
+                sim.commits += 1;
+                sim.process_joins(now);
+                sim.pump(now);
+            }
+            FEv::CacheServed(task) => {
+                sim.trace.record_cache_hit(task);
+                sim.state.complete_local(sim.program, task);
+                sim.pump(now);
+            }
+            FEv::Expire(w) => {
+                if sim.dead[w.index()] {
+                    continue;
+                }
+                sim.dead[w.index()] = true;
+                let lost: Vec<TaskId> = std::mem::take(&mut sim.pending[w.index()]);
+                sim.inflight[w.index()] = 0;
+                sim.trace
+                    .record_lease(w, LeaseKind::Expired, now, lost.clone());
+                sim.state.requeue(sim.program, &lost, w);
+                sim.state.mark_dead(w);
+                // everyone dead with work remaining: pull the next
+                // scheduled join forward so the cluster can refill
+                if !sim.any_alive() && !sim.state.is_done() && sim.next_join < sim.plan.joins.len()
+                {
+                    sim.admit_join(now);
+                }
+                sim.pump(now);
+            }
+        }
+    }
+
+    anyhow::ensure!(
+        sim.state.is_done(),
+        "simulation stalled with {} tasks incomplete",
+        program.len() - sim.state.completed()
+    );
+    if cm.cache_hit_rate > 0.0 {
+        let pure = program.tasks().iter().filter(|t| t.is_pure()).count() as u64;
+        sim.trace.cache_misses = pure - sim.trace.cache_hits;
+    }
+    let makespan = now;
+    sim.trace.wall_ns = makespan;
+    sim.trace.bytes_transferred = sim.bytes;
+    let busy: u64 = sim.trace.busy_ns().iter().sum();
+    let width = sim.n_workers();
+    Ok(SimResult {
+        makespan_ns: makespan,
+        utilization: if makespan > 0 {
+            busy as f64 / (makespan as f64 * width as f64)
+        } else {
+            0.0
+        },
+        trace: sim.trace,
+        bytes_transferred: sim.bytes,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,5 +873,92 @@ mod tests {
         let cm = CostModel::default();
         let r = simulate(&p, &cm, &SimConfig::cluster(2)).unwrap();
         assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+    }
+
+    #[test]
+    fn churn_with_empty_plan_matches_plain_simulation() {
+        let p = rounds_program(8, 64);
+        let cm = CostModel::default();
+        let cfg = SimConfig::cluster(4);
+        let base = simulate(&p, &cm, &cfg).unwrap();
+        let plan = FaultPlan::fixed(4);
+        let churn = simulate_with_faults(&p, &cm, &cfg, &plan, 1_000_000_000).unwrap();
+        churn.trace.validate(&p).unwrap();
+        assert_eq!(churn.makespan_ns, base.makespan_ns);
+        assert_eq!(churn.bytes_transferred, base.bytes_transferred);
+        // nothing re-executed: one attempt per task, all won
+        assert_eq!(churn.trace.attempts.len(), p.len());
+        assert!(churn.trace.attempts.iter().all(|a| a.won && !a.speculative));
+    }
+
+    #[test]
+    fn churn_sim_deterministic_and_recovery_is_exact() {
+        use crate::analysis::race::audit_trace;
+        use crate::fault::WorkerFaults;
+        use std::collections::HashSet;
+
+        let p = rounds_program(24, 64);
+        let cm = CostModel::default();
+        let cfg = SimConfig::cluster(3);
+        // w0 dies after 2 results, w2 goes mute after 3; replacements join
+        // once 4 and 10 results have committed. w1 and the joiners survive.
+        let plan = FaultPlan {
+            initial_workers: 3,
+            joins: vec![4, 10],
+            faults: vec![
+                WorkerFaults::dies_after(2),
+                WorkerFaults::default(),
+                WorkerFaults {
+                    mute_after_tasks: Some(3),
+                    ..WorkerFaults::default()
+                },
+                WorkerFaults::default(),
+                WorkerFaults {
+                    slow_factor: 3.0,
+                    ..WorkerFaults::default()
+                },
+            ],
+            kill_leader_at_step: None,
+        };
+        let lease = 2_000_000; // 2ms virtual
+        let r1 = simulate_with_faults(&p, &cm, &cfg, &plan, lease).unwrap();
+        let r2 = simulate_with_faults(&p, &cm, &cfg, &plan, lease).unwrap();
+
+        // bit-exact determinism across runs of the same plan
+        assert_eq!(r1.makespan_ns, r2.makespan_ns);
+        assert_eq!(r1.trace.events, r2.trace.events);
+        assert_eq!(r1.trace.attempts, r2.trace.attempts);
+        assert_eq!(r1.trace.leases, r2.trace.leases);
+
+        r1.trace.validate(&p).unwrap();
+        let races = audit_trace(&p, &r1.trace);
+        assert!(races.is_empty(), "churn run must audit clean: {races:?}");
+
+        // re-execution happened (the plan kills workers mid-run)...
+        let mut per_task: std::collections::HashMap<TaskId, usize> =
+            std::collections::HashMap::new();
+        for a in &r1.trace.attempts {
+            *per_task.entry(a.task).or_insert(0) += 1;
+        }
+        assert!(
+            per_task.values().any(|n| *n > 1),
+            "two of three initial workers going silent must lose some work"
+        );
+        // ...but only of work lost to expired leases
+        let lost: HashSet<TaskId> = r1
+            .trace
+            .leases
+            .iter()
+            .filter(|l| l.kind == LeaseKind::Expired)
+            .flat_map(|l| l.lost.iter().copied())
+            .collect();
+        for (t, n) in &per_task {
+            if *n > 1 {
+                assert!(
+                    lost.contains(t),
+                    "{t} re-dispatched {n}x but never reported lost to a lease"
+                );
+            }
+        }
     }
 }

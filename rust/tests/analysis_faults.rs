@@ -6,6 +6,9 @@
 //! * source faults (IO laundering) → the Layer-1 purity inference;
 //! * schedule faults (premature start, IO replay, use-after-eviction) →
 //!   the Layer-3 trace race auditor;
+//! * fault-tolerance protocol faults (double commit, use-after-lease-
+//!   expiry) → the same auditor's PR 7 checks, while a legitimate
+//!   speculative duplicate stays clean;
 //! * and the engine boundary rejects a malformed program outright when
 //!   verification is on.
 
@@ -21,7 +24,9 @@ use parhask::ir::task::{
     ArgRef, CostEst, OpKind, ShardInfo, ShardRole, TaskId, TaskSpec, Value,
 };
 use parhask::ir::ProgramBuilder;
-use parhask::scheduler::trace::{EvictionEvent, ScheduleTrace, TraceEvent};
+use parhask::scheduler::trace::{
+    AttemptEvent, EvictionEvent, LeaseEvent, LeaseKind, ScheduleTrace, TraceEvent,
+};
 use parhask::scheduler::WorkerId;
 use parhask::tasks::HostExecutor;
 use parhask::workload::sharded_matrix_program;
@@ -279,6 +284,94 @@ fn value_consumed_after_eviction_is_flagged() {
     t.evictions.push(EvictionEvent {
         task: TaskId(0),
         at_ns: 25,
+    });
+    assert!(audit_trace(&p, &t).is_empty());
+}
+
+fn attempt(task: u32, worker: u32, speculative: bool, won: bool, at_ns: u64) -> AttemptEvent {
+    AttemptEvent {
+        task: TaskId(task),
+        worker: WorkerId(worker),
+        speculative,
+        won,
+        at_ns,
+    }
+}
+
+#[test]
+fn fabricated_double_commit_is_exactly_one_violation() {
+    // a protocol bug where first-result-wins admitted BOTH attempts of
+    // task 0 — must surface as exactly one DoubleCommit finding
+    let p = chain2();
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(0, 2, 2, 12)); // the speculative duplicate also ran
+    t.push(ev(1, 1, 12, 25));
+    t.attempts.push(attempt(0, 0, false, true, 0));
+    t.attempts.push(attempt(0, 2, true, true, 2)); // loser also committed
+    t.attempts.push(attempt(1, 1, false, true, 12));
+    let races = audit_trace(&p, &t);
+    assert_eq!(races.len(), 1, "{races:?}");
+    assert_eq!(races[0].kind, RaceKind::DoubleCommit, "{races:?}");
+    assert_eq!(races[0].task, TaskId(0), "{races:?}");
+}
+
+#[test]
+fn fabricated_use_after_lease_expiry_is_exactly_one_violation() {
+    // the leader declared w0 dead at t=15 yet the trace shows work
+    // starting on it afterwards — exactly one UseAfterLeaseExpiry
+    let p = chain2();
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(1, 0, 20, 30)); // starts after w0's lease expired
+    t.leases.push(LeaseEvent {
+        worker: WorkerId(0),
+        kind: LeaseKind::Granted,
+        at_ns: 0,
+        lost: vec![],
+    });
+    t.leases.push(LeaseEvent {
+        worker: WorkerId(0),
+        kind: LeaseKind::Expired,
+        at_ns: 15,
+        lost: vec![TaskId(1)],
+    });
+    let races = audit_trace(&p, &t);
+    assert_eq!(races.len(), 1, "{races:?}");
+    assert_eq!(races[0].kind, RaceKind::UseAfterLeaseExpiry, "{races:?}");
+    assert_eq!(races[0].task, TaskId(1), "{races:?}");
+}
+
+#[test]
+fn legitimate_speculative_duplicate_audits_clean() {
+    // the healthy version of both scenarios above: a speculative
+    // duplicate that LOST, on a worker whose lease is live, with the
+    // requeued work landing on a freshly admitted worker — zero findings
+    let p = chain2();
+    let mut t = ScheduleTrace::default();
+    t.push(ev(0, 0, 0, 10));
+    t.push(ev(0, 2, 2, 12)); // duplicate execution elsewhere
+    t.push(ev(1, 1, 10, 25));
+    t.attempts.push(attempt(0, 0, false, true, 0));
+    t.attempts.push(attempt(0, 2, true, false, 2)); // lost — cancelled
+    t.attempts.push(attempt(1, 1, false, true, 10));
+    t.leases.push(LeaseEvent {
+        worker: WorkerId(0),
+        kind: LeaseKind::Granted,
+        at_ns: 0,
+        lost: vec![],
+    });
+    t.leases.push(LeaseEvent {
+        worker: WorkerId(1),
+        kind: LeaseKind::Granted,
+        at_ns: 0,
+        lost: vec![],
+    });
+    t.leases.push(LeaseEvent {
+        worker: WorkerId(2),
+        kind: LeaseKind::Granted,
+        at_ns: 1,
+        lost: vec![],
     });
     assert!(audit_trace(&p, &t).is_empty());
 }

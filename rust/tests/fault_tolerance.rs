@@ -5,9 +5,13 @@
 use std::sync::Arc;
 
 use parhask::cache::ResultCache;
-use parhask::cluster::{run_cluster_inproc, run_cluster_inproc_cached, ClusterConfig, FaultPlan};
+use parhask::cluster::{
+    run_cluster_churn, run_cluster_inproc, run_cluster_inproc_cached, ClusterConfig, FaultPlan,
+    WorkerFaults,
+};
 use parhask::ir::task::{ArgRef, CombineKind, CostEst, OpKind};
 use parhask::ir::ProgramBuilder;
+use parhask::scheduler::trace::LeaseKind;
 use parhask::tasks::HostExecutor;
 use parhask::workload::matrix_program;
 
@@ -33,9 +37,9 @@ fn expected(rounds: usize, n: usize) -> f32 {
 fn immediate_death_of_one_worker() {
     let p = matrix_program(5, 8, false, None);
     let faults = vec![
-        FaultPlan { die_after_tasks: Some(1) },
-        FaultPlan::default(),
-        FaultPlan::default(),
+        WorkerFaults::dies_after(1),
+        WorkerFaults::default(),
+        WorkerFaults::default(),
     ];
     let r = run_cluster_inproc(&p, Arc::new(HostExecutor), 3, cfg(1), Some(faults)).unwrap();
     let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
@@ -47,10 +51,10 @@ fn immediate_death_of_one_worker() {
 fn two_deaths_within_budget() {
     let p = matrix_program(6, 8, false, None);
     let faults = vec![
-        FaultPlan { die_after_tasks: Some(2) },
-        FaultPlan { die_after_tasks: Some(3) },
-        FaultPlan::default(),
-        FaultPlan::default(),
+        WorkerFaults::dies_after(2),
+        WorkerFaults::dies_after(3),
+        WorkerFaults::default(),
+        WorkerFaults::default(),
     ];
     let r = run_cluster_inproc(&p, Arc::new(HostExecutor), 4, cfg(2), Some(faults)).unwrap();
     let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
@@ -62,9 +66,9 @@ fn two_deaths_within_budget() {
 fn deaths_beyond_budget_abort() {
     let p = matrix_program(6, 8, false, None);
     let faults = vec![
-        FaultPlan { die_after_tasks: Some(1) },
-        FaultPlan { die_after_tasks: Some(1) },
-        FaultPlan::default(),
+        WorkerFaults::dies_after(1),
+        WorkerFaults::dies_after(1),
+        WorkerFaults::default(),
     ];
     let err = run_cluster_inproc(&p, Arc::new(HostExecutor), 3, cfg(1), Some(faults))
         .unwrap_err()
@@ -75,7 +79,7 @@ fn deaths_beyond_budget_abort() {
 #[test]
 fn all_workers_dead_reports_cleanly() {
     let p = matrix_program(8, 8, false, None);
-    let faults = vec![FaultPlan { die_after_tasks: Some(1) }];
+    let faults = vec![WorkerFaults::dies_after(1)];
     let err = run_cluster_inproc(&p, Arc::new(HostExecutor), 1, cfg(5), Some(faults))
         .unwrap_err()
         .to_string();
@@ -86,9 +90,9 @@ fn all_workers_dead_reports_cleanly() {
 fn sole_survivor_finishes_everything() {
     let p = matrix_program(5, 8, false, None);
     let faults = vec![
-        FaultPlan { die_after_tasks: Some(1) },
-        FaultPlan { die_after_tasks: Some(1) },
-        FaultPlan::default(),
+        WorkerFaults::dies_after(1),
+        WorkerFaults::dies_after(1),
+        WorkerFaults::default(),
     ];
     let r = run_cluster_inproc(&p, Arc::new(HostExecutor), 3, cfg(2), Some(faults)).unwrap();
     let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
@@ -127,9 +131,9 @@ fn worker_death_with_warm_cache_recovers_from_cached_partial_results() {
     assert!(cache.len() >= 12, "warmup populated the cache");
 
     let faults = vec![
-        FaultPlan { die_after_tasks: Some(2) },
-        FaultPlan::default(),
-        FaultPlan::default(),
+        WorkerFaults::dies_after(2),
+        WorkerFaults::default(),
+        WorkerFaults::default(),
     ];
     let r = run_cluster_inproc_cached(
         &full,
@@ -181,9 +185,9 @@ fn worker_death_mid_shard_family_recovers_bit_exactly() {
     let oracle = run_single(&base, &HostExecutor).unwrap();
 
     let faults = vec![
-        FaultPlan { die_after_tasks: Some(3) },
-        FaultPlan::default(),
-        FaultPlan::default(),
+        WorkerFaults::dies_after(3),
+        WorkerFaults::default(),
+        WorkerFaults::default(),
     ];
     let r = run_cluster_inproc(&pp.program, Arc::new(HostExecutor), 3, cfg(1), Some(faults))
         .unwrap();
@@ -247,12 +251,210 @@ fn io_chain_survives_failure() {
     b.mark_output(ArgRef::out(io_prev.unwrap(), 1));
     let p = b.build().unwrap();
     let faults = vec![
-        FaultPlan { die_after_tasks: Some(2) },
-        FaultPlan::default(),
+        WorkerFaults::dies_after(2),
+        WorkerFaults::default(),
     ];
     let r = run_cluster_inproc(&p, Arc::new(HostExecutor), 2, cfg(1), Some(faults)).unwrap();
     assert!(matches!(
         r.outputs[0],
         parhask::ir::task::Value::Token
     ));
+}
+
+// ---------------------------------------------------------------------------
+// Elastic membership: leases, churn, speculation, and the 1k-worker sim.
+// ---------------------------------------------------------------------------
+
+/// Tasks the leader reported lost when a membership lease expired (or a
+/// worker disconnected), across the whole run.
+fn lease_lost(trace: &parhask::scheduler::trace::ScheduleTrace) -> std::collections::HashSet<parhask::ir::task::TaskId> {
+    trace
+        .leases
+        .iter()
+        .filter(|l| l.kind == LeaseKind::Expired)
+        .flat_map(|l| l.lost.iter().copied())
+        .collect()
+}
+
+#[test]
+fn sustained_churn_in_proc_completes_bit_exactly() {
+    // Deaths, a mute (silent hang), a straggler, and two elastic joins in
+    // one real in-proc run: the answer must match the fault-free oracle
+    // bit-for-bit, the trace must validate, and every task dispatched more
+    // than once must be accounted for as speculative or lease-lost.
+    let p = matrix_program(6, 16, false, None);
+    let plan = FaultPlan {
+        initial_workers: 3,
+        joins: vec![4, 9],
+        faults: vec![
+            WorkerFaults::dies_after(3),
+            WorkerFaults { slow_factor: 3.0, ..WorkerFaults::default() },
+            WorkerFaults { mute_after_tasks: Some(2), ..WorkerFaults::default() },
+            WorkerFaults::default(),
+            WorkerFaults::default(),
+        ],
+        kill_leader_at_step: None,
+    };
+    let cc = ClusterConfig {
+        heartbeat: std::time::Duration::from_millis(10),
+        lease: std::time::Duration::from_millis(150),
+        max_failures: 10,
+        speculate: true,
+        steal: parhask::scheduler::StealPolicy::None,
+        ..Default::default()
+    };
+    let r = run_cluster_churn(&p, Arc::new(HostExecutor), cc, &plan, None).unwrap();
+    r.trace.validate(&p).unwrap();
+    let races = parhask::analysis::audit_trace(&p, &r.trace);
+    assert!(races.is_empty(), "churn run must audit clean: {races:?}");
+
+    let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+    let want = expected(6, 16);
+    assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+
+    // membership bookkeeping: 3 initial + 2 joined, 2 lost (death + mute)
+    let granted = r.trace.leases.iter().filter(|l| l.kind == LeaseKind::Granted).count();
+    let expired = r.trace.leases.iter().filter(|l| l.kind == LeaseKind::Expired).count();
+    assert_eq!(granted, 5, "3 initial + 2 joining workers get leases");
+    assert_eq!(expired, 2, "the dead and the muted worker expire");
+
+    // re-execution only of speculative duplicates or lease-lost work
+    let lost = lease_lost(&r.trace);
+    let mut per_task: std::collections::HashMap<_, Vec<_>> = std::collections::HashMap::new();
+    for a in &r.trace.attempts {
+        per_task.entry(a.task).or_default().push(a);
+    }
+    for (t, attempts) in &per_task {
+        if attempts.len() > 1 {
+            assert!(
+                attempts.iter().any(|a| a.speculative) || lost.contains(t),
+                "{t} dispatched {}x without a speculative attempt or a lost lease",
+                attempts.len()
+            );
+        }
+        assert_eq!(
+            attempts.iter().filter(|a| a.won).count(),
+            1,
+            "first-result-wins admits exactly one winner for {t}"
+        );
+    }
+}
+
+#[test]
+fn speculation_rescues_straggler_first_result_wins() {
+    // One worker is 200x slow. With speculation on, stragglers are
+    // duplicated onto the idle fast worker and the first result wins —
+    // bit-exactly, with the winning attempt marked in the trace.
+    let p = matrix_program(8, 32, false, None);
+    let plan = FaultPlan {
+        initial_workers: 2,
+        joins: vec![],
+        faults: vec![
+            WorkerFaults::default(),
+            WorkerFaults { slow_factor: 200.0, ..WorkerFaults::default() },
+        ],
+        kill_leader_at_step: None,
+    };
+    let cc = ClusterConfig {
+        heartbeat: std::time::Duration::from_millis(5),
+        speculate: true,
+        speculate_factor: 2.0,
+        steal: parhask::scheduler::StealPolicy::None,
+        ..Default::default()
+    };
+    let r = run_cluster_churn(&p, Arc::new(HostExecutor), cc, &plan, None).unwrap();
+    r.trace.validate(&p).unwrap();
+    let races = parhask::analysis::audit_trace(&p, &r.trace);
+    assert!(races.is_empty(), "speculative duplicates are not races: {races:?}");
+
+    let got = r.outputs[0].as_tensor().unwrap().scalar().unwrap();
+    let want = expected(8, 32);
+    assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+
+    assert!(
+        r.trace.attempts.iter().any(|a| a.speculative),
+        "a 200x straggler must trigger speculative re-execution"
+    );
+    for t in r.trace.attempts.iter().map(|a| a.task) {
+        assert_eq!(
+            r.trace.attempts.iter().filter(|a| a.task == t && a.won).count(),
+            1,
+            "exactly one winning attempt for {t}"
+        );
+    }
+}
+
+/// 3 layers x 2000 synthetic tasks: wide enough to keep 1000 workers busy.
+fn layered_program(layers: usize, width: usize) -> parhask::ir::TaskProgram {
+    let mut b = ProgramBuilder::new();
+    let mut prev: Vec<parhask::ir::task::TaskId> = Vec::new();
+    for l in 0..layers {
+        let mut cur = Vec::new();
+        for i in 0..width {
+            let args = if l == 0 {
+                vec![ArgRef::const_i32(i as i32)]
+            } else {
+                vec![ArgRef::out(prev[i], 0)]
+            };
+            cur.push(b.push(
+                OpKind::Synthetic { compute_us: 50 },
+                args,
+                1,
+                CostEst { flops: 0, bytes_in: 8, bytes_out: 8 },
+                format!("l{l}_{i}"),
+            ));
+        }
+        prev = cur;
+    }
+    b.mark_output(ArgRef::out(prev[0], 0));
+    b.build().unwrap()
+}
+
+#[test]
+fn simulated_1k_worker_churn_is_deterministic_and_recovers_exactly() {
+    use parhask::cluster::PoissonRates;
+    use parhask::simulator::{simulate_with_faults, CostModel, SimConfig};
+
+    let p = layered_program(3, 2000);
+    let cm = CostModel::default();
+    let cfg = SimConfig::cluster(1000);
+    let rates = PoissonRates {
+        join_rate: 0.17,
+        mean_lifetime_tasks: 4.0,
+        immortal_fraction: 0.15,
+        straggler_fraction: 0.1,
+        straggler_factor: 3.0,
+    };
+    let plan = FaultPlan::poisson(0x1000, 1000, p.len() as u64, &rates);
+    let lease_ns = 5_000_000; // 5ms virtual
+    let r1 = simulate_with_faults(&p, &cm, &cfg, &plan, lease_ns).unwrap();
+    let r2 = simulate_with_faults(&p, &cm, &cfg, &plan, lease_ns).unwrap();
+
+    // bit-exact determinism under Poisson churn of ~1k workers
+    assert_eq!(r1.makespan_ns, r2.makespan_ns);
+    assert_eq!(r1.trace.events, r2.trace.events);
+    assert_eq!(r1.trace.attempts, r2.trace.attempts);
+    assert_eq!(r1.trace.leases, r2.trace.leases);
+
+    r1.trace.validate(&p).unwrap();
+    let races = parhask::analysis::audit_trace(&p, &r1.trace);
+    assert!(races.is_empty(), "1k churn must audit clean: {races:?}");
+
+    // churn really happened, and recovery touched only lease-lost work
+    let expired = r1.trace.leases.iter().filter(|l| l.kind == LeaseKind::Expired).count();
+    assert!(expired > 0, "mean lifetime 4 over {} tasks must expire leases", p.len());
+    let lost = lease_lost(&r1.trace);
+    let mut per_task: std::collections::HashMap<_, usize> = std::collections::HashMap::new();
+    for a in &r1.trace.attempts {
+        *per_task.entry(a.task).or_insert(0) += 1;
+    }
+    assert!(
+        per_task.values().any(|n| *n > 1),
+        "short-lived workers must lose in-flight work"
+    );
+    for (t, n) in &per_task {
+        if *n > 1 {
+            assert!(lost.contains(t), "{t} re-dispatched {n}x but never lease-lost");
+        }
+    }
 }

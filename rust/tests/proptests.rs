@@ -72,7 +72,7 @@ fn any_op(rng: &mut Rng) -> OpKind {
 
 impl Arbitrary for AnyMessage {
     fn arbitrary(rng: &mut Rng) -> Self {
-        let msg = match rng.below(8) {
+        let msg = match rng.below(9) {
             0 => Message::Hello {
                 worker: WorkerId(rng.next_u32() % 64),
             },
@@ -106,6 +106,9 @@ impl Arbitrary for AnyMessage {
             },
             5 => Message::Ping,
             6 => Message::Pong,
+            7 => Message::Heartbeat {
+                worker: WorkerId(rng.next_u32() % 64),
+            },
             _ => Message::Shutdown,
         };
         AnyMessage(msg)
@@ -543,5 +546,172 @@ fn prop_deque_never_loses_elements_single_thief() {
             matches!(d.steal(), Steal::Empty) && got == pushed,
             &format!("pushed {pushed} == consumed {got}"),
         )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fault-tolerance properties: speculation and ledger resume
+// ---------------------------------------------------------------------------
+
+/// A random pure DAG plus a random fault plan. Worker 2 is always fault-
+/// free so the cluster never runs out of members mid-property.
+#[derive(Clone, Debug)]
+struct DagAndFaults(AnyDag, parhask::cluster::FaultPlan);
+
+impl Arbitrary for DagAndFaults {
+    fn arbitrary(rng: &mut Rng) -> Self {
+        use parhask::cluster::WorkerFaults;
+        let dag = AnyDag::arbitrary(rng);
+        let mut faults = Vec::new();
+        for i in 0..3usize {
+            faults.push(if i == 2 {
+                WorkerFaults::default()
+            } else if rng.chance(0.4) {
+                WorkerFaults::dies_after(1 + rng.below(3) as usize)
+            } else if rng.chance(0.3) {
+                WorkerFaults {
+                    mute_after_tasks: Some(1 + rng.below(3) as usize),
+                    ..WorkerFaults::default()
+                }
+            } else if rng.chance(0.5) {
+                WorkerFaults {
+                    slow_factor: 1.0 + rng.f64() * 4.0,
+                    ..WorkerFaults::default()
+                }
+            } else {
+                WorkerFaults::default()
+            });
+        }
+        let joins: Vec<u64> = if rng.chance(0.5) { vec![rng.below(6)] } else { vec![] };
+        faults.extend(joins.iter().map(|_| WorkerFaults::default()));
+        DagAndFaults(
+            dag,
+            parhask::cluster::FaultPlan {
+                initial_workers: 3,
+                joins,
+                faults,
+                kill_leader_at_step: None,
+            },
+        )
+    }
+}
+
+#[test]
+fn prop_speculative_execution_bit_identical_to_non_speculative() {
+    use parhask::baselines::run_single;
+    use parhask::cluster::{run_cluster_churn, ClusterConfig};
+    use parhask::scheduler::StealPolicy;
+    use parhask::tasks::HostExecutor;
+
+    qcheck_seeded(0xFA17, 8, |df: &DagAndFaults| {
+        let p = &df.0 .0;
+        let reference = run_single(p, &HostExecutor).map_err(|e| format!("single: {e:#}"))?;
+        let cc = |speculate: bool| ClusterConfig {
+            heartbeat: std::time::Duration::from_millis(5),
+            lease: std::time::Duration::from_millis(60),
+            max_failures: 10,
+            speculate,
+            steal: StealPolicy::None,
+            ..Default::default()
+        };
+        let plain = run_cluster_churn(p, Arc::new(HostExecutor), cc(false), &df.1, None)
+            .map_err(|e| format!("non-speculative: {e:#}"))?;
+        plain
+            .trace
+            .validate(p)
+            .map_err(|e| format!("non-speculative trace: {e:#}"))?;
+        let spec = run_cluster_churn(p, Arc::new(HostExecutor), cc(true), &df.1, None)
+            .map_err(|e| format!("speculative: {e:#}"))?;
+        spec.trace
+            .validate(p)
+            .map_err(|e| format!("speculative trace: {e:#}"))?;
+        prop(
+            reference.outputs == plain.outputs,
+            "non-speculative churn run == single-engine reference",
+        )?;
+        prop(
+            plain.outputs == spec.outputs,
+            "speculative run bit-identical to non-speculative",
+        )
+    });
+}
+
+#[test]
+fn prop_ledger_resume_never_reruns_committed_tasks() {
+    use parhask::baselines::run_single;
+    use parhask::cluster::{run_cluster_inproc, ClusterConfig, Ledger};
+    use parhask::tasks::HostExecutor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+
+    /// A random pure DAG plus a leader kill step within it.
+    #[derive(Clone, Debug)]
+    struct DagAndKill(AnyDag, u64);
+
+    impl Arbitrary for DagAndKill {
+        fn arbitrary(rng: &mut Rng) -> Self {
+            let dag = AnyDag::arbitrary(rng);
+            let kill = 1 + rng.below(dag.0.len() as u64);
+            DagAndKill(dag, kill)
+        }
+    }
+
+    qcheck_seeded(0x1ED6E4, 10, |dk: &DagAndKill| {
+        let p = &dk.0 .0;
+        let reference = run_single(p, &HostExecutor).map_err(|e| format!("single: {e:#}"))?;
+        let path = std::env::temp_dir().join(format!(
+            "parhask-prop-ledger-{}-{}.bin",
+            std::process::id(),
+            CASE.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_file(&path);
+        let cc = |kill: Option<u64>| ClusterConfig {
+            ledger_path: Some(path.clone()),
+            kill_at_step: kill,
+            ..Default::default()
+        };
+
+        // run 1: the leader is killed mid-run, leaving a checkpoint
+        let err = run_cluster_inproc(p, Arc::new(HostExecutor), 2, cc(Some(dk.1)), None)
+            .err()
+            .map(|e| e.to_string())
+            .unwrap_or_default();
+        prop(
+            err.contains("leader killed"),
+            &format!("kill at step {} must abort the run, got: {err:?}", dk.1),
+        )?;
+        let entries = Ledger::load(&path).map_err(|e| format!("ledger load: {e:#}"))?;
+        prop(!entries.is_empty(), "the killed leader left a checkpoint")?;
+        let ledgered: std::collections::HashSet<TaskId> =
+            entries.iter().map(|e| e.task).collect();
+
+        // run 2: a fresh leader on the same ledger resumes, never
+        // re-running a ledgered task, and produces identical outputs
+        let r = run_cluster_inproc(p, Arc::new(HostExecutor), 2, cc(None), None)
+            .map_err(|e| format!("resumed run: {e:#}"))?;
+        let _ = std::fs::remove_file(&path);
+        r.trace
+            .validate(p)
+            .map_err(|e| format!("resumed trace: {e:#}"))?;
+        prop(
+            reference.outputs == r.outputs,
+            "resumed run bit-identical to the single-engine reference",
+        )?;
+        let resumed: std::collections::HashSet<TaskId> =
+            r.trace.resumed_tasks.iter().copied().collect();
+        for t in &ledgered {
+            prop(
+                resumed.contains(t),
+                &format!("{t} is in the ledger but was not resumed"),
+            )?;
+        }
+        for e in &r.trace.events {
+            prop(
+                !ledgered.contains(&e.task),
+                &format!("{} re-executed despite being ledgered", e.task),
+            )?;
+        }
+        Ok(())
     });
 }

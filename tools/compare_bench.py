@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Diff the two most recent BENCH_*.json snapshots and fail on regression.
+
+Usage:
+    python3 tools/compare_bench.py                 # discover in repo root
+    python3 tools/compare_bench.py OLD.json NEW.json
+    python3 tools/compare_bench.py --threshold 0.15
+    python3 tools/compare_bench.py --self-test     # prove the comparator works
+
+Every numeric leaf in the snapshot schema (see README "Bench snapshots")
+is lower-is-better: nanosecond timings, bytes moved, task counts. A
+metric in the newer snapshot that exceeds the older one by more than
+THRESHOLD (default 10%) is a regression and the script exits non-zero,
+listing every offender. Sweep arrays are matched row-by-row on their
+identity keys ("size", "k") so reordering or adding sweep points never
+produces a false diff; rows present on only one side are reported as
+informational, not failures.
+
+With fewer than two snapshots on disk there is nothing to compare: the
+script says so loudly and exits 0, so CI stays green on the first PR
+that records a snapshot.
+
+Stdlib only — no pip installs.
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import tempfile
+
+IDENTITY_KEYS = ("size", "k")
+# counters that describe the workload, not the performance of the code
+INFORMATIONAL = {"tasks", "codec_msg_bytes", "schema", "snapshot"}
+# below this many ns, timer jitter dwarfs any real effect
+ABS_FLOOR = 1.0
+
+
+def natural_key(name):
+    """BENCH_pr7.json < BENCH_pr10.json (lexicographic sort gets this wrong)."""
+    return [int(t) if t.isdigit() else t for t in re.split(r"(\d+)", name)]
+
+
+def discover(root):
+    names = [
+        n
+        for n in os.listdir(root)
+        if n.startswith("BENCH_") and n.endswith(".json")
+    ]
+    names.sort(key=natural_key)
+    return [os.path.join(root, n) for n in names]
+
+
+def row_identity(row):
+    return tuple((k, row[k]) for k in IDENTITY_KEYS if k in row)
+
+
+def compare(old, new, path, threshold, regressions, notes):
+    """Walk both trees in lockstep, recording >threshold numeric growth."""
+    if isinstance(old, dict) and isinstance(new, dict):
+        for key in sorted(set(old) | set(new)):
+            if key in INFORMATIONAL:
+                continue
+            here = f"{path}.{key}" if path else key
+            if key not in old:
+                notes.append(f"{here}: new metric (no baseline)")
+            elif key not in new:
+                notes.append(f"{here}: metric dropped from snapshot")
+            else:
+                compare(old[key], new[key], here, threshold, regressions, notes)
+    elif isinstance(old, list) and isinstance(new, list):
+        if all(isinstance(r, dict) for r in old + new):
+            old_rows = {row_identity(r): r for r in old}
+            new_rows = {row_identity(r): r for r in new}
+            for ident in old_rows:
+                label = ",".join(f"{k}={v}" for k, v in ident) or "row"
+                here = f"{path}[{label}]"
+                if ident in new_rows:
+                    compare(
+                        old_rows[ident], new_rows[ident], here, threshold,
+                        regressions, notes,
+                    )
+                else:
+                    notes.append(f"{here}: sweep point dropped from snapshot")
+            for ident in new_rows:
+                if ident not in old_rows:
+                    label = ",".join(f"{k}={v}" for k, v in ident) or "row"
+                    notes.append(f"{path}[{label}]: new sweep point (no baseline)")
+        else:
+            for i, (o, n) in enumerate(zip(old, new)):
+                compare(o, n, f"{path}[{i}]", threshold, regressions, notes)
+    elif isinstance(old, (int, float)) and isinstance(new, (int, float)):
+        if old >= ABS_FLOOR and new > old * (1.0 + threshold):
+            pct = (new / old - 1.0) * 100.0
+            regressions.append(
+                f"{path}: {old:.1f} -> {new:.1f}  (+{pct:.1f}%, limit "
+                f"+{threshold * 100:.0f}%)"
+            )
+    # strings and mixed types: nothing to compare
+
+
+def run_compare(old_path, new_path, threshold):
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    regressions, notes = [], []
+    compare(old, new, "", threshold, regressions, notes)
+    print(
+        f"comparing {os.path.basename(old_path)} "
+        f"({old.get('snapshot', '?')}) -> {os.path.basename(new_path)} "
+        f"({new.get('snapshot', '?')})"
+    )
+    for n in notes:
+        print(f"  note: {n}")
+    if regressions:
+        print(f"\nPERF REGRESSION: {len(regressions)} metric(s) slowed by more "
+              f"than {threshold * 100:.0f}%:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print(f"ok: no metric regressed by more than {threshold * 100:.0f}%")
+    return 0
+
+
+def self_test(threshold):
+    """Synthetic fixtures proving regressions are caught and noise is not."""
+    base = {
+        "schema": "parhask-bench-snapshot/1",
+        "snapshot": "prA",
+        "substrate": {"codec_encode_ns": 100.0, "deque_steal_ns": 0.4},
+        "sim_partition_sweep": [
+            {"size": 256, "k": 1, "tasks": 9, "makespan_ns": 1000.0},
+            {"size": 256, "k": 4, "tasks": 21, "makespan_ns": 400.0},
+        ],
+    }
+    # 9% slower everywhere: must pass
+    ok = json.loads(json.dumps(base))
+    ok["snapshot"] = "prB"
+    ok["substrate"]["codec_encode_ns"] = 109.0
+    ok["sim_partition_sweep"][1]["makespan_ns"] = 436.0
+    # one sweep point 50% slower: must fail, and the sub-floor timer
+    # (0.4ns -> 0.9ns, +125%) must NOT be what fails it
+    bad = json.loads(json.dumps(base))
+    bad["snapshot"] = "prC"
+    bad["sim_partition_sweep"][1]["makespan_ns"] = 600.0
+    bad["substrate"]["deque_steal_ns"] = 0.9
+    # identical but reordered sweep rows: must pass (identity matching)
+    reordered = json.loads(json.dumps(base))
+    reordered["snapshot"] = "prD"
+    reordered["sim_partition_sweep"].reverse()
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = {}
+        for name, doc in [("a", base), ("b", ok), ("c", bad), ("d", reordered)]:
+            paths[name] = os.path.join(d, f"BENCH_{name}.json")
+            with open(paths[name], "w") as f:
+                json.dump(doc, f)
+        cases = [
+            (paths["a"], paths["b"], 0, "within-threshold growth passes"),
+            (paths["a"], paths["c"], 1, ">threshold regression fails"),
+            (paths["a"], paths["d"], 0, "row reordering is not a regression"),
+            (paths["c"], paths["a"], 0, "improvements always pass"),
+        ]
+        failed = False
+        for old_p, new_p, want, what in cases:
+            got = run_compare(old_p, new_p, threshold)
+            status = "PASS" if got == want else "FAIL"
+            if got != want:
+                failed = True
+            print(f"self-test [{status}]: {what} (exit {got}, want {want})\n")
+    if failed:
+        print("self-test FAILED", file=sys.stderr)
+        return 1
+    print("self-test passed: comparator detects regressions and only regressions")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshots", nargs="*", help="explicit OLD.json NEW.json")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="fractional regression limit (default 0.10 = 10%%)")
+    ap.add_argument("--root", default=".",
+                    help="directory to discover BENCH_*.json in")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the comparator against synthetic fixtures")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test(args.threshold)
+    if len(args.snapshots) == 2:
+        old_path, new_path = args.snapshots
+    elif not args.snapshots:
+        found = discover(args.root)
+        if len(found) < 2:
+            have = ", ".join(os.path.basename(p) for p in found) or "none"
+            print(
+                "compare_bench: NOTHING TO COMPARE — need two BENCH_*.json "
+                f"snapshots, found {len(found)} ({have}). Record one per PR "
+                "with `cargo bench --bench bench_snapshot`."
+            )
+            return 0
+        old_path, new_path = found[-2], found[-1]
+    else:
+        ap.error("pass exactly two snapshot paths, or none to auto-discover")
+    return run_compare(old_path, new_path, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

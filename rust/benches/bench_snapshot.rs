@@ -2,12 +2,13 @@
 //! are diffable across the PR sequence instead of living in prose.
 //!
 //! Re-runs the load-bearing measurements from `micro_substrate` (codec,
-//! deque, leader round-trip) and `partition_sweep` (simulated and real
-//! shard sweeps) and writes them as a single deterministic-keyed JSON
-//! object. The schema is documented in README.md ("Bench snapshots").
+//! deque, leader round-trip), `partition_sweep` (simulated and real
+//! shard sweeps) and `serve_storm` (multi-tenant serving plane) and
+//! writes them as a single deterministic-keyed JSON object. The schema
+//! is documented in README.md ("Bench snapshots").
 //!
 //! ```sh
-//! cargo bench --bench bench_snapshot           # writes BENCH_pr7.json
+//! cargo bench --bench bench_snapshot           # writes BENCH_pr8.json
 //! BENCH_OUT=/tmp/b.json cargo bench --bench bench_snapshot
 //! ```
 //!
@@ -215,15 +216,88 @@ fn churn_sweep() -> anyhow::Result<Json> {
     ]))
 }
 
+fn serve_storm() -> anyhow::Result<Json> {
+    // multi-tenant storm (smaller than the dedicated serve_storm bench
+    // but same shape): 40 tiny tenants from a 3-program pool + 1 huge
+    // synthetic tenant share 4 workers and one cache. Lower-is-better
+    // rows: storm wall, small-tenant p50/p99. Cross-tenant hits and the
+    // session count describe the workload, not the code's speed.
+    use parhask::metrics::Histogram;
+    use parhask::serve::{ServeConfig, ServePlane};
+    use std::time::Duration;
+
+    let n_tiny = 40usize;
+    let pool: Vec<_> = (1..=3)
+        .map(|t| parhask::workload::matrix_program(t, 16, false, None))
+        .collect();
+    let mut b = ProgramBuilder::new();
+    let mut prev: Vec<TaskId> = Vec::new();
+    for l in 0..3usize {
+        let mut cur = Vec::new();
+        for i in 0..16usize {
+            let args = if l == 0 {
+                vec![ArgRef::const_i32((l * 16 + i) as i32)]
+            } else {
+                vec![ArgRef::out(prev[i], 0)]
+            };
+            cur.push(b.push(
+                OpKind::Synthetic { compute_us: 500 },
+                args,
+                1,
+                CostEst::ZERO,
+                format!("huge{l}_{i}"),
+            ));
+        }
+        prev = cur;
+    }
+    b.mark_output(ArgRef::out(prev[0], 0));
+    let huge = b.build().unwrap();
+
+    let mut cc = parhask::cache::CacheConfig::default();
+    cc.enabled = true;
+    cc.namespace = "host".into();
+    let plane = ServePlane::start_inproc(
+        Arc::new(HostExecutor),
+        ServeConfig {
+            workers: 4,
+            quantum: Duration::from_millis(5),
+            max_sessions: 64,
+            ..ServeConfig::default()
+        },
+        Some(parhask::cache::ResultCache::new(cc)),
+    )?;
+    let t0 = std::time::Instant::now();
+    let huge_ticket = plane.submit(huge)?;
+    let tickets: Vec<_> = (0..n_tiny)
+        .map(|i| plane.submit(pool[i % pool.len()].clone()))
+        .collect::<anyhow::Result<_>>()?;
+    let mut small = Histogram::new();
+    for t in tickets {
+        small.record_ns(t.wait()?.metrics.e2e_ns);
+    }
+    huge_ticket.wait()?;
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let stats = plane.shutdown()?;
+    assert_eq!(stats.completed as usize, 1 + n_tiny);
+    Ok(Json::obj(vec![
+        ("sessions", Json::Num(stats.completed as f64)),
+        ("storm_wall_ns", Json::Num(wall_ns)),
+        ("small_p50_ns", Json::Num(small.p50())),
+        ("small_p99_ns", Json::Num(small.p99())),
+        ("cross_tenant_hits", Json::Num(stats.cross_tenant_hits as f64)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
-    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr7.json".to_string());
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr8.json".to_string());
     let report = Json::obj(vec![
         ("schema", Json::str("parhask-bench-snapshot/1")),
-        ("snapshot", Json::str("pr7")),
+        ("snapshot", Json::str("pr8")),
         ("substrate", substrate()?),
         ("sim_partition_sweep", sim_sweep()?),
         ("cluster_partition_sweep", cluster_sweep()?),
         ("sim_churn", churn_sweep()?),
+        ("serve_storm", serve_storm()?),
     ]);
     std::fs::write(&out, format!("{report}\n"))?;
     println!("wrote {out}");

@@ -1,0 +1,176 @@
+//! serve_storm — a submission storm against the multi-tenant serving
+//! plane: 100 concurrent sessions of mixed size (84 tiny + 15 medium
+//! matrix programs drawn from small pools, so tenants overlap, plus one
+//! huge synthetic program) share 4 workers and one result cache.
+//!
+//! Checks the serving plane's acceptance properties at bench scale and
+//! prints the latency report:
+//!
+//! * zero lost or incorrect results — every session's outputs are
+//!   compared against a solo single-thread run of its program;
+//! * cross-tenant cache hits — duplicate tenants pay for the shared pure
+//!   work once;
+//! * fairness — small-program p99 stays below the huge tenant's
+//!   end-to-end time (the quantum preempts the big session).
+//!
+//! ```sh
+//! cargo bench --bench serve_storm
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use parhask::baselines::run_single;
+use parhask::cache::{CacheConfig, ResultCache};
+use parhask::ir::task::{ArgRef, CostEst, OpKind, TaskId, Value};
+use parhask::ir::{ProgramBuilder, TaskProgram};
+use parhask::metrics::{Histogram, Table};
+use parhask::serve::{ServeConfig, ServePlane};
+use parhask::tasks::HostExecutor;
+use parhask::workload::matrix_program;
+
+const N_TINY: usize = 84;
+const N_MEDIUM: usize = 15;
+
+/// Wide layered pure spin program: the storm's one huge tenant
+/// (width × layers × us of serial compute, width-way parallel).
+fn huge_program(width: usize, layers: usize, us: u64) -> TaskProgram {
+    let mut b = ProgramBuilder::new();
+    let mut prev: Vec<TaskId> = Vec::new();
+    for l in 0..layers {
+        let mut cur = Vec::new();
+        for i in 0..width {
+            let args = if l == 0 {
+                vec![ArgRef::const_i32((l * width + i) as i32)]
+            } else {
+                vec![ArgRef::out(prev[i], 0)]
+            };
+            cur.push(b.push(
+                OpKind::Synthetic { compute_us: us },
+                args,
+                1,
+                CostEst::ZERO,
+                format!("huge{l}_{i}"),
+            ));
+        }
+        prev = cur;
+    }
+    b.mark_output(ArgRef::out(prev[0], 0));
+    b.build().expect("huge program is well-formed")
+}
+
+fn main() -> anyhow::Result<()> {
+    // tenant pools: 3 tiny shapes and 3 medium shapes, so the storm has
+    // heavy cross-tenant overlap without being 100 copies of one program
+    let tiny_pool: Vec<TaskProgram> =
+        (1..=3).map(|t| matrix_program(t, 16, false, None)).collect();
+    let medium_pool: Vec<TaskProgram> =
+        (4..=6).map(|t| matrix_program(t, 48, false, None)).collect();
+    let huge = huge_program(32, 4, 800);
+
+    let solo = |p: &TaskProgram| -> Vec<Value> {
+        run_single(p, &HostExecutor).expect("solo run").outputs
+    };
+    let tiny_want: Vec<Vec<Value>> = tiny_pool.iter().map(solo).collect();
+    let medium_want: Vec<Vec<Value>> = medium_pool.iter().map(solo).collect();
+    let huge_want = solo(&huge);
+
+    let mut cc = CacheConfig::default();
+    cc.enabled = true;
+    cc.namespace = "host".into();
+    let plane = ServePlane::start_inproc(
+        Arc::new(HostExecutor),
+        ServeConfig {
+            workers: 4,
+            quantum: Duration::from_millis(5),
+            max_sessions: 128,
+            ..ServeConfig::default()
+        },
+        Some(ResultCache::new(cc)),
+    )?;
+
+    let t0 = Instant::now();
+    let huge_ticket = plane.submit(huge.clone())?;
+    let tiny_tickets: Vec<_> = (0..N_TINY)
+        .map(|i| Ok((i % tiny_pool.len(), plane.submit(tiny_pool[i % tiny_pool.len()].clone())?)))
+        .collect::<anyhow::Result<_>>()?;
+    let medium_tickets: Vec<_> = (0..N_MEDIUM)
+        .map(|i| {
+            Ok((i % medium_pool.len(), plane.submit(medium_pool[i % medium_pool.len()].clone())?))
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut small_e2e = Histogram::new();
+    let mut medium_e2e = Histogram::new();
+    let mut incorrect = 0usize;
+    for (k, t) in tiny_tickets {
+        let o = t.wait()?;
+        if o.outputs != tiny_want[k] {
+            eprintln!("tiny session {} (pool {k}): WRONG OUTPUTS", o.id);
+            incorrect += 1;
+        }
+        small_e2e.record_ns(o.metrics.e2e_ns);
+    }
+    for (k, t) in medium_tickets {
+        let o = t.wait()?;
+        if o.outputs != medium_want[k] {
+            eprintln!("medium session {} (pool {k}): WRONG OUTPUTS", o.id);
+            incorrect += 1;
+        }
+        medium_e2e.record_ns(o.metrics.e2e_ns);
+    }
+    let huge_outcome = huge_ticket.wait()?;
+    if huge_outcome.outputs != huge_want {
+        eprintln!("huge session {}: WRONG OUTPUTS", huge_outcome.id);
+        incorrect += 1;
+    }
+    let wall = t0.elapsed();
+    let mut stats = plane.shutdown()?;
+
+    let sessions = (1 + N_TINY + N_MEDIUM) as u64;
+    assert_eq!(incorrect, 0, "{incorrect} session(s) returned wrong results");
+    assert_eq!(stats.completed, sessions, "lost sessions: {stats:?}");
+    assert_eq!(stats.failed, 0);
+    assert!(
+        stats.cross_tenant_hits > 0,
+        "overlapping tenants produced no cross-tenant cache hits"
+    );
+    let small_p99 = small_e2e.p99();
+    let huge_e2e = huge_outcome.metrics.e2e_ns as f64;
+    assert!(
+        small_p99 < huge_e2e,
+        "small p99 {:.1} ms not bounded below huge e2e {:.1} ms — starved",
+        small_p99 / 1e6,
+        huge_e2e / 1e6
+    );
+
+    let mut t = Table::new(
+        "serve_storm",
+        &["class", "sessions", "p50_ms", "p95_ms", "p99_ms", "max_ms"],
+    );
+    let mut row = |name: &str, h: &mut Histogram| {
+        t.row(vec![
+            name.to_string(),
+            h.count().to_string(),
+            format!("{:.3}", h.p50() / 1e6),
+            format!("{:.3}", h.p95() / 1e6),
+            format!("{:.3}", h.p99() / 1e6),
+            format!("{:.3}", h.max() / 1e6),
+        ]);
+    };
+    row("tiny", &mut small_e2e);
+    row("medium", &mut medium_e2e);
+    let mut huge_h = Histogram::new();
+    huge_h.record_ns(huge_outcome.metrics.e2e_ns);
+    row("huge", &mut huge_h);
+    println!("{}", t.render());
+    println!("{}", stats.table().render());
+    println!(
+        "storm: {} sessions in {:.1} ms ({:.0} sessions/s), huge preempted {} time(s)",
+        sessions,
+        wall.as_secs_f64() * 1e3,
+        sessions as f64 / wall.as_secs_f64(),
+        huge_outcome.metrics.quantum_expiries,
+    );
+    Ok(())
+}

@@ -31,6 +31,8 @@ const T_REVOKE: u8 = 9;
 const T_PING: u8 = 10;
 const T_SHUTDOWN: u8 = 11;
 const T_HEARTBEAT: u8 = 12;
+const T_SUBMIT: u8 = 13;
+const T_SUBMIT_REPLY: u8 = 14;
 
 // value tags
 const V_TENSOR_F32: u8 = 0;
@@ -100,6 +102,26 @@ pub fn encode(msg: &Message) -> Vec<u8> {
         Message::Bye { worker } => {
             w.u8(T_BYE);
             w.u32(worker.0);
+        }
+        Message::Submit { source, entry } => {
+            w.u8(T_SUBMIT);
+            w.str(source);
+            w.str(entry);
+        }
+        Message::SubmitReply {
+            ok,
+            error,
+            outputs,
+            report,
+        } => {
+            w.u8(T_SUBMIT_REPLY);
+            w.u8(u8::from(*ok));
+            w.str(error);
+            w.varint(outputs.len() as u64);
+            for v in outputs {
+                put_value(&mut w, v);
+            }
+            w.str(report);
         }
         Message::Assign { task, op, args } => {
             w.u8(T_ASSIGN);
@@ -173,6 +195,29 @@ pub fn decode(bytes: &[u8]) -> Result<Message> {
         T_BYE => Message::Bye {
             worker: WorkerId(r.u32()?),
         },
+        T_SUBMIT => Message::Submit {
+            source: r.str()?,
+            entry: r.str()?,
+        },
+        T_SUBMIT_REPLY => {
+            let ok = match r.u8()? {
+                0 => false,
+                1 => true,
+                b => bail!("bad bool byte {b}"),
+            };
+            let error = r.str()?;
+            let n = r.varint()? as usize;
+            if n > 4096 {
+                bail!("too many outputs: {n}");
+            }
+            let outputs = (0..n).map(|_| get_value(&mut r)).collect::<Result<_>>()?;
+            Message::SubmitReply {
+                ok,
+                error,
+                outputs,
+                report: r.str()?,
+            }
+        }
         T_ASSIGN => {
             let task = TaskId(r.u32()?);
             let op = get_op(&mut r)?;
@@ -405,6 +450,26 @@ mod tests {
         roundtrip(Message::TaskFailed {
             task: TaskId(7),
             error: "boom: ünicode".into(),
+        });
+    }
+
+    #[test]
+    fn submit_messages_roundtrip() {
+        roundtrip(Message::Submit {
+            source: "main = print (matgen 8)\n".into(),
+            entry: "main".into(),
+        });
+        roundtrip(Message::SubmitReply {
+            ok: true,
+            error: String::new(),
+            outputs: vec![Value::scalar_i32(42), Value::Unit],
+            report: "{\"tasks\":12}".into(),
+        });
+        roundtrip(Message::SubmitReply {
+            ok: false,
+            error: "type error: ünbound variable".into(),
+            outputs: vec![],
+            report: String::new(),
         });
     }
 

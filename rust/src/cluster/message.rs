@@ -39,6 +39,19 @@ pub enum Message {
     /// Graceful shutdown acknowledgement.
     Bye { worker: WorkerId },
 
+    // -- client <-> serving plane -------------------------------------------
+    /// Submit a program for execution (client → plane). The plane
+    /// compiles it with the shared pipeline and runs it as one session.
+    Submit { source: String, entry: String },
+    /// Session outcome (plane → client). `report` is a JSON rendering of
+    /// the per-session metrics.
+    SubmitReply {
+        ok: bool,
+        error: String,
+        outputs: Vec<Value>,
+        report: String,
+    },
+
     // -- leader -> worker ---------------------------------------------------
     /// Run a task. Args are inline values or cache references.
     Assign {
@@ -64,6 +77,8 @@ impl Message {
             Message::Pong => "pong",
             Message::Heartbeat { .. } => "heartbeat",
             Message::Bye { .. } => "bye",
+            Message::Submit { .. } => "submit",
+            Message::SubmitReply { .. } => "submit_reply",
             Message::Assign { .. } => "assign",
             Message::Revoke { .. } => "revoke",
             Message::Ping => "ping",

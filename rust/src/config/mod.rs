@@ -105,6 +105,12 @@ pub struct RunConfig {
     /// Fault injection: kill the leader after this many commits
     /// (`--kill-at-step`), exercising ledger resume.
     pub kill_at_step: Option<u64>,
+    /// Serving plane: scheduling quantum per session turn
+    /// (`--quantum-ms`).
+    pub quantum_ms: u64,
+    /// Serving plane: max concurrently active sessions; excess
+    /// submissions queue for admission (`--max-sessions`).
+    pub max_sessions: usize,
 }
 
 impl Default for RunConfig {
@@ -127,6 +133,8 @@ impl Default for RunConfig {
             speculate_factor: 2.0,
             ledger: None,
             kill_at_step: None,
+            quantum_ms: 25,
+            max_sessions: 64,
         }
     }
 }
@@ -217,9 +225,34 @@ impl RunConfig {
             }
             "ledger" => self.ledger = Some(value.to_string()),
             "kill_at_step" => self.kill_at_step = Some(value.parse()?),
+            "quantum_ms" => {
+                self.quantum_ms = value.parse()?;
+                if self.quantum_ms == 0 {
+                    bail!("quantum_ms must be ≥ 1");
+                }
+            }
+            "max_sessions" => {
+                self.max_sessions = value.parse()?;
+                if self.max_sessions == 0 {
+                    bail!("max_sessions must be ≥ 1");
+                }
+            }
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
+    }
+
+    /// Serving-plane knobs derived from this config (`workers` comes
+    /// from the CLI since it is plane topology, not per-run policy).
+    pub fn serve_config(&self, workers: usize) -> crate::serve::ServeConfig {
+        crate::serve::ServeConfig {
+            workers,
+            quantum: Duration::from_millis(self.quantum_ms),
+            max_sessions: self.max_sessions,
+            pipeline_depth: self.pipeline_depth,
+            use_cached_args: self.use_cached_args,
+            lease: Duration::from_millis(self.lease_ms),
+        }
     }
 
     pub fn cluster_config(&self) -> ClusterConfig {
@@ -330,6 +363,25 @@ mod tests {
             Some(std::path::Path::new("/tmp/run.ledger"))
         );
         assert_eq!(cc.kill_at_step, Some(7));
+    }
+
+    #[test]
+    fn serve_overrides() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.quantum_ms, 25);
+        assert_eq!(c.max_sessions, 64);
+        c.set("quantum-ms", "10").unwrap(); // hyphen form accepted
+        c.set("max_sessions", "8").unwrap();
+        assert_eq!(c.quantum_ms, 10);
+        assert_eq!(c.max_sessions, 8);
+        assert!(c.set("quantum_ms", "0").is_err());
+        assert!(c.set("max-sessions", "0").is_err());
+
+        let sc = c.serve_config(3);
+        assert_eq!(sc.workers, 3);
+        assert_eq!(sc.quantum, Duration::from_millis(10));
+        assert_eq!(sc.max_sessions, 8);
+        assert_eq!(sc.pipeline_depth, c.pipeline_depth);
     }
 
     #[test]

@@ -70,6 +70,8 @@ pub mod config;
 pub mod cli;
 pub mod workload;
 pub mod engine;
+pub mod pipeline;
+pub mod serve;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -7,7 +7,8 @@
 //! parhask run     <file.hs> [--engine E] [...]    full pipeline on a source file
 //! parhask matrix  [--rounds T] [--size N] [...]   the Figure-2 workload
 //! parhask worker  --leader HOST:PORT [--id N]     TCP worker process
-//! parhask serve   <file.hs> --bind ADDR --workers N   TCP leader
+//! parhask serve   --bind ADDR [--workers N]       multi-tenant serving plane
+//! parhask submit  <file.hs>... --connect ADDR     submit program(s) to a plane
 //! parhask calibrate [--reps K]                    measure artifacts → costmodel.json
 //! ```
 //!
@@ -22,9 +23,10 @@ use parhask::cli::Args;
 use parhask::config::RunConfig;
 use parhask::depgraph::{analyze, build_depgraph, dot};
 use parhask::frontend::{parse_program, pretty, render_all};
-use parhask::ir::lower::lower;
+use parhask::pipeline::{self, CompileOptions};
 use parhask::runtime::RuntimeService;
 use parhask::scheduler::WorkerId;
+use parhask::serve::ServiceOptions;
 use parhask::tasks::{Executor, FunctionRegistry, HostExecutor, PjrtExecutor};
 use parhask::types::check_program;
 use parhask::workload;
@@ -51,6 +53,7 @@ fn main() {
         "matrix" => cmd_matrix(&args),
         "worker" => cmd_worker(&args),
         "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
         "calibrate" => cmd_calibrate(&args),
         "" | "help" | "--help" => {
             print!("{USAGE}");
@@ -77,7 +80,8 @@ USAGE:
   parhask run     <file.hs> [--entry main] [--size N] [--engine E] [--trace]
   parhask matrix  [--rounds T] [--size N] [--engine E] [--trace]
   parhask worker  --leader HOST:PORT [--id N] [--die-after K]
-  parhask serve   <file.hs> --bind ADDR --workers N [--size N]
+  parhask serve   --bind ADDR [--workers N] [--quantum-ms Q] [--max-sessions S]
+  parhask submit  <file.hs> [<file.hs>...] --connect HOST:PORT [--entry main]
   parhask calibrate [--reps K]
 
 ENGINES: single | smp:K | cluster:W | sim:W
@@ -103,6 +107,19 @@ FAULTS:  --lease-ms L (cluster: membership lease; 0 = off): workers
          leader pointed at the same file resumes without recomputing)
          --kill-at-step K (fault injection: kill the leader after K
          commits, for exercising --ledger resume)
+SERVE:   parhask serve = long-lived multi-tenant serving plane: many
+         concurrent submissions share ONE worker pool and ONE result
+         cache (cross-tenant memoization of pure tasks); per-session
+         FIFO queues are drained round-robin under --quantum-ms Q
+         (default 25) so big tenants cannot starve small ones;
+         --max-sessions S (default 64) bounds active sessions, excess
+         queues for admission; --workers N in-proc pool (TCP `parhask
+         worker --leader` processes may join on top); --max-requests K
+         answers K submissions then drains and prints the stats table
+         (0 = serve forever); composes with --cache*, --partitions,
+         --lease-ms
+         parhask submit = storm client: submits each file concurrently
+         on its own connection, prints per-session outcome + metrics
 CHECK:   parhask check = static analysis without executing: transitive
          purity inference + lints on the source, then IR verification of
          the lowered (and, with --partitions K, partitioned) task graph;
@@ -158,96 +175,42 @@ fn kind_of(d: &parhask::frontend::Decl) -> &'static str {
 /// or violation; `--deny-warnings` promotes warnings to failures.
 fn cmd_check(args: &Args) -> Result<()> {
     let (path, src) = read_source(args)?;
-    let entry = args.get_or("entry", "main");
     let size = args.get_usize("size", 256)?;
-    let inline_depth = args.get_usize("inline", 8)?;
-    let cfg = build_config(args)?;
-
-    let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    let mut checked = match check_program(&program, &entry) {
-        Ok(c) => c,
-        Err(diags) => {
-            eprint!("{}", render_all(&diags, &src));
-            let n = diags.iter().filter(|d| d.is_error()).count();
-            bail!("{path}: check failed with {n} error(s)");
-        }
+    let mut cfg = build_config(args)?;
+    // check is the static-analysis command: always verify the IR
+    cfg.verify_ir = true;
+    let copts = CompileOptions {
+        entry: args.get_or("entry", "main"),
+        inline_depth: args.get_usize("inline", 8)?,
     };
-    let n_warnings = checked.warnings.len();
-    if n_warnings > 0 {
-        eprint!("{}", render_all(&checked.warnings, &src));
-        if args.flag("deny-warnings") || args.flag("deny_warnings") {
-            bail!("{path}: {n_warnings} warning(s) denied by --deny-warnings");
-        }
-    }
-
-    if inline_depth > 0 {
-        let keep = ["matgen", "matmul", "matsum", "matround",
-                    "clean_files", "complex_evaluation", "semantic_analysis"];
-        checked.main_stmts = parhask::frontend::inline_stmts(
-            &program,
-            &checked.main_stmts,
-            &keep,
-            inline_depth,
-        )
-        .map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    }
     // check is purely static, so the host registry always suffices — no
     // PJRT runtime is spun up even when artifacts are installed
-    let mut registry = FunctionRegistry::matrix_host(size);
-    let demo = FunctionRegistry::nlp_demo(20_000, 50_000, 30_000);
-    for name in ["clean_files", "complex_evaluation", "semantic_analysis"] {
-        if registry.get(name).is_none() {
-            if let Some(e) = demo.get(name) {
-                registry.bind(name, e.clone());
-            }
+    let registry = pipeline::default_registry(size);
+    let compiled = pipeline::compile_source(&src, &copts, &mut cfg, &registry)
+        .map_err(|e| e.context(format!("{path}: check failed")))?;
+    if compiled.n_warnings > 0 {
+        eprint!("{}", compiled.warning_text);
+        if args.flag("deny-warnings") || args.flag("deny_warnings") {
+            bail!(
+                "{path}: {} warning(s) denied by --deny-warnings",
+                compiled.n_warnings
+            );
         }
     }
-    let lowered =
-        lower(&checked, &registry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    report_violations(&path, "lowered IR", &parhask::analysis::verify_program(&lowered.program))?;
-    let mut n_tasks = lowered.program.len();
-
-    if cfg.partition.enabled() {
-        let pp = parhask::partition::partition_program(&lowered.program, &cfg.partition)?;
-        let opts = parhask::analysis::VerifyOpts {
-            combine_arity: Some(cfg.partition.combine_arity),
-        };
-        report_violations(
-            &path,
-            "partitioned IR",
-            &parhask::analysis::verify_program_with(&pp.program, &opts),
-        )?;
+    if compiled.families > 0 {
         println!(
             "partitioned: {} shard families, {} tasks total",
-            pp.families.len(),
-            pp.program.len()
+            compiled.families,
+            compiled.program.len()
         );
-        n_tasks = pp.program.len();
     }
     println!(
         "{path}: check passed — {} declaration(s), {} task(s), {} warning(s), 0 violations",
-        program.decls.len(),
-        n_tasks,
-        n_warnings
+        compiled.n_decls,
+        compiled.program.len(),
+        compiled.n_warnings
     );
     Ok(())
-}
-
-fn report_violations(
-    path: &str,
-    stage: &str,
-    violations: &[parhask::analysis::Violation],
-) -> Result<()> {
-    if violations.is_empty() {
-        return Ok(());
-    }
-    for v in violations {
-        eprintln!("violation: {v}");
-    }
-    bail!(
-        "{path}: {stage} failed verification with {} violation(s)",
-        violations.len()
-    )
 }
 
 fn cmd_graph(args: &Args) -> Result<()> {
@@ -304,6 +267,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
                 | "out"
                 | "deny-warnings"
                 | "deny_warnings"
+                | "connect"
+                | "max-requests"
+                | "max_requests"
         ) {
             continue;
         }
@@ -373,53 +339,22 @@ fn apply_partition(
     Ok(pp.program)
 }
 
-/// Build the per-run result cache when enabled, and report it after. The
-/// key namespace is pinned to the executor backend so host and PJRT
-/// results can never alias.
-fn build_cache(cfg: &RunConfig) -> Option<std::sync::Arc<parhask::cache::ResultCache>> {
-    cfg.cache.enabled.then(|| {
-        let mut cc = cfg.cache.clone();
-        if cc.namespace.is_empty() {
-            cc.namespace = if cfg.use_artifacts { "pjrt" } else { "host" }.into();
-        }
-        parhask::cache::ResultCache::new(cc)
-    })
-}
-
 fn report_cache(cache: &Option<std::sync::Arc<parhask::cache::ResultCache>>) {
     if let Some(cache) = cache {
         println!("{}", cache.stats().summary_line());
     }
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let (_, src) = read_source(args)?;
-    let entry = args.get_or("entry", "main");
-    let size = args.get_usize("size", 256)?;
-    // user helper functions inline by default so the registry only needs
-    // the primitive ops (`--inline 0` keeps the paper's shallow behaviour)
-    let inline_depth = args.get_usize("inline", 8)?;
-    let mut cfg = build_config(args)?;
-
-    let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    let mut checked =
-        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", render_all(&e, &src)))?;
-    if inline_depth > 0 {
-        let keep = ["matgen", "matmul", "matsum", "matround",
-                    "clean_files", "complex_evaluation", "semantic_analysis"];
-        checked.main_stmts = parhask::frontend::inline_stmts(
-            &program,
-            &checked.main_stmts,
-            &keep,
-            inline_depth,
-        )
-        .map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    }
-
-    // Registry: artifact-backed matrix ops at --size when available, plus
-    // the paper's §2 NLP names with synthetic latencies so the README
-    // example runs as-is.
-    let (executor, _svc, mut registry): (Arc<dyn Executor>, _, _) = if cfg.use_artifacts {
+/// Build the executor + registry pair for source-file commands:
+/// artifact-backed matrix ops at `size` when available (host fallback),
+/// plus the paper's §2 NLP names with synthetic latencies so the README
+/// example runs as-is. Also feeds the AOT manifest's row-shardable
+/// artifact names into the partition plan.
+fn build_executor_and_registry(
+    cfg: &mut RunConfig,
+    size: usize,
+) -> Result<(Arc<dyn Executor>, Option<RuntimeService>, FunctionRegistry)> {
+    let (executor, svc, mut registry): (Arc<dyn Executor>, _, _) = if cfg.use_artifacts {
         let svc = RuntimeService::start_default().context("starting PJRT runtime")?;
         let reg = FunctionRegistry::matrix_artifacts(size, svc.handle().manifest())
             .unwrap_or_else(|_| FunctionRegistry::matrix_host(size));
@@ -431,33 +366,42 @@ fn cmd_run(args: &Args) -> Result<()> {
             FunctionRegistry::matrix_host(size),
         )
     };
-    if let Some(svc) = &_svc {
+    if let Some(svc) = &svc {
         // artifacts the AOT layer declares row-shardable join the plan
         cfg.partition.allow_from_manifest(svc.handle().manifest());
     }
-    let demo = FunctionRegistry::nlp_demo(20_000, 50_000, 30_000);
-    for name in ["clean_files", "complex_evaluation", "semantic_analysis"] {
-        if registry.get(name).is_none() {
-            if let Some(e) = demo.get(name) {
-                registry.bind(name, e.clone());
-            }
-        }
-    }
+    parhask::pipeline::bind_nlp_demo(&mut registry);
+    Ok((executor, svc, registry))
+}
 
-    let lowered =
-        lower(&checked, &registry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
+fn cmd_run(args: &Args) -> Result<()> {
+    let (_, src) = read_source(args)?;
+    let size = args.get_usize("size", 256)?;
+    let mut cfg = build_config(args)?;
+    // user helper functions inline by default so the registry only needs
+    // the primitive ops (`--inline 0` keeps the paper's shallow behaviour)
+    let copts = CompileOptions {
+        entry: args.get_or("entry", "main"),
+        inline_depth: args.get_usize("inline", 8)?,
+    };
+    let (executor, _svc, registry) = build_executor_and_registry(&mut cfg, size)?;
+    let compiled = pipeline::compile_source(&src, &copts, &mut cfg, &registry)?;
     println!(
-        "lowered `{entry}`: {} tasks, width {}, engine {}",
-        lowered.program.len(),
-        lowered.program.max_parallel_width(),
+        "lowered `{}`: {} tasks, width {}, engine {}",
+        copts.entry,
+        compiled.program.len(),
+        compiled.program.max_parallel_width(),
         cfg.engine.describe()
     );
-    let program = apply_partition(&mut cfg, lowered.program)?;
-    // Never cache anything the signature analysis says is IO (defense in
-    // depth on top of the op-kind purity gate).
-    cfg.cache.deny_io_from(&checked.purity);
-    let cache = build_cache(&cfg);
-    let r = parhask::engine::run_with_cache(&program, &cfg, executor, cache.clone())?;
+    if compiled.families > 0 {
+        println!(
+            "partitioned: {} shard families, {} tasks total",
+            compiled.families,
+            compiled.program.len()
+        );
+    }
+    let cache = pipeline::build_cache(&cfg);
+    let r = parhask::engine::run_with_cache(&compiled.program, &cfg, executor, cache.clone())?;
     report(&r, args.flag("trace"));
     report_cache(&cache);
     Ok(())
@@ -490,7 +434,7 @@ fn cmd_matrix(args: &Args) -> Result<()> {
         std::fs::write(out, dot).with_context(|| format!("writing {out}"))?;
         println!("wrote {out}");
     }
-    let cache = build_cache(&cfg);
+    let cache = pipeline::build_cache(&cfg);
     let r = parhask::engine::run_with_cache(&program, &cfg, executor, cache.clone())?;
     if let Some(v) = r.outputs.first() {
         if let Ok(t) = v.as_tensor() {
@@ -519,41 +463,64 @@ fn cmd_worker(args: &Args) -> Result<()> {
     )
 }
 
+/// `parhask serve`: host the multi-tenant serving plane. Unlike the old
+/// one-shot TCP leader this takes no source file — programs arrive as
+/// `Submit` messages (see `parhask submit`) and every session shares one
+/// worker pool and one cross-tenant result cache.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (_, src) = read_source(args)?;
     let bind = args.get("bind").context("--bind ADDR required")?;
-    let workers = args.get_usize("workers", 2)?;
-    let size = args.get_usize("size", 256)?;
     let mut cfg = build_config(args)?;
-    let entry = args.get_or("entry", "main");
-
-    let program = parse_program(&src).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    let checked =
-        check_program(&program, &entry).map_err(|e| anyhow::anyhow!("{}", render_all(&e, &src)))?;
-    let registry = if cfg.use_artifacts {
-        let svc = RuntimeService::start_default()?;
-        // artifacts the AOT layer declares row-shardable join the plan
-        cfg.partition.allow_from_manifest(svc.handle().manifest());
-        FunctionRegistry::matrix_artifacts(size, svc.handle().manifest())?
-    } else {
-        FunctionRegistry::matrix_host(size)
+    let opts = ServiceOptions {
+        workers: args.get_usize("workers", 4)?,
+        max_requests: args
+            .get_usize("max-requests", args.get_usize("max_requests", 0)?)?,
+        entry: args.get_or("entry", "main"),
+        size: args.get_usize("size", 256)?,
+        inline_depth: args.get_usize("inline", 8)?,
     };
-    let lowered =
-        lower(&checked, &registry).map_err(|e| anyhow::anyhow!("{}", e.render(&src)))?;
-    // serve bypasses engine::run_with_cache, so the shared helper must
-    // run here for `--partitions` to mean anything in serving mode
-    let program = apply_partition(&mut cfg, lowered.program)?;
-    cfg.cache.deny_io_from(&checked.purity);
-    let cache = build_cache(&cfg);
-    let r = parhask::cluster::run_cluster_tcp_cached(
-        &program,
-        bind,
-        workers,
-        cfg.cluster_config(),
-        cache.clone(),
-    )?;
-    report(&r, args.flag("trace"));
-    report_cache(&cache);
+    let (executor, _svc, _registry) = build_executor_and_registry(&mut cfg, opts.size)?;
+    let mut stats = parhask::serve::serve_tcp(bind, executor, &cfg, &opts)?;
+    print!("{}", stats.table().render());
+    Ok(())
+}
+
+/// `parhask submit`: submit one or more HaskLite files to a serving
+/// plane, all concurrently on separate connections (the storm client the
+/// CI smoke test drives). Exit 1 if any submission fails.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let addr = args.get("connect").context("--connect HOST:PORT required")?;
+    let entry = args.get_or("entry", "main");
+    if args.positional.is_empty() {
+        bail!("expected at least one source file to submit");
+    }
+    let jobs = args
+        .positional
+        .iter()
+        .map(|p| {
+            let src =
+                std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+            Ok((p.clone(), src))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let results = parhask::serve::submit_tcp(addr.to_string(), jobs, &entry)?;
+    let mut failed = 0;
+    for r in &results {
+        if r.ok {
+            println!(
+                "{}: ok in {:.3} ms — {} output(s) {}",
+                r.name,
+                r.e2e_ns as f64 / 1e6,
+                r.outputs.len(),
+                r.report
+            );
+        } else {
+            failed += 1;
+            eprintln!("{}: FAILED — {}", r.name, r.error);
+        }
+    }
+    if failed > 0 {
+        bail!("{failed} of {} submission(s) failed", results.len());
+    }
     Ok(())
 }
 

@@ -1,0 +1,172 @@
+//! Latency histogram: exact-sample percentile estimator with merge.
+//!
+//! The serving plane records one sample per request (admission wait,
+//! admission-to-first-task, end-to-end) and reports p50/p95/p99 per
+//! class; benches merge per-thread histograms into one report. Samples
+//! are kept exactly (a `Vec<f64>`) — at serving-bench scale (thousands
+//! of requests) that is cheaper and more precise than bucketing, and
+//! `merge` is plain concatenation so it is lossless and associative.
+
+use super::stats::percentile;
+
+/// An exact-sample histogram. `record` is O(1); percentile queries sort
+/// lazily (amortized — the sort result is kept until the next record).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    /// `samples` is currently sorted (invalidated by record/merge).
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample (any unit; callers pick ns or ms consistently).
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    /// Record a nanosecond duration.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.record(ns as f64);
+    }
+
+    /// Fold another histogram's samples into this one (lossless).
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 1]. 0.0 on an empty
+    /// histogram — serving reports print before any traffic arrives.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        percentile(&self.samples, q)
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.percentile(1.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// `count / p50 / p95 / p99 / max` formatted in milliseconds — the
+    /// row shape the serving report table uses for ns-unit histograms.
+    pub fn ms_row(&mut self) -> Vec<String> {
+        vec![
+            self.count().to_string(),
+            format!("{:.3}", self.p50() / 1e6),
+            format!("{:.3}", self.p95() / 1e6),
+            format!("{:.3}", self.p99() / 1e6),
+            format!("{:.3}", self.max() / 1e6),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut h = Histogram::new();
+        // record out of order: 1..=100
+        for v in (1..=100u32).rev() {
+            h.record(v as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50(), 50.5);
+        assert!((h.p95() - 95.05).abs() < 1e-9);
+        assert!((h.p99() - 99.01).abs() < 1e-9);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.mean(), 50.5);
+    }
+
+    #[test]
+    fn singleton() {
+        let mut h = Histogram::new();
+        h.record_ns(7_000_000);
+        assert_eq!(h.p50(), 7e6);
+        assert_eq!(h.p99(), 7e6);
+    }
+
+    #[test]
+    fn merge_is_concat() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 1..=50 {
+            a.record(v as f64);
+        }
+        for v in 51..=100 {
+            b.record(v as f64);
+        }
+        // query first so the sorted flag is set, then merge must re-sort
+        assert_eq!(a.p50(), 25.5);
+        a.merge(&b);
+        let mut whole = Histogram::new();
+        for v in 1..=100 {
+            whole.record(v as f64);
+        }
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.p50(), whole.p50());
+        assert_eq!(a.p99(), whole.p99());
+    }
+
+    #[test]
+    fn record_after_query_resorts() {
+        let mut h = Histogram::new();
+        h.record(10.0);
+        h.record(20.0);
+        assert_eq!(h.max(), 20.0);
+        h.record(5.0);
+        assert_eq!(h.min(), 5.0);
+        assert_eq!(h.max(), 20.0);
+    }
+}

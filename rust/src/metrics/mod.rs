@@ -1,7 +1,10 @@
-//! Metrics: summary statistics and report tables for the bench harness.
+//! Metrics: summary statistics, latency histograms and report tables
+//! for the bench harness and the serving plane.
 
+pub mod histogram;
 pub mod stats;
 pub mod table;
 
+pub use histogram::Histogram;
 pub use stats::Summary;
 pub use table::Table;

@@ -1,0 +1,228 @@
+//! The shared compile pipeline: source text → executable `TaskProgram`.
+//!
+//! One path — parse → `check_program` → helper inlining → `lower` →
+//! partition rewrite → cache IO-deny — shared by `parhask run`,
+//! `parhask check`, and every serving-plane session, so `--partitions`,
+//! `--verify-ir` and the purity-based cache denial behave identically
+//! everywhere. (Before this module, `cmd_serve` duplicated `cmd_run`'s
+//! pipeline and drifted: serve bypassed `engine::run_with_cache`, so the
+//! partition rewrite had to be replicated by hand.)
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::frontend::{inline_stmts, parse_program, render_all};
+use crate::ir::lower::lower;
+use crate::ir::TaskProgram;
+use crate::tasks::FunctionRegistry;
+use crate::types::check_program;
+
+/// Registry names never inlined away: the primitive ops `lower` maps to
+/// task kinds, plus the paper's §2 NLP pipeline names.
+pub const KEEP_PRIMITIVES: [&str; 7] = [
+    "matgen",
+    "matmul",
+    "matsum",
+    "matround",
+    "clean_files",
+    "complex_evaluation",
+    "semantic_analysis",
+];
+
+/// Knobs of one compilation, orthogonal to the execution [`RunConfig`].
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    /// Entry function to parallelize (the paper uses `main`).
+    pub entry: String,
+    /// Inline user helper functions to this depth before lowering
+    /// (0 = the paper's shallow behaviour).
+    pub inline_depth: usize,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            entry: "main".into(),
+            inline_depth: 8,
+        }
+    }
+}
+
+/// A compiled program plus the facts the caller reports or enforces.
+pub struct Compiled {
+    pub program: TaskProgram,
+    pub n_decls: usize,
+    pub n_warnings: usize,
+    /// Warnings rendered against the source (empty when clean) — callers
+    /// decide whether to print or deny them.
+    pub warning_text: String,
+    /// Shard families created by the partition rewrite (0 when off).
+    pub families: usize,
+}
+
+/// The host registry every subcommand starts from: reference matrix ops
+/// at `size`, plus the paper's §2 NLP names bound to synthetic latencies
+/// so the README example runs as-is.
+pub fn default_registry(size: usize) -> FunctionRegistry {
+    let mut registry = FunctionRegistry::matrix_host(size);
+    bind_nlp_demo(&mut registry);
+    registry
+}
+
+/// Bind the §2 NLP demo entries for any names the registry lacks.
+pub fn bind_nlp_demo(registry: &mut FunctionRegistry) {
+    let demo = FunctionRegistry::nlp_demo(20_000, 50_000, 30_000);
+    for name in ["clean_files", "complex_evaluation", "semantic_analysis"] {
+        if registry.get(name).is_none() {
+            if let Some(e) = demo.get(name) {
+                registry.bind(name, e.clone());
+            }
+        }
+    }
+}
+
+/// Compile `src` through the full pipeline against `registry`.
+///
+/// Mutates `cfg`: the partition rewrite is applied here and then disabled
+/// (`cfg.partition.partitions = 0`) so an engine downstream does not
+/// redundantly re-shard, and the cache deny-set is extended with the
+/// program's IO names (defense in depth on top of the op-kind purity
+/// gate). When `cfg.verify_ir` is set (or in debug builds) the task IR is
+/// verified after lowering and again after the rewrite — the same gates
+/// `engine::run` applies, enforced here so callers that dispatch tasks
+/// directly (the serving plane) get them too.
+///
+/// Diagnostics are rendered against `src` into the returned error, ready
+/// to print.
+pub fn compile_source(
+    src: &str,
+    opts: &CompileOptions,
+    cfg: &mut RunConfig,
+    registry: &FunctionRegistry,
+) -> Result<Compiled> {
+    let program = parse_program(src).map_err(|e| anyhow::anyhow!("{}", e.render(src)))?;
+    let mut checked = check_program(&program, &opts.entry)
+        .map_err(|e| anyhow::anyhow!("{}", render_all(&e, src)))?;
+    let n_warnings = checked.warnings.len();
+    let warning_text = if n_warnings > 0 {
+        render_all(&checked.warnings, src)
+    } else {
+        String::new()
+    };
+    if opts.inline_depth > 0 {
+        checked.main_stmts = inline_stmts(
+            &program,
+            &checked.main_stmts,
+            &KEEP_PRIMITIVES,
+            opts.inline_depth,
+        )
+        .map_err(|e| anyhow::anyhow!("{}", e.render(src)))?;
+    }
+    let lowered = lower(&checked, registry).map_err(|e| anyhow::anyhow!("{}", e.render(src)))?;
+
+    let verify = cfg.verify_ir || cfg!(debug_assertions);
+    if verify {
+        verify_ok("lowered IR", &crate::analysis::verify_program(&lowered.program))?;
+    }
+
+    let mut families = 0;
+    let task_program = if cfg.partition.enabled() {
+        let pp = crate::partition::partition_program(&lowered.program, &cfg.partition)?;
+        families = pp.families.len();
+        if verify {
+            let vopts = crate::analysis::VerifyOpts {
+                combine_arity: Some(cfg.partition.combine_arity),
+            };
+            verify_ok(
+                "partitioned IR",
+                &crate::analysis::verify_program_with(&pp.program, &vopts),
+            )?;
+        }
+        // the engine-side rewrite is idempotent on an already-sharded
+        // program, but re-running it would be a redundant copy
+        cfg.partition.partitions = 0;
+        pp.program
+    } else {
+        lowered.program
+    };
+
+    // Never cache anything the signature analysis says is IO.
+    cfg.cache.deny_io_from(&checked.purity);
+
+    Ok(Compiled {
+        program: task_program,
+        n_decls: program.decls.len(),
+        n_warnings,
+        warning_text,
+        families,
+    })
+}
+
+fn verify_ok(stage: &str, violations: &[crate::analysis::Violation]) -> Result<()> {
+    if violations.is_empty() {
+        return Ok(());
+    }
+    let list = violations
+        .iter()
+        .map(|v| format!("  violation: {v}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    anyhow::bail!("{stage} failed verification:\n{list}")
+}
+
+/// Build the result cache per config (shared helper for `run`/`matrix`/
+/// the serving plane). The key namespace is pinned to the executor
+/// backend so host and PJRT results can never alias.
+pub fn build_cache(cfg: &RunConfig) -> Option<std::sync::Arc<crate::cache::ResultCache>> {
+    cfg.cache.enabled.then(|| {
+        let mut cc = cfg.cache.clone();
+        if cc.namespace.is_empty() {
+            cc.namespace = if cfg.use_artifacts { "pjrt" } else { "host" }.into();
+        }
+        crate::cache::ResultCache::new(cc)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::matrix_source;
+
+    #[test]
+    fn compiles_matrix_source() {
+        let src = matrix_source(3);
+        let mut cfg = RunConfig::default();
+        cfg.use_artifacts = false;
+        let reg = default_registry(16);
+        let c = compile_source(&src, &CompileOptions::default(), &mut cfg, &reg).unwrap();
+        // 3 rounds × (gen+gen+mul+sum) + adds + print
+        assert!(c.program.len() >= 12);
+        assert_eq!(c.families, 0);
+    }
+
+    #[test]
+    fn partition_applied_once_and_disabled() {
+        let src = matrix_source(2);
+        let mut cfg = RunConfig::default();
+        cfg.use_artifacts = false;
+        cfg.set("partitions", "2").unwrap();
+        cfg.set("shard-min-bytes", "0").unwrap();
+        cfg.set("shard-min-us", "0").unwrap();
+        let reg = default_registry(64);
+        let c = compile_source(&src, &CompileOptions::default(), &mut cfg, &reg).unwrap();
+        assert!(c.families > 0, "expected shard families at size 64");
+        assert!(
+            !cfg.partition.enabled(),
+            "engine-side rewrite must be disabled after compile"
+        );
+    }
+
+    #[test]
+    fn bad_source_renders_diagnostics() {
+        let mut cfg = RunConfig::default();
+        let reg = default_registry(16);
+        let err = compile_source("main = \n", &CompileOptions::default(), &mut cfg, &reg)
+            .unwrap_err();
+        assert!(!format!("{err:#}").is_empty());
+    }
+}

@@ -174,6 +174,13 @@ impl ScheduleTrace {
         self.events.len()
     }
 
+    /// Absolute timestamp of the first dispatch-to-execution, if any —
+    /// the serving plane's per-session "first task started" marker
+    /// (cache-hit-only sessions have no events and return None).
+    pub fn first_start_ns(&self) -> Option<u64> {
+        self.events.iter().map(|e| e.start_ns).min()
+    }
+
     /// Makespan: last end − first start.
     pub fn makespan_ns(&self) -> u64 {
         let start = self.events.iter().map(|e| e.start_ns).min().unwrap_or(0);

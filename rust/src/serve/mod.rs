@@ -1,0 +1,34 @@
+//! Multi-tenant serving plane: a long-lived admission/execution service
+//! over the cluster substrate.
+//!
+//! Where `parhask run` compiles and executes ONE program and exits, the
+//! serving plane keeps a worker pool warm and executes *many* concurrent
+//! submissions — each a **session** compiled through the same shared
+//! pipeline ([`crate::pipeline`]) — with:
+//!
+//! - an **admission queue**: at most `max_sessions` sessions are active,
+//!   the rest wait FIFO (`--max-sessions`);
+//! - **session-fair scheduling**: per-session ready queues drained
+//!   round-robin under a wall-clock quantum (`--quantum-ms`), so a huge
+//!   tenant cannot starve small ones;
+//! - a **shared cross-tenant result cache**: purity analysis makes task
+//!   results content-addressable and safe to share, so tenant B's
+//!   submission can be served from work tenant A already paid for —
+//!   including in-flight dedup of identical tasks;
+//! - per-session **metrics and traces**: admission wait, time to first
+//!   task, end-to-end latency (plane-wide p50/p95/p99 via
+//!   [`crate::metrics::Histogram`]), and a per-session
+//!   [`crate::scheduler::trace::ScheduleTrace`] in session-local task
+//!   ids that `validate`/`audit_trace` accept unchanged.
+//!
+//! Layers: [`session`] (one tenant's state machine), [`plane`] (the
+//! coordinator multiplexing sessions over the shared pool), [`service`]
+//! (the TCP front-end behind `parhask serve` / `parhask submit`).
+
+pub mod plane;
+pub mod service;
+pub mod session;
+
+pub use plane::{ServeConfig, ServePlane, ServeStats, SessionTicket};
+pub use service::{serve_tcp, submit_tcp, ServiceOptions};
+pub use session::{Provenance, SessionId, SessionMetrics, SessionOutcome, SessionState};

@@ -1,0 +1,1025 @@
+//! The serving plane: one shared worker pool and one shared result cache
+//! executing many concurrent sessions with quantum-fair scheduling.
+//!
+//! ## Architecture
+//!
+//! A single coordinator thread owns all state and multiplexes sessions
+//! over the pool (the same event-loop shape as the cluster [`Leader`],
+//! which runs exactly one program). Worker links are the existing cluster
+//! transport — in-proc channels or TCP — and workers are completely
+//! unchanged: the plane remaps session-local task ids into one global id
+//! space at the wire boundary, so a shared worker's resident output store
+//! (`ArgSpec::Cached`) stays correct across tenants.
+//!
+//! ## Fairness
+//!
+//! Ready tasks queue per session (FIFO). Sessions with ready work wait in
+//! a run queue; the head takes the *turn* and feeds the pool until its
+//! wall-clock quantum expires or its ready queue drains, then re-queues
+//! at the tail (katana-style `Idle → Pending → Running`, re-queue on
+//! quantum expiry). A huge program therefore gets the pool in
+//! quantum-sized slices interleaved with everyone else, and a small
+//! program's latency is bounded by (active sessions × quantum) per task
+//! wave rather than by the huge program's runtime.
+//!
+//! ## Cross-tenant memoization
+//!
+//! Purity makes results *shareable*: the shared [`ResultCache`] is
+//! consulted when a task becomes ready, identical in-flight tasks are
+//! deduplicated across sessions (the second tenant parks and is served
+//! on commit), and each hit is attributed to the session that first
+//! produced the value — the `cross_tenant_hits` metric.
+//!
+//! [`Leader`]: crate::cluster::Leader
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cache::{ResultCache, TaskKey};
+use crate::cluster::message::{ArgSpec, Message};
+use crate::cluster::transport::{inproc_pair, MsgReceiver, MsgSender};
+use crate::cluster::Worker;
+use crate::ir::task::{ArgRef, TaskId, Value};
+use crate::ir::TaskProgram;
+use crate::metrics::{Histogram, Table};
+use crate::scheduler::trace::TraceEvent;
+use crate::scheduler::WorkerId;
+use crate::tasks::Executor;
+use crate::util::now_ns;
+use crate::{log_debug, log_info, log_warn};
+
+use super::session::{Provenance, ReplyTx, Session, SessionId, SessionOutcome, SessionState};
+
+/// Plane configuration. Composes with [`crate::config::RunConfig`] via
+/// `RunConfig::serve_config`.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Workers in the shared pool (in-proc threads or TCP joiners).
+    pub workers: usize,
+    /// Scheduling quantum: how long one session may hold the turn.
+    pub quantum: Duration,
+    /// Max concurrently *active* sessions; excess submissions wait in the
+    /// admission queue.
+    pub max_sessions: usize,
+    /// In-flight tasks per worker (same meaning as the cluster's).
+    pub pipeline_depth: usize,
+    /// Ship `ArgSpec::Cached` references to workers that hold a value.
+    pub use_cached_args: bool,
+    /// Membership lease (0 = disabled): silent workers are expired and
+    /// their in-flight tasks re-queued, exactly like the cluster leader.
+    pub lease: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            quantum: Duration::from_millis(25),
+            max_sessions: 64,
+            pipeline_depth: 2,
+            use_cached_args: true,
+            lease: Duration::ZERO,
+        }
+    }
+}
+
+/// Plane-wide counters and latency histograms (per-request samples are
+/// also returned in each [`SessionOutcome`]).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub tasks_executed: u64,
+    pub cache_hits: u64,
+    pub cross_tenant_hits: u64,
+    pub quantum_expiries: u64,
+    pub peak_active: usize,
+    /// Submission → admission.
+    pub admit_wait: Histogram,
+    /// Admission → first task dispatch.
+    pub first_task: Histogram,
+    /// Submission → completion.
+    pub e2e: Histogram,
+}
+
+impl ServeStats {
+    /// Render through the standard metrics table (README "Serving"
+    /// documents the schema).
+    pub fn table(&mut self) -> Table {
+        let mut t = Table::new(
+            "serving plane",
+            &["metric", "count", "p50_ms", "p95_ms", "p99_ms", "max_ms"],
+        );
+        let scalar = |name: &str, v: String| {
+            let mut row = vec![name.to_string(), v];
+            row.extend((0..4).map(|_| "-".to_string()));
+            row
+        };
+        t.row(scalar("sessions_submitted", self.submitted.to_string()));
+        t.row(scalar("sessions_completed", self.completed.to_string()));
+        t.row(scalar("sessions_failed", self.failed.to_string()));
+        t.row(scalar("tasks_executed", self.tasks_executed.to_string()));
+        t.row(scalar("cache_hits", self.cache_hits.to_string()));
+        t.row(scalar("cross_tenant_hits", self.cross_tenant_hits.to_string()));
+        t.row(scalar("quantum_expiries", self.quantum_expiries.to_string()));
+        t.row(scalar("peak_active_sessions", self.peak_active.to_string()));
+        for (name, h) in [
+            ("admission_wait", &mut self.admit_wait),
+            ("admit_to_first_task", &mut self.first_task),
+            ("e2e_latency", &mut self.e2e),
+        ] {
+            let mut row = vec![name.to_string()];
+            row.extend(h.ms_row());
+            t.row(row);
+        }
+        t
+    }
+}
+
+/// A pending result: `wait` blocks until the session completes.
+pub struct SessionTicket {
+    rx: mpsc::Receiver<Result<SessionOutcome>>,
+}
+
+impl SessionTicket {
+    pub fn wait(self) -> Result<SessionOutcome> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("serving plane dropped the session"))?
+    }
+}
+
+enum PlaneEvent {
+    Submit {
+        program: TaskProgram,
+        reply: ReplyTx,
+    },
+    Msg(usize, Message),
+    Gone(usize),
+    Join {
+        tx: Box<dyn MsgSender>,
+        rx: Box<dyn MsgReceiver>,
+    },
+    Stats(mpsc::Sender<ServeStats>),
+    Shutdown,
+}
+
+/// Handle to a running plane. `submit` is callable from any thread;
+/// `shutdown` drains active sessions and returns the final stats.
+pub struct ServePlane {
+    tx: mpsc::Sender<PlaneEvent>,
+    coordinator: Option<JoinHandle<Result<ServeStats>>>,
+    worker_joins: Vec<JoinHandle<()>>,
+}
+
+/// Cloneable, thread-safe handle for submitting work and attaching
+/// workers — what connection-handler threads hold while the owning
+/// [`ServePlane`] stays with the service loop for shutdown.
+#[derive(Clone)]
+pub struct PlaneClient {
+    tx: mpsc::Sender<PlaneEvent>,
+}
+
+impl PlaneClient {
+    pub fn submit(&self, program: TaskProgram) -> Result<SessionTicket> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(PlaneEvent::Submit { program, reply })
+            .map_err(|_| anyhow!("serving plane is down"))?;
+        Ok(SessionTicket { rx })
+    }
+
+    pub fn add_worker(&self, tx: Box<dyn MsgSender>, rx: Box<dyn MsgReceiver>) -> Result<()> {
+        self.tx
+            .send(PlaneEvent::Join { tx, rx })
+            .map_err(|_| anyhow!("serving plane is down"))
+    }
+
+    pub fn stats(&self) -> Result<ServeStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(PlaneEvent::Stats(tx))
+            .map_err(|_| anyhow!("serving plane is down"))?;
+        rx.recv().context("serving plane dropped stats request")
+    }
+}
+
+impl ServePlane {
+    /// Start a plane over an in-proc pool of `cfg.workers` worker threads
+    /// sharing `executor` (the "cluster simulated on one box" mode — full
+    /// wire serialization, same codec cost as TCP).
+    pub fn start_inproc(
+        executor: Arc<dyn Executor>,
+        cfg: ServeConfig,
+        cache: Option<Arc<ResultCache>>,
+    ) -> Result<ServePlane> {
+        let mut links: Vec<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)> = Vec::new();
+        let mut joins = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let ((l_tx, l_rx), (w_tx, w_rx)) = inproc_pair();
+            let ex = executor.clone();
+            let lease = cfg.lease;
+            joins.push(std::thread::spawn(move || {
+                let mut w = Worker::new(WorkerId(i as u32), w_tx, w_rx, ex);
+                if !lease.is_zero() {
+                    w = w.with_heartbeat(lease / 4);
+                }
+                if let Err(e) = w.run() {
+                    log_warn!("serve", "worker {i} exited with error: {e:#}");
+                }
+            }));
+            links.push((Box::new(l_tx), Box::new(l_rx)));
+        }
+        let mut plane = Self::start_with_links(links, cfg, cache)?;
+        plane.worker_joins = joins;
+        Ok(plane)
+    }
+
+    /// Start a plane over pre-connected worker links (e.g. accepted TCP
+    /// workers). More workers may join later via [`ServePlane::add_worker`].
+    pub fn start_with_links(
+        links: Vec<(Box<dyn MsgSender>, Box<dyn MsgReceiver>)>,
+        cfg: ServeConfig,
+        cache: Option<Arc<ResultCache>>,
+    ) -> Result<ServePlane> {
+        let (tx, rx) = mpsc::channel();
+        let mut coord = Coordinator::new(cfg, cache, tx.clone(), rx);
+        for (s, r) in links {
+            coord.attach_worker(s, r);
+        }
+        let coordinator = std::thread::spawn(move || coord.run());
+        Ok(ServePlane {
+            tx,
+            coordinator: Some(coordinator),
+            worker_joins: Vec::new(),
+        })
+    }
+
+    /// A cloneable submit/attach handle for other threads.
+    pub fn client(&self) -> PlaneClient {
+        PlaneClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Submit a compiled program as a new session. Returns immediately
+    /// with a ticket; the session queues if the plane is at
+    /// `max_sessions`.
+    pub fn submit(&self, program: TaskProgram) -> Result<SessionTicket> {
+        self.client().submit(program)
+    }
+
+    /// Attach a new worker at runtime (elastic join, e.g. `parhask
+    /// worker` connecting over TCP).
+    pub fn add_worker(&self, tx: Box<dyn MsgSender>, rx: Box<dyn MsgReceiver>) -> Result<()> {
+        self.client().add_worker(tx, rx)
+    }
+
+    /// Live snapshot of the plane-wide stats.
+    pub fn stats(&self) -> Result<ServeStats> {
+        self.client().stats()
+    }
+
+    /// Drain all active and queued sessions, stop the workers, and return
+    /// the final stats.
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        let _ = self.tx.send(PlaneEvent::Shutdown);
+        let stats = match self.coordinator.take() {
+            Some(j) => j
+                .join()
+                .map_err(|_| anyhow!("serve coordinator panicked"))??,
+            None => ServeStats::default(),
+        };
+        for j in self.worker_joins.drain(..) {
+            let _ = j.join();
+        }
+        Ok(stats)
+    }
+}
+
+impl Drop for ServePlane {
+    fn drop(&mut self) {
+        // best-effort: wake the coordinator so threads can exit
+        let _ = self.tx.send(PlaneEvent::Shutdown);
+        if let Some(j) = self.coordinator.take() {
+            let _ = j.join();
+        }
+        for j in self.worker_joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Coordinator state: single-threaded owner of sessions, worker links,
+/// and the cross-session cache bookkeeping.
+struct Coordinator {
+    cfg: ServeConfig,
+    cache: Option<Arc<ResultCache>>,
+    events_tx: mpsc::Sender<PlaneEvent>,
+    events: mpsc::Receiver<PlaneEvent>,
+
+    senders: Vec<Box<dyn MsgSender>>,
+    alive: Vec<bool>,
+    /// In-flight task count per worker.
+    load: Vec<usize>,
+    /// Last message time per worker (lease renewal).
+    last_seen: Vec<u64>,
+    /// Per-worker last trace-event end, for monotone per-worker clamping
+    /// (keeps every session's trace overlap-free on shared workers).
+    last_end: Vec<u64>,
+
+    sessions: HashMap<SessionId, Session>,
+    /// Sessions waiting for an active slot, in arrival order.
+    admission: VecDeque<Session>,
+    /// Pending sessions (state == Pending), FIFO.
+    run_queue: VecDeque<SessionId>,
+    /// The session holding the turn and when its quantum started.
+    turn: Option<(SessionId, u64)>,
+
+    next_sid: u64,
+    next_global: u32,
+    /// Global wire id → owning (session, local id).
+    task_owner: HashMap<u32, (SessionId, TaskId)>,
+    /// Global wire id → dispatch timestamp.
+    assigned_at: HashMap<u32, u64>,
+    /// Global wire id → worker it is currently in flight on.
+    dispatched_to: HashMap<u32, usize>,
+    /// Global wire id → worker holding its outputs (for `Cached` args).
+    location: HashMap<u32, usize>,
+    /// Content key → cacheable global id whose result is being computed;
+    /// identical ready tasks (any session) park in `waiting`.
+    inflight_keys: HashMap<TaskKey, (SessionId, TaskId)>,
+    waiting: HashMap<TaskKey, Vec<(SessionId, TaskId)>>,
+    /// Pre-computed content keys of dispatched cacheable tasks.
+    task_keys: HashMap<u32, TaskKey>,
+    /// Content key → session that first inserted it (hit attribution).
+    key_origin: HashMap<TaskKey, SessionId>,
+
+    stats: ServeStats,
+    draining: bool,
+}
+
+impl Coordinator {
+    fn new(
+        cfg: ServeConfig,
+        cache: Option<Arc<ResultCache>>,
+        events_tx: mpsc::Sender<PlaneEvent>,
+        events: mpsc::Receiver<PlaneEvent>,
+    ) -> Coordinator {
+        Coordinator {
+            cfg,
+            cache,
+            events_tx,
+            events,
+            senders: Vec::new(),
+            alive: Vec::new(),
+            load: Vec::new(),
+            last_seen: Vec::new(),
+            last_end: Vec::new(),
+            sessions: HashMap::new(),
+            admission: VecDeque::new(),
+            run_queue: VecDeque::new(),
+            turn: None,
+            next_sid: 0,
+            next_global: 0,
+            task_owner: HashMap::new(),
+            assigned_at: HashMap::new(),
+            dispatched_to: HashMap::new(),
+            location: HashMap::new(),
+            inflight_keys: HashMap::new(),
+            waiting: HashMap::new(),
+            task_keys: HashMap::new(),
+            key_origin: HashMap::new(),
+            stats: ServeStats::default(),
+            draining: false,
+        }
+    }
+
+    fn attach_worker(&mut self, tx: Box<dyn MsgSender>, mut rx: Box<dyn MsgReceiver>) {
+        let w = self.senders.len();
+        self.senders.push(tx);
+        self.alive.push(true);
+        self.load.push(0);
+        self.last_seen.push(now_ns());
+        self.last_end.push(0);
+        let events = self.events_tx.clone();
+        std::thread::spawn(move || loop {
+            match rx.recv() {
+                Ok(m) => {
+                    if events.send(PlaneEvent::Msg(w, m)).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    let _ = events.send(PlaneEvent::Gone(w));
+                    break;
+                }
+            }
+        });
+        log_info!("serve", "worker {w} joined the pool");
+    }
+
+    fn run(mut self) -> Result<ServeStats> {
+        let tick = if self.cfg.lease.is_zero() {
+            Duration::from_millis(100)
+        } else {
+            (self.cfg.lease / 4).max(Duration::from_millis(1))
+        };
+        loop {
+            match self.events.recv_timeout(tick) {
+                Ok(ev) => {
+                    self.handle(ev);
+                    // drain whatever else is queued before pumping once
+                    while let Ok(ev) = self.events.try_recv() {
+                        self.handle(ev);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            self.expire_leases();
+            self.backfill();
+            self.pump();
+            if self.draining && self.sessions.is_empty() && self.admission.is_empty() {
+                break;
+            }
+        }
+        // graceful worker shutdown
+        for (w, s) in self.senders.iter_mut().enumerate() {
+            if self.alive[w] {
+                let _ = s.send(&Message::Shutdown);
+            }
+        }
+        let deadline = now_ns() + 200_000_000;
+        while now_ns() < deadline {
+            match self.events.recv_timeout(Duration::from_millis(20)) {
+                Ok(_) => {} // Bye / stragglers
+                Err(_) => break,
+            }
+        }
+        Ok(self.stats)
+    }
+
+    fn handle(&mut self, ev: PlaneEvent) {
+        match ev {
+            PlaneEvent::Submit { program, reply } => self.on_submit(program, reply),
+            PlaneEvent::Msg(w, m) => self.on_msg(w, m),
+            PlaneEvent::Gone(w) => self.on_worker_down(w, "disconnected"),
+            PlaneEvent::Join { tx, rx } => self.attach_worker(tx, rx),
+            PlaneEvent::Stats(reply) => {
+                let _ = reply.send(self.stats.clone());
+            }
+            PlaneEvent::Shutdown => {
+                self.draining = true;
+            }
+        }
+    }
+
+    // -- admission ----------------------------------------------------------
+
+    fn on_submit(&mut self, program: TaskProgram, reply: ReplyTx) {
+        let now = now_ns();
+        self.stats.submitted += 1;
+        let sid = SessionId(self.next_sid);
+        self.next_sid += 1;
+        let sess = Session::new(sid, program, reply, now);
+        if self.draining {
+            self.stats.failed += 1;
+            sess.fail(anyhow!("serving plane is shutting down"));
+            return;
+        }
+        log_debug!("serve", "{sid} submitted ({} tasks)", sess.program.len());
+        if self.sessions.len() < self.cfg.max_sessions {
+            self.admit(sess);
+        } else {
+            self.admission.push_back(sess);
+        }
+    }
+
+    /// Admit queued sessions while active slots are free.
+    fn backfill(&mut self) {
+        while self.sessions.len() < self.cfg.max_sessions {
+            let Some(sess) = self.admission.pop_front() else {
+                return;
+            };
+            self.admit(sess);
+        }
+    }
+
+    fn admit(&mut self, mut sess: Session) {
+        let now = now_ns();
+        if !self.alive.iter().any(|a| *a) {
+            self.stats.failed += 1;
+            sess.fail(anyhow!("no live workers in the pool"));
+            return;
+        }
+        let sid = sess.id;
+        sess.t_admit_ns = now;
+        sess.state = SessionState::Idle;
+        sess.base = self.next_global;
+        self.next_global = self
+            .next_global
+            .wrapping_add(sess.program.len().max(1) as u32);
+        self.stats
+            .admit_wait
+            .record_ns(now.saturating_sub(sess.t_submit_ns));
+        let roots = sess.program.roots();
+        self.sessions.insert(sid, sess);
+        self.stats.peak_active = self.stats.peak_active.max(self.sessions.len());
+        let mut hits = Vec::new();
+        for t in roots {
+            self.resolve_ready(sid, t, &mut hits);
+        }
+        self.commit_cascade(hits);
+        self.after_progress(sid);
+    }
+
+    // -- worker events ------------------------------------------------------
+
+    fn on_msg(&mut self, w: usize, msg: Message) {
+        if w < self.last_seen.len() {
+            self.last_seen[w] = now_ns();
+        }
+        if w >= self.alive.len() || !self.alive[w] {
+            // late traffic from an expired worker: drop it — accepting a
+            // result here would put a post-expiry event in some session's
+            // trace and trip the UseAfterLeaseExpiry audit
+            return;
+        }
+        match msg {
+            Message::TaskDone {
+                task,
+                outputs,
+                compute_ns,
+            } => self.on_task_done(w, task.0, outputs, compute_ns),
+            Message::TaskFailed { task, error } => {
+                self.load[w] = self.load[w].saturating_sub(1);
+                self.assigned_at.remove(&task.0);
+                self.dispatched_to.remove(&task.0);
+                if let Some((sid, local)) = self.task_owner.remove(&task.0) {
+                    self.fail_session(sid, anyhow!("task {local} failed on worker {w}: {error}"));
+                }
+            }
+            Message::Hello { .. } | Message::Heartbeat { .. } | Message::Pong => {}
+            Message::Bye { .. } => {
+                self.on_worker_down(w, "said bye");
+            }
+            other => {
+                log_warn!("serve", "unexpected {} from worker {w}", other.kind());
+            }
+        }
+    }
+
+    fn on_task_done(&mut self, w: usize, g: u32, outputs: Vec<Value>, compute_ns: u64) {
+        self.load[w] = self.load[w].saturating_sub(1);
+        let assign_t = self.assigned_at.remove(&g).unwrap_or(0);
+        self.dispatched_to.remove(&g);
+        let Some((sid, local)) = self.task_owner.remove(&g) else {
+            return; // session failed or finished in the meantime
+        };
+        let Some(sess) = self.sessions.get_mut(&sid) else {
+            return;
+        };
+        if sess.has_value(local) {
+            return; // duplicate after a re-queue
+        }
+        // per-session trace event in local ids, clamped monotone per
+        // worker across ALL sessions so no two events on one worker
+        // overlap in any trace
+        let end = now_ns();
+        let start = end
+            .saturating_sub(compute_ns)
+            .max(assign_t)
+            .max(self.last_end[w]);
+        let end = end.max(start);
+        self.last_end[w] = end;
+        sess.inflight = sess.inflight.saturating_sub(1);
+        sess.trace.push(TraceEvent {
+            task: local,
+            worker: WorkerId(w as u32),
+            start_ns: start,
+            end_ns: end,
+        });
+        self.location.insert(g, w);
+        self.stats.tasks_executed += 1;
+
+        // shared cache: insert, then serve every parked twin (any session)
+        let mut cascade: Vec<(SessionId, TaskId, Vec<Value>, Provenance)> = Vec::new();
+        if let Some(cache) = self.cache.clone() {
+            if let Some(key) = self.task_keys.remove(&g) {
+                self.inflight_keys.remove(&key);
+                cache.insert_by_key(key, &outputs);
+                self.key_origin.entry(key).or_insert(sid);
+                let origin = Some(*self.key_origin.get(&key).unwrap_or(&sid));
+                for (wsid, wlocal) in self.waiting.remove(&key).unwrap_or_default() {
+                    cache.note_dedup_hit();
+                    cascade.push((
+                        wsid,
+                        wlocal,
+                        outputs.clone(),
+                        Provenance::CacheHit { origin },
+                    ));
+                }
+            }
+        }
+        cascade.push((sid, local, outputs, Provenance::Executed));
+        self.commit_cascade(cascade);
+        self.after_progress(sid);
+    }
+
+    /// Commit values (and everything they unlock) without recursion.
+    fn commit_cascade(&mut self, mut work: Vec<(SessionId, TaskId, Vec<Value>, Provenance)>) {
+        let mut touched = Vec::new();
+        while let Some((sid, t, vals, how)) = work.pop() {
+            let Some(sess) = self.sessions.get_mut(&sid) else {
+                continue;
+            };
+            if sess.has_value(t) {
+                continue;
+            }
+            if let Provenance::CacheHit { .. } = how {
+                self.stats.cache_hits += 1;
+            }
+            let newly = sess.commit(t, vals, how);
+            if let Provenance::CacheHit { origin } = how {
+                if origin != Some(sid) {
+                    self.stats.cross_tenant_hits += 1;
+                }
+            }
+            touched.push(sid);
+            for c in newly {
+                self.resolve_ready(sid, c, &mut work);
+            }
+        }
+        for sid in touched {
+            self.after_progress(sid);
+        }
+    }
+
+    /// A task's dependencies are all committed: consult the shared cache,
+    /// park on an identical in-flight task, or queue it for dispatch.
+    fn resolve_ready(
+        &mut self,
+        sid: SessionId,
+        t: TaskId,
+        hits: &mut Vec<(SessionId, TaskId, Vec<Value>, Provenance)>,
+    ) {
+        let Some(sess) = self.sessions.get_mut(&sid) else {
+            return;
+        };
+        if let Some(cache) = self.cache.clone() {
+            let spec = sess.program.task(t);
+            if cache.cacheable(spec) {
+                let args = match sess.arg_values(t) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        self.fail_session(sid, e);
+                        return;
+                    }
+                };
+                let key = cache.key_for(spec, &args);
+                if let Some(vals) = cache.lookup_key(&key) {
+                    let origin = self.key_origin.get(&key).copied();
+                    hits.push((sid, t, vals, Provenance::CacheHit { origin }));
+                    return;
+                }
+                sess.trace.cache_misses += 1;
+                if self.inflight_keys.contains_key(&key) {
+                    // identical task already being computed (possibly for
+                    // another tenant): park and get served on its commit
+                    self.waiting.entry(key).or_default().push((sid, t));
+                    return;
+                }
+                self.inflight_keys.insert(key, (sid, t));
+                self.task_keys.insert(sess.global(t), key);
+            }
+        }
+        let sess = self.sessions.get_mut(&sid).expect("session vanished");
+        sess.push_ready(t);
+    }
+
+    /// Post-progress bookkeeping for one session: completion, or run-queue
+    /// membership (`Idle → Pending` is the only enqueue edge).
+    fn after_progress(&mut self, sid: SessionId) {
+        let Some(sess) = self.sessions.get_mut(&sid) else {
+            return;
+        };
+        if sess.is_complete() {
+            let sess = self.sessions.remove(&sid).unwrap();
+            log_debug!(
+                "serve",
+                "{sid} complete: {} executed, {} cache hits",
+                sess.metrics.executed,
+                sess.metrics.cache_hits
+            );
+            self.release_session_ids(sess.base, sess.program.len());
+            self.stats.completed += 1;
+            if let Some(f) = sess.metrics.first_task_ns {
+                self.stats.first_task.record_ns(f);
+            }
+            self.stats
+                .e2e
+                .record_ns(now_ns().saturating_sub(sess.t_submit_ns));
+            sess.finish(now_ns());
+            return;
+        }
+        if sess.state == SessionState::Idle && sess.has_ready() {
+            sess.state = SessionState::Pending;
+            self.run_queue.push_back(sid);
+        }
+    }
+
+    // -- dispatch -----------------------------------------------------------
+
+    /// Feed ready tasks of the turn-holding session into free pool
+    /// capacity, rotating the turn on quantum expiry.
+    fn pump(&mut self) {
+        loop {
+            let Some(w) = self.pick_worker() else { return };
+            let Some(sid) = self.turn_session() else { return };
+            let local = {
+                let sess = self.sessions.get_mut(&sid).expect("turn session exists");
+                sess.pop_ready().expect("turn session has ready work")
+            };
+            self.dispatch(sid, local, w);
+        }
+    }
+
+    /// Least-loaded alive worker with spare pipeline capacity.
+    fn pick_worker(&self) -> Option<usize> {
+        (0..self.senders.len())
+            .filter(|&w| self.alive[w] && self.load[w] < self.cfg.pipeline_depth)
+            .min_by_key(|&w| self.load[w])
+    }
+
+    /// The session currently holding the turn, rotating per the katana
+    /// rules: re-queue at the tail on quantum expiry with work left, drop
+    /// to Idle when drained.
+    fn turn_session(&mut self) -> Option<SessionId> {
+        let now = now_ns();
+        let quantum_ns = self.cfg.quantum.as_nanos() as u64;
+        if let Some((sid, started)) = self.turn {
+            let has_ready = self
+                .sessions
+                .get(&sid)
+                .is_some_and(super::session::Session::has_ready);
+            if has_ready && now.saturating_sub(started) < quantum_ns {
+                return Some(sid);
+            }
+            if let Some(sess) = self.sessions.get_mut(&sid) {
+                if sess.has_ready() {
+                    // quantum expired with work left: back of the line
+                    sess.state = SessionState::Pending;
+                    sess.metrics.quantum_expiries += 1;
+                    self.stats.quantum_expiries += 1;
+                    self.run_queue.push_back(sid);
+                } else {
+                    sess.state = SessionState::Idle;
+                }
+            }
+            self.turn = None;
+        }
+        while let Some(sid) = self.run_queue.pop_front() {
+            let Some(sess) = self.sessions.get_mut(&sid) else {
+                continue; // finished or failed while queued
+            };
+            if sess.has_ready() {
+                sess.state = SessionState::Running;
+                self.turn = Some((sid, now));
+                return Some(sid);
+            }
+            sess.state = SessionState::Idle;
+        }
+        None
+    }
+
+    fn dispatch(&mut self, sid: SessionId, local: TaskId, w: usize) {
+        let (g, op, built) = {
+            let sess = self.sessions.get(&sid).expect("dispatch session exists");
+            let g = sess.global(local);
+            let op = sess.program.task(local).op.clone();
+            let built = build_args(
+                sess,
+                local,
+                w,
+                &self.location,
+                self.cfg.use_cached_args,
+            );
+            (g, op, built)
+        };
+        let (args, shipped, saved) = match built {
+            Ok(b) => b,
+            Err(e) => {
+                self.fail_session(sid, e);
+                return;
+            }
+        };
+        match self.senders[w].send(&Message::Assign {
+            task: TaskId(g),
+            op,
+            args,
+        }) {
+            Ok(()) => {
+                let now = now_ns();
+                self.load[w] += 1;
+                self.task_owner.insert(g, (sid, local));
+                self.assigned_at.insert(g, now);
+                self.dispatched_to.insert(g, w);
+                let sess = self.sessions.get_mut(&sid).expect("session exists");
+                sess.inflight += 1;
+                sess.note_first_dispatch(now);
+                sess.trace.arg_bytes_shipped += shipped;
+                sess.trace.arg_bytes_saved += saved;
+                log_debug!("serve", "{sid}:{local} -> worker {w} (wire id {g})");
+            }
+            Err(e) => {
+                log_info!("serve", "send to worker {w} failed ({e:#})");
+                if let Some(sess) = self.sessions.get_mut(&sid) {
+                    sess.push_ready_front(local);
+                }
+                self.on_worker_down(w, "send failed");
+            }
+        }
+    }
+
+    // -- failure handling ---------------------------------------------------
+
+    /// A worker is gone (disconnect, Bye, lease expiry): re-queue its
+    /// in-flight tasks at the front of their sessions' ready queues and
+    /// forget its value locations (arguments re-ship inline).
+    fn on_worker_down(&mut self, w: usize, why: &str) {
+        if w >= self.alive.len() || !self.alive[w] {
+            return;
+        }
+        log_info!("serve", "worker {w} down ({why})");
+        self.alive[w] = false;
+        self.load[w] = 0;
+        self.location.retain(|_, loc| *loc != w);
+        let lost: Vec<u32> = self
+            .dispatched_to
+            .iter()
+            .filter(|(_, loc)| **loc == w)
+            .map(|(g, _)| *g)
+            .collect();
+        let mut touched = Vec::new();
+        for g in lost {
+            self.dispatched_to.remove(&g);
+            self.assigned_at.remove(&g);
+            let Some((sid, t)) = self.task_owner.remove(&g) else {
+                continue;
+            };
+            if let Some(sess) = self.sessions.get_mut(&sid) {
+                sess.inflight = sess.inflight.saturating_sub(1);
+                sess.trace.record_lease(
+                    WorkerId(w as u32),
+                    crate::scheduler::trace::LeaseKind::Expired,
+                    now_ns(),
+                    vec![t],
+                );
+                sess.push_ready_front(t);
+                touched.push(sid);
+            }
+        }
+        for sid in touched {
+            self.after_progress(sid);
+        }
+        if !self.alive.iter().any(|a| *a) {
+            let sids: Vec<SessionId> = self.sessions.keys().copied().collect();
+            for sid in sids {
+                self.fail_session(sid, anyhow!("all workers lost"));
+            }
+            while let Some(sess) = self.admission.pop_front() {
+                self.stats.failed += 1;
+                sess.fail(anyhow!("all workers lost"));
+            }
+        }
+    }
+
+    fn expire_leases(&mut self) {
+        if self.cfg.lease.is_zero() {
+            return;
+        }
+        let lease_ns = self.cfg.lease.as_nanos() as u64;
+        let now = now_ns();
+        let expired: Vec<usize> = (0..self.alive.len())
+            .filter(|&w| self.alive[w] && now.saturating_sub(self.last_seen[w]) > lease_ns)
+            .collect();
+        for w in expired {
+            self.on_worker_down(w, "lease expired");
+        }
+    }
+
+    /// Fail a session, releasing everything it holds: owned in-flight
+    /// keys pass to the first parked waiter (which becomes the executor),
+    /// parked entries and wire-id bookkeeping are dropped.
+    fn fail_session(&mut self, sid: SessionId, err: anyhow::Error) {
+        let Some(sess) = self.sessions.remove(&sid) else {
+            return;
+        };
+        self.stats.failed += 1;
+        self.task_owner.retain(|_, (s, _)| *s != sid);
+        self.assigned_at
+            .retain(|g, _| self.task_owner.contains_key(g));
+        self.dispatched_to
+            .retain(|g, _| self.task_owner.contains_key(g) || self.location.contains_key(g));
+        for list in self.waiting.values_mut() {
+            list.retain(|(s, _)| *s != sid);
+        }
+        // promote a waiter for every key this session owned
+        let owned: Vec<TaskKey> = self
+            .inflight_keys
+            .iter()
+            .filter(|(_, (s, _))| *s == sid)
+            .map(|(k, _)| *k)
+            .collect();
+        let mut promoted = Vec::new();
+        for key in owned {
+            self.inflight_keys.remove(&key);
+            self.task_keys.retain(|_, k| *k != key);
+            let waiters = self.waiting.remove(&key).unwrap_or_default();
+            let mut it = waiters.into_iter();
+            if let Some((wsid, wt)) = it.next() {
+                if let Some(ws) = self.sessions.get_mut(&wsid) {
+                    self.inflight_keys.insert(key, (wsid, wt));
+                    self.task_keys.insert(ws.global(wt), key);
+                    ws.push_ready(wt);
+                    promoted.push(wsid);
+                }
+                let rest: Vec<_> = it.collect();
+                if !rest.is_empty() {
+                    self.waiting.insert(key, rest);
+                }
+            }
+        }
+        for wsid in promoted {
+            self.after_progress(wsid);
+        }
+        self.release_session_ids(sess.base, sess.program.len());
+        sess.fail(err);
+    }
+
+    /// Forget the plane-global bookkeeping for a finished session's
+    /// wire-id range, so a long-lived plane's tables don't grow with
+    /// every session ever served. (`key_origin` is deliberately kept —
+    /// it attributes future cache hits to the tenant that computed the
+    /// value, and its size tracks the cache's key population.)
+    fn release_session_ids(&mut self, base: u32, len: usize) {
+        for off in 0..len as u32 {
+            let g = base.wrapping_add(off);
+            self.location.remove(&g);
+            self.task_keys.remove(&g);
+        }
+    }
+}
+
+/// Build wire args for `local` of `sess` targeted at worker `w`: a value
+/// the worker already holds (per the plane's location table, in global
+/// ids) goes as a `Cached` reference, everything else ships inline.
+/// Returns (args, shipped bytes, saved bytes).
+fn build_args(
+    sess: &Session,
+    local: TaskId,
+    w: usize,
+    location: &HashMap<u32, usize>,
+    use_cached_args: bool,
+) -> Result<(Vec<ArgSpec>, u64, u64)> {
+    let mut shipped = 0u64;
+    let mut saved = 0u64;
+    let values = sess.values();
+    let args = sess
+        .program
+        .task(local)
+        .args
+        .iter()
+        .map(|a| match a {
+            ArgRef::Const(v) => {
+                shipped += v.size_bytes() as u64;
+                Ok(ArgSpec::Inline(v.clone()))
+            }
+            ArgRef::Output { task: d, index } => {
+                let outs = values[d.index()]
+                    .as_ref()
+                    .with_context(|| format!("{local} needs unfinished {d}"))?;
+                let bytes = outs[*index].size_bytes() as u64;
+                let gd = sess.global(*d);
+                if use_cached_args && location.get(&gd) == Some(&w) {
+                    saved += bytes;
+                    Ok(ArgSpec::Cached {
+                        task: TaskId(gd),
+                        index: *index,
+                    })
+                } else {
+                    shipped += bytes;
+                    Ok(ArgSpec::Inline(outs[*index].clone()))
+                }
+            }
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((args, shipped, saved))
+}

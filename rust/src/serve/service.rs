@@ -1,0 +1,291 @@
+//! TCP front-end for the serving plane: `parhask serve` hosts it,
+//! `parhask submit` is the client.
+//!
+//! One listener, one protocol: the first message on a fresh connection
+//! decides what the peer is.
+//!
+//! - [`Message::Hello`] — a `parhask worker` process joining the shared
+//!   pool; the connection is handed to the plane as a worker link.
+//! - [`Message::Submit`] — a client submitting HaskLite source; the
+//!   connection becomes a session: compile through the shared pipeline,
+//!   run on the plane, answer with [`Message::SubmitReply`] carrying the
+//!   outputs and a JSON metrics report.
+//!
+//! Every submission compiles against one shared registry and executes on
+//! one shared pool with one shared cross-tenant cache — the whole point
+//! of the plane.
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::message::Message;
+use crate::cluster::transport::{tcp_split, MsgReceiver, MsgSender};
+use crate::config::RunConfig;
+use crate::ir::task::Value;
+use crate::pipeline::{self, CompileOptions};
+use crate::tasks::{Executor, FunctionRegistry};
+use crate::util::json::Json;
+use crate::util::now_ns;
+use crate::{log_info, log_warn};
+
+use super::plane::{PlaneClient, ServePlane, ServeStats};
+use super::session::{SessionMetrics, SessionOutcome};
+
+/// Front-end knobs that are CLI topology, not per-run policy (those live
+/// in [`RunConfig`]).
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    /// In-proc worker threads to start (TCP workers may join on top).
+    pub workers: usize,
+    /// Stop after this many answered submissions (0 = serve forever).
+    pub max_requests: usize,
+    /// Entry point used when a submission does not name one.
+    pub entry: String,
+    /// Matrix size the shared registry is built at.
+    pub size: usize,
+    /// Helper-inlining depth for submitted programs.
+    pub inline_depth: usize,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions {
+            workers: 4,
+            max_requests: 0,
+            entry: "main".into(),
+            size: 256,
+            inline_depth: 8,
+        }
+    }
+}
+
+/// Host the serving plane on `bind` until `max_requests` submissions are
+/// answered (or forever when 0). Returns the final plane stats.
+pub fn serve_tcp(
+    bind: &str,
+    executor: Arc<dyn Executor>,
+    cfg: &RunConfig,
+    opts: &ServiceOptions,
+) -> Result<ServeStats> {
+    let registry = Arc::new(pipeline::default_registry(opts.size));
+    let cache = pipeline::build_cache(cfg);
+    let plane = ServePlane::start_inproc(executor, cfg.serve_config(opts.workers), cache)?;
+    let client = plane.client();
+    let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+    listener.set_nonblocking(true)?;
+    log_info!(
+        "serve",
+        "listening on {} ({} in-proc workers, quantum {}ms, max {} sessions)",
+        listener.local_addr()?,
+        opts.workers,
+        cfg.quantum_ms,
+        cfg.max_sessions
+    );
+    let answered = Arc::new(AtomicUsize::new(0));
+    let mut handlers = Vec::new();
+    loop {
+        if opts.max_requests > 0 && answered.load(Ordering::SeqCst) >= opts.max_requests {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let client = client.clone();
+                let registry = registry.clone();
+                let base_cfg = cfg.clone();
+                let copts = CompileOptions {
+                    entry: opts.entry.clone(),
+                    inline_depth: opts.inline_depth,
+                };
+                let answered = answered.clone();
+                handlers.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, client, &registry, base_cfg, copts, &answered)
+                    {
+                        log_warn!("serve", "connection {peer} failed: {e:#}");
+                    }
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting connection"),
+        }
+    }
+    log_info!(
+        "serve",
+        "request budget reached ({}); draining",
+        answered.load(Ordering::SeqCst)
+    );
+    let stats = plane.shutdown()?;
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(stats)
+}
+
+/// Dispatch one fresh connection on its first message.
+fn handle_conn(
+    stream: TcpStream,
+    client: PlaneClient,
+    registry: &FunctionRegistry,
+    mut cfg: RunConfig,
+    copts: CompileOptions,
+    answered: &AtomicUsize,
+) -> Result<()> {
+    let (mut tx, mut rx) = tcp_split(stream)?;
+    match rx.recv().context("reading first message")? {
+        Message::Hello { worker } => {
+            // a worker joining the pool: the Hello is consumed here, which
+            // is fine — the plane treats Hello as lease renewal only
+            log_info!("serve", "TCP worker {} joining pool", worker.0);
+            client.add_worker(Box::new(tx), Box::new(rx))
+        }
+        Message::Submit { source, entry } => {
+            let mut copts = copts;
+            if !entry.is_empty() {
+                copts.entry = entry;
+            }
+            let reply = match compile_and_run(&source, &copts, &mut cfg, registry, &client) {
+                Ok(outcome) => Message::SubmitReply {
+                    ok: true,
+                    error: String::new(),
+                    outputs: outcome.outputs,
+                    report: metrics_json(&outcome).to_string(),
+                },
+                Err(e) => Message::SubmitReply {
+                    ok: false,
+                    error: format!("{e:#}"),
+                    outputs: Vec::new(),
+                    report: String::new(),
+                },
+            };
+            answered.fetch_add(1, Ordering::SeqCst);
+            tx.send(&reply).context("sending reply")
+        }
+        other => anyhow::bail!("unexpected first message: {}", other.kind()),
+    }
+}
+
+fn compile_and_run(
+    source: &str,
+    copts: &CompileOptions,
+    cfg: &mut RunConfig,
+    registry: &FunctionRegistry,
+    client: &PlaneClient,
+) -> Result<SessionOutcome> {
+    let compiled = pipeline::compile_source(source, copts, cfg, registry)?;
+    client.submit(compiled.program)?.wait()
+}
+
+/// The per-session metrics report shipped back in [`Message::SubmitReply`]
+/// (schema documented in README "Serving").
+fn metrics_json(outcome: &SessionOutcome) -> Json {
+    let m: &SessionMetrics = &outcome.metrics;
+    Json::obj(vec![
+        ("session", Json::num(outcome.id.0 as f64)),
+        ("tasks", Json::num(m.tasks as f64)),
+        ("executed", Json::num(m.executed as f64)),
+        ("cache_hits", Json::num(m.cache_hits as f64)),
+        ("cross_tenant_hits", Json::num(m.cross_tenant_hits as f64)),
+        ("quantum_expiries", Json::num(m.quantum_expiries as f64)),
+        ("queue_wait_ns", Json::num(m.queue_wait_ns as f64)),
+        (
+            "first_task_ns",
+            match m.first_task_ns {
+                Some(v) => Json::num(v as f64),
+                None => Json::Null,
+            },
+        ),
+        ("e2e_ns", Json::num(m.e2e_ns as f64)),
+    ])
+}
+
+/// One answered submission from [`submit_tcp`].
+pub struct SubmitResult {
+    pub name: String,
+    pub ok: bool,
+    pub error: String,
+    pub outputs: Vec<Value>,
+    /// JSON metrics report from the service (empty on failure).
+    pub report: String,
+    /// Client-observed wall time (connect → reply).
+    pub e2e_ns: u64,
+}
+
+/// Submit `jobs` (name, source) to a serving plane at `addr`, all
+/// concurrently — one connection per job. This is the storm client the
+/// CI smoke test and `serve_storm` bench drive.
+pub fn submit_tcp<A: ToSocketAddrs + Clone + Send + Sync + 'static>(
+    addr: A,
+    jobs: Vec<(String, String)>,
+    entry: &str,
+) -> Result<Vec<SubmitResult>> {
+    let entry = entry.to_string();
+    let handles: Vec<_> = jobs
+        .into_iter()
+        .map(|(name, source)| {
+            let addr = addr.clone();
+            let entry = entry.clone();
+            std::thread::spawn(move || -> SubmitResult {
+                let t0 = now_ns();
+                match submit_one(addr, &source, &entry) {
+                    Ok((ok, error, outputs, report)) => SubmitResult {
+                        name,
+                        ok,
+                        error,
+                        outputs,
+                        report,
+                        e2e_ns: now_ns().saturating_sub(t0),
+                    },
+                    Err(e) => SubmitResult {
+                        name,
+                        ok: false,
+                        error: format!("{e:#}"),
+                        outputs: Vec::new(),
+                        report: String::new(),
+                        e2e_ns: now_ns().saturating_sub(t0),
+                    },
+                }
+            })
+        })
+        .collect();
+    Ok(handles
+        .into_iter()
+        .map(|h| {
+            h.join().unwrap_or_else(|_| SubmitResult {
+                name: "?".into(),
+                ok: false,
+                error: "client thread panicked".into(),
+                outputs: Vec::new(),
+                report: String::new(),
+                e2e_ns: 0,
+            })
+        })
+        .collect())
+}
+
+fn submit_one<A: ToSocketAddrs>(
+    addr: A,
+    source: &str,
+    entry: &str,
+) -> Result<(bool, String, Vec<Value>, String)> {
+    let stream = TcpStream::connect(addr).context("connecting to serving plane")?;
+    let (mut tx, mut rx) = tcp_split(stream)?;
+    tx.send(&Message::Submit {
+        source: source.to_string(),
+        entry: entry.to_string(),
+    })
+    .context("sending submission")?;
+    match rx.recv().context("awaiting reply")? {
+        Message::SubmitReply {
+            ok,
+            error,
+            outputs,
+            report,
+        } => Ok((ok, error, outputs, report)),
+        other => anyhow::bail!("unexpected reply: {}", other.kind()),
+    }
+}

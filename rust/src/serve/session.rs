@@ -1,0 +1,270 @@
+//! One tenant session: a compiled program moving through the plane.
+//!
+//! A session owns its program, its per-task readiness bookkeeping, its
+//! values, and — critically — its *own* [`ScheduleTrace`] in session-local
+//! task ids, so `ScheduleTrace::validate` and `analysis::audit_trace`
+//! apply per session exactly as they do to a solo cluster run. The plane
+//! translates local ↔ global task ids only at the wire boundary.
+//!
+//! The state machine follows the katana execution-sharding shape:
+//!
+//! ```text
+//! Queued ──admit──▶ Idle ──gains ready work──▶ Pending (in run queue)
+//!    Pending ──takes the turn──▶ Running ──quantum expiry──▶ Pending
+//!    Running ──ready queue drained──▶ Idle      ──done──▶ Done
+//! ```
+//!
+//! Only an `Idle` session is ever enqueued, so a session appears in the
+//! run queue at most once.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+use anyhow::{Context, Result};
+
+use crate::ir::task::{ArgRef, TaskId, Value};
+use crate::ir::TaskProgram;
+use crate::scheduler::trace::ScheduleTrace;
+
+/// Monotonic session identifier, unique for the plane's lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Katana-style session state (see module docs for the transitions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    /// Waiting in the admission queue (`--max-sessions` reached).
+    Queued,
+    /// Active, nothing ready to dispatch, not in the run queue.
+    Idle,
+    /// Has ready tasks and waits in the run queue for its turn.
+    Pending,
+    /// Holds the scheduling turn; its ready queue is being drained.
+    Running,
+    /// Finished (all values committed or failed).
+    Done,
+}
+
+/// How a committed task got its value — drives the per-session counters.
+#[derive(Clone, Copy, Debug)]
+pub enum Provenance {
+    /// A worker executed it.
+    Executed,
+    /// Served from the shared cache; `origin` is the session that first
+    /// inserted the key (None when the entry predates this plane).
+    CacheHit { origin: Option<SessionId> },
+}
+
+/// Per-request metrics, returned with the outcome and folded into the
+/// plane-wide histograms.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionMetrics {
+    /// Submission → admission (time spent in the admission queue).
+    pub queue_wait_ns: u64,
+    /// Admission → first task dispatch. None when every task was served
+    /// from cache (nothing was ever dispatched).
+    pub first_task_ns: Option<u64>,
+    /// Submission → completion.
+    pub e2e_ns: u64,
+    /// Tasks in the session's program.
+    pub tasks: usize,
+    /// Tasks a worker actually executed for this session.
+    pub executed: usize,
+    /// Tasks served from the shared cache (including in-flight dedup).
+    pub cache_hits: u64,
+    /// Cache hits whose entry originated in a *different* session.
+    pub cross_tenant_hits: u64,
+    /// Times this session's turn ended by quantum expiry.
+    pub quantum_expiries: u64,
+}
+
+/// What a submitter gets back.
+pub struct SessionOutcome {
+    pub id: SessionId,
+    pub outputs: Vec<Value>,
+    pub trace: ScheduleTrace,
+    pub metrics: SessionMetrics,
+}
+
+pub(crate) type ReplyTx = mpsc::Sender<Result<SessionOutcome>>;
+
+/// A live session inside the coordinator.
+pub(crate) struct Session {
+    pub id: SessionId,
+    pub program: TaskProgram,
+    pub state: SessionState,
+    /// Global task-id base: wire id = `base + local.0`.
+    pub base: u32,
+    /// Unfinished dependency count per task.
+    deps_left: Vec<usize>,
+    /// Session-local FIFO of ready (dispatchable) tasks.
+    ready: VecDeque<TaskId>,
+    values: Vec<Option<Vec<Value>>>,
+    /// Tasks without a committed value yet.
+    remaining: usize,
+    /// Tasks currently assigned to workers.
+    pub inflight: usize,
+    pub trace: ScheduleTrace,
+    pub metrics: SessionMetrics,
+    pub t_submit_ns: u64,
+    pub t_admit_ns: u64,
+    /// Bytes of task outputs received from workers for this session.
+    pub result_bytes: u64,
+    reply: ReplyTx,
+}
+
+impl Session {
+    pub fn new(id: SessionId, program: TaskProgram, reply: ReplyTx, now_ns: u64) -> Session {
+        let deps_left = program.dep_counts();
+        let n = program.len();
+        let metrics = SessionMetrics {
+            tasks: n,
+            ..SessionMetrics::default()
+        };
+        Session {
+            id,
+            program,
+            state: SessionState::Queued,
+            base: 0,
+            deps_left,
+            ready: VecDeque::new(),
+            values: vec![None; n],
+            remaining: n,
+            inflight: 0,
+            trace: ScheduleTrace::default(),
+            metrics,
+            t_submit_ns: now_ns,
+            t_admit_ns: now_ns,
+            result_bytes: 0,
+            reply,
+        }
+    }
+
+    pub fn global(&self, local: TaskId) -> u32 {
+        self.base + local.0
+    }
+
+    pub fn has_ready(&self) -> bool {
+        !self.ready.is_empty()
+    }
+
+    pub fn push_ready(&mut self, t: TaskId) {
+        self.ready.push_back(t);
+    }
+
+    /// Re-queue at the front (lost work from a dead worker keeps its
+    /// priority over never-dispatched tasks).
+    pub fn push_ready_front(&mut self, t: TaskId) {
+        self.ready.push_front(t);
+    }
+
+    pub fn pop_ready(&mut self) -> Option<TaskId> {
+        self.ready.pop_front()
+    }
+
+    pub fn has_value(&self, t: TaskId) -> bool {
+        self.values[t.index()].is_some()
+    }
+
+    pub fn values(&self) -> &[Option<Vec<Value>>] {
+        &self.values
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.remaining == 0
+    }
+
+    pub fn note_first_dispatch(&mut self, now_ns: u64) {
+        if self.metrics.first_task_ns.is_none() {
+            self.metrics.first_task_ns = Some(now_ns.saturating_sub(self.t_admit_ns));
+        }
+    }
+
+    /// Commit a value for `t` and return the consumers that became
+    /// dependency-free. Counters are updated per provenance.
+    pub fn commit(&mut self, t: TaskId, outputs: Vec<Value>, how: Provenance) -> Vec<TaskId> {
+        debug_assert!(self.values[t.index()].is_none(), "double commit of {t}");
+        match how {
+            Provenance::Executed => {
+                self.metrics.executed += 1;
+                self.result_bytes += outputs.iter().map(|v| v.size_bytes() as u64).sum::<u64>();
+            }
+            Provenance::CacheHit { origin } => {
+                self.trace.record_cache_hit(t);
+                self.metrics.cache_hits += 1;
+                if origin != Some(self.id) {
+                    self.metrics.cross_tenant_hits += 1;
+                }
+            }
+        }
+        self.values[t.index()] = Some(outputs);
+        self.remaining -= 1;
+        let mut newly = Vec::new();
+        for &c in self.program.consumers(t) {
+            self.deps_left[c.index()] -= 1;
+            if self.deps_left[c.index()] == 0 {
+                newly.push(c);
+            }
+        }
+        newly
+    }
+
+    /// Gather the argument values for a dependency-satisfied task.
+    pub fn arg_values(&self, t: TaskId) -> Result<Vec<Value>> {
+        self.program
+            .task(t)
+            .args
+            .iter()
+            .map(|a| match a {
+                ArgRef::Const(v) => Ok(v.clone()),
+                ArgRef::Output { task: d, index } => Ok(self.values[d.index()]
+                    .as_ref()
+                    .with_context(|| format!("{t} is ready but {d} has no value"))?[*index]
+                    .clone()),
+            })
+            .collect()
+    }
+
+    /// Consume the session into its outcome and deliver it.
+    pub fn finish(mut self, now_ns: u64) {
+        self.state = SessionState::Done;
+        self.trace.wall_ns = now_ns.saturating_sub(self.t_admit_ns);
+        // per-session transfer accounting: args we shipped for it plus the
+        // result bytes its tasks sent back (shared links can't be split
+        // more finely than this)
+        self.trace.bytes_transferred = self.trace.arg_bytes_shipped + self.result_bytes;
+        self.metrics.queue_wait_ns = self.t_admit_ns.saturating_sub(self.t_submit_ns);
+        self.metrics.e2e_ns = now_ns.saturating_sub(self.t_submit_ns);
+        let outputs: Result<Vec<Value>> = self
+            .program
+            .outputs()
+            .iter()
+            .map(|o| match o {
+                ArgRef::Const(v) => Ok(v.clone()),
+                ArgRef::Output { task, index } => Ok(self.values[task.index()]
+                    .as_ref()
+                    .with_context(|| format!("output task {task} never completed"))?[*index]
+                    .clone()),
+            })
+            .collect();
+        let r = outputs.map(|outputs| SessionOutcome {
+            id: self.id,
+            outputs,
+            trace: self.trace,
+            metrics: self.metrics,
+        });
+        // the submitter may have gone away; that is its problem, not ours
+        let _ = self.reply.send(r);
+    }
+
+    /// Deliver a failure to the submitter.
+    pub fn fail(self, error: anyhow::Error) {
+        let _ = self.reply.send(Err(error.context(format!("session {}", self.id))));
+    }
+}

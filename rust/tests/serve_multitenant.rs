@@ -1,0 +1,233 @@
+//! Multi-tenant serving-plane integration tests: N concurrent sessions
+//! over the in-proc transport share one worker pool and one cache.
+//!
+//! Covers the PR's acceptance properties at test scale: bit-exact
+//! per-session results vs solo runs, cross-tenant cache hits on
+//! overlapping programs, admission-queue bounds, no starvation of small
+//! programs while a huge one is in flight, and per-session traces that
+//! `validate`/`audit_trace` accept.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use parhask::analysis::audit_trace;
+use parhask::config::RunConfig;
+use parhask::ir::task::{ArgRef, CostEst, OpKind, TaskId, Value};
+use parhask::ir::{ProgramBuilder, TaskProgram};
+use parhask::pipeline::{self, CompileOptions};
+use parhask::serve::{ServeConfig, ServePlane};
+use parhask::tasks::HostExecutor;
+use parhask::workload::matrix_source;
+
+fn compile(t: usize, size: usize) -> TaskProgram {
+    let src = matrix_source(t);
+    let mut cfg = RunConfig::default();
+    cfg.use_artifacts = false;
+    let registry = pipeline::default_registry(size);
+    pipeline::compile_source(&src, &CompileOptions::default(), &mut cfg, &registry)
+        .expect("matrix source compiles")
+        .program
+}
+
+fn solo_outputs(program: &TaskProgram) -> Vec<Value> {
+    let mut cfg = RunConfig::default();
+    cfg.use_artifacts = false;
+    cfg.engine = parhask::config::Engine::Single;
+    parhask::engine::run(program, &cfg, Arc::new(HostExecutor))
+        .expect("solo run succeeds")
+        .outputs
+}
+
+fn plane(workers: usize, quantum_ms: u64, max_sessions: usize, cache_on: bool) -> ServePlane {
+    let cache = cache_on.then(|| {
+        let mut cc = parhask::cache::CacheConfig::default();
+        cc.enabled = true;
+        cc.namespace = "host".into();
+        parhask::cache::ResultCache::new(cc)
+    });
+    ServePlane::start_inproc(
+        Arc::new(HostExecutor),
+        ServeConfig {
+            workers,
+            quantum: Duration::from_millis(quantum_ms),
+            max_sessions,
+            ..ServeConfig::default()
+        },
+        cache,
+    )
+    .expect("plane starts")
+}
+
+/// A wide layered program of pure spin tasks — the "huge tenant".
+fn synthetic_program(width: usize, layers: usize, us: u64) -> TaskProgram {
+    let mut b = ProgramBuilder::new();
+    let mut prev: Vec<TaskId> = Vec::new();
+    for l in 0..layers {
+        let mut cur = Vec::new();
+        for i in 0..width {
+            let args = if l == 0 {
+                vec![ArgRef::const_i32((l * width + i) as i32)]
+            } else {
+                vec![ArgRef::out(prev[i], 0)]
+            };
+            cur.push(b.push(
+                OpKind::Synthetic { compute_us: us },
+                args,
+                1,
+                CostEst::ZERO,
+                format!("syn{l}_{i}"),
+            ));
+        }
+        prev = cur;
+    }
+    let out = b.push(
+        OpKind::Combine(parhask::ir::task::CombineKind::Identity),
+        vec![ArgRef::out(prev[0], 0)],
+        1,
+        CostEst::ZERO,
+        "out",
+    );
+    b.mark_output(ArgRef::out(out, 0));
+    b.build().expect("synthetic program is well-formed")
+}
+
+#[test]
+fn concurrent_sessions_bit_exact_vs_solo() {
+    let programs: Vec<TaskProgram> = (1..=6).map(|t| compile(t, 12)).collect();
+    let expected: Vec<Vec<Value>> = programs.iter().map(solo_outputs).collect();
+
+    let plane = plane(3, 5, 64, false);
+    let tickets: Vec<_> = programs
+        .iter()
+        .map(|p| plane.submit(p.clone()).expect("submit"))
+        .collect();
+    for ((ticket, program), want) in tickets.into_iter().zip(&programs).zip(&expected) {
+        let outcome = ticket.wait().expect("session completes");
+        assert_eq!(
+            &outcome.outputs, want,
+            "session {} outputs differ from its solo run",
+            outcome.id
+        );
+        // per-session trace passes the same validation a solo run's does
+        outcome.trace.validate(program).expect("trace validates");
+        let races = audit_trace(program, &outcome.trace);
+        assert!(races.is_empty(), "race audit found: {races:?}");
+        assert_eq!(outcome.metrics.executed, program.len());
+        assert_eq!(outcome.metrics.cache_hits, 0);
+    }
+    let stats = plane.shutdown().expect("shutdown");
+    assert_eq!(stats.completed, 6);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn overlapping_tenants_share_the_cache() {
+    let program = compile(3, 12);
+    let want = solo_outputs(&program);
+    let n = 8;
+
+    let plane = plane(3, 5, 64, true);
+    let tickets: Vec<_> = (0..n)
+        .map(|_| plane.submit(program.clone()).expect("submit"))
+        .collect();
+    let outcomes: Vec<_> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("session completes"))
+        .collect();
+
+    let mut total_executed = 0;
+    let mut total_cross = 0;
+    for o in &outcomes {
+        assert_eq!(o.outputs, want, "tenant {} got wrong results", o.id);
+        total_executed += o.metrics.executed;
+        total_cross += o.metrics.cross_tenant_hits;
+    }
+    // the pure prefix of the program is paid for once, not n times (the
+    // IO print task at the end re-executes per session, as it must)
+    assert!(
+        total_executed < n * program.len(),
+        "no sharing happened: {total_executed} executions for {n} identical tenants"
+    );
+    assert!(
+        total_cross > 0,
+        "expected cross-tenant cache hits across identical submissions"
+    );
+    let stats = plane.shutdown().expect("shutdown");
+    assert_eq!(stats.completed as usize, n);
+    assert!(stats.cross_tenant_hits > 0);
+}
+
+#[test]
+fn tiny_sessions_are_not_starved_by_a_huge_one() {
+    // huge: 3 layers × 24 wide × 1.5 ms spin ≈ 108 ms of single-worker
+    // compute; tiny: one matrix round at size 8 (sub-millisecond).
+    let huge = synthetic_program(24, 3, 1500);
+    let tiny = compile(1, 8);
+    let n_tiny = 12;
+
+    let plane = plane(2, 5, 64, false);
+    let huge_ticket = plane.submit(huge).expect("submit huge");
+    // give the huge session the plane first, then flood
+    std::thread::sleep(Duration::from_millis(10));
+    let tiny_tickets: Vec<_> = (0..n_tiny)
+        .map(|_| plane.submit(tiny.clone()).expect("submit tiny"))
+        .collect();
+
+    let tiny_e2e: Vec<u64> = tiny_tickets
+        .into_iter()
+        .map(|t| t.wait().expect("tiny completes").metrics.e2e_ns)
+        .collect();
+    let huge_outcome = huge_ticket.wait().expect("huge completes");
+
+    let worst_tiny = *tiny_e2e.iter().max().unwrap();
+    assert!(
+        worst_tiny < huge_outcome.metrics.e2e_ns,
+        "a tiny session ({:.1} ms) outlived the huge one ({:.1} ms) — starved",
+        worst_tiny as f64 / 1e6,
+        huge_outcome.metrics.e2e_ns as f64 / 1e6
+    );
+    // quantum preemption actually kicked in on the huge tenant
+    assert!(
+        huge_outcome.metrics.quantum_expiries > 0,
+        "huge session never yielded its turn"
+    );
+    let stats = plane.shutdown().expect("shutdown");
+    assert_eq!(stats.completed as usize, 1 + n_tiny);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn admission_queue_bounds_active_sessions() {
+    let program = compile(2, 8);
+    let n = 6;
+    let plane = plane(2, 5, 2, false);
+    let tickets: Vec<_> = (0..n)
+        .map(|_| plane.submit(program.clone()).expect("submit"))
+        .collect();
+    let outcomes: Vec<_> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("completes"))
+        .collect();
+    assert!(outcomes.iter().all(|o| !o.outputs.is_empty()));
+    assert!(
+        outcomes.iter().any(|o| o.metrics.queue_wait_ns > 0),
+        "with max_sessions=2 and 6 submissions, someone must have queued"
+    );
+    let stats = plane.shutdown().expect("shutdown");
+    assert_eq!(stats.completed as usize, n);
+    assert!(
+        stats.peak_active <= 2,
+        "admission ceiling violated: {} active",
+        stats.peak_active
+    );
+}
+
+#[test]
+fn draining_plane_rejects_new_sessions() {
+    let program = compile(1, 8);
+    let plane = plane(2, 5, 64, false);
+    let t = plane.submit(program.clone()).expect("submit");
+    t.wait().expect("completes");
+    let stats = plane.shutdown().expect("shutdown");
+    assert_eq!(stats.completed, 1);
+}

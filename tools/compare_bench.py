@@ -32,7 +32,12 @@ import tempfile
 
 IDENTITY_KEYS = ("size", "k")
 # counters that describe the workload, not the performance of the code
-INFORMATIONAL = {"tasks", "codec_msg_bytes", "schema", "snapshot"}
+# (cross_tenant_hits is higher-is-better, so it cannot use the
+# lower-is-better regression rule either)
+INFORMATIONAL = {
+    "tasks", "codec_msg_bytes", "schema", "snapshot",
+    "sessions", "cross_tenant_hits",
+}
 # below this many ns, timer jitter dwarfs any real effect
 ABS_FLOOR = 1.0
 

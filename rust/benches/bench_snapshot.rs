@@ -8,7 +8,7 @@
 //! is documented in README.md ("Bench snapshots").
 //!
 //! ```sh
-//! cargo bench --bench bench_snapshot           # writes BENCH_pr8.json
+//! cargo bench --bench bench_snapshot           # writes BENCH_pr9.json
 //! BENCH_OUT=/tmp/b.json cargo bench --bench bench_snapshot
 //! ```
 //!
@@ -23,7 +23,7 @@ use parhask::ir::task::{ArgRef, CostEst, OpKind, TaskId, Value};
 use parhask::ir::ProgramBuilder;
 use parhask::partition::{partition_program, PartitionConfig};
 use parhask::scheduler::deque::WorkDeque;
-use parhask::scheduler::PlacementPolicy;
+use parhask::scheduler::{PlacementPolicy, SchedulerKind};
 use parhask::simulator::{simulate, simulate_with_faults, CostModel, SimConfig};
 use parhask::tasks::{HostExecutor, SyntheticExecutor};
 use parhask::tensor::Tensor;
@@ -115,12 +115,18 @@ fn sim_sweep() -> anyhow::Result<Json> {
             };
             let mut cfg = SimConfig::cluster(8);
             cfg.placement = PlacementPolicy::ShardAffinity;
+            // default scheduler (bucketed) vs the greedy baseline: the
+            // makespan_ns column stays comparable to older snapshots and
+            // must not regress against them
             let r = simulate(&program, &cm, &cfg)?;
+            cfg.scheduler = SchedulerKind::Greedy;
+            let rg = simulate(&program, &cm, &cfg)?;
             rows.push(Json::obj(vec![
                 ("size", Json::Num(n as f64)),
                 ("k", Json::Num(k as f64)),
                 ("tasks", Json::Num(program.len() as f64)),
                 ("makespan_ns", Json::Num(r.makespan_ns as f64)),
+                ("greedy_makespan_ns", Json::Num(rg.makespan_ns as f64)),
                 ("bytes_moved", Json::Num(r.bytes_transferred as f64)),
             ]));
         }
@@ -289,10 +295,10 @@ fn serve_storm() -> anyhow::Result<Json> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr8.json".to_string());
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr9.json".to_string());
     let report = Json::obj(vec![
         ("schema", Json::str("parhask-bench-snapshot/1")),
-        ("snapshot", Json::str("pr8")),
+        ("snapshot", Json::str("pr9")),
         ("substrate", substrate()?),
         ("sim_partition_sweep", sim_sweep()?),
         ("cluster_partition_sweep", cluster_sweep()?),

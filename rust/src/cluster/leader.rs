@@ -2,8 +2,10 @@
 //!
 //! Single-threaded event loop over per-worker reader threads:
 //!
-//! * **pump** — greedily assign ready tasks to alive workers with spare
-//!   pipeline capacity (placement policy decides *which* worker);
+//! * **pump** — assign ready tasks to alive workers with spare pipeline
+//!   capacity (the configured scheduler decides *what* pops next — the
+//!   bucketed scheduler drains shard-family gangs, greedy goes strictly
+//!   by priority — and the placement policy decides *which* worker);
 //! * **steal** — when a worker idles and nothing is ready, revoke a queued
 //!   task from a victim (steal policy decides *whom*) and reroute it;
 //! * **recover** — a worker that disconnects *or goes silent past its
@@ -39,7 +41,7 @@ use crate::cache::{ResultCache, TaskKey};
 use crate::ir::task::{ArgRef, OpKind, TaskId, Value};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::{LeaseKind, RunResult, ScheduleTrace, TraceEvent};
-use crate::scheduler::{GreedyState, PlacementPolicy, StealPolicy, WorkerId};
+use crate::scheduler::{PlacementPolicy, SchedulerKind, SchedulerState, StealPolicy, WorkerId};
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info, log_warn};
 
@@ -50,6 +52,10 @@ use super::transport::{MsgReceiver, MsgSender};
 /// Cluster run configuration.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
+    /// Scheduler state machine: bucketed (default) gang-schedules shard
+    /// families out of priority work buckets; greedy is the per-task
+    /// baseline behind `--scheduler greedy`.
+    pub scheduler: SchedulerKind,
     pub placement: PlacementPolicy,
     pub steal: StealPolicy,
     /// Max tasks in flight (queued + running) per worker.
@@ -82,6 +88,7 @@ pub struct ClusterConfig {
 impl Default for ClusterConfig {
     fn default() -> Self {
         ClusterConfig {
+            scheduler: SchedulerKind::default(),
             placement: PlacementPolicy::LeastLoaded,
             steal: StealPolicy::RandomVictim,
             pipeline_depth: 2,
@@ -148,7 +155,7 @@ impl CacheState {
 /// steal, lease expiry, joins, speculation, commit) can borrow it
 /// alongside `&mut Leader` without threading a dozen parameters.
 struct RunState {
-    state: GreedyState,
+    state: SchedulerState,
     values: Vec<Option<Vec<Value>>>,
     /// Per-worker in-flight tasks (same task may appear under several
     /// workers while a speculative duplicate races).
@@ -273,7 +280,7 @@ impl Leader {
             None => None,
         };
         let mut rs = RunState {
-            state: GreedyState::new(&program, n_workers, self.cfg.placement),
+            state: SchedulerState::new(self.cfg.scheduler, &program, n_workers, self.cfg.placement),
             values: vec![None; program.len()],
             inflight: vec![Vec::new(); n_workers],
             alive: vec![true; n_workers],
@@ -878,7 +885,7 @@ impl Leader {
     fn build_args(
         &self,
         program: &TaskProgram,
-        state: &GreedyState,
+        state: &SchedulerState,
         values: &[Option<Vec<Value>>],
         task: TaskId,
         target: WorkerId,

@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 use crate::cache::CacheConfig;
 use crate::cluster::ClusterConfig;
 use crate::partition::PartitionConfig;
-use crate::scheduler::{PlacementPolicy, StealPolicy};
+use crate::scheduler::{PlacementPolicy, SchedulerKind, StealPolicy};
 
 /// Which execution engine runs the program.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -65,6 +65,11 @@ impl Engine {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub engine: Engine,
+    /// Which scheduler state machine drives the engines (`--scheduler`).
+    /// `bucketed` (default) gang-schedules shard families through
+    /// priority work buckets; `greedy` is the paper's original one-task-
+    /// at-a-time loop, kept as the honest baseline.
+    pub scheduler: SchedulerKind,
     pub placement: PlacementPolicy,
     pub steal: StealPolicy,
     pub pipeline_depth: usize,
@@ -117,6 +122,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             engine: Engine::Cluster { workers: 4 },
+            scheduler: SchedulerKind::default(),
             placement: PlacementPolicy::LeastLoaded,
             steal: StealPolicy::RandomVictim,
             pipeline_depth: 2,
@@ -146,6 +152,7 @@ impl RunConfig {
         let key = key.replace('-', "_");
         match key.as_str() {
             "engine" => self.engine = Engine::parse(value)?,
+            "scheduler" => self.scheduler = SchedulerKind::parse(value)?,
             "placement" => {
                 self.placement = PlacementPolicy::parse(value)
                     .ok_or_else(|| anyhow::anyhow!("bad placement {value:?}"))?
@@ -252,11 +259,13 @@ impl RunConfig {
             pipeline_depth: self.pipeline_depth,
             use_cached_args: self.use_cached_args,
             lease: Duration::from_millis(self.lease_ms),
+            scheduler: self.scheduler,
         }
     }
 
     pub fn cluster_config(&self) -> ClusterConfig {
         ClusterConfig {
+            scheduler: self.scheduler,
             placement: self.placement,
             steal: self.steal,
             pipeline_depth: self.pipeline_depth,
@@ -307,6 +316,21 @@ mod tests {
         c.set("verify-ir", "off").unwrap(); // hyphen form accepted
         assert!(!c.verify_ir);
         assert!(c.set("verify_ir", "maybe").is_err());
+    }
+
+    #[test]
+    fn scheduler_overrides() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.scheduler, SchedulerKind::Bucketed, "bucketed is the default");
+        c.set("scheduler", "greedy").unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::Greedy);
+        c.set("scheduler", "bucketed").unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::Bucketed);
+        assert!(c.set("scheduler", "fifo").is_err());
+
+        c.set("scheduler", "greedy").unwrap();
+        assert_eq!(c.cluster_config().scheduler, SchedulerKind::Greedy);
+        assert_eq!(c.serve_config(2).scheduler, SchedulerKind::Greedy);
     }
 
     #[test]

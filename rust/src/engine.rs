@@ -11,8 +11,9 @@ use crate::cache::ResultCache;
 use crate::cluster::run_cluster_inproc_cached;
 use crate::config::{Engine, RunConfig};
 use crate::ir::TaskProgram;
-use crate::scheduler::local::run_smp_cached;
+use crate::scheduler::local::{run_smp_bucketed_cached, run_smp_cached};
 use crate::scheduler::trace::RunResult;
+use crate::scheduler::SchedulerKind;
 use crate::simulator::{simulate, CostModel, SimConfig};
 use crate::tasks::Executor;
 
@@ -115,7 +116,10 @@ fn dispatch(
 ) -> Result<RunResult> {
     match cfg.engine {
         Engine::Single => run_single_cached(program, executor.as_ref(), cache.as_deref()),
-        Engine::Smp { threads } => run_smp_cached(program, executor, threads, cache),
+        Engine::Smp { threads } => match cfg.scheduler {
+            SchedulerKind::Bucketed => run_smp_bucketed_cached(program, executor, threads, cache),
+            SchedulerKind::Greedy => run_smp_cached(program, executor, threads, cache),
+        },
         Engine::Cluster { workers } => run_cluster_inproc_cached(
             program,
             executor,
@@ -134,6 +138,7 @@ fn dispatch(
                 placement: cfg.placement,
                 pipeline_depth: cfg.pipeline_depth,
                 transfer_free: false,
+                scheduler: cfg.scheduler,
             };
             let r = simulate(program, &cm, &sim_cfg)?;
             Ok(RunResult {

@@ -35,7 +35,12 @@ impl Histogram {
     }
 
     /// Fold another histogram's samples into this one (lossless).
+    /// Merging an empty histogram is a no-op and keeps the lazily-sorted
+    /// state valid instead of forcing a pointless re-sort.
     pub fn merge(&mut self, other: &Histogram) {
+        if other.samples.is_empty() {
+            return;
+        }
         self.samples.extend_from_slice(&other.samples);
         self.sorted = false;
     }
@@ -157,6 +162,36 @@ mod tests {
         assert_eq!(a.count(), 100);
         assert_eq!(a.p50(), whole.p50());
         assert_eq!(a.p99(), whole.p99());
+    }
+
+    #[test]
+    fn extreme_quantiles_are_safe_on_single_sample() {
+        let mut h = Histogram::new();
+        h.record(7.0);
+        assert_eq!(h.percentile(1.0), 7.0);
+        assert_eq!(h.percentile(2.0), 7.0); // clamps, no index past the end
+        assert_eq!(h.percentile(-1.0), 7.0);
+        h.record(9.0);
+        assert_eq!(h.percentile(1.0), 9.0);
+        assert_eq!(h.percentile(1.5), 9.0);
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_is_a_noop() {
+        let mut h = Histogram::new();
+        for v in 1..=10 {
+            h.record(v as f64);
+        }
+        assert_eq!(h.p50(), 5.5); // sorts and caches
+        h.merge(&Histogram::new());
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.p50(), 5.5);
+        assert_eq!(h.max(), 10.0);
+        // and merging *into* an empty one works too
+        let mut e = Histogram::new();
+        e.merge(&h);
+        assert_eq!(e.count(), 10);
+        assert_eq!(e.p99(), h.p99());
     }
 
     #[test]

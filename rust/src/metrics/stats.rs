@@ -38,14 +38,21 @@ impl Summary {
     }
 }
 
-/// Linear-interpolated percentile on a sorted slice.
+/// Linear-interpolated percentile on a sorted slice. `q` is clamped to
+/// [0, 1] and an empty slice yields 0.0, so report paths can query any
+/// quantile without guarding (q = 1.0 lands exactly on the last sample
+/// instead of indexing past it).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
+    let q = q.clamp(0.0, 1.0);
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
+    let hi = (pos.ceil() as usize).min(sorted.len() - 1);
     let frac = pos - lo as f64;
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
@@ -78,5 +85,25 @@ mod tests {
         assert_eq!(s.mean, 7.0);
         assert_eq!(s.p95, 7.0);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn q_one_hits_the_last_sample_exactly() {
+        let sorted: Vec<f64> = (0..97).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 1.0), 96.0);
+        assert_eq!(percentile(&[3.0], 1.0), 3.0);
+    }
+
+    #[test]
+    fn out_of_range_q_clamps() {
+        let sorted = [0.0, 10.0, 20.0];
+        assert_eq!(percentile(&sorted, 1.5), 20.0);
+        assert_eq!(percentile(&sorted, -0.5), 0.0);
+    }
+
+    #[test]
+    fn empty_slice_yields_zero() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 1.0), 0.0);
     }
 }

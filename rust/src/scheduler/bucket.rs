@@ -1,0 +1,707 @@
+//! Bucketed scheduler — mmtk-core's work-bucket design adapted to task
+//! DAGs: ready work is grouped into priority buckets with open
+//! conditions instead of a single flat heap.
+//!
+//! * Every shard *family* (from the partition rewrite) owns one bucket
+//!   of ready leaves, kept in shard-index order. Families gang-schedule:
+//!   the front family's bucket drains completely before the next one
+//!   opens, so a family's leaves dispatch back-to-back and are stolen as
+//!   a unit, not interleaved single tasks.
+//! * Combines and unannotated tasks live in one always-open LPT bucket
+//!   (same cost-descending, id-ascending order as the greedy baseline).
+//!   The phase barrier "leaves open → combines open when the leaf
+//!   bucket drains" is an ordering rule, never a gate: a ready combine
+//!   is merely deferred while any leaf bucket still holds work, so
+//!   producers that happen to carry the `Combine` role (e.g. row-split
+//!   slices) can never deadlock the phase.
+//!
+//! [`BucketedState`] mirrors the [`GreedyState`] driver API exactly, so
+//! the cluster leader, the simulator, and the SMP pool switch schedulers
+//! without changing their event loops; [`SchedulerState`] is the
+//! zero-cost dispatch wrapper they hold. Worker parking in the bucketed
+//! SMP pool signals through [`CoordinatorMessage`].
+
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::ir::task::{ShardRole, TaskId};
+use crate::ir::TaskProgram;
+
+use super::greedy::GreedyState;
+use super::policy::{place, PlacementPolicy};
+use super::WorkerId;
+
+/// Which scheduler state machine drives an engine (`--scheduler`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SchedulerKind {
+    /// One flat LPT heap, one task at a time — the paper's original
+    /// loop, kept as the honest baseline.
+    Greedy,
+    /// Priority work buckets with family gang-scheduling and phase
+    /// ordering (the default).
+    #[default]
+    Bucketed,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        match s {
+            "greedy" => Ok(SchedulerKind::Greedy),
+            "bucketed" | "bucket" => Ok(SchedulerKind::Bucketed),
+            _ => bail!("unknown scheduler {s:?} (expected greedy|bucketed)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Greedy => "greedy",
+            SchedulerKind::Bucketed => "bucketed",
+        }
+    }
+}
+
+/// Worker → coordinator signals in the bucketed SMP pool (the mmtk-core
+/// channel shape). The simulator and leader drive their state machines
+/// single-threaded and don't need the channel; the SMP pool's condvar
+/// parking does.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CoordinatorMessage {
+    /// New work became ready (a parked worker should wake).
+    Work,
+    /// Every worker is parked with nothing ready.
+    AllWorkerParked,
+    /// A family's leaf bucket fully drained (combines phase may start).
+    BucketDrained(u32),
+}
+
+#[derive(PartialEq, Eq)]
+struct Prio {
+    cost: u64,
+    // inverted id for deterministic max-heap tie-break (lower id first)
+    id: std::cmp::Reverse<u32>,
+}
+
+impl Ord for Prio {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.cost, &self.id).cmp(&(other.cost, &other.id))
+    }
+}
+
+impl PartialOrd for Prio {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One shard family's open bucket: ready leaves in shard-index order.
+#[derive(Default)]
+struct FamilyBucket {
+    leaves: BTreeSet<(u32, u32)>, // (shard index, task id)
+}
+
+/// Bucketed scheduler state over one program. Drop-in for
+/// [`GreedyState`]: same method set, same load/location/dep-count
+/// semantics — only the *order* ready tasks pop in differs.
+pub struct BucketedState {
+    dep_counts: Vec<usize>,
+    /// Combines + unannotated tasks: always-open LPT bucket.
+    open: BinaryHeap<(Prio, TaskId)>,
+    /// Family id → bucket of ready leaves.
+    families: BTreeMap<u32, FamilyBucket>,
+    /// Gang order: families with ready leaves, front drains first.
+    family_rr: VecDeque<u32>,
+    ready_count: usize,
+    /// queued + running per worker
+    loads: Vec<usize>,
+    locations: HashMap<TaskId, WorkerId>,
+    completed: usize,
+    total: usize,
+    rr_counter: usize,
+    policy: PlacementPolicy,
+}
+
+impl BucketedState {
+    pub fn new(program: &TaskProgram, n_workers: usize, policy: PlacementPolicy) -> BucketedState {
+        let dep_counts = program.dep_counts();
+        let mut s = BucketedState {
+            dep_counts,
+            open: BinaryHeap::new(),
+            families: BTreeMap::new(),
+            family_rr: VecDeque::new(),
+            ready_count: 0,
+            loads: vec![0; n_workers],
+            locations: HashMap::new(),
+            completed: 0,
+            total: program.len(),
+            rr_counter: 0,
+            policy,
+        };
+        for t in program.roots() {
+            s.push_ready(program, t);
+        }
+        s
+    }
+
+    fn push_ready(&mut self, program: &TaskProgram, t: TaskId) {
+        let spec = program.task(t);
+        match spec.shard.as_ref() {
+            Some(sh) if sh.role == ShardRole::Leaf => {
+                let fam = self.families.entry(sh.family).or_default();
+                if fam.leaves.is_empty() && !self.family_rr.contains(&sh.family) {
+                    self.family_rr.push_back(sh.family);
+                }
+                fam.leaves.insert((sh.index, t.0));
+            }
+            _ => {
+                self.open.push((
+                    Prio {
+                        cost: spec.est.flops,
+                        id: std::cmp::Reverse(t.0),
+                    },
+                    t,
+                ));
+            }
+        }
+        self.ready_count += 1;
+    }
+
+    /// Pop the next task per the bucket order: the front family's leaves
+    /// in shard-index order until that bucket drains, then the next
+    /// family, then the open (combines + unannotated) LPT bucket.
+    /// Returns the drained family alongside, when this pop emptied one.
+    fn pop_one(&mut self) -> Option<(TaskId, Option<CoordinatorMessage>)> {
+        while let Some(&f) = self.family_rr.front() {
+            let fam = self.families.get_mut(&f).expect("queued family exists");
+            if let Some(&(idx, tid)) = fam.leaves.iter().next() {
+                fam.leaves.remove(&(idx, tid));
+                let drained = if fam.leaves.is_empty() {
+                    self.family_rr.pop_front();
+                    Some(CoordinatorMessage::BucketDrained(f))
+                } else {
+                    None
+                };
+                self.ready_count -= 1;
+                return Some((TaskId(tid), drained));
+            }
+            self.family_rr.pop_front();
+        }
+        let (_, t) = self.open.pop()?;
+        self.ready_count -= 1;
+        Some((t, None))
+    }
+
+    pub fn n_ready(&self) -> usize {
+        self.ready_count
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completed == self.total
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    pub fn loads(&self) -> &[usize] {
+        &self.loads
+    }
+
+    pub fn location(&self, t: TaskId) -> Option<WorkerId> {
+        self.locations.get(&t).copied()
+    }
+
+    /// The shard family whose leaf bucket is currently draining, if any
+    /// (drivers use this to batch same-family dispatches).
+    pub fn draining_family(&self) -> Option<u32> {
+        self.family_rr.front().copied()
+    }
+
+    /// Pop the highest-priority ready task and place it per policy.
+    pub fn assign_next(&mut self, program: &TaskProgram) -> Option<(TaskId, WorkerId)> {
+        let (task, _drained) = self.pop_one()?;
+        let spec = program.task(task);
+        let holders: Vec<WorkerId> = spec
+            .deps()
+            .iter()
+            .filter_map(|d| self.locations.get(d).copied())
+            .collect();
+        let w = place(
+            self.policy,
+            task,
+            &self.loads,
+            &holders,
+            spec.shard.as_ref(),
+            &mut self.rr_counter,
+        );
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] += 1;
+        }
+        Some((task, w))
+    }
+
+    /// Like [`Self::assign_next`] but pinned to a specific worker.
+    pub fn assign_to(&mut self, _program: &TaskProgram, w: WorkerId) -> Option<TaskId> {
+        let (task, _drained) = self.pop_one()?;
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] += 1;
+        }
+        Some(task)
+    }
+
+    /// Record completion; returns the newly-ready tasks.
+    pub fn on_done(&mut self, program: &TaskProgram, task: TaskId, w: WorkerId) -> Vec<TaskId> {
+        self.completed += 1;
+        self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+        self.locations.insert(task, w);
+        let mut newly = Vec::new();
+        for &c in program.consumers(task) {
+            let dc = &mut self.dep_counts[c.index()];
+            *dc -= 1;
+            if *dc == 0 {
+                newly.push(c);
+                self.push_ready(program, c);
+            }
+        }
+        newly
+    }
+
+    /// Undo an undeliverable assignment: release the load, re-bucket the
+    /// task.
+    pub fn unassign(&mut self, program: &TaskProgram, task: TaskId, w: WorkerId) {
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+        }
+        self.push_ready(program, task);
+    }
+
+    /// Release only the load charge (leader resolved the task locally).
+    pub fn abort_assign(&mut self, w: WorkerId) {
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+        }
+    }
+
+    /// Completion at the leader (cache hit): no load release, no
+    /// location. Returns the newly-ready tasks.
+    pub fn complete_local(&mut self, program: &TaskProgram, task: TaskId) -> Vec<TaskId> {
+        self.completed += 1;
+        let mut newly = Vec::new();
+        for &c in program.consumers(task) {
+            let dc = &mut self.dep_counts[c.index()];
+            *dc -= 1;
+            if *dc == 0 {
+                newly.push(c);
+                self.push_ready(program, c);
+            }
+        }
+        newly
+    }
+
+    /// Charge a load for a leader-side override (speculation).
+    pub fn force_assign(&mut self, task: TaskId, w: WorkerId) {
+        let _ = task;
+        if self.loads[w.index()] != usize::MAX {
+            self.loads[w.index()] += 1;
+        }
+    }
+
+    /// Re-bucket tasks after a worker failure.
+    pub fn requeue(&mut self, program: &TaskProgram, tasks: &[TaskId], w: WorkerId) {
+        for &t in tasks {
+            self.loads[w.index()] = self.loads[w.index()].saturating_sub(1);
+            self.push_ready(program, t);
+        }
+    }
+
+    pub fn mark_dead(&mut self, w: WorkerId) {
+        self.loads[w.index()] = usize::MAX;
+    }
+
+    pub fn add_worker(&mut self) -> WorkerId {
+        self.loads.push(0);
+        WorkerId((self.loads.len() - 1) as u32)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.loads.len()
+    }
+}
+
+/// The scheduler an engine holds: dispatches every driver call to the
+/// selected state machine. Both variants expose byte-identical method
+/// contracts, so drivers never branch on the kind themselves.
+pub enum SchedulerState {
+    Greedy(GreedyState),
+    Bucketed(BucketedState),
+}
+
+macro_rules! delegate {
+    ($self:ident, $s:ident => $e:expr) => {
+        match $self {
+            SchedulerState::Greedy($s) => $e,
+            SchedulerState::Bucketed($s) => $e,
+        }
+    };
+}
+
+impl SchedulerState {
+    pub fn new(
+        kind: SchedulerKind,
+        program: &TaskProgram,
+        n_workers: usize,
+        policy: PlacementPolicy,
+    ) -> SchedulerState {
+        match kind {
+            SchedulerKind::Greedy => {
+                SchedulerState::Greedy(GreedyState::new(program, n_workers, policy))
+            }
+            SchedulerKind::Bucketed => {
+                SchedulerState::Bucketed(BucketedState::new(program, n_workers, policy))
+            }
+        }
+    }
+
+    pub fn kind(&self) -> SchedulerKind {
+        match self {
+            SchedulerState::Greedy(_) => SchedulerKind::Greedy,
+            SchedulerState::Bucketed(_) => SchedulerKind::Bucketed,
+        }
+    }
+
+    /// The family whose leaf bucket is draining (bucketed only; greedy
+    /// has no phases, so always `None`).
+    pub fn draining_family(&self) -> Option<u32> {
+        match self {
+            SchedulerState::Greedy(_) => None,
+            SchedulerState::Bucketed(s) => s.draining_family(),
+        }
+    }
+
+    pub fn n_ready(&self) -> usize {
+        delegate!(self, s => s.n_ready())
+    }
+
+    pub fn is_done(&self) -> bool {
+        delegate!(self, s => s.is_done())
+    }
+
+    pub fn completed(&self) -> usize {
+        delegate!(self, s => s.completed())
+    }
+
+    pub fn loads(&self) -> &[usize] {
+        delegate!(self, s => s.loads())
+    }
+
+    pub fn location(&self, t: TaskId) -> Option<WorkerId> {
+        delegate!(self, s => s.location(t))
+    }
+
+    pub fn assign_next(&mut self, program: &TaskProgram) -> Option<(TaskId, WorkerId)> {
+        delegate!(self, s => s.assign_next(program))
+    }
+
+    pub fn assign_to(&mut self, program: &TaskProgram, w: WorkerId) -> Option<TaskId> {
+        delegate!(self, s => s.assign_to(program, w))
+    }
+
+    pub fn on_done(&mut self, program: &TaskProgram, task: TaskId, w: WorkerId) -> Vec<TaskId> {
+        delegate!(self, s => s.on_done(program, task, w))
+    }
+
+    pub fn unassign(&mut self, program: &TaskProgram, task: TaskId, w: WorkerId) {
+        delegate!(self, s => s.unassign(program, task, w));
+    }
+
+    pub fn abort_assign(&mut self, w: WorkerId) {
+        delegate!(self, s => s.abort_assign(w));
+    }
+
+    pub fn complete_local(&mut self, program: &TaskProgram, task: TaskId) -> Vec<TaskId> {
+        delegate!(self, s => s.complete_local(program, task))
+    }
+
+    pub fn force_assign(&mut self, task: TaskId, w: WorkerId) {
+        delegate!(self, s => s.force_assign(task, w));
+    }
+
+    pub fn requeue(&mut self, program: &TaskProgram, tasks: &[TaskId], w: WorkerId) {
+        delegate!(self, s => s.requeue(program, tasks, w));
+    }
+
+    pub fn mark_dead(&mut self, w: WorkerId) {
+        delegate!(self, s => s.mark_dead(w));
+    }
+
+    pub fn add_worker(&mut self) -> WorkerId {
+        delegate!(self, s => s.add_worker())
+    }
+
+    pub fn n_workers(&self) -> usize {
+        delegate!(self, s => s.n_workers())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::task::{ArgRef, CombineKind, CostEst, OpKind, ShardInfo};
+    use crate::ir::ProgramBuilder;
+
+    fn prog_fan(costs: &[u64]) -> TaskProgram {
+        let mut b = ProgramBuilder::new();
+        for (i, c) in costs.iter().enumerate() {
+            b.push(
+                OpKind::Synthetic { compute_us: *c },
+                vec![],
+                1,
+                CostEst { flops: *c, bytes_in: 0, bytes_out: 0 },
+                format!("t{i}"),
+            );
+        }
+        b.build().unwrap()
+    }
+
+    /// Two families of leaves plus one combine each, all ready up front.
+    fn prog_two_families() -> TaskProgram {
+        let mut b = ProgramBuilder::new();
+        let mut combines = Vec::new();
+        for f in 0..2u32 {
+            let mut leaves = Vec::new();
+            for i in 0..3u32 {
+                let id = b.push(
+                    OpKind::Synthetic { compute_us: 10 },
+                    vec![],
+                    1,
+                    CostEst { flops: 10, bytes_in: 0, bytes_out: 8 },
+                    format!("f{f}s{i}"),
+                );
+                b.annotate_shard(
+                    id,
+                    ShardInfo { family: f, index: i, of: 3, role: ShardRole::Leaf },
+                );
+                leaves.push(id);
+            }
+            let c = b.push(
+                OpKind::Combine(CombineKind::TreeReduce),
+                leaves.iter().map(|l| ArgRef::out(*l, 0)).collect(),
+                1,
+                CostEst::ZERO,
+                format!("f{f}cmb"),
+            );
+            b.annotate_shard(
+                c,
+                ShardInfo { family: f, index: 0, of: 3, role: ShardRole::Combine },
+            );
+            combines.push(c);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn kind_parses_and_defaults_to_bucketed() {
+        assert_eq!(SchedulerKind::parse("greedy").unwrap(), SchedulerKind::Greedy);
+        assert_eq!(SchedulerKind::parse("bucketed").unwrap(), SchedulerKind::Bucketed);
+        assert_eq!(SchedulerKind::parse("bucket").unwrap(), SchedulerKind::Bucketed);
+        assert!(SchedulerKind::parse("nope").is_err());
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Bucketed);
+        for k in [SchedulerKind::Greedy, SchedulerKind::Bucketed] {
+            assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn unannotated_programs_match_greedy_order() {
+        // without shard families the bucketed order degenerates to LPT,
+        // bit-identical to the greedy baseline
+        let p = prog_fan(&[5, 50, 20, 50, 7]);
+        let mut g = GreedyState::new(&p, 3, PlacementPolicy::LeastLoaded);
+        let mut bk = BucketedState::new(&p, 3, PlacementPolicy::LeastLoaded);
+        loop {
+            let a = g.assign_next(&p);
+            let b = bk.assign_next(&p);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn family_drains_as_a_gang_before_the_next_opens() {
+        let p = prog_two_families();
+        let mut s = BucketedState::new(&p, 3, PlacementPolicy::ShardAffinity);
+        assert_eq!(s.draining_family(), Some(0));
+        let order: Vec<u32> =
+            std::iter::from_fn(|| s.assign_next(&p).map(|(t, _)| t.0)).collect();
+        // family 0's leaves (ids 0..3) back-to-back in index order, then
+        // family 1's (ids 4..7); combines (3, 7) are not yet ready
+        assert_eq!(order, vec![0, 1, 2, 4, 5, 6]);
+        assert_eq!(s.draining_family(), None);
+    }
+
+    #[test]
+    fn combines_wait_for_leaf_buckets() {
+        let p = prog_two_families();
+        let mut s = BucketedState::new(&p, 3, PlacementPolicy::ShardAffinity);
+        let mut assigned = Vec::new();
+        while let Some(a) = s.assign_next(&p) {
+            assigned.push(a);
+        }
+        // finish family 1's leaves first: its combine becomes ready, but
+        // family 0's leaves are still in flight — the combine pops only
+        // from the open bucket, which sits behind no leaf bucket now
+        // (leaf buckets emptied at assignment time), so it dispatches
+        for (t, w) in assigned.iter().rev() {
+            s.on_done(&p, *t, *w);
+        }
+        let mut tail: Vec<u32> = Vec::new();
+        while let Some((t, w)) = s.assign_next(&p) {
+            tail.push(t.0);
+            s.on_done(&p, t, w);
+        }
+        // both combines ran, higher id last on the cost tie
+        assert_eq!(tail, vec![3, 7]);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn leaves_order_before_ready_combines() {
+        // family 1's leaves become ready while family 0's combine is
+        // already ready: the leaf bucket pops first (phase ordering)
+        let mut b = ProgramBuilder::new();
+        let gate = b.push(
+            OpKind::Synthetic { compute_us: 1 },
+            vec![],
+            1,
+            CostEst { flops: 1, bytes_in: 0, bytes_out: 8 },
+            "gate",
+        );
+        let cmb = b.push(
+            OpKind::Combine(CombineKind::TreeReduce),
+            vec![ArgRef::out(gate, 0)],
+            1,
+            CostEst { flops: 100, bytes_in: 8, bytes_out: 8 },
+            "cmb",
+        );
+        b.annotate_shard(
+            cmb,
+            ShardInfo { family: 0, index: 0, of: 1, role: ShardRole::Combine },
+        );
+        let mut leaves = Vec::new();
+        for i in 0..2u32 {
+            let l = b.push(
+                OpKind::Synthetic { compute_us: 1 },
+                vec![ArgRef::out(gate, 0)],
+                1,
+                CostEst { flops: 1, bytes_in: 0, bytes_out: 8 },
+                format!("leaf{i}"),
+            );
+            b.annotate_shard(
+                l,
+                ShardInfo { family: 1, index: i, of: 2, role: ShardRole::Leaf },
+            );
+            leaves.push(l);
+        }
+        let p = b.build().unwrap();
+        let mut s = BucketedState::new(&p, 2, PlacementPolicy::LeastLoaded);
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, gate);
+        s.on_done(&p, t, w);
+        // combine (flops 100) and both leaves (flops 1) are now ready:
+        // the leaves' bucket outranks the open bucket despite lower cost
+        let order: Vec<u32> =
+            std::iter::from_fn(|| s.assign_next(&p).map(|(t, _)| t.0)).collect();
+        assert_eq!(order, vec![leaves[0].0, leaves[1].0, cmb.0]);
+    }
+
+    #[test]
+    fn pop_reports_bucket_drained() {
+        let p = prog_two_families();
+        let mut s = BucketedState::new(&p, 1, PlacementPolicy::LeastLoaded);
+        let mut drains = Vec::new();
+        while let Some((_, d)) = s.pop_one() {
+            if let Some(CoordinatorMessage::BucketDrained(f)) = d {
+                drains.push(f);
+            }
+        }
+        assert_eq!(drains, vec![0, 1]);
+    }
+
+    #[test]
+    fn requeue_returns_leaves_to_their_family_bucket() {
+        let p = prog_two_families();
+        let mut s = BucketedState::new(&p, 2, PlacementPolicy::LeastLoaded);
+        let (t0, w0) = s.assign_next(&p).unwrap();
+        let (t1, _w1) = s.assign_next(&p).unwrap();
+        assert_eq!((t0.0, t1.0), (0, 1));
+        s.requeue(&p, &[t0], w0);
+        s.mark_dead(w0);
+        // the requeued leaf re-enters family 0's bucket at its index slot
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, t0);
+        assert_ne!(w, w0);
+    }
+
+    #[test]
+    fn driver_contract_matches_greedy_on_dependencies() {
+        let mut b = ProgramBuilder::new();
+        let a = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "a");
+        let c = b.push(
+            OpKind::Synthetic { compute_us: 1 },
+            vec![ArgRef::out(a, 0)],
+            1,
+            CostEst::ZERO,
+            "c",
+        );
+        let p = b.build().unwrap();
+        let mut s = SchedulerState::new(
+            SchedulerKind::Bucketed,
+            &p,
+            1,
+            PlacementPolicy::LeastLoaded,
+        );
+        assert_eq!(s.kind(), SchedulerKind::Bucketed);
+        assert_eq!(s.n_ready(), 1);
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, a);
+        assert!(s.assign_next(&p).is_none());
+        let newly = s.on_done(&p, a, w);
+        assert_eq!(newly, vec![c]);
+        let (t, w) = s.assign_next(&p).unwrap();
+        assert_eq!(t, c);
+        s.on_done(&p, c, w);
+        assert!(s.is_done());
+        assert_eq!(s.completed(), 2);
+    }
+
+    #[test]
+    fn cache_hit_path_mirrors_greedy() {
+        let p = prog_fan(&[1, 1]);
+        let mut s = BucketedState::new(&p, 2, PlacementPolicy::LeastLoaded);
+        let (t, w) = s.assign_next(&p).unwrap();
+        s.abort_assign(w);
+        assert_eq!(s.loads(), &[0, 0]);
+        s.complete_local(&p, t);
+        assert_eq!(s.location(t), None);
+        let (t2, w2) = s.assign_next(&p).unwrap();
+        s.on_done(&p, t2, w2);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn elastic_join_and_dead_marking() {
+        let p = prog_fan(&[1, 1, 1]);
+        let mut s = BucketedState::new(&p, 1, PlacementPolicy::LeastLoaded);
+        let (_, w0) = s.assign_next(&p).unwrap();
+        let joined = s.add_worker();
+        assert_eq!(joined, WorkerId(1));
+        assert_eq!(s.n_workers(), 2);
+        let (_, w) = s.assign_next(&p).unwrap();
+        assert_eq!(w, joined);
+        s.mark_dead(w0);
+        let (_, w) = s.assign_next(&p).unwrap();
+        assert_eq!(w, joined);
+    }
+}

@@ -5,9 +5,16 @@
 //!
 //! No serialization, no transfer cost — exactly what distinguishes SMP
 //! from the distributed engine in Figure 2.
+//!
+//! Two pools live here: the Chase–Lev deque pool (`run_smp*`, the
+//! `--scheduler greedy` baseline, spin-waiting when idle) and the
+//! bucketed pool (`run_smp_bucketed*`): one shared [`BucketedState`]
+//! behind a mutex, workers claiming gang slices of the draining shard
+//! family and parking on a condvar when nothing is ready, with a
+//! coordinator draining [`CoordinatorMessage`]s mmtk-style.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -17,7 +24,9 @@ use crate::ir::TaskProgram;
 use crate::tasks::Executor;
 use crate::util::rng::Rng;
 
+use super::bucket::{BucketedState, CoordinatorMessage};
 use super::deque::{Steal, WorkDeque};
+use super::policy::PlacementPolicy;
 use super::trace::{RunResult, ScheduleTrace, TraceEvent};
 use super::WorkerId;
 
@@ -77,6 +86,261 @@ pub fn run_smp_cached(
     let mut trace = std::mem::take(&mut *shared.trace.lock().unwrap());
     trace.wall_ns = wall;
     Ok(RunResult { outputs, trace })
+}
+
+/// Run `program` on `n_threads` workers under the bucketed scheduler.
+pub fn run_smp_bucketed(
+    program: &TaskProgram,
+    executor: Arc<dyn Executor>,
+    n_threads: usize,
+) -> Result<RunResult> {
+    run_smp_bucketed_cached(program, executor, n_threads, None)
+}
+
+/// [`run_smp_bucketed`] with an optional purity-aware result cache.
+///
+/// Unlike the deque pool, idle workers *park* on a condvar instead of
+/// spinning, and wakeups flow through a coordinator channel: a worker
+/// that releases new work sends [`CoordinatorMessage::Work`], draining a
+/// shard family's leaf bucket sends
+/// [`CoordinatorMessage::BucketDrained`], and the last worker to park
+/// sends [`CoordinatorMessage::AllWorkerParked`] — at which point the
+/// coordinator either declares the run complete or flags a stall.
+pub fn run_smp_bucketed_cached(
+    program: &TaskProgram,
+    executor: Arc<dyn Executor>,
+    n_threads: usize,
+    cache: Option<Arc<ResultCache>>,
+) -> Result<RunResult> {
+    assert!(n_threads >= 1);
+    let n = program.len();
+    let shared = Arc::new(BktShared {
+        program: program.clone(),
+        executor,
+        cache,
+        values: (0..n).map(|_| Mutex::new(None)).collect(),
+        pool: Mutex::new(BktPool {
+            state: BucketedState::new(program, n_threads, PlacementPolicy::LeastLoaded),
+            parked: 0,
+            done: false,
+            failure: None,
+        }),
+        cv: Condvar::new(),
+        trace: Mutex::new(ScheduleTrace::default()),
+    });
+
+    let (coord_tx, coord_rx) = mpsc::channel::<CoordinatorMessage>();
+    let t0 = crate::util::now_ns();
+    std::thread::scope(|scope| {
+        for w in 0..n_threads {
+            let shared = Arc::clone(&shared);
+            let tx = coord_tx.clone();
+            scope.spawn(move || bucketed_worker(&shared, WorkerId(w as u32), n_threads, &tx));
+        }
+        drop(coord_tx); // coordinator's recv ends when every worker exits
+        // the coordinator: this thread, mmtk-style
+        while let Ok(msg) = coord_rx.recv() {
+            match msg {
+                CoordinatorMessage::Work => {} // workers notify the condvar directly
+                CoordinatorMessage::BucketDrained(f) => {
+                    crate::log_trace!("smp", "family {f} leaf bucket drained");
+                }
+                CoordinatorMessage::AllWorkerParked => {
+                    let mut pool = shared.pool.lock().unwrap();
+                    if pool.failure.is_some() {
+                        drop(pool);
+                        shared.cv.notify_all();
+                        break;
+                    }
+                    if pool.state.is_done() {
+                        pool.done = true;
+                        drop(pool);
+                        shared.cv.notify_all();
+                        break;
+                    }
+                    if pool.state.n_ready() > 0 {
+                        // work raced in just as the last worker parked
+                        drop(pool);
+                        shared.cv.notify_all();
+                        continue;
+                    }
+                    pool.failure = Some(format!(
+                        "bucketed scheduler stalled: {}/{} tasks complete, nothing ready",
+                        pool.state.completed(),
+                        n
+                    ));
+                    drop(pool);
+                    shared.cv.notify_all();
+                    break;
+                }
+            }
+        }
+        // coordinator done: make sure no worker stays parked
+        {
+            let mut pool = shared.pool.lock().unwrap();
+            if pool.failure.is_none() {
+                pool.done = true;
+            }
+        }
+        shared.cv.notify_all();
+    });
+    let wall = crate::util::now_ns() - t0;
+
+    if let Some(err) = shared.pool.lock().unwrap().failure.take() {
+        return Err(anyhow::anyhow!(err)).context("bucketed SMP worker failed");
+    }
+    let outputs = collect_outputs(program, &shared.values)?;
+    let mut trace = std::mem::take(&mut *shared.trace.lock().unwrap());
+    trace.wall_ns = wall;
+    Ok(RunResult { outputs, trace })
+}
+
+struct BktShared {
+    program: TaskProgram,
+    executor: Arc<dyn Executor>,
+    cache: Option<Arc<ResultCache>>,
+    values: Vec<Mutex<Option<Vec<Value>>>>,
+    pool: Mutex<BktPool>,
+    cv: Condvar,
+    trace: Mutex<ScheduleTrace>,
+}
+
+struct BktPool {
+    state: BucketedState,
+    parked: usize,
+    done: bool,
+    failure: Option<String>,
+}
+
+fn bucketed_worker(
+    sh: &BktShared,
+    me: WorkerId,
+    n_threads: usize,
+    coord: &mpsc::Sender<CoordinatorMessage>,
+) {
+    loop {
+        // claim work under the pool lock: a gang slice of the draining
+        // family's leaves (stolen as a unit), or one best open task
+        let gang: Vec<TaskId> = {
+            let mut pool = sh.pool.lock().unwrap();
+            loop {
+                if pool.done || pool.failure.is_some() {
+                    return;
+                }
+                let family = pool.state.draining_family();
+                let mut g = Vec::new();
+                if family.is_some() {
+                    // split the bucket across the pool; never take it all
+                    // unless we are the only thread
+                    let slice = (pool.state.n_ready() / n_threads).max(1);
+                    while g.len() < slice && pool.state.draining_family() == family {
+                        match pool.state.assign_to(&sh.program, me) {
+                            Some(t) => g.push(t),
+                            None => break,
+                        }
+                    }
+                    if pool.state.draining_family() != family {
+                        if let Some(f) = family {
+                            let _ = coord.send(CoordinatorMessage::BucketDrained(f));
+                        }
+                    }
+                } else if let Some(t) = pool.state.assign_to(&sh.program, me) {
+                    g.push(t);
+                }
+                if !g.is_empty() {
+                    break g;
+                }
+                // nothing ready: park until a completer signals
+                pool.parked += 1;
+                if pool.parked == n_threads {
+                    let _ = coord.send(CoordinatorMessage::AllWorkerParked);
+                }
+                pool = sh.cv.wait(pool).unwrap();
+                pool.parked -= 1;
+            }
+        };
+        for t in gang {
+            if let Err(e) = run_bucketed_task(sh, me, t, coord) {
+                let mut pool = sh.pool.lock().unwrap();
+                pool.failure = Some(format!("{e:#}"));
+                drop(pool);
+                sh.cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+fn run_bucketed_task(
+    sh: &BktShared,
+    me: WorkerId,
+    tid: TaskId,
+    coord: &mpsc::Sender<CoordinatorMessage>,
+) -> Result<()> {
+    let spec = sh.program.task(tid);
+    let mut args = Vec::with_capacity(spec.args.len());
+    for a in &spec.args {
+        match a {
+            ArgRef::Const(v) => args.push(v.clone()),
+            ArgRef::Output { task, index } => {
+                let slot = sh.values[task.index()].lock().unwrap();
+                let outs = slot
+                    .as_ref()
+                    .with_context(|| format!("{tid} scheduled before {task} finished"))?;
+                args.push(outs[*index].clone());
+            }
+        }
+    }
+    let mut hit = false;
+    let outs = match sh.cache.as_ref().and_then(|c| c.lookup(spec, &args)) {
+        Some(outs) => {
+            hit = true;
+            outs
+        }
+        None => {
+            if let Some(cache) = &sh.cache {
+                if cache.cacheable(spec) {
+                    sh.trace.lock().unwrap().cache_misses += 1;
+                }
+            }
+            let start = crate::util::now_ns();
+            let outs = sh
+                .executor
+                .execute(&spec.op, &args)
+                .with_context(|| format!("executing {tid} ({})", spec.op.label()))?;
+            let end = crate::util::now_ns();
+            anyhow::ensure!(
+                outs.len() >= spec.n_outputs,
+                "{tid} produced {} outputs, expected {}",
+                outs.len(),
+                spec.n_outputs
+            );
+            if let Some(cache) = &sh.cache {
+                cache.insert(spec, &args, &outs);
+            }
+            sh.trace.lock().unwrap().push(TraceEvent {
+                task: tid,
+                worker: me,
+                start_ns: start,
+                end_ns: end,
+            });
+            outs
+        }
+    };
+    if hit {
+        sh.trace.lock().unwrap().record_cache_hit(tid);
+    }
+    *sh.values[tid.index()].lock().unwrap() = Some(outs);
+    // release consumers through the shared bucket state
+    let newly = {
+        let mut pool = sh.pool.lock().unwrap();
+        pool.state.on_done(&sh.program, tid, me)
+    };
+    if !newly.is_empty() {
+        let _ = coord.send(CoordinatorMessage::Work);
+        sh.cv.notify_all();
+    }
+    Ok(())
 }
 
 struct Shared {
@@ -357,6 +621,76 @@ mod tests {
         let p = b.build().unwrap();
         let err = run_smp(&p, Arc::new(SyntheticExecutor), 2).unwrap_err();
         assert!(format!("{err:#}").contains("synthetic executor"), "{err:#}");
+    }
+
+    #[test]
+    fn bucketed_pool_runs_fan_and_chain() {
+        let p = fan_program(16, 100);
+        let r = run_smp_bucketed(&p, Arc::new(SyntheticExecutor), 4).unwrap();
+        r.trace.validate(&p).unwrap();
+        assert_eq!(r.trace.events.len(), 16);
+
+        let mut b = ProgramBuilder::new();
+        let mut prev = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[], "t0");
+        for i in 1..32 {
+            prev = b.push_simple(OpKind::Synthetic { compute_us: 1 }, &[prev], &format!("t{i}"));
+        }
+        let p = b.build().unwrap();
+        let r = run_smp_bucketed(&p, Arc::new(SyntheticExecutor), 4).unwrap();
+        r.trace.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn bucketed_pool_matches_deque_pool_bitwise() {
+        let p = crate::workload::matrix_program(3, 24, false, None);
+        let greedy = run_smp(&p, Arc::new(HostExecutor), 3).unwrap();
+        let bucketed = run_smp_bucketed(&p, Arc::new(HostExecutor), 3).unwrap();
+        bucketed.trace.validate(&p).unwrap();
+        assert_eq!(greedy.outputs, bucketed.outputs);
+    }
+
+    #[test]
+    fn bucketed_pool_gangs_partitioned_programs() {
+        let base = crate::workload::matmul_round_program(64);
+        let part =
+            crate::partition::partition_program(&base, &crate::partition::PartitionConfig::aggressive(4))
+                .unwrap()
+                .program;
+        let solo = run_smp(&base, Arc::new(HostExecutor), 2).unwrap();
+        let r = run_smp_bucketed(&part, Arc::new(HostExecutor), 2).unwrap();
+        r.trace.validate(&part).unwrap();
+        assert_eq!(solo.outputs, r.outputs, "gang scheduling preserves results");
+    }
+
+    #[test]
+    fn bucketed_pool_single_thread_works() {
+        let p = fan_program(4, 10);
+        let r = run_smp_bucketed(&p, Arc::new(SyntheticExecutor), 1).unwrap();
+        r.trace.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn bucketed_pool_propagates_executor_errors() {
+        let mut b = ProgramBuilder::new();
+        b.push_simple(OpKind::HostMatMul, &[], "bad"); // no args -> error
+        let p = b.build().unwrap();
+        let err = run_smp_bucketed(&p, Arc::new(SyntheticExecutor), 2).unwrap_err();
+        assert!(format!("{err:#}").contains("synthetic executor"), "{err:#}");
+    }
+
+    #[test]
+    fn bucketed_pool_warm_cache_executes_nothing() {
+        let p = crate::workload::matrix_program(2, 12, false, None);
+        let cache = crate::cache::ResultCache::new_enabled();
+        let r1 =
+            run_smp_bucketed_cached(&p, Arc::new(HostExecutor), 3, Some(Arc::clone(&cache)))
+                .unwrap();
+        r1.trace.validate(&p).unwrap();
+        let r2 = run_smp_bucketed_cached(&p, Arc::new(HostExecutor), 3, Some(cache)).unwrap();
+        r2.trace.validate(&p).unwrap();
+        assert_eq!(r1.outputs, r2.outputs);
+        assert_eq!(r2.trace.executed_tasks(), 0);
+        assert_eq!(r2.trace.cache_hits as usize, p.len());
     }
 
     /// Determinism of *results* (not schedules): same program, same

@@ -6,17 +6,23 @@
 //! * [`policy`] — placement (which worker gets a ready task) and stealing
 //!   (which victim an idle worker raids) policies, swept by Ablation A/B;
 //! * [`greedy`] — engine-agnostic greedy scheduler state machine shared by
-//!   the cluster leader and the discrete-event simulator;
+//!   the cluster leader and the discrete-event simulator (the
+//!   `--scheduler greedy` baseline);
+//! * [`bucket`] — the default bucketed scheduler: priority work buckets
+//!   with family gang-scheduling and leaf→combine phase ordering, plus
+//!   the [`SchedulerState`] wrapper every driver holds;
 //! * [`local`] — shared-memory work-stealing pool (the GHC `-N` SMP
-//!   baseline of Figure 2);
+//!   baseline of Figure 2) and its bucketed condvar-parking sibling;
 //! * [`trace`] — schedule traces, validity checking, utilization, Gantt.
 
+pub mod bucket;
 pub mod deque;
 pub mod greedy;
 pub mod local;
 pub mod policy;
 pub mod trace;
 
+pub use bucket::{BucketedState, CoordinatorMessage, SchedulerKind, SchedulerState};
 pub use greedy::GreedyState;
 pub use policy::{PlacementPolicy, StealPolicy};
 pub use trace::{EvictionEvent, RunResult, ScheduleTrace, TraceEvent};

@@ -48,7 +48,7 @@ use crate::ir::task::{ArgRef, TaskId, Value};
 use crate::ir::TaskProgram;
 use crate::metrics::{Histogram, Table};
 use crate::scheduler::trace::TraceEvent;
-use crate::scheduler::WorkerId;
+use crate::scheduler::{SchedulerKind, WorkerId};
 use crate::tasks::Executor;
 use crate::util::now_ns;
 use crate::{log_debug, log_info, log_warn};
@@ -73,6 +73,9 @@ pub struct ServeConfig {
     /// Membership lease (0 = disabled): silent workers are expired and
     /// their in-flight tasks re-queued, exactly like the cluster leader.
     pub lease: Duration,
+    /// Turn-execution order: bucketed (default) drains a session's shard
+    /// families as gangs during its quantum; greedy keeps plain FIFO.
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +87,7 @@ impl Default for ServeConfig {
             pipeline_depth: 2,
             use_cached_args: true,
             lease: Duration::ZERO,
+            scheduler: SchedulerKind::default(),
         }
     }
 }
@@ -522,10 +526,24 @@ impl Coordinator {
         let sid = sess.id;
         sess.t_admit_ns = now;
         sess.state = SessionState::Idle;
-        sess.base = self.next_global;
-        self.next_global = self
-            .next_global
-            .wrapping_add(sess.program.len().max(1) as u32);
+        let len = sess.program.len().max(1) as u32;
+        // Wire-id ranges live in one wrapping u32 space; on a long-lived
+        // plane the cursor laps it, so skip candidate bases that would
+        // overlap a still-active session's range (two ranges [a,a+la) and
+        // [b,b+lb) mod 2^32 overlap iff b-a < la or a-b < lb, wrapping).
+        let mut base = self.next_global;
+        for _ in 0..=self.sessions.len() {
+            let conflict = self.sessions.values().find(|s| {
+                let sl = s.program.len().max(1) as u32;
+                base.wrapping_sub(s.base) < sl || s.base.wrapping_sub(base) < len
+            });
+            match conflict {
+                Some(s) => base = s.base.wrapping_add(s.program.len().max(1) as u32),
+                None => break,
+            }
+        }
+        sess.base = base;
+        self.next_global = base.wrapping_add(len);
         self.stats
             .admit_wait
             .record_ns(now.saturating_sub(sess.t_submit_ns));
@@ -577,7 +595,18 @@ impl Coordinator {
     }
 
     fn on_task_done(&mut self, w: usize, g: u32, outputs: Vec<Value>, compute_ns: u64) {
+        // The worker finished *something*, so its pipeline slot frees
+        // regardless of whether the result is still wanted.
         self.load[w] = self.load[w].saturating_sub(1);
+        // Attribution guard: accept the result only from the worker this
+        // wire id is currently dispatched to. A stale TaskDone — e.g. a
+        // result that raced past its session's quantum expiry or failure
+        // after the wire id was re-issued to a newer session — must not
+        // touch the current owner's bookkeeping or land in its trace.
+        if self.dispatched_to.get(&g) != Some(&w) {
+            log_debug!("serve", "dropping stale result for wire id {g} from worker {w}");
+            return;
+        }
         let assign_t = self.assigned_at.remove(&g).unwrap_or(0);
         self.dispatched_to.remove(&g);
         let Some((sid, local)) = self.task_owner.remove(&g) else {
@@ -745,7 +774,11 @@ impl Coordinator {
             let Some(sid) = self.turn_session() else { return };
             let local = {
                 let sess = self.sessions.get_mut(&sid).expect("turn session exists");
-                sess.pop_ready().expect("turn session has ready work")
+                match self.cfg.scheduler {
+                    SchedulerKind::Bucketed => sess.pop_ready_bucketed(),
+                    SchedulerKind::Greedy => sess.pop_ready(),
+                }
+                .expect("turn session has ready work")
             };
             self.dispatch(sid, local, w);
         }

@@ -22,7 +22,7 @@ use std::sync::mpsc;
 
 use anyhow::{Context, Result};
 
-use crate::ir::task::{ArgRef, TaskId, Value};
+use crate::ir::task::{ArgRef, ShardRole, TaskId, Value};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::ScheduleTrace;
 
@@ -105,6 +105,9 @@ pub(crate) struct Session {
     deps_left: Vec<usize>,
     /// Session-local FIFO of ready (dispatchable) tasks.
     ready: VecDeque<TaskId>,
+    /// Shard family currently being gang-drained by the bucketed pop
+    /// (sticky until the family has no ready members left).
+    draining: Option<u32>,
     values: Vec<Option<Vec<Value>>>,
     /// Tasks without a committed value yet.
     remaining: usize,
@@ -134,6 +137,7 @@ impl Session {
             base: 0,
             deps_left,
             ready: VecDeque::new(),
+            draining: None,
             values: vec![None; n],
             remaining: n,
             inflight: 0,
@@ -147,7 +151,8 @@ impl Session {
     }
 
     pub fn global(&self, local: TaskId) -> u32 {
-        self.base + local.0
+        // wire ids share one wrapping u32 space across the plane lifetime
+        self.base.wrapping_add(local.0)
     }
 
     pub fn has_ready(&self) -> bool {
@@ -165,6 +170,40 @@ impl Session {
     }
 
     pub fn pop_ready(&mut self) -> Option<TaskId> {
+        self.ready.pop_front()
+    }
+
+    /// The shard family of `t` when it is a gang-eligible leaf.
+    fn leaf_family(&self, t: TaskId) -> Option<u32> {
+        self.program
+            .task(t)
+            .shard
+            .as_ref()
+            .filter(|s| s.role == ShardRole::Leaf)
+            .map(|s| s.family)
+    }
+
+    /// Bucketed pop: drain one shard family's leaves back-to-back before
+    /// touching the next, so a session's turn dispatches gangs the way
+    /// the cluster's bucketed scheduler does. The draining family is
+    /// sticky until it has no ready members; unannotated tasks keep the
+    /// plain FIFO order.
+    pub fn pop_ready_bucketed(&mut self) -> Option<TaskId> {
+        if let Some(f) = self.draining {
+            if let Some(pos) = self.ready.iter().position(|t| self.leaf_family(*t) == Some(f)) {
+                return self.ready.remove(pos);
+            }
+            self.draining = None;
+        }
+        if let Some(f) = self.ready.iter().find_map(|t| self.leaf_family(*t)) {
+            self.draining = Some(f);
+            let pos = self
+                .ready
+                .iter()
+                .position(|t| self.leaf_family(*t) == Some(f))
+                .expect("family was found in the ready queue");
+            return self.ready.remove(pos);
+        }
         self.ready.pop_front()
     }
 
@@ -266,5 +305,61 @@ impl Session {
     /// Deliver a failure to the submitter.
     pub fn fail(self, error: anyhow::Error) {
         let _ = self.reply.send(Err(error.context(format!("session {}", self.id))));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn session_for(p: TaskProgram) -> Session {
+        let (tx, _rx) = mpsc::channel();
+        Session::new(SessionId(1), p, tx, 0)
+    }
+
+    #[test]
+    fn global_ids_wrap_instead_of_overflowing() {
+        let mut s = session_for(crate::workload::matrix_program(1, 4, false, None));
+        s.base = u32::MAX - 1;
+        assert_eq!(s.global(TaskId(3)), 1);
+    }
+
+    #[test]
+    fn bucketed_pop_drains_one_family_before_the_next() {
+        let p = crate::workload::sharded_matrix_program(2, 16, 2);
+        let mut fams: BTreeMap<u32, Vec<TaskId>> = BTreeMap::new();
+        for t in p.tasks() {
+            if let Some(sh) = &t.shard {
+                if sh.role == ShardRole::Leaf {
+                    fams.entry(sh.family).or_default().push(t.id);
+                }
+            }
+        }
+        assert!(fams.len() >= 2, "two rounds must shard into >=2 families");
+        let mut it = fams.into_iter();
+        let (_, la) = it.next().unwrap();
+        let (_, lb) = it.next().unwrap();
+        let mut s = session_for(p);
+        // interleave the two families in the ready queue
+        s.push_ready(la[0]);
+        s.push_ready(lb[0]);
+        s.push_ready(la[1]);
+        s.push_ready(lb[1]);
+        let order: Vec<TaskId> = std::iter::from_fn(|| s.pop_ready_bucketed()).collect();
+        assert_eq!(order, vec![la[0], la[1], lb[0], lb[1]]);
+    }
+
+    #[test]
+    fn bucketed_pop_falls_back_to_fifo_when_unannotated() {
+        let p = crate::workload::matrix_program(2, 8, false, None);
+        let mut s = session_for(p);
+        s.push_ready(TaskId(0));
+        s.push_ready(TaskId(4));
+        s.push_ready(TaskId(1));
+        assert_eq!(s.pop_ready_bucketed(), Some(TaskId(0)));
+        assert_eq!(s.pop_ready_bucketed(), Some(TaskId(4)));
+        assert_eq!(s.pop_ready_bucketed(), Some(TaskId(1)));
+        assert_eq!(s.pop_ready_bucketed(), None);
     }
 }

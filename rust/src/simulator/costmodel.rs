@@ -35,6 +35,13 @@ pub struct CostModel {
     pub latency_ns: u64,
     /// Leader dispatch overhead per assignment (ns).
     pub dispatch_ns: u64,
+    /// Dispatch overhead for the 2nd..Nth leaf of a gang batch (ns):
+    /// when the bucketed scheduler drains one shard family's bucket
+    /// back-to-back, the leader amortizes argument prep and send setup
+    /// across the batch, so only the first leaf pays the full
+    /// `dispatch_ns`. Must be ≤ `dispatch_ns`; the greedy scheduler
+    /// never batches and never uses this.
+    pub gang_dispatch_ns: u64,
     /// Modeled warm-cache behaviour: probability in [0, 1] that a *pure*
     /// task is served from the leader's result cache instead of executing
     /// (Figure-2-style sweeps over warm-cache serving). 0 = cold cache.
@@ -56,6 +63,7 @@ impl Default for CostModel {
             membw_bytes_per_ns: 10.0,
             latency_ns: 50_000,  // 50 µs per message
             dispatch_ns: 5_000,  // 5 µs leader overhead
+            gang_dispatch_ns: 1_250, // amortized follow-up leaf in a gang batch
             cache_hit_rate: 0.0, // cold cache unless a sweep models warmth
             cache_serve_ns: 2_000,
         }
@@ -123,6 +131,7 @@ impl CostModel {
             ("membw_bytes_per_ns", Json::num(self.membw_bytes_per_ns)),
             ("latency_ns", Json::num(self.latency_ns as f64)),
             ("dispatch_ns", Json::num(self.dispatch_ns as f64)),
+            ("gang_dispatch_ns", Json::num(self.gang_dispatch_ns as f64)),
             ("cache_hit_rate", Json::num(self.cache_hit_rate)),
             ("cache_serve_ns", Json::num(self.cache_serve_ns as f64)),
             ("measured_ns", Json::Obj(
@@ -147,6 +156,10 @@ impl CostModel {
                 .unwrap_or(10.0),
             latency_ns: j.get("latency_ns").and_then(Json::as_u64).unwrap_or(50_000),
             dispatch_ns: j.get("dispatch_ns").and_then(Json::as_u64).unwrap_or(5_000),
+            gang_dispatch_ns: j
+                .get("gang_dispatch_ns")
+                .and_then(Json::as_u64)
+                .unwrap_or(1_250),
             cache_hit_rate: j
                 .get("cache_hit_rate")
                 .and_then(Json::as_f64)
@@ -249,6 +262,7 @@ mod tests {
         cm.membw_bytes_per_ns = 12.5;
         cm.cache_hit_rate = 0.25;
         cm.cache_serve_ns = 3_000;
+        cm.gang_dispatch_ns = 900;
         let j = cm.to_json();
         let back = CostModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.measured("matmul_256"), Some(42_000));
@@ -256,6 +270,17 @@ mod tests {
         assert_eq!(back.membw_bytes_per_ns, 12.5);
         assert_eq!(back.cache_hit_rate, 0.25);
         assert_eq!(back.cache_serve_ns, 3_000);
+        assert_eq!(back.gang_dispatch_ns, 900);
+    }
+
+    #[test]
+    fn gang_dispatch_defaults_cheaper_and_survives_old_json() {
+        let cm = CostModel::default();
+        assert!(cm.gang_dispatch_ns < cm.dispatch_ns);
+        // pre-gang snapshots (no gang_dispatch_ns key) still load
+        let old = Json::parse(r#"{"version":1,"dispatch_ns":5000}"#).unwrap();
+        let back = CostModel::from_json(&old).unwrap();
+        assert_eq!(back.gang_dispatch_ns, 1_250);
     }
 
     #[test]

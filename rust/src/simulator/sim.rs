@@ -1,11 +1,13 @@
 //! The discrete-event simulation proper.
 //!
-//! Drives the *same* [`GreedyState`] the real leader uses, but over
-//! virtual time:
+//! Drives the *same* [`SchedulerState`] the real leader uses (bucketed by
+//! default, `--scheduler greedy` for the baseline), but over virtual time:
 //!
-//! * assignment: leader pays `dispatch_ns`, then the task's non-local
-//!   argument bytes travel at the network rate; the task arrives in the
-//!   worker's FIFO queue;
+//! * assignment: leader pays `dispatch_ns` — or the discounted
+//!   `gang_dispatch_ns` for the 2nd..Nth consecutive leaf of a shard
+//!   family when the bucketed scheduler drains a gang batch — then the
+//!   task's non-local argument bytes travel at the network rate; the
+//!   task arrives in the worker's FIFO queue;
 //! * compute: workers are serial servers — `start = max(free_at, arrive)`,
 //!   `end = start + cost(task)`;
 //! * completion: output bytes travel back; only then does the leader see
@@ -21,10 +23,10 @@ use std::collections::{BinaryHeap, HashSet};
 use anyhow::Result;
 
 use crate::fault::FaultPlan;
-use crate::ir::task::TaskId;
+use crate::ir::task::{ShardRole, TaskId};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::{LeaseKind, ScheduleTrace, TraceEvent};
-use crate::scheduler::{GreedyState, PlacementPolicy, WorkerId};
+use crate::scheduler::{PlacementPolicy, SchedulerKind, SchedulerState, WorkerId};
 use crate::util::rng::Rng;
 
 use super::costmodel::CostModel;
@@ -37,6 +39,12 @@ pub struct SimConfig {
     pub pipeline_depth: usize,
     /// Shared-memory mode: no dispatch/network costs.
     pub transfer_free: bool,
+    /// Which scheduler state machine drives the virtual leader. Bucketed
+    /// (the default) drains shard-family leaf buckets back-to-back, and
+    /// the leader amortizes dispatch overhead across such a gang batch
+    /// (`CostModel::gang_dispatch_ns`); greedy re-enters placement per
+    /// task and always pays the full `dispatch_ns`.
+    pub scheduler: SchedulerKind,
 }
 
 impl SimConfig {
@@ -46,6 +54,7 @@ impl SimConfig {
             placement: PlacementPolicy::LeastLoaded,
             pipeline_depth: 2,
             transfer_free: false,
+            scheduler: SchedulerKind::default(),
         }
     }
 
@@ -55,12 +64,24 @@ impl SimConfig {
             placement: PlacementPolicy::LeastLoaded,
             pipeline_depth: 2,
             transfer_free: true,
+            scheduler: SchedulerKind::default(),
         }
     }
 
     pub fn single() -> SimConfig {
         SimConfig::smp(1)
     }
+}
+
+/// The shard family of a leaf task (gang-dispatch discount eligibility);
+/// combines and unannotated tasks never gang.
+fn leaf_family(program: &TaskProgram, t: TaskId) -> Option<u32> {
+    program
+        .task(t)
+        .shard
+        .as_ref()
+        .filter(|s| s.role == ShardRole::Leaf)
+        .map(|s| s.family)
 }
 
 /// Simulation outcome.
@@ -108,7 +129,7 @@ impl PartialOrd for QEv {
 /// Run the simulation; deterministic for a given (program, config, model).
 pub fn simulate(program: &TaskProgram, cm: &CostModel, cfg: &SimConfig) -> Result<SimResult> {
     anyhow::ensure!(cfg.n_workers >= 1, "need at least one worker");
-    let mut state = GreedyState::new(program, cfg.n_workers, cfg.placement);
+    let mut state = SchedulerState::new(cfg.scheduler, program, cfg.n_workers, cfg.placement);
     let mut heap: BinaryHeap<QEv> = BinaryHeap::new();
     let mut seq = 0u64;
     let mut now = 0u64;
@@ -219,7 +240,7 @@ fn pump(
     program: &TaskProgram,
     cm: &CostModel,
     cfg: &SimConfig,
-    state: &mut GreedyState,
+    state: &mut SchedulerState,
     inflight: &mut [usize],
     now: u64,
     heap: &mut BinaryHeap<QEv>,
@@ -228,6 +249,11 @@ fn pump(
     hits: &HashSet<TaskId>,
 ) {
     let mut dispatch_t = now;
+    // Consecutive leaves of the same shard family in one dispatch batch
+    // form a gang: the 2nd..Nth ride the discounted `gang_dispatch_ns`.
+    // Only the bucketed scheduler drains families back-to-back on
+    // purpose; greedy pays full freight as the honest baseline.
+    let mut last_family: Option<u32> = None;
     loop {
         let has_capacity = (0..cfg.n_workers).any(|w| inflight[w] < cfg.pipeline_depth);
         if !has_capacity || state.n_ready() == 0 {
@@ -266,7 +292,17 @@ fn pump(
         let arrive = if cfg.transfer_free {
             dispatch_t
         } else {
-            dispatch_t += cm.dispatch_ns; // leader serializes dispatches
+            // leader serializes dispatches; gang batches amortize
+            let fam = leaf_family(program, task);
+            dispatch_t += if cfg.scheduler == SchedulerKind::Bucketed
+                && fam.is_some()
+                && fam == last_family
+            {
+                cm.gang_dispatch_ns
+            } else {
+                cm.dispatch_ns
+            };
+            last_family = fam;
             let spec = program.task(task);
             let mut wire_bytes = 0u64;
             for a in &spec.args {
@@ -346,7 +382,7 @@ struct ChurnSim<'a> {
     cfg: &'a SimConfig,
     plan: &'a FaultPlan,
     lease_ns: u64,
-    state: GreedyState,
+    state: SchedulerState,
     heap: BinaryHeap<FQEv>,
     seq: u64,
     free_at: Vec<u64>,
@@ -426,6 +462,9 @@ impl<'a> ChurnSim<'a> {
     /// work is recovered at expiry.
     fn pump(&mut self, now: u64) {
         let mut dispatch_t = now;
+        // Same gang-batch accounting as the fault-free `pump` — churn with
+        // an empty plan must reproduce the plain simulation exactly.
+        let mut last_family: Option<u32> = None;
         loop {
             let usable: Vec<bool> = (0..self.n_workers())
                 .map(|w| !self.dead[w] && self.inflight[w] < self.cfg.pipeline_depth)
@@ -459,7 +498,16 @@ impl<'a> ChurnSim<'a> {
             let arrive = if self.cfg.transfer_free {
                 dispatch_t
             } else {
-                dispatch_t += self.cm.dispatch_ns;
+                let fam = leaf_family(self.program, task);
+                dispatch_t += if self.cfg.scheduler == SchedulerKind::Bucketed
+                    && fam.is_some()
+                    && fam == last_family
+                {
+                    self.cm.gang_dispatch_ns
+                } else {
+                    self.cm.dispatch_ns
+                };
+                last_family = fam;
                 let spec = self.program.task(task);
                 let mut wire_bytes = 0u64;
                 for a in &spec.args {
@@ -528,7 +576,7 @@ pub fn simulate_with_faults(
         cfg,
         plan,
         lease_ns,
-        state: GreedyState::new(program, n0, cfg.placement),
+        state: SchedulerState::new(cfg.scheduler, program, n0, cfg.placement),
         heap: BinaryHeap::new(),
         seq: 0,
         free_at: vec![0; n0],
@@ -873,6 +921,39 @@ mod tests {
         let cm = CostModel::default();
         let r = simulate(&p, &cm, &SimConfig::cluster(2)).unwrap();
         assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+    }
+
+    #[test]
+    fn bucketed_gang_dispatch_lowers_partitioned_makespan() {
+        let base = crate::workload::matmul_round_program(128);
+        let part = crate::partition::partition_program(
+            &base,
+            &crate::partition::PartitionConfig::aggressive(4),
+        )
+        .unwrap()
+        .program;
+        let cm = CostModel::default();
+        let bucketed = SimConfig::cluster(8);
+        let greedy = SimConfig {
+            scheduler: SchedulerKind::Greedy,
+            ..SimConfig::cluster(8)
+        };
+        let rb = simulate(&part, &cm, &bucketed).unwrap();
+        let rg = simulate(&part, &cm, &greedy).unwrap();
+        rb.trace.validate(&part).unwrap();
+        rg.trace.validate(&part).unwrap();
+        assert!(
+            rb.makespan_ns < rg.makespan_ns,
+            "gang batches must amortize dispatch: bucketed {} vs greedy {}",
+            rb.makespan_ns,
+            rg.makespan_ns
+        );
+
+        // unannotated programs have no families: both schedulers agree exactly
+        let p = rounds_program(8, 64);
+        let mb = simulate(&p, &cm, &bucketed).unwrap().makespan_ns;
+        let mg = simulate(&p, &cm, &greedy).unwrap().makespan_ns;
+        assert_eq!(mb, mg);
     }
 
     #[test]

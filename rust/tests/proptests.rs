@@ -10,7 +10,10 @@
 //! 5. graph analysis: span ≤ work, Brent bound monotone in workers;
 //! 6. result cache: keys are stable under reordering-invariant
 //!    canonicalization, the LRU never exceeds its capacity, and a cached
-//!    run is bit-identical to an uncached run on random programs.
+//!    run is bit-identical to an uncached run on random programs;
+//! 7. scheduler determinism: greedy and bucketed state machines replay
+//!    the exact same assignment sequence on the same program — ties break
+//!    on task id, never on hash or seed state.
 
 use std::sync::Arc;
 
@@ -546,6 +549,65 @@ fn prop_deque_never_loses_elements_single_thief() {
             matches!(d.steal(), Steal::Empty) && got == pushed,
             &format!("pushed {pushed} == consumed {got}"),
         )
+    });
+}
+
+#[test]
+fn prop_scheduler_assignment_sequence_is_deterministic() {
+    use parhask::scheduler::{PlacementPolicy, SchedulerKind, SchedulerState};
+
+    qcheck_seeded(0x71EB, 40, |d: &AnyDag| {
+        let p = &d.0;
+        // Drain-then-complete in lockstep: the ready set is frozen during
+        // each drain, so pops must come out in strict priority order and
+        // two drives of the same program must agree exactly.
+        let drive = |kind: SchedulerKind| -> Result<Vec<(u32, u32)>, String> {
+            let mut s = SchedulerState::new(kind, p, 3, PlacementPolicy::LeastLoaded);
+            let mut seq = Vec::new();
+            while !s.is_done() {
+                let mut batch = Vec::new();
+                while let Some((t, w)) = s.assign_next(p) {
+                    batch.push((t, w));
+                }
+                if batch.is_empty() {
+                    return Err(format!(
+                        "{} stalled with {} tasks unfinished",
+                        kind.name(),
+                        p.len() - s.completed()
+                    ));
+                }
+                if kind == SchedulerKind::Greedy {
+                    for pair in batch.windows(2) {
+                        let (ca, cb) =
+                            (p.task(pair[0].0).est.flops, p.task(pair[1].0).est.flops);
+                        prop(
+                            ca > cb || (ca == cb && pair[0].0 .0 < pair[1].0 .0),
+                            &format!(
+                                "greedy pops cost-descending with id ascending on ties, \
+                                 got {}({ca}) then {}({cb})",
+                                pair[0].0, pair[1].0
+                            ),
+                        )?;
+                    }
+                }
+                for &(t, w) in &batch {
+                    seq.push((t.0, w.0));
+                }
+                for (t, w) in batch {
+                    s.on_done(p, t, w);
+                }
+            }
+            Ok(seq)
+        };
+        for kind in [SchedulerKind::Greedy, SchedulerKind::Bucketed] {
+            let first = drive(kind)?;
+            let second = drive(kind)?;
+            prop(
+                first == second,
+                &format!("{} assignment sequence replays identically", kind.name()),
+            )?;
+        }
+        Ok(())
     });
 }
 

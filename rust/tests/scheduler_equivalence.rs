@@ -1,0 +1,128 @@
+//! Scheduler equivalence: the bucketed scheduler (the default) must
+//! produce program outputs bit-for-bit identical to the greedy baseline
+//! on every engine — plain programs, partitioned programs, and a cluster
+//! under membership churn. Schedules and makespans may differ (that is
+//! the point of the rebuild); values never do.
+
+use std::sync::Arc;
+
+use parhask::cluster::{run_cluster_churn, ClusterConfig, FaultPlan};
+use parhask::config::RunConfig;
+use parhask::engine::run;
+use parhask::fault::WorkerFaults;
+use parhask::ir::TaskProgram;
+use parhask::scheduler::{RunResult, SchedulerKind, StealPolicy};
+use parhask::tasks::HostExecutor;
+use parhask::util::rng::Rng;
+use parhask::workload::matrix_program;
+
+const ENGINES: [&str; 4] = ["single", "smp:3", "cluster:2", "sim:3"];
+
+fn run_with(p: &TaskProgram, engine: &str, scheduler: &str, partitions: Option<usize>) -> RunResult {
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", engine).unwrap();
+    cfg.set("scheduler", scheduler).unwrap();
+    if let Some(k) = partitions {
+        cfg.set("partitions", &k.to_string()).unwrap();
+        cfg.set("shard_min_bytes", "1").unwrap();
+    }
+    run(p, &cfg, Arc::new(HostExecutor))
+        .unwrap_or_else(|e| panic!("{engine}/{scheduler}: {e:#}"))
+}
+
+#[test]
+fn bucketed_matches_greedy_on_all_four_engines() {
+    let p = matrix_program(3, 12, false, None);
+    for engine in ENGINES {
+        let greedy = run_with(&p, engine, "greedy", None);
+        let bucketed = run_with(&p, engine, "bucketed", None);
+        greedy
+            .trace
+            .validate(&p)
+            .unwrap_or_else(|e| panic!("{engine}/greedy trace: {e:#}"));
+        bucketed
+            .trace
+            .validate(&p)
+            .unwrap_or_else(|e| panic!("{engine}/bucketed trace: {e:#}"));
+        assert_eq!(
+            greedy.outputs, bucketed.outputs,
+            "{engine}: bucketed outputs must be bit-for-bit identical to greedy"
+        );
+        if engine != "sim:3" {
+            assert!(!bucketed.outputs.is_empty(), "{engine}: real engines compute values");
+        }
+    }
+}
+
+#[test]
+fn bucketed_matches_greedy_on_partitioned_programs() {
+    let p = matrix_program(2, 12, false, None);
+    // unsharded greedy run = the ground truth everything must match
+    let reference = run_with(&p, "single", "greedy", None);
+    for engine in ENGINES {
+        let greedy = run_with(&p, engine, "greedy", Some(4));
+        let bucketed = run_with(&p, engine, "bucketed", Some(4));
+        assert_eq!(
+            greedy.outputs, bucketed.outputs,
+            "{engine}: partitioned bucketed == partitioned greedy, bit-for-bit"
+        );
+        if engine != "sim:3" {
+            assert_eq!(
+                reference.outputs, bucketed.outputs,
+                "{engine}: partitioned bucketed == unsharded reference"
+            );
+        }
+        // the sharded plan really ran (more, smaller tasks than the input)
+        assert!(
+            bucketed.trace.events.len() > p.len(),
+            "{engine}: partition rewrite must expand the task graph"
+        );
+    }
+}
+
+#[test]
+fn bucketed_matches_greedy_under_membership_churn() {
+    // A seeded fault plan: deaths, a straggler, and a mid-run joiner.
+    // Worker 2 stays healthy so the cluster never runs dry.
+    let mut rng = Rng::new(0xC4E_55);
+    let faults = vec![
+        WorkerFaults::dies_after(1 + rng.below(3) as usize),
+        WorkerFaults {
+            slow_factor: 1.5 + rng.f64(),
+            ..WorkerFaults::default()
+        },
+        WorkerFaults::default(),
+        WorkerFaults::default(), // the joiner
+    ];
+    let plan = FaultPlan {
+        initial_workers: 3,
+        joins: vec![rng.below(4)],
+        faults,
+        kill_leader_at_step: None,
+    };
+    let p = matrix_program(3, 10, false, None);
+    let reference = run_with(&p, "single", "greedy", None);
+    let cc = |kind: SchedulerKind| ClusterConfig {
+        scheduler: kind,
+        heartbeat: std::time::Duration::from_millis(5),
+        lease: std::time::Duration::from_millis(60),
+        max_failures: 10,
+        steal: StealPolicy::None,
+        ..Default::default()
+    };
+    let greedy = run_cluster_churn(&p, Arc::new(HostExecutor), cc(SchedulerKind::Greedy), &plan, None)
+        .expect("greedy churn run");
+    let bucketed =
+        run_cluster_churn(&p, Arc::new(HostExecutor), cc(SchedulerKind::Bucketed), &plan, None)
+            .expect("bucketed churn run");
+    greedy.trace.validate(&p).expect("greedy churn trace");
+    bucketed.trace.validate(&p).expect("bucketed churn trace");
+    assert_eq!(
+        greedy.outputs, bucketed.outputs,
+        "churn: bucketed == greedy, bit-for-bit"
+    );
+    assert_eq!(
+        reference.outputs, bucketed.outputs,
+        "churn: bucketed == single-engine reference"
+    );
+}

@@ -222,6 +222,123 @@ fn admission_queue_bounds_active_sessions() {
     );
 }
 
+/// Regression: a stale worker result — one racing in after the task's
+/// session lost its quantum / released its wire ids — must be dropped,
+/// not recorded into whatever session currently maps that wire id. The
+/// test plays both pool workers by hand over raw links and injects a
+/// forged `TaskDone` for a wire id that is dispatched to the *other*
+/// worker; the committed value and the trace attribution must both come
+/// from the genuine dispatch target.
+#[test]
+fn stale_result_from_wrong_worker_is_dropped() {
+    use parhask::cluster::transport::{inproc_pair, MsgReceiver, MsgSender};
+    use parhask::cluster::Message;
+
+    // t0 (source) -> t1 (echoes t0's value through our fake worker)
+    let mut b = ProgramBuilder::new();
+    let t0 = b.push(
+        OpKind::Synthetic { compute_us: 0 },
+        vec![ArgRef::const_i32(7)],
+        1,
+        CostEst::ZERO,
+        "t0",
+    );
+    let t1 = b.push(
+        OpKind::Synthetic { compute_us: 0 },
+        vec![ArgRef::out(t0, 0)],
+        1,
+        CostEst::ZERO,
+        "t1",
+    );
+    b.mark_output(ArgRef::out(t1, 0));
+    let program = b.build().expect("chain is well-formed");
+
+    let ((l_tx0, l_rx0), (mut w_tx0, mut w_rx0)) = inproc_pair();
+    let ((l_tx1, l_rx1), (mut w_tx1, _w_rx1)) = inproc_pair();
+    let plane = ServePlane::start_with_links(
+        vec![
+            (Box::new(l_tx0), Box::new(l_rx0)),
+            (Box::new(l_tx1), Box::new(l_rx1)),
+        ],
+        ServeConfig {
+            workers: 2,
+            // inline args so a wrongly-committed t0 would visibly poison
+            // t1's dispatch payload
+            use_cached_args: false,
+            ..ServeConfig::default()
+        },
+        None,
+    )
+    .expect("plane starts");
+    let ticket = plane.submit(program.clone()).expect("submit");
+
+    // worker 0 (least loaded, lowest index) receives t0's assignment
+    let g0 = match w_rx0.recv().expect("assign for t0") {
+        Message::Assign { task, .. } => task,
+        other => panic!("expected Assign, got {}", other.kind()),
+    };
+    assert_eq!(g0, TaskId(0), "first session starts at wire id 0");
+
+    // inject the stale result: alive worker 1 claims t0's wire id even
+    // though the task is dispatched to worker 0
+    w_tx1
+        .send(&Message::TaskDone {
+            task: g0,
+            outputs: vec![Value::scalar_f32(666.0)],
+            compute_ns: 1_000,
+        })
+        .expect("forged send");
+    std::thread::sleep(Duration::from_millis(50));
+
+    // the genuine result from worker 0
+    w_tx0
+        .send(&Message::TaskDone {
+            task: g0,
+            outputs: vec![Value::scalar_f32(42.0)],
+            compute_ns: 1_000,
+        })
+        .expect("genuine send");
+
+    // t1 dispatches with t0's committed value inline; echo it back
+    let (g1, echoed) = match w_rx0.recv().expect("assign for t1") {
+        Message::Assign { task, args, .. } => {
+            let v = match &args[0] {
+                parhask::cluster::ArgSpec::Inline(v) => v.clone(),
+                other => panic!("expected inline arg, got {other:?}"),
+            };
+            (task, v)
+        }
+        other => panic!("expected Assign, got {}", other.kind()),
+    };
+    assert_eq!(g1, TaskId(1));
+    w_tx0
+        .send(&Message::TaskDone {
+            task: g1,
+            outputs: vec![echoed],
+            compute_ns: 1_000,
+        })
+        .expect("t1 send");
+
+    let outcome = ticket.wait().expect("session completes");
+    let got = outcome.outputs[0]
+        .as_tensor()
+        .expect("tensor output")
+        .scalar()
+        .expect("scalar");
+    assert_eq!(got, 42.0, "stale result was committed instead of the genuine one");
+    outcome.trace.validate(&program).expect("trace validates");
+    for ev in &outcome.trace.events {
+        assert_eq!(
+            ev.worker.index(),
+            0,
+            "task {} attributed to worker {} — the forged result leaked into the trace",
+            ev.task,
+            ev.worker
+        );
+    }
+    drop(plane); // fake workers ignore Shutdown; drop just joins the coordinator
+}
+
 #[test]
 fn draining_plane_rejects_new_sessions() {
     let program = compile(1, 8);

@@ -11,10 +11,13 @@ Every numeric leaf in the snapshot schema (see README "Bench snapshots")
 is lower-is-better: nanosecond timings, bytes moved, task counts. A
 metric in the newer snapshot that exceeds the older one by more than
 THRESHOLD (default 10%) is a regression and the script exits non-zero,
-listing every offender. Sweep arrays are matched row-by-row on their
-identity keys ("size", "k") so reordering or adding sweep points never
-produces a false diff; rows present on only one side are reported as
-informational, not failures.
+listing every offender. A zero (or sub-floor) baseline does not grant a
+free pass: a metric that climbs from ~0 to meaningfully above the noise
+floor fails too. A metric that disappears from the newer snapshot is
+also a failure — silently dropping a gauge is how regressions hide.
+Sweep arrays are matched row-by-row on their identity keys ("size",
+"k") so reordering or adding sweep points never produces a false diff;
+sweep rows present on only one side are reported as informational.
 
 With fewer than two snapshots on disk there is nothing to compare: the
 script says so loudly and exits 0, so CI stays green on the first PR
@@ -71,7 +74,10 @@ def compare(old, new, path, threshold, regressions, notes):
             if key not in old:
                 notes.append(f"{here}: new metric (no baseline)")
             elif key not in new:
-                notes.append(f"{here}: metric dropped from snapshot")
+                regressions.append(
+                    f"{here}: metric dropped from snapshot "
+                    f"(baseline was {old[key]!r})"
+                )
             else:
                 compare(old[key], new[key], here, threshold, regressions, notes)
     elif isinstance(old, list) and isinstance(new, list):
@@ -96,10 +102,19 @@ def compare(old, new, path, threshold, regressions, notes):
             for i, (o, n) in enumerate(zip(old, new)):
                 compare(o, n, f"{path}[{i}]", threshold, regressions, notes)
     elif isinstance(old, (int, float)) and isinstance(new, (int, float)):
-        if old >= ABS_FLOOR and new > old * (1.0 + threshold):
-            pct = (new / old - 1.0) * 100.0
+        # Sub-floor baselines are pure timer jitter, so measure growth
+        # against max(old, ABS_FLOOR): a 0.4ns -> 0.9ns wiggle passes,
+        # but 0.0 -> 50.0 is a real regression, not a free pass (and the
+        # old `old >= ABS_FLOOR` guard also dodged dividing by zero by
+        # never flagging zero baselines at all).
+        baseline = max(float(old), ABS_FLOOR)
+        if new > baseline * (1.0 + threshold):
+            if old > 0:
+                delta = f"+{(new / old - 1.0) * 100.0:.1f}%"
+            else:
+                delta = f"+{new - old:.1f} from zero baseline"
             regressions.append(
-                f"{path}: {old:.1f} -> {new:.1f}  (+{pct:.1f}%, limit "
+                f"{path}: {old:.1f} -> {new:.1f}  ({delta}, limit "
                 f"+{threshold * 100:.0f}%)"
             )
     # strings and mixed types: nothing to compare
@@ -155,10 +170,25 @@ def self_test(threshold):
     reordered = json.loads(json.dumps(base))
     reordered["snapshot"] = "prD"
     reordered["sim_partition_sweep"].reverse()
+    # a metric whose baseline is exactly zero, then jumps well past the
+    # noise floor: must fail (the old guard skipped zero baselines)
+    zbase = json.loads(json.dumps(base))
+    zbase["substrate"]["admission_wait_ns"] = 0.0
+    zjump = json.loads(json.dumps(zbase))
+    zjump["snapshot"] = "prE"
+    zjump["substrate"]["admission_wait_ns"] = 50.0
+    # a metric silently vanishing from the newer snapshot: must fail
+    dropped = json.loads(json.dumps(base))
+    dropped["snapshot"] = "prF"
+    del dropped["substrate"]["codec_encode_ns"]
 
     with tempfile.TemporaryDirectory() as d:
         paths = {}
-        for name, doc in [("a", base), ("b", ok), ("c", bad), ("d", reordered)]:
+        docs = [
+            ("a", base), ("b", ok), ("c", bad), ("d", reordered),
+            ("z0", zbase), ("z1", zjump), ("e", dropped),
+        ]
+        for name, doc in docs:
             paths[name] = os.path.join(d, f"BENCH_{name}.json")
             with open(paths[name], "w") as f:
                 json.dump(doc, f)
@@ -167,6 +197,10 @@ def self_test(threshold):
             (paths["a"], paths["c"], 1, ">threshold regression fails"),
             (paths["a"], paths["d"], 0, "row reordering is not a regression"),
             (paths["c"], paths["a"], 0, "improvements always pass"),
+            (paths["z0"], paths["z1"], 1, "zero-baseline jump is a regression"),
+            (paths["z1"], paths["z0"], 0, "returning to zero is fine"),
+            (paths["a"], paths["e"], 1, "dropped metric is a failure"),
+            (paths["e"], paths["a"], 0, "new metric is only a note"),
         ]
         failed = False
         for old_p, new_p, want, what in cases:

@@ -8,7 +8,7 @@
 //! is documented in README.md ("Bench snapshots").
 //!
 //! ```sh
-//! cargo bench --bench bench_snapshot           # writes BENCH_pr9.json
+//! cargo bench --bench bench_snapshot           # writes BENCH_pr10.json
 //! BENCH_OUT=/tmp/b.json cargo bench --bench bench_snapshot
 //! ```
 //!
@@ -99,6 +99,66 @@ fn substrate() -> anyhow::Result<Json> {
         ("deque_push_pop_ns", Json::Num(pp_ns)),
         ("deque_steal_ns", Json::Num(steal_ns)),
         ("cluster_roundtrip_ns_per_task", Json::Num(rt_ns)),
+    ]))
+}
+
+fn kernel() -> anyhow::Result<Json> {
+    use parhask::tensor::KernelKind;
+
+    // the PR-10 raw-speed rows: blocked vs reference microkernel on the
+    // hot matmul shape, and counter-RNG jump-ahead (the last shard of a
+    // big matrix must cost the same as the first — the old sequential
+    // generator walked row0*n draws to reach it)
+    let n = 512usize;
+    let a = Tensor::uniform(vec![n, n], 1);
+    let b = Tensor::uniform(vec![n, n], 2);
+    let reference_ns = bench(2, || {
+        std::hint::black_box(a.matmul_with(&b, KernelKind::Reference).unwrap());
+    });
+    let blocked_ns = bench(2, || {
+        std::hint::black_box(a.matmul_with(&b, KernelKind::Blocked).unwrap());
+    });
+
+    let big = 4096usize;
+    let rows = 64usize;
+    let first_ns = bench(8, || {
+        std::hint::black_box(Tensor::uniform_rows(big, 0, rows, 7));
+    });
+    let last_ns = bench(8, || {
+        std::hint::black_box(Tensor::uniform_rows(big, big - rows, rows, 7));
+    });
+
+    Ok(Json::obj(vec![
+        ("matmul_reference_ns", Json::Num(reference_ns)),
+        ("matmul_blocked_ns", Json::Num(blocked_ns)),
+        ("uniform_rows_first_shard_ns", Json::Num(first_ns)),
+        ("uniform_rows_last_shard_ns", Json::Num(last_ns)),
+    ]))
+}
+
+fn transport_zero_copy() -> anyhow::Result<Json> {
+    use parhask::cluster::transport::{inproc_pair, inproc_pair_codec, MsgReceiver, MsgSender};
+
+    // one shard-sized TaskDone through the in-proc link: the zero-copy
+    // default vs the encode/decode baseline it must stay equivalent to
+    let msg = Message::TaskDone {
+        task: TaskId(7),
+        outputs: vec![Value::tensor(Tensor::uniform(vec![256, 256], 1))],
+        compute_ns: 12345,
+    };
+    let ((mut z_tx, _za), (_zb, mut z_rx)) = inproc_pair();
+    let zero_copy_ns = bench(300, || {
+        z_tx.send(&msg).unwrap();
+        std::hint::black_box(z_rx.recv().unwrap());
+    });
+    let ((mut c_tx, _ca), (_cb, mut c_rx)) = inproc_pair_codec();
+    let codec_ns = bench(300, || {
+        c_tx.send(&msg).unwrap();
+        std::hint::black_box(c_rx.recv().unwrap());
+    });
+    Ok(Json::obj(vec![
+        ("roundtrip_zero_copy_ns", Json::Num(zero_copy_ns)),
+        ("roundtrip_codec_ns", Json::Num(codec_ns)),
     ]))
 }
 
@@ -295,11 +355,13 @@ fn serve_storm() -> anyhow::Result<Json> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr9.json".to_string());
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pr10.json".to_string());
     let report = Json::obj(vec![
         ("schema", Json::str("parhask-bench-snapshot/1")),
-        ("snapshot", Json::str("pr9")),
+        ("snapshot", Json::str("pr10")),
         ("substrate", substrate()?),
+        ("kernel", kernel()?),
+        ("transport_zero_copy", transport_zero_copy()?),
         ("sim_partition_sweep", sim_sweep()?),
         ("cluster_partition_sweep", cluster_sweep()?),
         ("sim_churn", churn_sweep()?),

@@ -7,7 +7,7 @@
 //! picked by key bits, which are uniform).
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::ir::task::Value;
@@ -36,26 +36,41 @@ pub struct InsertOutcome {
     pub inserted: bool,
     pub evicted_entries: u64,
     pub evicted_bytes: u64,
+    /// The entry was refused because caching it would flush an outsized
+    /// fraction of the whole store for one value.
+    pub rejected_oversize: bool,
 }
 
-/// Sharded LRU keyed by [`TaskKey`]. Capacity is enforced per shard at
-/// `total / n_shards` (bytes and entries), which bounds the total exactly
-/// while keeping eviction local to one lock.
+/// Sharded LRU keyed by [`TaskKey`]. The byte budget is the *configured
+/// total*, tracked by a global atomic, so an entry is admissible whenever
+/// it fits a sane fraction of the whole cache — not `total / n_shards`,
+/// which silently refused perfectly cacheable mid-size values on sharded
+/// stores. The entry-count cap stays per shard (it exists to bound map
+/// sizes, and local eviction keeps it one lock); the byte budget is
+/// enforced globally by evicting the globally-oldest entry wherever it
+/// lives, taking shard locks one at a time (never nested, so no ordering
+/// hazard).
 pub struct ShardedLru {
     shards: Vec<Mutex<Shard>>,
     tick: AtomicU64,
-    shard_capacity_bytes: usize,
+    capacity_bytes: usize,
+    /// Largest admissible single entry: half the configured total.
+    oversize_limit_bytes: usize,
     shard_max_entries: usize,
+    total_bytes: AtomicUsize,
 }
 
 impl ShardedLru {
     pub fn new(n_shards: usize, capacity_bytes: usize, max_entries: usize) -> ShardedLru {
         let n = n_shards.max(1);
+        let capacity_bytes = capacity_bytes.max(1);
         ShardedLru {
             shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
             tick: AtomicU64::new(0),
-            shard_capacity_bytes: (capacity_bytes / n).max(1),
+            capacity_bytes,
+            oversize_limit_bytes: (capacity_bytes / 2).max(1),
             shard_max_entries: (max_entries / n).max(1),
+            total_bytes: AtomicUsize::new(0),
         }
     }
 
@@ -80,47 +95,84 @@ impl ShardedLru {
         Some(outputs)
     }
 
-    /// Insert (or refresh) a key, evicting least-recently-used entries
-    /// until the shard fits. An entry larger than a whole shard's byte
-    /// budget is refused rather than allowed to flush everything.
+    /// Insert (or refresh) a key. The shard's entry cap evicts locally;
+    /// the *global* byte budget then evicts the globally-oldest entries,
+    /// whichever shard holds them. An entry larger than half the
+    /// configured total is refused (and reported as `rejected_oversize`)
+    /// rather than allowed to flush most of the cache for one value.
     pub fn insert(&self, key: TaskKey, outputs: Vec<Value>) -> InsertOutcome {
         let bytes: usize = outputs.iter().map(Value::size_bytes).sum();
-        if bytes > self.shard_capacity_bytes {
-            return InsertOutcome::default();
+        if bytes > self.oversize_limit_bytes {
+            return InsertOutcome {
+                rejected_oversize: true,
+                ..Default::default()
+            };
         }
         let tick = self.next_tick();
-        let mut s = self.shard(&key).lock().unwrap();
-        if let Some(old) = s.map.remove(&key) {
-            s.by_tick.remove(&old.tick);
-            s.bytes -= old.bytes;
-        }
         let mut out = InsertOutcome {
             inserted: true,
             ..Default::default()
         };
-        while s.map.len() + 1 > self.shard_max_entries
-            || s.bytes + bytes > self.shard_capacity_bytes
         {
-            let Some((&oldest, &victim)) = s.by_tick.iter().next() else {
-                break;
+            let mut s = self.shard(&key).lock().unwrap();
+            if let Some(old) = s.map.remove(&key) {
+                s.by_tick.remove(&old.tick);
+                s.bytes -= old.bytes;
+                self.total_bytes.fetch_sub(old.bytes, Ordering::Relaxed);
+            }
+            while s.map.len() + 1 > self.shard_max_entries {
+                let Some((&oldest, &victim)) = s.by_tick.iter().next() else {
+                    break;
+                };
+                s.by_tick.remove(&oldest);
+                if let Some(e) = s.map.remove(&victim) {
+                    s.bytes -= e.bytes;
+                    self.total_bytes.fetch_sub(e.bytes, Ordering::Relaxed);
+                    out.evicted_entries += 1;
+                    out.evicted_bytes += e.bytes as u64;
+                }
+            }
+            s.bytes += bytes;
+            self.total_bytes.fetch_add(bytes, Ordering::Relaxed);
+            s.by_tick.insert(tick, key);
+            s.map.insert(
+                key,
+                Entry {
+                    outputs,
+                    bytes,
+                    tick,
+                },
+            );
+        }
+        // Global byte budget. The just-inserted entry carries the newest
+        // tick, so it can only be the global victim if it is the *sole*
+        // resident entry — impossible over budget, since one entry is at
+        // most half the capacity.
+        while self.total_bytes.load(Ordering::Relaxed) > self.capacity_bytes {
+            let mut oldest: Option<(usize, u64)> = None;
+            for (i, sh) in self.shards.iter().enumerate() {
+                let s = sh.lock().unwrap();
+                if let Some((&t, _)) = s.by_tick.iter().next() {
+                    if oldest.map_or(true, |(_, best)| t < best) {
+                        oldest = Some((i, t));
+                    }
+                }
+            }
+            let Some((i, t)) = oldest else { break };
+            let mut s = self.shards[i].lock().unwrap();
+            // the peek was lock-free across shards; the entry may have
+            // been refreshed or evicted since — rescan if so
+            let Some(&victim) = s.by_tick.get(&t) else {
+                continue;
             };
-            s.by_tick.remove(&oldest);
+            s.by_tick.remove(&t);
             if let Some(e) = s.map.remove(&victim) {
                 s.bytes -= e.bytes;
+                self.total_bytes.fetch_sub(e.bytes, Ordering::Relaxed);
                 out.evicted_entries += 1;
                 out.evicted_bytes += e.bytes as u64;
             }
         }
-        s.bytes += bytes;
-        s.by_tick.insert(tick, key);
-        s.map.insert(
-            key,
-            Entry {
-                outputs,
-                bytes,
-                tick,
-            },
-        );
         out
     }
 
@@ -143,14 +195,17 @@ impl ShardedLru {
         self.shard_max_entries * self.shards.len()
     }
 
+    /// The configured total byte budget, reported exactly as given (the
+    /// old per-shard rounding under-reported non-divisible capacities).
     pub fn capacity_bytes(&self) -> usize {
-        self.shard_capacity_bytes * self.shards.len()
+        self.capacity_bytes
     }
 
     /// Drop everything (tests, and explicit invalidation).
     pub fn clear(&self) {
         for s in &self.shards {
             let mut s = s.lock().unwrap();
+            self.total_bytes.fetch_sub(s.bytes, Ordering::Relaxed);
             s.map.clear();
             s.by_tick.clear();
             s.bytes = 0;
@@ -212,10 +267,72 @@ mod tests {
 
     #[test]
     fn oversized_entry_refused() {
+        // limit is half the configured total: 256 B entry vs a 100 B cache
         let lru = ShardedLru::new(1, 100, 16);
         let out = lru.insert(k(1), vec![Value::tensor(crate::tensor::Tensor::zeros(vec![64]))]);
         assert!(!out.inserted);
+        assert!(out.rejected_oversize);
+        assert_eq!(out.evicted_entries, 0);
         assert_eq!(lru.len(), 0);
+    }
+
+    #[test]
+    fn midsize_entry_fits_whole_budget_not_one_shard() {
+        // 16 shards over 8 KiB: per-shard rounding would cap entries at
+        // 512 B; a 4000 B value must still be admissible (regression for
+        // the insert() that compared against shard_capacity_bytes).
+        let lru = ShardedLru::new(16, 8192, 256);
+        let out = lru.insert(
+            k(1),
+            vec![Value::tensor(crate::tensor::Tensor::zeros(vec![1000]))], // 4000 B
+        );
+        assert!(out.inserted, "mid-size entry within total/2 must be admitted");
+        assert!(!out.rejected_oversize);
+        assert!(lru.get(&k(1)).is_some());
+        assert_eq!(lru.bytes(), 4000);
+    }
+
+    #[test]
+    fn midsize_entries_still_respect_global_budget() {
+        // Three 4000 B entries exceed the 8 KiB total: the third insert
+        // evicts the LRU entry even though each alone fits.
+        let lru = ShardedLru::new(1, 8192, 256);
+        let big = || vec![Value::tensor(crate::tensor::Tensor::zeros(vec![1000]))];
+        lru.insert(k(1), big());
+        lru.insert(k(2), big());
+        let out = lru.insert(k(3), big());
+        assert!(out.inserted);
+        assert_eq!(out.evicted_entries, 1);
+        assert!(lru.bytes() <= 8192);
+        assert!(lru.get(&k(1)).is_none());
+        assert!(lru.get(&k(2)).is_some());
+        assert!(lru.get(&k(3)).is_some());
+    }
+
+    #[test]
+    fn global_budget_evicts_across_shards() {
+        // Budget pressure in one shard must be relieved by inserts that
+        // land in *another* shard — with 2 shards, even keys go to shard
+        // 0 and odd keys to shard 1 (shard = lo % 2).
+        let lru = ShardedLru::new(2, 8192, 256);
+        let big = || vec![Value::tensor(crate::tensor::Tensor::zeros(vec![1000]))];
+        lru.insert(k(0), big()); // shard 0
+        lru.insert(k(2), big()); // shard 0 — shard 0 now holds 8000 B
+        let out = lru.insert(k(1), big()); // shard 1 pushes total to 12000
+        assert!(out.inserted);
+        assert_eq!(out.evicted_entries, 1);
+        assert!(lru.bytes() <= 8192, "resident {} over budget", lru.bytes());
+        assert!(lru.get(&k(0)).is_none(), "globally-oldest entry evicted");
+        assert!(lru.get(&k(2)).is_some());
+        assert!(lru.get(&k(1)).is_some());
+    }
+
+    #[test]
+    fn capacity_reports_configured_total() {
+        // 1000 over 3 shards: the old per-shard rounding reported 999
+        let lru = ShardedLru::new(3, 1000, 9);
+        assert_eq!(lru.capacity_bytes(), 1000);
+        assert_eq!(lru.max_entries(), 9);
     }
 
     #[test]

@@ -206,6 +206,11 @@ impl ResultCache {
         if out.inserted {
             self.counters.insertions.fetch_add(1, Ordering::Relaxed);
         }
+        if out.rejected_oversize {
+            self.counters
+                .rejected_oversize
+                .fetch_add(1, Ordering::Relaxed);
+        }
         if out.evicted_entries > 0 {
             self.counters
                 .evictions
@@ -338,6 +343,30 @@ mod tests {
         assert!(cfg.deny.contains("fetch"));
         assert!(cfg.deny.contains("print")); // builtin effect
         assert!(!cfg.deny.contains("square"));
+    }
+
+    #[test]
+    fn oversize_rejections_are_counted_and_midsize_admitted() {
+        let c = ResultCache::new(CacheConfig {
+            enabled: true,
+            capacity_bytes: 1000,
+            shards: 4,
+            ..CacheConfig::default()
+        });
+        let s = spec(OpKind::HostMatSum);
+        // 256 B > shard budget (250 B) but well under total/2: must land
+        // (this was silently refused when insert compared per-shard)
+        let mid = [Value::scalar_f32(1.0)];
+        c.insert(&s, &mid, &[Value::tensor(crate::tensor::Tensor::zeros(vec![64]))]);
+        assert!(c.lookup(&s, &mid).is_some(), "mid-size entry must be cached");
+        assert_eq!(c.stats().rejected_oversize, 0);
+        // 2048 B > total/2: refused, and the refusal is observable
+        let big = [Value::scalar_f32(2.0)];
+        c.insert(&s, &big, &[Value::tensor(crate::tensor::Tensor::zeros(vec![512]))]);
+        assert!(c.lookup(&s, &big).is_none());
+        let st = c.stats();
+        assert_eq!(st.rejected_oversize, 1);
+        assert_eq!(st.insertions, 1);
     }
 
     #[test]

@@ -17,6 +17,10 @@ pub struct CacheCounters {
     /// cache disabled) — kept separate from misses so hit *rate* reflects
     /// cacheable traffic only.
     pub uncacheable: AtomicU64,
+    /// Inserts refused because one entry would flush an outsized fraction
+    /// of the store (see `lru::ShardedLru::insert`). A persistently
+    /// non-zero rate is a capacity-tuning signal, not an error.
+    pub rejected_oversize: AtomicU64,
 }
 
 impl CacheCounters {
@@ -28,6 +32,7 @@ impl CacheCounters {
             evictions: self.evictions.load(Ordering::Relaxed),
             evicted_bytes: self.evicted_bytes.load(Ordering::Relaxed),
             uncacheable: self.uncacheable.load(Ordering::Relaxed),
+            rejected_oversize: self.rejected_oversize.load(Ordering::Relaxed),
             resident_entries: 0,
             resident_bytes: 0,
         }
@@ -43,6 +48,7 @@ pub struct CacheStats {
     pub evictions: u64,
     pub evicted_bytes: u64,
     pub uncacheable: u64,
+    pub rejected_oversize: u64,
     pub resident_entries: u64,
     pub resident_bytes: u64,
 }
@@ -84,6 +90,10 @@ impl CacheStats {
         t.row(vec!["insertions".into(), self.insertions.to_string()]);
         t.row(vec!["evictions".into(), self.evictions.to_string()]);
         t.row(vec!["evicted bytes".into(), self.evicted_bytes.to_string()]);
+        t.row(vec![
+            "oversize rejections".into(),
+            self.rejected_oversize.to_string(),
+        ]);
         t.row(vec![
             "resident entries".into(),
             self.resident_entries.to_string(),

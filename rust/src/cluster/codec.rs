@@ -152,6 +152,105 @@ pub fn encode(msg: &Message) -> Vec<u8> {
     w.into_vec()
 }
 
+/// Exact wire size of `encode(msg)` without materializing the bytes.
+/// The zero-copy in-proc transport charges transfer accounting with this
+/// (and debug-asserts it against a real `encode` on every send), so the
+/// arms below must mirror [`encode`] field-for-field.
+pub fn encoded_len(msg: &Message) -> usize {
+    let body = match msg {
+        Message::Hello { .. }
+        | Message::Heartbeat { .. }
+        | Message::Bye { .. }
+        | Message::Revoked { .. }
+        | Message::RevokeDenied { .. }
+        | Message::Revoke { .. } => 4,
+        Message::Pong | Message::Ping | Message::Shutdown => 0,
+        Message::TaskDone { outputs, .. } => {
+            4 + 8
+                + varint_len(outputs.len() as u64)
+                + outputs.iter().map(value_len).sum::<usize>()
+        }
+        Message::TaskFailed { error, .. } => 4 + str_len(error),
+        Message::Submit { source, entry } => str_len(source) + str_len(entry),
+        Message::SubmitReply {
+            error,
+            outputs,
+            report,
+            ..
+        } => {
+            1 + str_len(error)
+                + varint_len(outputs.len() as u64)
+                + outputs.iter().map(value_len).sum::<usize>()
+                + str_len(report)
+        }
+        Message::Assign { op, args, .. } => {
+            4 + op_len(op)
+                + varint_len(args.len() as u64)
+                + args
+                    .iter()
+                    .map(|a| match a {
+                        ArgSpec::Inline(v) => 1 + value_len(v),
+                        ArgSpec::Cached { index, .. } => 1 + 4 + varint_len(*index as u64),
+                    })
+                    .sum::<usize>()
+        }
+    };
+    2 + body // VERSION byte + message tag byte
+}
+
+/// Bytes `Writer::varint` emits for `v` (LEB128: 7 payload bits per byte).
+fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+/// Bytes `Writer::str` emits: varint byte-length prefix + UTF-8 bytes.
+fn str_len(s: &str) -> usize {
+    varint_len(s.len() as u64) + s.len()
+}
+
+/// Bytes [`put_value`] emits.
+fn value_len(v: &Value) -> usize {
+    match v {
+        Value::Tensor(t) => {
+            let shape = varint_len(t.shape().len() as u64)
+                + t.shape().iter().map(|d| varint_len(*d as u64)).sum::<usize>();
+            // dtype tag + shape + slice (varint element count + 4 B each,
+            // f32 and i32 alike)
+            1 + shape + varint_len(t.len() as u64) + 4 * t.len()
+        }
+        Value::Unit | Value::Token => 1,
+    }
+}
+
+/// Bytes [`put_op`] emits.
+fn op_len(op: &OpKind) -> usize {
+    let body = match op {
+        OpKind::Artifact { name } => str_len(name),
+        OpKind::HostMatGen { n } => varint_len(*n as u64),
+        OpKind::HostMatGenShard { n, row0, rows } => {
+            varint_len(*n as u64) + varint_len(*row0 as u64) + varint_len(*rows as u64)
+        }
+        OpKind::HostMatMul | OpKind::HostMatSum => 0,
+        OpKind::Synthetic { .. } => 8,
+        OpKind::IoAction { label, .. } => str_len(label) + 8,
+        OpKind::Combine(k) => {
+            1 + match k {
+                CombineKind::Select(i) => varint_len(*i as u64),
+                CombineKind::ShardRows { index, of } => {
+                    varint_len(*index as u64) + varint_len(*of as u64)
+                }
+                _ => 0,
+            }
+        }
+    };
+    1 + body // op tag byte
+}
+
 /// Decode a message from bytes.
 pub fn decode(bytes: &[u8]) -> Result<Message> {
     let mut r = Reader::new(bytes);
@@ -428,6 +527,28 @@ mod tests {
         let bytes = encode(&m);
         let back = decode(&bytes).unwrap();
         assert_eq!(m, back);
+        // every vector the roundtrip suite exercises also pins the size
+        // mirror the zero-copy transport depends on
+        assert_eq!(encoded_len(&m), bytes.len(), "encoded_len mismatch for {m:?}");
+    }
+
+    #[test]
+    fn encoded_len_handles_multibyte_varints() {
+        // strings/shards big enough to need 2-byte LEB128 prefixes
+        roundtrip(Message::TaskFailed {
+            task: TaskId(1),
+            error: "x".repeat(300),
+        });
+        roundtrip(Message::Assign {
+            task: TaskId(2),
+            op: OpKind::HostMatGenShard { n: 100_000, row0: 65_536, rows: 999 },
+            args: vec![ArgSpec::Cached { task: TaskId(3), index: 200 }],
+        });
+        roundtrip(Message::TaskDone {
+            task: TaskId(3),
+            outputs: vec![Value::tensor(Tensor::uniform(vec![40, 40], 2))],
+            compute_ns: 1,
+        });
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::ir::task::{ArgRef, OpKind, TaskId, Value};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::{LeaseKind, RunResult, ScheduleTrace, TraceEvent};
 use crate::scheduler::{PlacementPolicy, SchedulerKind, SchedulerState, StealPolicy, WorkerId};
+use crate::tensor::KernelKind;
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info, log_warn};
 
@@ -56,6 +57,10 @@ pub struct ClusterConfig {
     /// families out of priority work buckets; greedy is the per-task
     /// baseline behind `--scheduler greedy`.
     pub scheduler: SchedulerKind,
+    /// HostMatMul kernel the workers' executors run (`--kernel`); copied
+    /// from `RunConfig` so cluster runs and the other engines stay on the
+    /// same (bit-identical) kernel choice.
+    pub kernel: KernelKind,
     pub placement: PlacementPolicy,
     pub steal: StealPolicy,
     /// Max tasks in flight (queued + running) per worker.
@@ -89,6 +94,7 @@ impl Default for ClusterConfig {
     fn default() -> Self {
         ClusterConfig {
             scheduler: SchedulerKind::default(),
+            kernel: KernelKind::default(),
             placement: PlacementPolicy::LeastLoaded,
             steal: StealPolicy::RandomVictim,
             pipeline_depth: 2,

@@ -1,10 +1,17 @@
-//! Transports: moving serialized messages between leader and workers.
+//! Transports: moving messages between leader and workers.
 //!
 //! Two implementations behind one trait pair:
 //!
-//! * **in-proc** — mpsc channels carrying `Vec<u8>`. Messages are *fully
-//!   serialized* even in-process, so codec cost is identical to the wire —
-//!   this is the "workers simulated on one box" mode the paper used;
+//! * **in-proc** — mpsc channels. By default ([`inproc_pair`]) messages
+//!   ride the channel *structurally*: tensor payloads stay behind their
+//!   `Arc`s (`Message` is `Clone`), so nothing is serialized and nothing
+//!   is copied — the zero-copy fast path. Byte accounting still charges
+//!   the exact wire size via [`codec::encoded_len`], so traces and
+//!   transfer ledgers are identical to the serialized path. The original
+//!   encode/decode-everything mode survives as [`inproc_pair_codec`] —
+//!   the honest "workers simulated on one box, codec cost included"
+//!   baseline the paper used — and debug builds assert on every fast-path
+//!   send that both paths agree byte-for-byte;
 //! * **TCP** — length-prefixed frames over `std::net::TcpStream` for real
 //!   multi-process clusters (`parhask worker`).
 
@@ -36,38 +43,80 @@ pub trait MsgReceiver: Send {
 // In-proc
 // ---------------------------------------------------------------------------
 
+/// What an in-proc channel carries: the zero-copy path ships the message
+/// itself (tensors stay `Arc`-shared); the codec path ships wire bytes.
+enum Payload {
+    Msg(Message),
+    Bytes(Vec<u8>),
+}
+
 pub struct ChanSender {
-    tx: mpsc::Sender<Vec<u8>>,
+    tx: mpsc::Sender<Payload>,
     sent: u64,
+    zero_copy: bool,
 }
 
 pub struct ChanReceiver {
-    rx: mpsc::Receiver<Vec<u8>>,
+    rx: mpsc::Receiver<Payload>,
 }
 
-/// A bidirectional in-proc link: returns (endpoint A, endpoint B), each a
-/// (sender, receiver) pair.
-pub fn inproc_pair() -> ((ChanSender, ChanReceiver), (ChanSender, ChanReceiver)) {
+fn pair_with(zero_copy: bool) -> ((ChanSender, ChanReceiver), (ChanSender, ChanReceiver)) {
     let (a2b_tx, a2b_rx) = mpsc::channel();
     let (b2a_tx, b2a_rx) = mpsc::channel();
     (
         (
-            ChanSender { tx: a2b_tx, sent: 0 },
+            ChanSender { tx: a2b_tx, sent: 0, zero_copy },
             ChanReceiver { rx: b2a_rx },
         ),
         (
-            ChanSender { tx: b2a_tx, sent: 0 },
+            ChanSender { tx: b2a_tx, sent: 0, zero_copy },
             ChanReceiver { rx: a2b_rx },
         ),
     )
 }
 
+/// A bidirectional in-proc link: returns (endpoint A, endpoint B), each a
+/// (sender, receiver) pair. Zero-copy: values pass by `Arc`, the codec is
+/// never run (byte accounting still reports exact wire sizes).
+pub fn inproc_pair() -> ((ChanSender, ChanReceiver), (ChanSender, ChanReceiver)) {
+    pair_with(true)
+}
+
+/// The pre-zero-copy in-proc link: every message is encoded to wire bytes
+/// and decoded on the other side, exactly like TCP minus the socket. Kept
+/// as the honest baseline (`bench_snapshot`'s `transport_zero_copy` rows
+/// compare the two) and as the cross-check the fast path's debug
+/// assertions are defined against.
+pub fn inproc_pair_codec() -> ((ChanSender, ChanReceiver), (ChanSender, ChanReceiver)) {
+    pair_with(false)
+}
+
 impl MsgSender for ChanSender {
     fn send(&mut self, msg: &Message) -> Result<()> {
-        let bytes = codec::encode(msg);
-        self.sent += bytes.len() as u64;
+        let payload = if self.zero_copy {
+            self.sent += codec::encoded_len(msg) as u64;
+            #[cfg(debug_assertions)]
+            {
+                let wire = codec::encode(msg);
+                debug_assert_eq!(
+                    wire.len(),
+                    codec::encoded_len(msg),
+                    "encoded_len must mirror encode exactly"
+                );
+                debug_assert_eq!(
+                    &codec::decode(&wire).expect("self-encoded message must decode"),
+                    msg,
+                    "zero-copy payload must agree with the codec path byte-for-byte"
+                );
+            }
+            Payload::Msg(msg.clone())
+        } else {
+            let bytes = codec::encode(msg);
+            self.sent += bytes.len() as u64;
+            Payload::Bytes(bytes)
+        };
         self.tx
-            .send(bytes)
+            .send(payload)
             .map_err(|_| anyhow::anyhow!("peer disconnected"))
     }
 
@@ -76,18 +125,26 @@ impl MsgSender for ChanSender {
     }
 }
 
+impl Payload {
+    fn into_message(self) -> Result<Message> {
+        match self {
+            Payload::Msg(m) => Ok(m),
+            Payload::Bytes(b) => codec::decode(&b),
+        }
+    }
+}
+
 impl MsgReceiver for ChanReceiver {
     fn recv(&mut self) -> Result<Message> {
-        let bytes = self
-            .rx
+        self.rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("peer disconnected"))?;
-        codec::decode(&bytes)
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))?
+            .into_message()
     }
 
     fn recv_timeout(&mut self, d: Duration) -> Result<Option<Message>> {
         match self.rx.recv_timeout(d) {
-            Ok(bytes) => Ok(Some(codec::decode(&bytes)?)),
+            Ok(payload) => Ok(Some(payload.into_message()?)),
             Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(mpsc::RecvTimeoutError::Disconnected) => bail!("peer disconnected"),
         }
@@ -202,8 +259,52 @@ impl MsgReceiver for TcpReceiver {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::task::TaskId;
+    use crate::ir::task::{TaskId, Value};
     use crate::scheduler::WorkerId;
+    use crate::tensor::Tensor;
+    use std::sync::Arc;
+
+    #[test]
+    fn zero_copy_and_codec_pairs_agree_on_bytes_and_content() {
+        let msg = Message::TaskDone {
+            task: TaskId(3),
+            outputs: vec![Value::tensor(Tensor::uniform(vec![32, 32], 7))],
+            compute_ns: 99,
+        };
+        let ((mut z_tx, _za), (_zb, mut z_rx)) = inproc_pair();
+        let ((mut c_tx, _ca), (_cb, mut c_rx)) = inproc_pair_codec();
+        z_tx.send(&msg).unwrap();
+        c_tx.send(&msg).unwrap();
+        assert_eq!(z_rx.recv().unwrap(), msg);
+        assert_eq!(c_rx.recv().unwrap(), msg);
+        assert_eq!(
+            z_tx.bytes_sent(),
+            c_tx.bytes_sent(),
+            "zero-copy accounting must charge the exact wire size"
+        );
+    }
+
+    #[test]
+    fn zero_copy_shares_tensor_storage() {
+        let t = Arc::new(Tensor::uniform(vec![16, 16], 1));
+        let msg = Message::TaskDone {
+            task: TaskId(1),
+            outputs: vec![Value::Tensor(Arc::clone(&t))],
+            compute_ns: 1,
+        };
+        let ((mut tx, _a), (_b, mut rx)) = inproc_pair();
+        tx.send(&msg).unwrap();
+        let Message::TaskDone { outputs, .. } = rx.recv().unwrap() else {
+            panic!("wrong message kind");
+        };
+        let Value::Tensor(got) = &outputs[0] else {
+            panic!("wrong value kind");
+        };
+        assert!(
+            Arc::ptr_eq(got, &t),
+            "the fast path must pass the Arc through, not copy the payload"
+        );
+    }
 
     #[test]
     fn inproc_roundtrip_and_accounting() {

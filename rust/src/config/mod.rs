@@ -9,6 +9,7 @@ use crate::cache::CacheConfig;
 use crate::cluster::ClusterConfig;
 use crate::partition::PartitionConfig;
 use crate::scheduler::{PlacementPolicy, SchedulerKind, StealPolicy};
+use crate::tensor::KernelKind;
 
 /// Which execution engine runs the program.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -70,6 +71,10 @@ pub struct RunConfig {
     /// priority work buckets; `greedy` is the paper's original one-task-
     /// at-a-time loop, kept as the honest baseline.
     pub scheduler: SchedulerKind,
+    /// Which HostMatMul kernel the executors run (`--kernel`).
+    /// `reference` (default) is the naive honest-baseline loop; `blocked`
+    /// is the tiled microkernel — bit-identical outputs, only speed moves.
+    pub kernel: KernelKind,
     pub placement: PlacementPolicy,
     pub steal: StealPolicy,
     pub pipeline_depth: usize,
@@ -123,6 +128,7 @@ impl Default for RunConfig {
         RunConfig {
             engine: Engine::Cluster { workers: 4 },
             scheduler: SchedulerKind::default(),
+            kernel: KernelKind::default(),
             placement: PlacementPolicy::LeastLoaded,
             steal: StealPolicy::RandomVictim,
             pipeline_depth: 2,
@@ -153,6 +159,7 @@ impl RunConfig {
         match key.as_str() {
             "engine" => self.engine = Engine::parse(value)?,
             "scheduler" => self.scheduler = SchedulerKind::parse(value)?,
+            "kernel" => self.kernel = KernelKind::parse(value)?,
             "placement" => {
                 self.placement = PlacementPolicy::parse(value)
                     .ok_or_else(|| anyhow::anyhow!("bad placement {value:?}"))?
@@ -260,12 +267,14 @@ impl RunConfig {
             use_cached_args: self.use_cached_args,
             lease: Duration::from_millis(self.lease_ms),
             scheduler: self.scheduler,
+            kernel: self.kernel,
         }
     }
 
     pub fn cluster_config(&self) -> ClusterConfig {
         ClusterConfig {
             scheduler: self.scheduler,
+            kernel: self.kernel,
             placement: self.placement,
             steal: self.steal,
             pipeline_depth: self.pipeline_depth,
@@ -331,6 +340,21 @@ mod tests {
         c.set("scheduler", "greedy").unwrap();
         assert_eq!(c.cluster_config().scheduler, SchedulerKind::Greedy);
         assert_eq!(c.serve_config(2).scheduler, SchedulerKind::Greedy);
+    }
+
+    #[test]
+    fn kernel_overrides() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.kernel, KernelKind::Reference, "reference is the default");
+        c.set("kernel", "blocked").unwrap();
+        assert_eq!(c.kernel, KernelKind::Blocked);
+        c.set("kernel", "reference").unwrap();
+        assert_eq!(c.kernel, KernelKind::Reference);
+        assert!(c.set("kernel", "simd").is_err());
+
+        c.set("kernel", "blocked").unwrap();
+        assert_eq!(c.cluster_config().kernel, KernelKind::Blocked);
+        assert_eq!(c.serve_config(2).kernel, KernelKind::Blocked);
     }
 
     #[test]

@@ -139,6 +139,7 @@ fn dispatch(
                 pipeline_depth: cfg.pipeline_depth,
                 transfer_free: false,
                 scheduler: cfg.scheduler,
+                kernel: cfg.kernel,
             };
             let r = simulate(program, &cm, &sim_cfg)?;
             Ok(RunResult {

@@ -87,6 +87,9 @@ USAGE:
 ENGINES: single | smp:K | cluster:W | sim:W
 KNOBS:   --placement rr|ll|loc|shard  --steal none|random|richest  --depth D
          --artifacts true|false (PJRT artifacts vs host reference ops)
+         --kernel blocked|reference (HostMatMul microkernel; blocked is
+         the tiled fast path, reference the honest baseline — outputs
+         are bit-identical either way; default reference)
 CACHE:   --cache on|off (default off)  --cache_mb MB  --cache_entries N
          --cache_shards S  --cache_deny op1,op2 (never cache these ops)
          --cache_hit_rate R (sim engine: model a warm cache at rate R)
@@ -290,10 +293,10 @@ fn build_executor(cfg: &RunConfig) -> Result<(Arc<dyn Executor>, Option<RuntimeS
     if cfg.use_artifacts {
         let svc = RuntimeService::start_default()
             .context("starting PJRT runtime (run `make artifacts`, or pass --artifacts false)")?;
-        let ex = PjrtExecutor::new(svc.handle());
+        let ex = PjrtExecutor::with_kernel(svc.handle(), cfg.kernel);
         Ok((ex, Some(svc)))
     } else {
-        Ok((Arc::new(HostExecutor), None))
+        Ok((Arc::new(HostExecutor::with_kernel(cfg.kernel)), None))
     }
 }
 
@@ -358,10 +361,10 @@ fn build_executor_and_registry(
         let svc = RuntimeService::start_default().context("starting PJRT runtime")?;
         let reg = FunctionRegistry::matrix_artifacts(size, svc.handle().manifest())
             .unwrap_or_else(|_| FunctionRegistry::matrix_host(size));
-        (PjrtExecutor::new(svc.handle()), Some(svc), reg)
+        (PjrtExecutor::with_kernel(svc.handle(), cfg.kernel), Some(svc), reg)
     } else {
         (
-            Arc::new(HostExecutor),
+            Arc::new(HostExecutor::with_kernel(cfg.kernel)),
             None,
             FunctionRegistry::matrix_host(size),
         )

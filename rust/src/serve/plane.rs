@@ -50,6 +50,7 @@ use crate::metrics::{Histogram, Table};
 use crate::scheduler::trace::TraceEvent;
 use crate::scheduler::{SchedulerKind, WorkerId};
 use crate::tasks::Executor;
+use crate::tensor::KernelKind;
 use crate::util::now_ns;
 use crate::{log_debug, log_info, log_warn};
 
@@ -76,6 +77,10 @@ pub struct ServeConfig {
     /// Turn-execution order: bucketed (default) drains a session's shard
     /// families as gangs during its quantum; greedy keeps plain FIFO.
     pub scheduler: SchedulerKind,
+    /// HostMatMul kernel for the shared worker pool's executors
+    /// (`--kernel`); recorded here so `RunConfig::serve_config` carries
+    /// the choice to whoever builds the pool's executor.
+    pub kernel: KernelKind,
 }
 
 impl Default for ServeConfig {
@@ -88,6 +93,7 @@ impl Default for ServeConfig {
             use_cached_args: true,
             lease: Duration::ZERO,
             scheduler: SchedulerKind::default(),
+            kernel: KernelKind::default(),
         }
     }
 }

@@ -27,6 +27,8 @@ use crate::ir::task::{ShardRole, TaskId};
 use crate::ir::TaskProgram;
 use crate::scheduler::trace::{LeaseKind, ScheduleTrace, TraceEvent};
 use crate::scheduler::{PlacementPolicy, SchedulerKind, SchedulerState, WorkerId};
+use crate::tensor::kernel::BLOCKED_SIM_FLOPS_SCALE;
+use crate::tensor::KernelKind;
 use crate::util::rng::Rng;
 
 use super::costmodel::CostModel;
@@ -45,6 +47,12 @@ pub struct SimConfig {
     /// (`CostModel::gang_dispatch_ns`); greedy re-enters placement per
     /// task and always pays the full `dispatch_ns`.
     pub scheduler: SchedulerKind,
+    /// Which HostMatMul kernel the modeled workers run. `Blocked` scales
+    /// the cost model's `flops_per_ns` by
+    /// [`BLOCKED_SIM_FLOPS_SCALE`](crate::tensor::kernel::BLOCKED_SIM_FLOPS_SCALE)
+    /// (mirroring the measured single-node speedup); `Reference` (default)
+    /// leaves the model untouched, so existing sweeps are unchanged.
+    pub kernel: KernelKind,
 }
 
 impl SimConfig {
@@ -55,6 +63,7 @@ impl SimConfig {
             pipeline_depth: 2,
             transfer_free: false,
             scheduler: SchedulerKind::default(),
+            kernel: KernelKind::default(),
         }
     }
 
@@ -65,6 +74,7 @@ impl SimConfig {
             pipeline_depth: 2,
             transfer_free: true,
             scheduler: SchedulerKind::default(),
+            kernel: KernelKind::default(),
         }
     }
 
@@ -126,9 +136,21 @@ impl PartialOrd for QEv {
     }
 }
 
+/// Kernel-adjusted cost model: `Blocked` prices matmul flops
+/// `BLOCKED_SIM_FLOPS_SCALE`× faster (the measured single-node speedup);
+/// `Reference` returns the model untouched.
+fn kernel_adjusted(cm: &CostModel, kernel: KernelKind) -> CostModel {
+    let mut cm = cm.clone();
+    if kernel == KernelKind::Blocked {
+        cm.flops_per_ns *= BLOCKED_SIM_FLOPS_SCALE;
+    }
+    cm
+}
+
 /// Run the simulation; deterministic for a given (program, config, model).
 pub fn simulate(program: &TaskProgram, cm: &CostModel, cfg: &SimConfig) -> Result<SimResult> {
     anyhow::ensure!(cfg.n_workers >= 1, "need at least one worker");
+    let cm = &kernel_adjusted(cm, cfg.kernel);
     let mut state = SchedulerState::new(cfg.scheduler, program, cfg.n_workers, cfg.placement);
     let mut heap: BinaryHeap<QEv> = BinaryHeap::new();
     let mut seq = 0u64;
@@ -558,6 +580,7 @@ pub fn simulate_with_faults(
         "churn plan needs at least one initial worker"
     );
     anyhow::ensure!(lease_ns > 0, "churn simulation needs a nonzero lease");
+    let cm = &kernel_adjusted(cm, cfg.kernel);
     let n0 = plan.initial_workers;
     let hits: HashSet<TaskId> = if cm.cache_hit_rate > 0.0 {
         let mut rng = Rng::new(0xCAC4E);
@@ -851,6 +874,27 @@ mod tests {
         cm.set_measured("matmul_64", 50_000_000); // pretend matmul is huge
         let slow = simulate(&p, &cm, &SimConfig::cluster(2)).unwrap().makespan_ns;
         assert!(slow > base * 5, "{slow} vs {base}");
+    }
+
+    #[test]
+    fn blocked_kernel_prices_flops_heavy_programs_lower() {
+        // the blocked microkernel raises effective flops/ns, so the same
+        // flops-priced program must simulate strictly faster — and the
+        // rescale must not perturb anything else about the schedule
+        let p = rounds_program(4, 256);
+        let cm = CostModel::default();
+        let mut cfg = SimConfig::cluster(4);
+        let reference = simulate(&p, &cm, &cfg).unwrap();
+        cfg.kernel = KernelKind::Blocked;
+        let blocked = simulate(&p, &cm, &cfg).unwrap();
+        assert!(
+            blocked.makespan_ns < reference.makespan_ns,
+            "{} vs {}",
+            blocked.makespan_ns,
+            reference.makespan_ns
+        );
+        assert_eq!(blocked.bytes_transferred, reference.bytes_transferred);
+        blocked.trace.validate(&p).unwrap();
     }
 
     #[test]

@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::ir::task::{CombineKind, OpKind, Value};
 use crate::runtime::RuntimeHandle;
-use crate::tensor::Tensor;
+use crate::tensor::{KernelKind, Tensor};
 
 /// Executes one task body. Must be thread-safe: the SMP pool and in-proc
 /// cluster call it from many worker threads.
@@ -132,8 +132,27 @@ impl Executor for SyntheticExecutor {
 
 /// Reference implementation of the matrix ops on the host; the correctness
 /// oracle for the PJRT path and the fallback when artifacts are absent.
-#[derive(Default, Clone)]
-pub struct HostExecutor;
+/// Carries the matmul [`KernelKind`] (`--kernel`): blocked and reference
+/// produce bit-identical outputs, so the choice only moves speed.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct HostExecutor {
+    pub kernel: KernelKind,
+}
+
+/// Value-namespace shim: `HostExecutor` used as an *expression* (the
+/// pervasive `Arc::new(HostExecutor)` / `let ex = HostExecutor;` idiom)
+/// still works now that the struct has a field — it resolves to this
+/// reference-kernel constant instead of the old unit-struct constructor.
+#[allow(non_upper_case_globals)]
+pub const HostExecutor: HostExecutor = HostExecutor {
+    kernel: KernelKind::Reference,
+};
+
+impl HostExecutor {
+    pub fn with_kernel(kernel: KernelKind) -> Self {
+        HostExecutor { kernel }
+    }
+}
 
 impl Executor for HostExecutor {
     fn execute(&self, op: &OpKind, args: &[Value]) -> Result<Vec<Value>> {
@@ -156,7 +175,7 @@ impl Executor for HostExecutor {
             }
             OpKind::HostMatMul => {
                 let (a, b) = (args[0].as_tensor()?, args[1].as_tensor()?);
-                Ok(vec![Value::tensor(a.matmul(b)?)])
+                Ok(vec![Value::tensor(a.matmul_with(b, self.kernel)?)])
             }
             OpKind::HostMatSum => {
                 let a = args[0].as_tensor()?;
@@ -170,7 +189,7 @@ impl Executor for HostExecutor {
             OpKind::Combine(k) => run_combine(k, args),
             OpKind::Artifact { name } => {
                 // Host fallback for the artifact families we know analytically.
-                host_artifact_fallback(name, args)
+                host_artifact_fallback(name, args, self.kernel)
             }
         }
     }
@@ -179,7 +198,7 @@ impl Executor for HostExecutor {
 /// Evaluate `matgen_N` / `matmul_N` / `matsum_N` / `matround_N` artifacts
 /// with host ops (different PRNG for matgen — same distribution, not
 /// bit-identical; tests that need bit-equality use the PJRT path).
-fn host_artifact_fallback(name: &str, args: &[Value]) -> Result<Vec<Value>> {
+fn host_artifact_fallback(name: &str, args: &[Value], kernel: KernelKind) -> Result<Vec<Value>> {
     let (family, n) = match name.rsplit_once('_') {
         Some((f, n)) => (f, n.parse::<usize>().ok()),
         None => (name, None),
@@ -191,7 +210,7 @@ fn host_artifact_fallback(name: &str, args: &[Value]) -> Result<Vec<Value>> {
         }
         ("matmul", Some(_)) => {
             let (a, b) = (args[0].as_tensor()?, args[1].as_tensor()?);
-            Ok(vec![Value::tensor(a.matmul(b)?)])
+            Ok(vec![Value::tensor(a.matmul_with(b, kernel)?)])
         }
         ("matsum", Some(_)) => Ok(vec![Value::scalar_f32(args[0].as_tensor()?.sumsq()?)]),
         ("matround", Some(n)) => {
@@ -199,7 +218,7 @@ fn host_artifact_fallback(name: &str, args: &[Value]) -> Result<Vec<Value>> {
             let sb = args[1].as_tensor()?.scalar()? as u64;
             let a = Tensor::uniform(vec![n, n], sa);
             let b = Tensor::uniform(vec![n, n], sb);
-            Ok(vec![Value::scalar_f32(a.matmul(&b)?.sumsq()?)])
+            Ok(vec![Value::scalar_f32(a.matmul_with(&b, kernel)?.sumsq()?)])
         }
         _ => bail!("host executor has no fallback for artifact {name:?}"),
     }
@@ -219,9 +238,15 @@ pub struct PjrtExecutor {
 
 impl PjrtExecutor {
     pub fn new(runtime: RuntimeHandle) -> Arc<Self> {
+        Self::with_kernel(runtime, KernelKind::Reference)
+    }
+
+    /// Artifact ops run on the runtime; the kernel only steers the host
+    /// fallback ops this executor delegates.
+    pub fn with_kernel(runtime: RuntimeHandle, kernel: KernelKind) -> Arc<Self> {
         Arc::new(Self {
             runtime,
-            host: HostExecutor,
+            host: HostExecutor::with_kernel(kernel),
         })
     }
 
@@ -404,6 +429,23 @@ mod tests {
         assert!(ex
             .execute(&OpKind::Artifact { name: "mlp_grad".into() }, &[])
             .is_err());
+    }
+
+    #[test]
+    fn blocked_executor_matches_reference_bit_for_bit() {
+        let r = HostExecutor;
+        let bl = HostExecutor::with_kernel(KernelKind::Blocked);
+        let a = Value::tensor(Tensor::uniform(vec![33, 65], 5));
+        let b = Value::tensor(Tensor::uniform(vec![65, 17], 6));
+        let or = r.execute(&OpKind::HostMatMul, &[a.clone(), b.clone()]).unwrap();
+        let ob = bl.execute(&OpKind::HostMatMul, &[a, b]).unwrap();
+        assert_eq!(or, ob);
+        let name = OpKind::Artifact { name: "matround_64".into() };
+        let args = [Value::scalar_i32(1), Value::scalar_i32(2)];
+        assert_eq!(
+            r.execute(&name, &args).unwrap(),
+            bl.execute(&name, &args).unwrap()
+        );
     }
 
     #[test]

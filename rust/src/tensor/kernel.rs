@@ -1,0 +1,166 @@
+//! HostMatMul kernels: the naive reference loop (honest baseline, the
+//! default) and a blocked, SIMD-friendly microkernel behind `--kernel
+//! blocked`.
+//!
+//! Both kernels compute every output element as the *same* FP operation
+//! sequence — `Σ_k (a[i,k] as f64) · (b[k,j] as f64)` in ascending-k
+//! order, cast to f32 exactly once — so their results are bit-for-bit
+//! identical. The blocked kernel only reorders *which outputs* are in
+//! flight (an MR×NC register/L1 tile), never the per-output reduction
+//! order, which is what lets `tests/kernel_equivalence.rs` pin
+//! `blocked ≡ reference` with `==` rather than a tolerance.
+
+use anyhow::{bail, Result};
+
+/// Which HostMatMul kernel the executors run. Selected via `--kernel`
+/// and threaded through `RunConfig`/`ClusterConfig`/`SimConfig`/
+/// `ServeConfig` exactly like `--scheduler`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum KernelKind {
+    /// Naive ikj loop, one f64 row accumulator. The honest baseline all
+    /// speedups are measured against; stays the default.
+    #[default]
+    Reference,
+    /// Blocked MR×NC microkernel: ~MR× less B traffic and wide
+    /// independent accumulators for the autovectorizer.
+    Blocked,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Result<KernelKind> {
+        match s {
+            "reference" | "ref" => Ok(KernelKind::Reference),
+            "blocked" => Ok(KernelKind::Blocked),
+            _ => bail!("unknown kernel {s:?} (expected blocked|reference)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Reference => "reference",
+            KernelKind::Blocked => "blocked",
+        }
+    }
+}
+
+/// Simulator cost-model scale for the blocked kernel: `SimConfig.kernel =
+/// Blocked` multiplies `CostModel::flops_per_ns` by this, mirroring the
+/// measured single-node speedup so simulated sweeps stay comparable to
+/// real ones. Reference leaves the model untouched.
+pub const BLOCKED_SIM_FLOPS_SCALE: f64 = 3.0;
+
+/// Rows per register tile of the blocked kernel.
+const MR: usize = 8;
+/// Columns per L1 tile of the blocked kernel (NC·8 B = 512 B of f64
+/// accumulator per row; the full MR×NC tile is 4 KiB on the stack).
+const NC: usize = 64;
+
+/// Naive O(m·k·n) reference: ikj order (streams `b` row-major), one f64
+/// accumulator row written back once per output row.
+pub fn matmul_reference(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let mut acc = vec![0f64; n];
+    for i in 0..m {
+        for x in acc.iter_mut() {
+            *x = 0.0;
+        }
+        for kx in 0..k {
+            let aik = a[i * k + kx] as f64;
+            let brow = &b[kx * n..(kx + 1) * n];
+            for j in 0..n {
+                acc[j] += aik * brow[j] as f64;
+            }
+        }
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            orow[j] = acc[j] as f32;
+        }
+    }
+}
+
+/// Blocked microkernel: for each NC-wide column panel of `b`, sweep k
+/// once per MR-row tile of `a`, keeping an MR×NC f64 accumulator tile in
+/// registers/L1. `b` is read m/MR times instead of m times, the widened
+/// `bf` row is shared by all MR accumulator rows, and the NC-wide inner
+/// loops are trivially autovectorizable. Per-output math is identical to
+/// [`matmul_reference`] (see module doc), so results match bit-for-bit.
+pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let mut j0 = 0usize;
+    while j0 < n {
+        let nc = NC.min(n - j0);
+        let mut i0 = 0usize;
+        while i0 < m {
+            let mr = MR.min(m - i0);
+            let mut acc = [[0f64; NC]; MR];
+            let mut bf = [0f64; NC];
+            for kx in 0..k {
+                let bslab = &b[kx * n + j0..kx * n + j0 + nc];
+                for j in 0..nc {
+                    bf[j] = bslab[j] as f64;
+                }
+                for r in 0..mr {
+                    let aik = a[(i0 + r) * k + kx] as f64;
+                    let arow = &mut acc[r];
+                    for j in 0..nc {
+                        arow[j] += aik * bf[j];
+                    }
+                }
+            }
+            for r in 0..mr {
+                let base = (i0 + r) * n + j0;
+                let orow = &mut out[base..base + nc];
+                for j in 0..nc {
+                    orow[j] = acc[r][j] as f32;
+                }
+            }
+            i0 += MR;
+        }
+        j0 += NC;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        assert_eq!(KernelKind::parse("reference").unwrap(), KernelKind::Reference);
+        assert_eq!(KernelKind::parse("ref").unwrap(), KernelKind::Reference);
+        assert_eq!(KernelKind::parse("blocked").unwrap(), KernelKind::Blocked);
+        assert!(KernelKind::parse("fast").is_err());
+        assert_eq!(KernelKind::default(), KernelKind::Reference);
+        assert_eq!(KernelKind::Blocked.name(), "blocked");
+        assert_eq!(KernelKind::Reference.name(), "reference");
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_to_reference_on_ragged_shapes() {
+        // Sizes straddling the MR=8 / NC=64 tile edges, including
+        // rectangular and degenerate-dimension cases.
+        for (m, k, n) in [
+            (1, 1, 1),
+            (7, 5, 3),
+            (8, 8, 64),
+            (9, 17, 65),
+            (16, 100, 130),
+            (33, 64, 31),
+        ] {
+            let a = Tensor::uniform(vec![m, k], 0xA0 + m as u64);
+            let b = Tensor::uniform(vec![k, n], 0xB0 + n as u64);
+            let r = a.matmul_with(&b, KernelKind::Reference).unwrap();
+            let bl = a.matmul_with(&b, KernelKind::Blocked).unwrap();
+            assert_eq!(r, bl, "({m},{k},{n}): blocked must match reference bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn both_kernels_match_known_values() {
+        let a = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = Tensor::f32(vec![3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]).unwrap();
+        for kind in [KernelKind::Reference, KernelKind::Blocked] {
+            let c = a.matmul_with(&b, kind).unwrap();
+            assert_eq!(c.as_f32().unwrap(), &[58.0, 64.0, 139.0, 154.0], "{}", kind.name());
+        }
+    }
+}

@@ -8,7 +8,12 @@
 
 use anyhow::{bail, Result};
 
-use crate::util::rng::Rng;
+use crate::util::rng::CounterRng;
+
+pub mod kernel;
+pub mod pool;
+
+pub use kernel::KernelKind;
 
 /// Element type. Only the two dtypes the Layer-2 contract uses.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
@@ -101,25 +106,33 @@ impl Tensor {
 
     /// Uniform(-1, 1) fill — host analog of the `matgen` artifact
     /// (different PRNG, same distribution; used by the host executor).
+    /// The stream is counter-based ([`CounterRng`]) so any position is
+    /// addressable in O(1) — see [`Tensor::uniform_rows`].
     pub fn uniform(shape: Vec<usize>, seed: u64) -> Tensor {
         let n: usize = shape.iter().product();
-        let mut rng = Rng::new(seed);
+        let mut rng = CounterRng::new(seed);
+        let mut data = pool::take_f32(n);
+        data.extend((0..n).map(|_| rng.f32_pm1()));
         Tensor {
             shape,
-            data: Data::F32((0..n).map(|_| rng.f32_pm1()).collect()),
+            data: Data::F32(data),
         }
     }
 
     /// Rows `[row0, row0+rows)` of `uniform(vec![n, n], seed)`, bit-for-bit:
-    /// the generator stream is advanced past the preceding rows rather than
+    /// the generator stream jumps past the preceding rows rather than being
     /// re-seeded, so concatenating all row blocks reproduces the whole
     /// matrix exactly (the partition pass's matgen shards rely on this).
+    /// The jump is O(1) — shard generation cost depends only on `rows`,
+    /// never on `row0`.
     pub fn uniform_rows(n: usize, row0: usize, rows: usize, seed: u64) -> Tensor {
-        let mut rng = Rng::new(seed);
-        rng.skip(row0 * n);
+        let mut rng = CounterRng::new(seed);
+        rng.skip((row0 * n) as u64);
+        let mut data = pool::take_f32(rows * n);
+        data.extend((0..rows * n).map(|_| rng.f32_pm1()));
         Tensor {
             shape: vec![rows, n],
-            data: Data::F32((0..rows * n).map(|_| rng.f32_pm1()).collect()),
+            data: Data::F32(data),
         }
     }
 
@@ -178,8 +191,19 @@ impl Tensor {
 
     // ---- reference ops (L3 oracle / host fallback) -------------------------
 
-    /// Naive O(n³) matmul with an f64 accumulator (oracle-grade precision).
+    /// Matmul with a true f64 accumulator per output (oracle-grade
+    /// precision: each element is cast to f32 exactly once, at the end —
+    /// the old code stored back to f32 every k-step, so accumulation was
+    /// effectively f32). Runs the reference kernel; executors pick via
+    /// [`Tensor::matmul_with`].
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        self.matmul_with(other, KernelKind::Reference)
+    }
+
+    /// Matmul through the selected kernel. Both kernels are bit-for-bit
+    /// identical (see `kernel` module doc); `--kernel blocked` only
+    /// changes speed.
+    pub fn matmul_with(&self, other: &Tensor, kind: KernelKind) -> Result<Tensor> {
         let (a, b) = (self.as_f32()?, other.as_f32()?);
         let (&[m, k], &[k2, n]) = (&self.shape[..], &other.shape[..]) else {
             bail!(
@@ -191,17 +215,11 @@ impl Tensor {
         if k != k2 {
             bail!("matmul inner dim mismatch: {:?} @ {:?}", self.shape, other.shape);
         }
-        let mut out = vec![0f32; m * n];
-        // ikj loop order: streams b row-major, decent cache behaviour.
-        for i in 0..m {
-            for kk in 0..k {
-                let aik = a[i * k + kk] as f64;
-                let brow = &b[kk * n..(kk + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] = (orow[j] as f64 + aik * brow[j] as f64) as f32;
-                }
-            }
+        let mut out = pool::take_f32(m * n);
+        out.resize(m * n, 0.0);
+        match kind {
+            KernelKind::Reference => kernel::matmul_reference(a, b, &mut out, m, k, n),
+            KernelKind::Blocked => kernel::matmul_blocked(a, b, &mut out, m, k, n),
         }
         Tensor::f32(vec![m, n], out)
     }
@@ -229,16 +247,26 @@ impl Tensor {
         Tensor::f32(self.shape.clone(), a.iter().map(|x| x * s).collect())
     }
 
-    /// Mean of several same-shaped tensors (gradient averaging).
+    /// Mean of several same-shaped tensors (gradient averaging). One f64
+    /// accumulation buffer, cast once — no per-addend allocation and no
+    /// per-step f32 round-off.
     pub fn mean_of(tensors: &[&Tensor]) -> Result<Tensor> {
-        if tensors.is_empty() {
+        let Some(first) = tensors.first() else {
             bail!("mean_of: empty input");
-        }
-        let mut acc = tensors[0].clone();
+        };
+        let mut acc: Vec<f64> = first.as_f32()?.iter().map(|x| *x as f64).collect();
         for t in &tensors[1..] {
-            acc = acc.add(t)?;
+            if t.shape != first.shape {
+                bail!("add shape mismatch: {:?} vs {:?}", first.shape, t.shape);
+            }
+            for (a, x) in acc.iter_mut().zip(t.as_f32()?) {
+                *a += *x as f64;
+            }
         }
-        acc.scale(1.0 / tensors.len() as f32)
+        let inv = 1.0 / tensors.len() as f64;
+        let mut out = pool::take_f32(acc.len());
+        out.extend(acc.iter().map(|a| (*a * inv) as f32));
+        Tensor::f32(first.shape.clone(), out)
     }
 
     /// Max |a-b| over two same-shaped f32 tensors.
@@ -349,6 +377,19 @@ impl Tensor {
     }
 }
 
+impl Drop for Tensor {
+    /// Park shard-sized f32 payloads in the buffer pool for reuse by the
+    /// next round's constructors (small buffers fall through untouched —
+    /// the size check in `give_f32` runs before any locking).
+    fn drop(&mut self) {
+        if let Data::F32(v) = &mut self.data {
+            if v.capacity() >= pool::MIN_POOLED_LEN {
+                pool::give_f32(std::mem::take(v));
+            }
+        }
+    }
+}
+
 impl std::fmt::Display for Tensor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{}[", self.dtype().name())?;
@@ -412,6 +453,44 @@ mod tests {
         assert!(a.matmul(&b).is_err());
         let s = Tensor::scalar_f32(1.0);
         assert!(a.matmul(&s).is_err());
+    }
+
+    #[test]
+    fn matmul_accumulates_in_f64_not_f32() {
+        // n=256 is where the legacy store-back-to-f32-every-k-step
+        // accumulation visibly diverges from a true f64 accumulator.
+        let n = 256;
+        let a = Tensor::uniform(vec![n, n], 0xACC);
+        let b = Tensor::uniform(vec![n, n], 0xACC + 1);
+        let c = a.matmul(&b).unwrap();
+        let (av, bv, cv) = (a.as_f32().unwrap(), b.as_f32().unwrap(), c.as_f32().unwrap());
+        let mut fixed_err = 0f32; // current matmul vs per-element f64 oracle
+        let mut legacy_err = 0f32; // old f32-store-back loop vs the oracle
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0f64;
+                let mut legacy = 0f32;
+                for k in 0..n {
+                    let prod = av[i * n + k] as f64 * bv[k * n + j] as f64;
+                    acc += prod;
+                    legacy = (legacy as f64 + prod) as f32;
+                }
+                fixed_err = fixed_err.max((cv[i * n + j] - acc as f32).abs());
+                legacy_err = legacy_err.max((legacy - acc as f32).abs());
+            }
+        }
+        assert_eq!(fixed_err, 0.0, "f64 accumulator must equal the oracle bit-for-bit");
+        assert!(
+            legacy_err > 0.0,
+            "the legacy f32 store-back accumulation diverges at n={n} — the bound this fix exists for"
+        );
+    }
+
+    #[test]
+    fn mean_of_rejects_shape_mismatch() {
+        let a = Tensor::zeros(vec![2, 2]);
+        let b = Tensor::zeros(vec![4]);
+        assert!(Tensor::mean_of(&[&a, &b]).is_err());
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Arena/free-list for shard-sized f32 tensor buffers.
+//!
+//! The SMP and cluster engines allocate the same handful of shard-sized
+//! buffers every round (matgen shards, matmul outputs, mean/concat
+//! glue). Instead of round-tripping each through the global allocator,
+//! dropped `Tensor` f32 payloads above [`MIN_POOLED_LEN`] park here and
+//! the constructors take them back by capacity.
+//!
+//! Small buffers never touch the pool (the size check happens *before*
+//! the lock, so scalar/small-tensor churn stays lock-free), and the pool
+//! is capped at [`MAX_POOLED_BYTES`] — beyond that, buffers fall through
+//! to the allocator as before. Pooling only recycles capacity; it never
+//! recycles *contents* (every taken buffer has length 0), so results are
+//! unaffected.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Buffers below this many f32 elements (64 KiB) bypass the pool.
+pub const MIN_POOLED_LEN: usize = 16 * 1024;
+/// Total bytes the pool may hold; excess returns are dropped.
+pub const MAX_POOLED_BYTES: usize = 256 << 20;
+
+struct PoolInner {
+    /// Free lists keyed by exact capacity (in f32 elements).
+    free: BTreeMap<usize, Vec<Vec<f32>>>,
+    pooled_bytes: usize,
+    hits: u64,
+    misses: u64,
+    returns: u64,
+    discards: u64,
+}
+
+static POOL: Mutex<PoolInner> = Mutex::new(PoolInner {
+    free: BTreeMap::new(),
+    pooled_bytes: 0,
+    hits: 0,
+    misses: 0,
+    returns: 0,
+    discards: 0,
+});
+
+/// Pool counters (monotonic except `pooled_bytes`); exposed for tests
+/// and the bench snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub pooled_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub returns: u64,
+    pub discards: u64,
+}
+
+/// An empty `Vec<f32>` with capacity ≥ `len` — recycled when a parked
+/// buffer of capacity in `[len, 2·len]` exists (the upper bound keeps a
+/// small request from pinning a huge buffer), freshly allocated
+/// otherwise.
+pub fn take_f32(len: usize) -> Vec<f32> {
+    if len >= MIN_POOLED_LEN {
+        let mut pool = POOL.lock().unwrap();
+        let found = pool.free.range(len..=len.saturating_mul(2)).next().map(|(&c, _)| c);
+        if let Some(cap) = found {
+            let list = pool.free.get_mut(&cap).unwrap();
+            let buf = list.pop().unwrap();
+            if list.is_empty() {
+                pool.free.remove(&cap);
+            }
+            pool.pooled_bytes -= cap * 4;
+            pool.hits += 1;
+            debug_assert!(buf.is_empty() && buf.capacity() >= len);
+            return buf;
+        }
+        pool.misses += 1;
+    }
+    Vec::with_capacity(len)
+}
+
+/// Park a buffer for reuse. Small or over-budget buffers just drop.
+pub fn give_f32(mut v: Vec<f32>) {
+    let cap = v.capacity();
+    if cap < MIN_POOLED_LEN {
+        return;
+    }
+    let mut pool = POOL.lock().unwrap();
+    if pool.pooled_bytes + cap * 4 > MAX_POOLED_BYTES {
+        pool.discards += 1;
+        return;
+    }
+    v.clear();
+    pool.pooled_bytes += cap * 4;
+    pool.returns += 1;
+    pool.free.entry(cap).or_default().push(v);
+}
+
+pub fn stats() -> PoolStats {
+    let pool = POOL.lock().unwrap();
+    PoolStats {
+        pooled_bytes: pool.pooled_bytes,
+        hits: pool.hits,
+        misses: pool.misses,
+        returns: pool.returns,
+        discards: pool.discards,
+    }
+}
+
+/// Drop every parked buffer (tests use this to isolate capacity math).
+pub fn clear() {
+    let mut pool = POOL.lock().unwrap();
+    pool.free.clear();
+    pool.pooled_bytes = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The pool is process-global and other tests run concurrently, so
+    // these use unusual exact capacities and assert counter *deltas*.
+
+    #[test]
+    fn round_trip_reuses_capacity() {
+        let len = MIN_POOLED_LEN + 7777;
+        let before = stats();
+        let buf = take_f32(len);
+        let cap = buf.capacity();
+        assert!(cap >= len);
+        give_f32(buf);
+        let mid = stats();
+        assert!(mid.returns >= before.returns + 1);
+        let again = take_f32(len);
+        assert!(again.capacity() >= len && again.is_empty());
+        let after = stats();
+        assert!(after.hits >= before.hits + 1, "second take must be served from the pool");
+        give_f32(again);
+    }
+
+    #[test]
+    fn small_buffers_bypass_the_pool() {
+        let before = stats();
+        let v = take_f32(8);
+        assert!(v.capacity() >= 8);
+        give_f32(v);
+        let after = stats();
+        // no counter moved: the small path never locks the counters in
+        // a way visible here (other tests may bump them concurrently,
+        // so only assert the specific small round-trip is cheap by
+        // construction: capacity below the floor can never be parked)
+        assert!(after.pooled_bytes <= MAX_POOLED_BYTES);
+        let _ = before;
+    }
+
+    #[test]
+    fn oversize_match_is_refused() {
+        // Park a big buffer, then ask for far less than half its
+        // capacity: the 2× matching window must not hand it out.
+        let big = MIN_POOLED_LEN * 64 + 1234;
+        let small = MIN_POOLED_LEN + 1;
+        let mut v = Vec::with_capacity(big);
+        v.push(0.0f32);
+        give_f32(v);
+        let got = take_f32(small);
+        assert!(
+            got.capacity() < big,
+            "a {small}-element request must not pin a {big}-capacity buffer"
+        );
+        give_f32(got);
+    }
+}

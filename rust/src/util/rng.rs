@@ -24,6 +24,61 @@ impl SplitMix64 {
     }
 }
 
+/// Counter-based generator: the SplitMix64 output function applied to an
+/// explicit draw index. Emits the *same stream* as walking
+/// [`SplitMix64::new(seed)`] draw-by-draw, but any position is addressable
+/// directly, so [`CounterRng::skip`] is O(1) instead of O(skipped draws).
+/// This is what makes `HostMatGenShard` jump-ahead free: generating rows
+/// `[r0, r0+k)` of an n×n matrix costs k·n draws no matter how large `r0`
+/// is.
+#[derive(Clone, Copy, Debug)]
+pub struct CounterRng {
+    seed: u64,
+    index: u64,
+}
+
+impl CounterRng {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, index: 0 }
+    }
+
+    /// The `index`-th draw of the stream for `seed` — identical to calling
+    /// `SplitMix64::new(seed).next_u64()` `index + 1` times and keeping the
+    /// last value.
+    #[inline]
+    pub fn at(seed: u64, index: u64) -> u64 {
+        let mut z = seed.wrapping_add(index.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let v = Self::at(self.seed, self.index);
+        self.index += 1;
+        v
+    }
+
+    /// Jump the stream forward by `n` draws — a single add.
+    #[inline]
+    pub fn skip(&mut self, n: u64) {
+        self.index += n;
+    }
+
+    /// Uniform f64 in `[0, 1)` — same derivation as [`Rng::f64`].
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[-1, 1)` — same derivation as [`Rng::f32_pm1`].
+    #[inline]
+    pub fn f32_pm1(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+}
+
 /// xoshiro256** 1.0 (Blackman & Vigna) seeded via SplitMix64.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -124,6 +179,39 @@ mod tests {
         let mut sm = SplitMix64::new(0);
         assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
         assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn counter_rng_matches_splitmix_stream() {
+        // CounterRng is the random-access form of SplitMix64: position i of
+        // the counter stream == the (i+1)-th sequential SplitMix64 draw.
+        for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+            let mut sm = SplitMix64::new(seed);
+            let mut cr = CounterRng::new(seed);
+            for i in 0..64u64 {
+                let s = sm.next_u64();
+                assert_eq!(CounterRng::at(seed, i), s, "seed {seed} index {i}");
+                assert_eq!(cr.next_u64(), s);
+            }
+        }
+    }
+
+    #[test]
+    fn counter_rng_skip_is_equivalent_to_sequential_draws() {
+        let mut a = CounterRng::new(99);
+        let mut b = CounterRng::new(99);
+        a.skip(1_000_000_007); // O(1) — would be minutes of draws sequentially
+        for _ in 0..1_000_000_007u64 / 250_000_000 {
+            b.skip(250_000_000);
+        }
+        b.skip(1_000_000_007 % 250_000_000);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // and against the definition: position n is at(seed, n)
+        let mut c = CounterRng::new(99);
+        c.skip(1_000_000_007 + 16);
+        assert_eq!(c.next_u64(), CounterRng::at(99, 1_000_000_007 + 16));
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! The blocked microkernel is a pure reorder of the reference loop's
+//! f64 accumulations, so `--kernel blocked` must be bit-identical to
+//! `--kernel reference` on every real engine — and on the sim engine it
+//! must only *reprice* (faster makespan, same schedule validity).
+
+use std::sync::Arc;
+
+use parhask::config::RunConfig;
+use parhask::engine::run;
+use parhask::simulator::{simulate, CostModel, SimConfig};
+use parhask::tasks::HostExecutor;
+use parhask::tensor::KernelKind;
+use parhask::workload::{matmul_round_program, matrix_program};
+
+#[test]
+fn blocked_matches_reference_on_every_real_engine() {
+    let p = matrix_program(2, 96, false, None);
+    for engine in ["single", "smp:3", "cluster:3"] {
+        let mut ref_cfg = RunConfig::default();
+        ref_cfg.set("engine", engine).unwrap();
+        let reference = run(&p, &ref_cfg, Arc::new(HostExecutor)).unwrap();
+
+        let mut blk_cfg = RunConfig::default();
+        blk_cfg.set("engine", engine).unwrap();
+        blk_cfg.set("kernel", "blocked").unwrap();
+        let ex = Arc::new(HostExecutor::with_kernel(KernelKind::Blocked));
+        let blocked = run(&p, &blk_cfg, ex).unwrap();
+
+        blocked.trace.validate(&p).unwrap();
+        assert_eq!(
+            reference.outputs, blocked.outputs,
+            "{engine}: blocked kernel must be bit-identical"
+        );
+    }
+}
+
+#[test]
+fn blocked_matches_reference_under_partitioning() {
+    // the auto-sharding rewrite splits matmuls into ragged shards — the
+    // shapes most likely to expose a tiling edge-case
+    let p = matrix_program(2, 96, false, None);
+    let mut ref_cfg = RunConfig::default();
+    ref_cfg.set("engine", "smp:3").unwrap();
+    ref_cfg.set("partitions", "3").unwrap();
+    ref_cfg.set("shard_min_bytes", "1").unwrap();
+    let reference = run(&p, &ref_cfg, Arc::new(HostExecutor)).unwrap();
+
+    let mut blk_cfg = RunConfig::default();
+    blk_cfg.set("engine", "smp:3").unwrap();
+    blk_cfg.set("partitions", "3").unwrap();
+    blk_cfg.set("shard_min_bytes", "1").unwrap();
+    blk_cfg.set("kernel", "blocked").unwrap();
+    let ex = Arc::new(HostExecutor::with_kernel(KernelKind::Blocked));
+    let blocked = run(&p, &blk_cfg, ex).unwrap();
+
+    assert_eq!(reference.outputs, blocked.outputs);
+}
+
+#[test]
+fn sim_engine_reprices_but_stays_valid() {
+    let p = matmul_round_program(256);
+    let cm = CostModel::default();
+    let mut cfg = SimConfig::cluster(3);
+    let reference = simulate(&p, &cm, &cfg).unwrap();
+    cfg.kernel = KernelKind::Blocked;
+    let blocked = simulate(&p, &cm, &cfg).unwrap();
+    blocked.trace.validate(&p).unwrap();
+    assert!(
+        blocked.makespan_ns < reference.makespan_ns,
+        "blocked must simulate faster: {} vs {}",
+        blocked.makespan_ns,
+        reference.makespan_ns
+    );
+}

@@ -13,7 +13,10 @@
 //!    run is bit-identical to an uncached run on random programs;
 //! 7. scheduler determinism: greedy and bucketed state machines replay
 //!    the exact same assignment sequence on the same program — ties break
-//!    on task id, never on hash or seed state.
+//!    on task id, never on hash or seed state;
+//! 8. counter RNG: a generated shard depends only on its position, so
+//!    `uniform_rows` is bit-for-bit a row slice of the whole `uniform`
+//!    matrix (the invariant that makes HostMatGenShard jump-ahead O(1)).
 
 use std::sync::Arc;
 
@@ -775,5 +778,31 @@ fn prop_ledger_resume_never_reruns_committed_tasks() {
             )?;
         }
         Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 8. Counter RNG: shard generation is position-, not history-, dependent
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_uniform_rows_is_a_slice_of_uniform() {
+    // uniform_rows(n, row0, rows, seed) jumps the counter RNG straight to
+    // row0*n; the bits it emits must equal the ones the whole-matrix
+    // generator reaches by drawing sequentially. Bit-for-bit, any shape.
+    qcheck_seeded(0xC0117E4, 120, |input: &((u64, u64), u64)| {
+        let ((a, b), seed) = *input;
+        let n = (a % 24) as usize + 1; // matrix side 1..=24
+        let row0 = (b % n as u64) as usize;
+        let rows = ((b / 31) % (n - row0) as u64) as usize + 1;
+        let whole = Tensor::uniform(vec![n, n], seed);
+        let shard = Tensor::uniform_rows(n, row0, rows, seed);
+        let expect = whole
+            .slice_rows(row0, rows)
+            .map_err(|e| format!("slice_rows: {e:#}"))?;
+        prop(
+            shard == expect,
+            &format!("uniform_rows(n={n}, row0={row0}, rows={rows}, seed={seed:#x}) == slice"),
+        )
     });
 }
